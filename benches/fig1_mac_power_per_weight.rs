@@ -1,0 +1,59 @@
+//! Figure 1 — average MAC power per weight value.
+//!
+//! Regenerates the paper's motivating figure: the per-weight switching
+//! power of the weight-stationary MAC, measured on the gate-level model
+//! under uniform random transitions (the paper's Fig. 1 setting).  The
+//! expected *shape* — power grows with |w| and bit density, w = 0 is the
+//! floor, substantial spread overall — is asserted, and the
+//! characterization throughput is benchmarked.
+
+use wsel::bench::{bench, black_box};
+use wsel::energy::uniform_weight_energy;
+use wsel::gates::CapModel;
+use wsel::report;
+use wsel::systolic::MacLib;
+
+fn main() {
+    let cap = CapModel::default();
+    let mut lib = MacLib::new();
+    let table = uniform_weight_energy(&mut lib, &cap, 512, 1, 1);
+
+    // Full per-weight power series (the figure's data).
+    let picks: Vec<i32> = (-127..=127).step_by(17).chain([127]).collect();
+    let labels: Vec<String> = picks.iter().map(|w| format!("w={w:>4}")).collect();
+    let powers: Vec<f64> = picks
+        .iter()
+        .map(|&w| table.energy(w as i8) * cap.freq_hz)
+        .collect();
+    println!(
+        "{}",
+        report::bar_chart(
+            "Fig.1 — average MAC power (W) per weight value",
+            &labels,
+            &powers,
+            40
+        )
+    );
+
+    // Shape assertions (the paper's premise).
+    let p0 = table.energy(0) * cap.freq_hz;
+    let p127 = table.energy(127) * cap.freq_hz;
+    let pneg = table.energy(-127) * cap.freq_hz;
+    let lo = (-127i32..=127)
+        .map(|w| table.energy(w as i8))
+        .fold(f64::MAX, f64::min);
+    let hi = (-127i32..=127)
+        .map(|w| table.energy(w as i8))
+        .fold(0.0f64, f64::max);
+    println!("power(0)={p0:.3e} W  power(127)={p127:.3e} W  power(-127)={pneg:.3e} W");
+    println!("spread: max/min = {:.2}x  (paper: 'substantial spread')", hi / lo);
+    assert!(p127 > p0 * 1.5, "dense weights must cost more than 0");
+    assert!(hi / lo > 2.0, "spread too flat to motivate weight selection");
+
+    // Perf: characterization throughput (255 weights × trace).
+    let m = bench("fig1/characterize_255_weights_trace256", 1, 3, || {
+        let mut lib = MacLib::new();
+        black_box(uniform_weight_energy(&mut lib, &cap, 256, 2, 1));
+    });
+    m.report_throughput(255.0 * 256.0, "MAC-cycles-simulated");
+}

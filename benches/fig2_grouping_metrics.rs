@@ -1,0 +1,102 @@
+//! Figure 2 — validation of the MSB × Hamming-distance grouping metrics.
+//!
+//! (a) MAC power grows ~monotonically with the Hamming distance of the
+//!     partial-sum transition; (b) transitions between similar MSB
+//!     positions are cheap (diagonal of the MSB-pair matrix), crossing to
+//!     higher MSBs is expensive.  Both are asserted, and the grouping
+//!     stability ratio of the adopted uniform 10×5 partition is compared
+//!     against MSB-only / HW-only ablations.
+
+use wsel::bench::bench;
+use wsel::energy::transition_energy;
+use wsel::gates::CapModel;
+use wsel::report;
+use wsel::systolic::MacLib;
+use wsel::transitions::{stability_ratio, Grouping};
+use wsel::util::rng::Xoshiro256;
+
+fn main() {
+    let cap = CapModel::default();
+    let mut lib = MacLib::new();
+
+    // ---- (a) power vs HD ------------------------------------------------
+    let base = 0b01_0101_0101_0101_0101_0101u32 as i32;
+    let hds = [0usize, 1, 2, 4, 8, 12, 16, 20];
+    let mut powers = Vec::new();
+    for &hd in &hds {
+        let flip: u32 = (0..hd).map(|i| 1u32 << i).sum();
+        let e = transition_energy(&mut lib, &cap, 37, 11, base, base ^ flip as i32, 128);
+        powers.push(e * cap.freq_hz);
+    }
+    println!(
+        "{}",
+        report::series(
+            "Fig.2a — MAC power (W) vs psum-transition Hamming distance",
+            &hds.iter().map(|&h| h as f64).collect::<Vec<_>>(),
+            &powers
+        )
+    );
+    assert!(
+        powers[hds.len() - 1] > powers[0],
+        "HD20 must cost more than HD0"
+    );
+    // Approximate monotonicity: each doubling of HD should not reduce power
+    // by more than noise.
+    for w in powers.windows(2) {
+        assert!(w[1] > w[0] * 0.9, "power vs HD strongly non-monotone: {powers:?}");
+    }
+
+    // ---- (b) MSB-pair matrix ---------------------------------------------
+    let bins = 10;
+    let mut hm = vec![0.0f64; bins * bins];
+    let mut diag = 0.0;
+    let mut offdiag_hi = 0.0;
+    for i in 0..bins {
+        for j in 0..bins {
+            let p1 = 1i32 << (2 + i * 2);
+            let p2 = 1i32 << (2 + j * 2);
+            let p = transition_energy(&mut lib, &cap, 37, 11, p1, p2, 64) * cap.freq_hz;
+            hm[i * bins + j] = p;
+            if i == j {
+                diag += p;
+            } else if i.abs_diff(j) >= 5 {
+                offdiag_hi += p;
+            }
+        }
+    }
+    println!(
+        "{}",
+        report::heatmap("Fig.2b — avg power across MSB-position pairs", &hm, bins)
+    );
+    let diag_mean = diag / bins as f64;
+    let far_mean = offdiag_hi / (2.0 * (0..bins).map(|i| (bins - 5).saturating_sub(i).min(1)).sum::<usize>().max(1) as f64).max(1.0);
+    println!("diagonal mean {diag_mean:.3e} W, far-off-diagonal mean {far_mean:.3e} W");
+    assert!(
+        far_mean > diag_mean,
+        "distant-MSB transitions must exceed same-MSB transitions"
+    );
+
+    // ---- Grouping quality (stability ratio, paper §3.1.1) ----------------
+    let mut rng = Xoshiro256::new(4);
+    let mut sampled: Vec<(u32, f64)> = Vec::new();
+    for _ in 0..3000 {
+        let v = (rng.next_u64() & 0x3F_FFFF) as u32;
+        let flip = 1u32 << rng.below(22);
+        let e = transition_energy(&mut lib, &cap, 17, 5, v as i32, (v ^ flip) as i32, 16);
+        sampled.push((v, e));
+    }
+    for grouping in [Grouping::MsbHamming, Grouping::MsbOnly, Grouping::HammingOnly] {
+        let labeled: Vec<(usize, f64)> =
+            sampled.iter().map(|&(v, e)| (grouping.group(v), e)).collect();
+        println!(
+            "stability ratio ({grouping:?}): {:.2}",
+            stability_ratio(&labeled)
+        );
+    }
+
+    // Perf: transition probe latency.
+    let m = bench("fig2/transition_probe_64step", 2, 10, || {
+        wsel::bench::black_box(transition_energy(&mut lib, &cap, 37, 11, base, base ^ 0xFF, 64));
+    });
+    m.report();
+}

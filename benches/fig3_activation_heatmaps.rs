@@ -1,0 +1,70 @@
+//! Figure 3 — activation-transition heatmaps of the first two LeNet-5
+//! conv layers, demonstrating the layer-to-layer variability that makes
+//! *global* activation models (prior work) biased.
+//!
+//! Asserts the paper's qualitative claims: the two layers' transition
+//! distributions differ substantially, and the ReLU layer (conv1's
+//! input comes after a ReLU+pool) is much sparser than the image input.
+
+use wsel::bench::bench;
+use wsel::bench::scenarios;
+use wsel::report;
+
+fn main() {
+    let Some(_) = scenarios::artifacts_dir() else {
+        return;
+    };
+    let mut p = scenarios::prepared("lenet5", 400, 100).expect("pipeline");
+
+    let bins = 24;
+    let mut heatmaps = Vec::new();
+    for ci in 0..2 {
+        let st = &p.stats[ci];
+        let hm = st.act.heatmap(bins);
+        println!(
+            "{}",
+            report::heatmap(
+                &format!(
+                    "Fig.3 — LeNet-5 conv{ci} activation transitions (zero-fraction {:.2})",
+                    st.act.zero_fraction()
+                ),
+                &hm,
+                bins
+            )
+        );
+        heatmaps.push(hm);
+    }
+
+    // Quantify the layer-to-layer difference: total variation distance.
+    let tv: f64 = heatmaps[0]
+        .iter()
+        .zip(&heatmaps[1])
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / 2.0;
+    let zf0 = p.stats[0].act.zero_fraction();
+    let zf1 = p.stats[1].act.zero_fraction();
+    println!("total-variation distance between conv0/conv1 transitions: {tv:.3}");
+    println!("zero-transition mass: conv0 {zf0:.3}, conv1 {zf1:.3}");
+    assert!(
+        tv > 0.2,
+        "per-layer distributions must differ materially (tv = {tv:.3})"
+    );
+    assert!(
+        zf1 > zf0 + 0.1,
+        "post-ReLU layer must be sparser: {zf0:.3} vs {zf1:.3}"
+    );
+
+    // Perf: stats collection throughput.
+    let spec = p.rt.spec.clone();
+    let eng = wsel::model::Engine::new(&spec);
+    let qc = wsel::model::QuantConfig::quantized(&spec, p.rt.act_scales.clone());
+    let (xs, _) = wsel::data::batch(7, wsel::data::Split::Train, 0, 4, 10);
+    let fwd = eng.forward(&p.rt.params, &xs, 4, &qc, true);
+    let cap0 = fwd.captures[0].clone();
+    let mut rng = wsel::util::rng::Xoshiro256::new(5);
+    let m = bench("fig3/collect_layer_stats_conv0", 1, 5, || {
+        wsel::bench::black_box(wsel::stats::collect(&cap0, &mut rng));
+    });
+    m.report_throughput((cap0.m * cap0.k) as f64, "transitions");
+}

@@ -1,0 +1,127 @@
+//! Performance benches for the L3 hot paths (the §Perf deliverable):
+//!
+//!   * bit-parallel gate simulation throughput (gate-lane-evals/s),
+//!   * weight-specialized MAC trace energy (the inner loop of E_ℓ(w)
+//!     characterization),
+//!   * exact tile power simulation,
+//!   * int8 mirror-engine forward,
+//!   * selection loop (greedy elimination, proxy mode),
+//!   * PJRT eval-graph execution latency.
+//!
+//! Before/after numbers for the optimization pass are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use wsel::bench::{bench, black_box, scenarios};
+use wsel::gates::{CapModel, TraceSim};
+use wsel::mac::build_mac;
+use wsel::selection::CompressionState;
+use wsel::systolic::{self, MacLib};
+use wsel::util::rng::Xoshiro256;
+
+fn main() {
+    let cap = CapModel::default();
+
+    // ---- gate sim throughput -------------------------------------------
+    let mac = build_mac();
+    let nl = &mac.netlist;
+    let n_gates = nl.gate_count();
+    let mut sim = TraceSim::new(nl);
+    let words: Vec<u64> = (0..nl.inputs.len() as u64).map(|i| i * 0x9E37).collect();
+    let m = bench("perf/gate_sim_chunk64_generic_mac", 10, 200, || {
+        sim.run_chunk(black_box(nl), &words, 64);
+    });
+    m.report_throughput(n_gates as f64 * 64.0, "gate-lane-evals");
+
+    // ---- per-weight trace energy ----------------------------------------
+    let mut lib = MacLib::new();
+    lib.get(37);
+    let m = bench("perf/specialize_mac", 2, 50, || {
+        black_box(wsel::mac::specialize_mac(&mac, black_box(91)));
+    });
+    m.report();
+
+    let mut rng = Xoshiro256::new(1);
+    let acts: Vec<i32> = (0..512).map(|_| rng.code()).collect();
+    let psums: Vec<i32> = (0..512).map(|_| (rng.below(1 << 22) as i64 - (1 << 21)) as i32).collect();
+    let m = bench("perf/weight_trace_energy_512", 2, 50, || {
+        black_box(wsel::energy::transition_energy(
+            &mut lib, &cap, 37, 11, psums[0], psums[1], 512,
+        ));
+    });
+    m.report_throughput(512.0, "MAC-cycles");
+    black_box((acts, psums));
+
+    // ---- exact tile power -------------------------------------------------
+    let mut rng = Xoshiro256::new(2);
+    let (mm, kk, nn) = (64usize, 64usize, 64usize);
+    let x: Vec<i8> = (0..mm * kk).map(|_| rng.code() as i8).collect();
+    let w: Vec<i8> = (0..kk * nn).map(|_| rng.code() as i8).collect();
+    let pass = systolic::passes_of(mm, kk, nn)[0];
+    let m = bench("perf/tile_power_exact_64x64x64", 1, 5, || {
+        let mut lib2 = MacLib::new();
+        black_box(systolic::tile_power_exact(
+            &x, &w, kk, nn, &pass, &mut lib2, &cap,
+        ));
+    });
+    m.report_throughput((mm * kk * nn) as f64, "MAC-steps");
+    // Warm-library variant (the pipeline's steady state).
+    let m = bench("perf/tile_power_exact_warm_maclib", 1, 5, || {
+        black_box(systolic::tile_power_exact(
+            &x, &w, kk, nn, &pass, &mut lib, &cap,
+        ));
+    });
+    m.report_throughput((mm * kk * nn) as f64, "MAC-steps");
+
+    // ---- pipeline-dependent paths (need artifacts) ------------------------
+    let Some(_) = scenarios::artifacts_dir() else {
+        return;
+    };
+    let mut p = scenarios::prepared("lenet5", 120, 40).expect("pipeline");
+
+    // int8 mirror engine forward.
+    let spec = p.rt.spec.clone();
+    let eng = wsel::model::Engine::new(&spec);
+    let qc = wsel::model::QuantConfig::quantized(&spec, p.rt.act_scales.clone());
+    let (xs, _) = wsel::data::batch(7, wsel::data::Split::Val, 0, 8, 10);
+    let m = bench("perf/mirror_engine_forward_b8", 1, 10, || {
+        black_box(eng.forward(&p.rt.params, &xs, 8, &qc, false));
+    });
+    m.report_throughput(8.0, "images");
+
+    // Greedy elimination (proxy mode) on real stats.
+    use wsel::schedule::LayerModeler;
+    let dense = CompressionState::dense(spec.n_conv);
+    let usage = p.usage(1, &dense);
+    let le = p.layer_energy_model(1);
+    let m = bench("perf/greedy_eliminate_32_to_16", 1, 20, || {
+        let set0 = wsel::selection::safe_initial_set(&usage, &le, 32);
+        let mut st = CompressionState::dense(spec.n_conv);
+        struct Null;
+        impl wsel::selection::AccuracyOracle for Null {
+            fn accuracy(&mut self, _: &CompressionState) -> f64 {
+                1.0
+            }
+            fn fine_tune(&mut self, _: &CompressionState, _: usize) {}
+        }
+        let gp = wsel::selection::GreedyParams::default();
+        black_box(wsel::selection::greedy_backward_eliminate(
+            set0, &usage, &le, &mut Null, &mut st, 1, &gp,
+        ));
+    });
+    m.report();
+
+    // PJRT eval latency (the oracle's unit of cost).
+    let m = bench("perf/pjrt_eval_batch128", 1, 5, || {
+        black_box(
+            p.rt.evaluate(&dense, true, wsel::data::Split::Val, 1)
+                .expect("eval"),
+        );
+    });
+    m.report_throughput(128.0, "images");
+
+    // Data generation (feeds every train step).
+    let m = bench("perf/datagen_batch32", 1, 10, || {
+        black_box(wsel::data::batch(7, wsel::data::Split::Train, 0, 32, 10));
+    });
+    m.report_throughput(32.0, "images");
+}

@@ -1,0 +1,66 @@
+//! Table 2 (scaled) — layer-wise energy savings on ResNet-20: the
+//! energy-prioritized schedule processes the highest-ρ layers first and
+//! compresses them most aggressively.
+//!
+//! Bench scale: short training (the table's content is the *schedule
+//! behavior*, which depends on the energy model, not on converged
+//! accuracy), top-6 layers only.
+
+use wsel::bench::scenarios;
+use wsel::report::{pct, Table};
+use wsel::schedule::ScheduleParams;
+
+fn main() {
+    let Some(_) = scenarios::artifacts_dir() else {
+        return;
+    };
+    let mut p = scenarios::prepared("resnet20", 250, 60).expect("pipeline");
+    let base = p.base_energy.clone().unwrap();
+
+    let sp = ScheduleParams {
+        fine_tune_steps: 10,
+        delta: 0.05,
+        max_layers: Some(6),
+        ..Default::default()
+    };
+    let res = p.compress(sp).expect("compress");
+
+    let mut t = Table::new(
+        "Table 2 (scaled: ResNet-20 layer-wise savings; paper rows: Block2 61.8%/21.1%, Block4 63.2%/23.7%, Block6 51.2%/7.6%, Block9 48.3%/3.9%)",
+        &["layer", "share", "prune", "K", "layer saving"],
+    );
+    for oc in &res.outcomes {
+        let (ratio, k) = oc
+            .accepted
+            .map(|c| (format!("{:.2}", c.prune_ratio), c.k_target.to_string()))
+            .unwrap_or(("-".into(), "-".into()));
+        t.row(&[
+            format!("conv{}", oc.conv_idx),
+            pct(oc.share),
+            ratio,
+            k,
+            if oc.energy_before > 0.0 {
+                pct(1.0 - oc.energy_after / oc.energy_before)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Shape assertions: processing order follows energy share descending,
+    // and processed layers actually saved energy.
+    let shares: Vec<f64> = res.outcomes.iter().map(|o| o.share).collect();
+    for w in shares.windows(2) {
+        assert!(
+            w[0] >= w[1] - 1e-12,
+            "schedule must process descending energy shares: {shares:?}"
+        );
+    }
+    let accepted = res.outcomes.iter().filter(|o| o.accepted.is_some()).count();
+    assert!(accepted >= 3, "most top layers should accept a config");
+    let total_after = p.compute_network_energy(&res.state);
+    let saving = base.saving_vs(&total_after);
+    println!("total saving from top-6 layers: {}", pct(saving));
+    assert!(saving > 0.1, "top-layer compression must move total energy");
+}

@@ -1,0 +1,82 @@
+//! Table 4 (scaled) — effectiveness of the weight-selection algorithm:
+//! naive lowest-energy top-16 vs top-20 vs the optimized (greedy
+//! backward elimination) 16-value selection.
+//!
+//! Paper shape: naive-16 collapses accuracy (59.6%) despite competitive
+//! energy savings; the optimized 16-value sets retain near-baseline
+//! accuracy at similar savings.
+
+use wsel::bench::scenarios;
+use wsel::report::{pct, Table};
+use wsel::schedule::ScheduleParams;
+use wsel::selection::{naive_lowest_energy, CompressionState, LayerConfig};
+
+fn main() {
+    let Some(_) = scenarios::artifacts_dir() else {
+        return;
+    };
+    let mut p = scenarios::prepared("lenet5", 600, 150).expect("pipeline");
+    let acc0 = p.acc0;
+    let base = p.base_energy.clone().unwrap();
+    let trained = p.checkpoint();
+    let n_conv = p.rt.spec.n_conv;
+
+    let mut t = Table::new(
+        "Table 4 (scaled: LeNet-5; paper: naive-16 59.3%/59.6%, naive-20 57.5%/89.6%, optimized-16 58.6%/89.4%)",
+        &["selection", "energy saving", "accuracy"],
+    );
+
+    let mut measured = Vec::new();
+    for k in [16usize, 20] {
+        p.restore(trained.clone());
+        let le0 = p.layer_energy_model(0);
+        let set = naive_lowest_energy(&le0.table, k);
+        let state = CompressionState {
+            layers: (0..n_conv)
+                .map(|_| LayerConfig {
+                    prune_ratio: 0.5,
+                    wset: Some(set.clone()),
+                })
+                .collect(),
+        };
+        let (acc, saving) = p.evaluate_state(&state, 20).expect("naive");
+        t.row(&[format!("naive top-{k}"), pct(saving), pct(acc)]);
+        measured.push((format!("naive{k}"), saving, acc));
+    }
+
+    // Optimized: greedy elimination to 16 per layer via the schedule with
+    // a fixed (0.5, 16) menu.
+    p.restore(trained.clone());
+    let sp = ScheduleParams {
+        prune_ratios: vec![0.5],
+        k_targets: vec![16],
+        fine_tune_steps: 20,
+        delta: 0.06,
+        ..Default::default()
+    };
+    let res = p.compress(sp).expect("compress");
+    let e = p.compute_network_energy(&res.state);
+    let saving = base.saving_vs(&e);
+    t.row(&[
+        "optimized 16 (ours)".into(),
+        pct(saving),
+        pct(res.final_accuracy),
+    ]);
+    println!("{}", t.render());
+    println!("baseline acc0 = {}", pct(acc0));
+
+    // Paper-shape assertions.  Note (EXPERIMENTS.md Table 4): with STE
+    // fine-tuning our naive sets partially recover on the synthetic
+    // task, so the paper's *catastrophic* 30-pt gap shrinks to an
+    // ordering — which must still hold strictly.
+    let naive16_acc = measured[0].2;
+    assert!(
+        res.final_accuracy > naive16_acc,
+        "optimized selection must beat naive-16 accuracy: {:.3} vs {naive16_acc:.3}",
+        res.final_accuracy
+    );
+    assert!(
+        res.final_accuracy >= acc0 - 0.06,
+        "optimized 16-value selection stays near baseline"
+    );
+}

@@ -1,0 +1,116 @@
+//! Energy-model deep dive (Figures 1–3 in terminal form):
+//!
+//!  * per-weight MAC power under uniform vs layer-specific statistics;
+//!  * power vs transition Hamming distance, and the MSB-pair structure
+//!    that justifies the 10×5 grouping (§3.1.1);
+//!  * activation transition heatmaps for the first two LeNet-5 convs
+//!    (§3.1.2), showing why per-layer statistics matter;
+//!  * the grouping stability ratio of the adopted uniform partition
+//!    against the MSB-only / HW-only ablations.
+//!
+//!     cargo run --release --example energy_profile
+
+use anyhow::Result;
+use wsel::coordinator::{Pipeline, PipelineParams};
+use wsel::energy::{transition_energy, uniform_weight_energy};
+use wsel::gates::CapModel;
+use wsel::report;
+use wsel::systolic::MacLib;
+use wsel::transitions::{stability_ratio, Grouping};
+use wsel::util::rng::Xoshiro256;
+
+fn main() -> Result<()> {
+    let cap = CapModel::default();
+    let mut lib = MacLib::new();
+
+    // ---- Fig. 1: average MAC power per weight value --------------------
+    let table = uniform_weight_energy(&mut lib, &cap, 256, 99, 1);
+    let picks: Vec<i32> = vec![-127, -96, -64, -32, -8, -1, 0, 1, 8, 32, 64, 96, 127];
+    let labels: Vec<String> = picks.iter().map(|w| format!("w={w:>4}")).collect();
+    let powers: Vec<f64> = picks
+        .iter()
+        .map(|&w| table.energy(w as i8) * cap.freq_hz)
+        .collect();
+    println!(
+        "{}",
+        report::bar_chart("Fig.1 — avg MAC power (W) per weight value", &labels, &powers, 48)
+    );
+
+    // ---- Fig. 2a: power vs Hamming distance of psum transition ---------
+    let base = 0b01_0101_0101_0101_0101_0101u32 as i32;
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for hd in [0usize, 1, 2, 4, 8, 12, 16, 20] {
+        let flip: u32 = (0..hd).map(|i| 1u32 << i).sum();
+        let e = transition_energy(&mut lib, &cap, 37, 11, base, base ^ flip as i32, 128);
+        xs.push(hd as f64);
+        ys.push(e * cap.freq_hz);
+    }
+    println!("{}", report::series("Fig.2a — MAC power (W) vs psum transition HD", &xs, &ys));
+
+    // ---- Fig. 2b: MSB-pair transition power (diagonal is cool) ---------
+    let bins = 8;
+    let mut hm = vec![0.0f64; bins * bins];
+    for i in 0..bins {
+        for j in 0..bins {
+            let p1 = 1i32 << (2 + i * 2);
+            let p2 = 1i32 << (2 + j * 2);
+            hm[i * bins + j] =
+                transition_energy(&mut lib, &cap, 37, 11, p1, p2, 64) * cap.freq_hz;
+        }
+    }
+    println!(
+        "{}",
+        report::heatmap("Fig.2b — power across MSB-position pairs", &hm, bins)
+    );
+
+    // ---- Fig. 3: per-layer activation transition heatmaps --------------
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("lenet5/manifest.json").exists() {
+        let mut p = Pipeline::new(artifacts, "lenet5", PipelineParams::quick())?;
+        p.train_baseline()?;
+        p.profile()?;
+        for ci in 0..2 {
+            let st = &p.stats[ci];
+            println!(
+                "{}",
+                report::heatmap(
+                    &format!(
+                        "Fig.3 — LeNet-5 conv{} activation transitions (zero-frac {:.2})",
+                        ci,
+                        st.act.zero_fraction()
+                    ),
+                    &st.act.heatmap(24),
+                    24
+                )
+            );
+        }
+    } else {
+        eprintln!("(skipping Fig.3 — run `make artifacts` first)");
+    }
+
+    // ---- Grouping stability (justifies the 10×5 uniform partition) -----
+    let mut rng = Xoshiro256::new(4);
+    for grouping in [Grouping::MsbHamming, Grouping::MsbOnly, Grouping::HammingOnly] {
+        let mut samples = Vec::new();
+        for _ in 0..4000 {
+            let v = (rng.next_u64() & 0x3F_FFFF) as u32;
+            let flip = 1u32 << rng.below(22);
+            let e = transition_energy(
+                &mut lib,
+                &cap,
+                17,
+                5,
+                v as i32,
+                (v ^ flip) as i32,
+                16,
+            );
+            samples.push((grouping.group(v), e));
+        }
+        println!(
+            "stability ratio ({grouping:?}): {:.2}",
+            stability_ratio(&samples)
+        );
+    }
+    Ok(())
+}

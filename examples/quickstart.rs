@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT artifacts, evaluate a model, estimate the
+//! energy of its first conv layer on the 64×64 systolic array.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This touches each layer of the stack once: PJRT runtime (L3 ⇄ L2/L1
+//! artifacts), the int8 mirror engine, the gate-level MAC model and the
+//! tile-level energy composition.
+
+use anyhow::Result;
+use wsel::coordinator::{Pipeline, PipelineParams};
+use wsel::report::pct;
+use wsel::selection::CompressionState;
+
+fn main() -> Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("lenet5/manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. Load LeNet-5 and give it a short training run (quick preset).
+    let mut p = Pipeline::new(artifacts, "lenet5", PipelineParams::quick())?;
+    let acc0 = p.train_baseline()?;
+    println!("quantized baseline accuracy: {acc0:.3}");
+
+    // 2. Profile: per-layer stats -> per-weight MAC energy tables.
+    p.profile()?;
+    let base = p.base_energy.clone().unwrap();
+    println!("total conv energy: {:.3e} J/image", base.total());
+    for (ci, share) in base.shares() {
+        println!("  conv{ci}: share {}", pct(share));
+    }
+
+    // 3. Per-weight MAC power spread (the Fig. 1 premise).
+    let t = &p.tables[0];
+    let f = p.cap_model.freq_hz;
+    println!(
+        "conv0 MAC power:  w=0 -> {:.2} µW   w=+3 -> {:.2} µW   w=-127 -> {:.2} µW",
+        t.energy(0) * f * 1e6,
+        t.energy(3) * f * 1e6,
+        t.energy(-127) * f * 1e6
+    );
+
+    // 4. What would restricting conv0 to 32 values save?
+    let state = CompressionState::dense(p.rt.spec.n_conv);
+    let usage = {
+        use wsel::schedule::LayerModeler;
+        p.usage(0, &state)
+    };
+    let le = p.layer_energy_model(0);
+    let set0 = wsel::selection::safe_initial_set(&usage, &le, 32);
+    let e_full = le.energy_of_usage(&usage);
+    let e_restricted = wsel::selection::set_energy(&le, &usage, &set0);
+    println!(
+        "conv0: full-range {:.3e} J -> 32-value set {:.3e} J ({} saving)",
+        e_full,
+        e_restricted,
+        pct(1.0 - e_restricted / e_full)
+    );
+    Ok(())
+}

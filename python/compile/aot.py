@@ -1,0 +1,240 @@
+"""AOT lowering driver: JAX entry points -> HLO *text* artifacts.
+
+Run once via ``make artifacts``; Python is never on the request path.
+For every model we emit:
+
+  artifacts/<model>/train.hlo.txt    SGD+momentum QAT step   (batch 64)
+  artifacts/<model>/eval.hlo.txt     n_correct + loss        (batch 128)
+  artifacts/<model>/logits.hlo.txt   logits cross-check      (batch 8)
+  artifacts/<model>/calib.hlo.txt    activation-range calib  (batch 64)
+  artifacts/<model>/params.bin       initial parameters (f32 LE, concat)
+  artifacts/<model>/manifest.json    spec + entry-point I/O layout
+
+plus ``artifacts/tile_matmul.hlo.txt`` — the standalone Pallas
+systolic-tile kernel the Rust `systolic` module cross-checks against.
+
+HLO **text** (not ``HloModuleProto.serialize``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.systolic_matmul import tile_matmul_entry
+
+BATCH_TRAIN = 32
+BATCH_EVAL = 128
+BATCH_LOGITS = 8
+BATCH_CALIB = 64
+#: Models whose *logits* artifact routes the matmul hot-spot through the
+#: Pallas systolic kernel (the eval graph always uses the jnp reference
+#: path: interpreted Pallas costs ~50 s of XLA-CPU compile time plus a
+#: ~50x execution penalty, and eval sits in the §4 selection loop).  The
+#: kernel's numerics are pinned three ways: pytest vs ref.py, the logits
+#: artifact vs the Rust mirror engine, and the standalone tile artifact
+#: vs the cycle-level systolic simulation.
+PALLAS_LOGITS_MODELS = ("lenet5",)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _mask_specs(spec) -> List[jax.ShapeDtypeStruct]:
+    return [
+        _sds(p["shape"])
+        for p in spec["params"]
+        if p["kind"] == "conv_w"
+    ]
+
+
+def _wset_specs(spec) -> List[jax.ShapeDtypeStruct]:
+    return [_sds([M.KSET]) for _ in range(spec["n_conv"])]
+
+
+def build_entry_fns(spec) -> Dict[str, Any]:
+    """Wrap model entry points as flat-positional functions of arrays,
+    with matching example-argument spec lists, ready for jit().lower()."""
+    n_p = len(spec["params"])
+    n_c = spec["n_conv"]
+    n_q = spec["n_q"]
+    ncls = spec["n_classes"]
+    p_specs = [_sds(p["shape"]) for p in spec["params"]]
+    m_specs = _mask_specs(spec)
+    w_specs = _wset_specs(spec)
+
+    def unpack_common(args, i):
+        params = list(args[i : i + n_p]); i += n_p
+        masks = list(args[i : i + n_c]); i += n_c
+        wsets = list(args[i : i + n_c]); i += n_c
+        wset_on = args[i]; i += 1
+        act_scales = args[i]; i += 1
+        quant_on = args[i]; i += 1
+        return params, masks, wsets, wset_on, act_scales, quant_on, i
+
+    def train_fn(*args):
+        i = 0
+        params = list(args[i : i + n_p]); i += n_p
+        mom = list(args[i : i + n_p]); i += n_p
+        masks = list(args[i : i + n_c]); i += n_c
+        wsets = list(args[i : i + n_c]); i += n_c
+        wset_on = args[i]; i += 1
+        act_scales = args[i]; i += 1
+        quant_on = args[i]; i += 1
+        lr = args[i]; i += 1
+        x = args[i]; i += 1
+        y = args[i]; i += 1
+        assert i == len(args)
+        p2, m2, loss = M.train_step(
+            spec, params, mom, masks, wsets, wset_on, act_scales, quant_on, lr, x, y
+        )
+        return tuple(p2) + tuple(m2) + (loss,)
+
+    use_pallas = spec["name"] in PALLAS_LOGITS_MODELS
+
+    def eval_fn(*args):
+        params, masks, wsets, wset_on, act_scales, quant_on, i = unpack_common(args, 0)
+        x = args[i]; y = args[i + 1]
+        assert i + 2 == len(args)
+        return M.eval_batch(
+            spec, params, masks, wsets, wset_on, act_scales, quant_on, x, y, False
+        )
+
+    def logits_fn(*args):
+        params, masks, wsets, wset_on, act_scales, quant_on, i = unpack_common(args, 0)
+        x = args[i]
+        assert i + 1 == len(args)
+        return (
+            M.logits_batch(
+                spec, params, masks, wsets, wset_on, act_scales, quant_on, x, use_pallas
+            ),
+        )
+
+    def calib_fn(*args):
+        params = list(args[:n_p])
+        x = args[n_p]
+        assert n_p + 1 == len(args)
+        return M.calib_batch(spec, params, x)
+
+    scalar = _sds([])
+    common = (
+        p_specs
+        + m_specs
+        + w_specs
+        + [_sds([n_c]), _sds([n_q]), scalar]
+    )
+    img = lambda b: _sds([b, 32, 32, 3])
+    lbl = lambda b: _sds([b], jnp.int32)
+    return {
+        "train": (
+            train_fn,
+            p_specs + p_specs + m_specs + w_specs
+            + [_sds([n_c]), _sds([n_q]), scalar, scalar, img(BATCH_TRAIN), lbl(BATCH_TRAIN)],
+        ),
+        "eval": (eval_fn, common + [img(BATCH_EVAL), lbl(BATCH_EVAL)]),
+        "logits": (logits_fn, common + [img(BATCH_LOGITS)]),
+        "calib": (calib_fn, p_specs + [img(BATCH_CALIB)]),
+    }
+
+
+def lower_model(name: str, out_dir: str, seed: int) -> None:
+    spec = M.SPECS[name]()
+    model_dir = os.path.join(out_dir, name)
+    os.makedirs(model_dir, exist_ok=True)
+
+    params = M.init_params(spec, seed)
+    blob = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    blob.astype("<f4").tofile(os.path.join(model_dir, "params.bin"))
+
+    entries = build_entry_fns(spec)
+    entry_meta = {}
+    for ename, (fn, arg_specs) in entries.items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{ename}.hlo.txt"
+        with open(os.path.join(model_dir, fname), "w") as f:
+            f.write(text)
+        entry_meta[ename] = {
+            "file": fname,
+            "n_inputs": len(arg_specs),
+            "input_shapes": [list(s.shape) for s in arg_specs],
+            "input_dtypes": [str(s.dtype) for s in arg_specs],
+        }
+        print(f"  {name}/{fname}: {len(text)} chars, {len(arg_specs)} inputs")
+
+    manifest = {
+        "model": spec["name"],
+        "n_classes": spec["n_classes"],
+        "input": spec["input"],
+        "ops": spec["ops"],
+        "params": spec["params"],
+        "n_conv": spec["n_conv"],
+        "n_q": spec["n_q"],
+        "kset": M.KSET,
+        "qmax": M.QMAX,
+        "set_sentinel": M.SET_SENTINEL,
+        "momentum": M.MOMENTUM,
+        "seed": seed,
+        "batches": {
+            "train": BATCH_TRAIN,
+            "eval": BATCH_EVAL,
+            "logits": BATCH_LOGITS,
+            "calib": BATCH_CALIB,
+        },
+        "pallas_eval": spec["name"] in PALLAS_LOGITS_MODELS,
+        "entries": entry_meta,
+    }
+    with open(os.path.join(model_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def lower_tile(out_dir: str) -> None:
+    """Standalone systolic-tile kernel artifact: (128,192) @ (192,128),
+    i.e. a 2x2x3 grid of 64x64 weight-stationary tile passes."""
+    specs = (_sds([128, 192]), _sds([192, 128]))
+    lowered = jax.jit(tile_matmul_entry).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "tile_matmul.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  tile_matmul.hlo.txt: {len(text)} chars")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models", default="lenet5,resnet20,resnet50lite", help="comma-separated"
+    )
+    ap.add_argument("--seed", type=int, default=20250710)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    lower_tile(args.out_dir)
+    for name in args.models.split(","):
+        print(f"lowering {name} ...")
+        lower_model(name.strip(), args.out_dir, args.seed)
+    print("AOT artifacts complete.")
+
+
+if __name__ == "__main__":
+    main()

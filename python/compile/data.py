@@ -1,0 +1,154 @@
+"""Synthetic CIFAR generator — integer-exact, mirrored bit-for-bit in Rust.
+
+The offline image has no dataset downloads, so CIFAR-10/100 are replaced
+by a *deterministic* synthetic task (see DESIGN.md S2): each class is a
+procedural 32x32x3 template (gratings / checkers / rings with
+class-dependent frequency, orientation and per-channel inversion),
+perturbed by a random phase, a random +-3 pixel shift and uniform pixel
+noise.  Everything is integer arithmetic driven by SplitMix64, so the
+Rust `data` module generates the *identical* byte stream
+(`rust/tests/integration_data.rs` pins this).
+
+Sample addressing is random-access: sample ``k`` of split ``s`` derives
+its own seed, so Rust and Python can both materialize any batch without
+sharing state.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+#: Uniform pixel-noise amplitude (out of 128); tuned together with
+#: LABEL_NOISE_DEN so LeNet-5 lands in the paper's ~79% band and
+#: ResNet-20 in the ~92% band on 10 classes.
+NOISE_AMP = 100
+#: Background / foreground template intensities.
+BG, FG = 30, 255
+#: One in LABEL_NOISE_DEN labels is resampled uniformly (irreducible
+#: error floor, as in real CIFAR label noise).
+LABEL_NOISE_DEN = 16
+#: Sub-prototypes per class: each image draws one of VARIANTS pattern
+#: parameterizations hashed from (class, variant) — multi-modal classes
+#: are what separates small-capacity nets (LeNet) from deep ones.
+VARIANTS = 3
+#: Side of the random mid-gray occlusion square.
+OCC = 10
+
+
+def splitmix64(state: int):
+    """One SplitMix64 step -> (new_state, output).  Matches util::rng."""
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def mix2(a: int, b: int) -> int:
+    """Order-sensitive 2-word hash used for sample addressing."""
+    s = (a ^ 0x6A09E667F3BCC909) & M64
+    s, _ = splitmix64(s)
+    s = (s ^ b) & M64
+    s, z = splitmix64(s)
+    return z
+
+
+def isqrt(n: int) -> int:
+    return int(np.floor(np.sqrt(float(n)))) if n < (1 << 52) else int(np.sqrt(n))
+
+
+def proto_params(cls: int, var: int):
+    """Hash (class, variant) -> pattern parameterization.
+
+    Returns (fam, period, slope, chinv): pattern family 0..3, stripe/cell
+    period 3..7, orientation slope 1..3, per-channel inversion bits.
+    ``chinv`` keeps one bit tied to the class so color stays weakly
+    class-informative across variants.
+    """
+    h = mix2(0xC0FFEE ^ cls, 0xBEEF00 ^ var)
+    fam = int(h % 4)
+    p = 3 + int((h >> 8) % 5)
+    a = 1 + int((h >> 16) % 3)
+    chinv = (int((h >> 24) & 6)) | (cls & 1)
+    return fam, p, a, chinv
+
+
+def template(fam: int, p: int, a: int, chinv: int, u: int, v: int, ch: int, phase: int) -> int:
+    """Prototype intensity at (shifted) pixel (u, v), channel ch."""
+    if fam == 0:
+        t = FG if ((u * a + v + phase) // p) % 2 == 0 else BG
+    elif fam == 1:
+        t = FG if ((u * a - v + phase) % (2 * p)) < p else BG
+    elif fam == 2:
+        t = FG if (((u + phase) // p) + ((v + phase) // p)) % 2 == 0 else BG
+    else:
+        d2 = (u - 16) * (u - 16) + (v - 16) * (v - 16)
+        t = FG if ((isqrt(d2) + phase) // p) % 2 == 0 else BG
+    if (chinv >> ch) & 1:
+        t = 255 - t
+    return t
+
+
+def gen_image(seed: int, cls: int) -> np.ndarray:
+    """One (32, 32, 3) uint8 image for class ``cls``.
+
+    Distortions (all integer, all from one SplitMix64 stream so the Rust
+    mirror reproduces the exact bytes): +-3 px shift, random phase,
+    contrast jitter in [96/128, 160/128], a random OCCxOCC mid-gray
+    occlusion square, and uniform pixel noise of amplitude NOISE_AMP.
+    """
+    s = seed & M64
+    s, r0 = splitmix64(s)
+    dx = int(r0 % 7) - 3
+    dy = int((r0 >> 8) % 7) - 3
+    phase = int((r0 >> 16) % 17)
+    contrast = 96 + int((r0 >> 24) % 65)  # 96..160 (of 128)
+    occx = int((r0 >> 32) % (33 - OCC))
+    occy = int((r0 >> 40) % (33 - OCC))
+    var = int((r0 >> 48) % VARIANTS)
+    fam, p_, a, chinv = proto_params(cls, var)
+    img = np.zeros((32, 32, 3), dtype=np.uint8)
+    for y in range(32):
+        for x in range(32):
+            s, r = splitmix64(s)
+            u, v = x + dx, y + dy
+            occluded = occx <= x < occx + OCC and occy <= y < occy + OCC
+            for ch in range(3):
+                if occluded:
+                    t = 128
+                else:
+                    t = template(fam, p_, a, chinv, u, v, ch, phase)
+                    t = 128 + (t - 128) * contrast // 128
+                noise = (int((r >> (8 * ch)) & 0xFF) - 128) * NOISE_AMP // 128
+                p = t + noise
+                img[y, x, ch] = 0 if p < 0 else (255 if p > 255 else p)
+    return img
+
+
+def sample(global_seed: int, split: int, index: int, n_classes: int):
+    """Random-access sample -> (uint8 image, int label).
+
+    ``split``: 0 = train, 1 = val, 2 = test (domain-separated streams).
+    """
+    h = mix2(global_seed ^ (split * 0x9E3779B97F4A7C15 & M64), index)
+    cls = int(h % n_classes)
+    if int((h >> 32) % LABEL_NOISE_DEN) == 0:
+        cls = int((h >> 40) % n_classes)  # noisy label; image keeps cls below
+        img_cls = int(h % n_classes)
+    else:
+        img_cls = cls
+    img_seed = mix2(h, 0xDA7A5E77)
+    return gen_image(img_seed, img_cls), cls
+
+
+def batch(global_seed: int, split: int, start: int, size: int, n_classes: int):
+    """Batch [start, start+size) as (f32 NHWC in [-1, 1], int32 labels)."""
+    xs = np.zeros((size, 32, 32, 3), dtype=np.float32)
+    ys = np.zeros((size,), dtype=np.int32)
+    for i in range(size):
+        img, cls = sample(global_seed, split, start + i, n_classes)
+        xs[i] = img.astype(np.float32) / 127.5 - 1.0
+        ys[i] = cls
+    return xs, ys

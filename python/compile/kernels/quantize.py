@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernels: symmetric int8 fake-quantization and
+weight-set projection (the paper's weight *restriction* operator, S4.2).
+
+Both kernels are elementwise over the tensor being quantized, with the
+candidate-set table broadcast from SMEM-like residency (a single 32-wide
+row per layer).  ``interpret=True`` everywhere for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: int8 symmetric quantization range: codes in [-QMAX, QMAX].
+QMAX = 127
+#: Maximum candidate-set cardinality (the paper's "safe initial set" size).
+KSET = 32
+#: Elementwise block length for the 1-D kernels.
+BLOCK = 512
+
+
+def _fake_quant_kernel(x_ref, s_ref, out_ref):
+    s = s_ref[0]
+    inv = jnp.where(s > 0.0, 1.0 / jnp.maximum(s, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(x_ref[...] * inv), -QMAX, QMAX)
+    out_ref[...] = q * s
+
+
+def _project_kernel(q_ref, set_ref, out_ref):
+    # q_ref: (BLOCK,) integer codes as f32; set_ref: (KSET,) candidate
+    # codes with invalid slots pre-filled with a huge sentinel so they
+    # never win the argmin.
+    q = q_ref[...]
+    dist = jnp.abs(q[:, None] - set_ref[...][None, :])
+    best = jnp.argmin(dist, axis=1)
+    out_ref[...] = set_ref[...][best]
+
+
+def _pad1(x: jax.Array, n: int) -> jax.Array:
+    return jnp.pad(x, (0, n - x.shape[0]))
+
+
+def _ceil_block(n: int) -> int:
+    return ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fake_quant(x: jax.Array, scale: jax.Array, *, interpret: bool = True):
+    """Symmetric int8 fake-quant: ``round(x/s) clipped to +-127, times s``.
+
+    ``scale == 0`` is the pass-to-zero convention used for disabled
+    quantization points (callers gate with ``quant_on`` instead).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    npad = _ceil_block(n)
+    out = pl.pallas_call(
+        _fake_quant_kernel,
+        grid=(npad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(_pad1(flat, npad), scale.reshape(1).astype(jnp.float32))
+    return out[:n].reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def project_codes(q: jax.Array, cset: jax.Array, *, interpret: bool = True):
+    """Map each int8 code in ``q`` to the nearest code of candidate set
+    ``cset`` (shape ``(KSET,)``; invalid slots must hold a huge sentinel).
+
+    This is the restriction operator applied inside QAT once a layer's
+    candidate set has been chosen (S4.2): every occurrence of a removed
+    weight value is mapped to the nearest remaining value.
+    """
+    flat = q.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    npad = _ceil_block(n)
+    out = pl.pallas_call(
+        _project_kernel,
+        grid=(npad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((KSET,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(_pad1(flat, npad), cset.reshape(KSET).astype(jnp.float32))
+    return out[:n].reshape(q.shape)

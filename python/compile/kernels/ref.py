@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the CORE correctness references: pytest (with hypothesis
+shape/seed sweeps) asserts the Pallas kernels match them bit-for-bit
+(modulo float accumulation order).  The Layer-2 model uses these same
+functions on its training path (they lower to plain XLA dot/elementwise,
+which is much faster under the CPU PJRT plugin than interpreted Pallas),
+while the eval/tile artifacts use the Pallas kernels — pytest pins the
+two paths together.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127
+KSET = 32
+#: Sentinel for invalid candidate-set slots (never wins a nearest search).
+SET_SENTINEL = 1.0e9
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for :func:`..kernels.systolic_matmul.matmul_systolic`."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fake_quant_ref(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Oracle for :func:`..kernels.quantize.fake_quant`."""
+    s = jnp.asarray(scale, jnp.float32)
+    inv = jnp.where(s > 0.0, 1.0 / jnp.maximum(s, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * inv), -QMAX, QMAX)
+    return q * s
+
+
+def project_codes_ref(q: jax.Array, cset: jax.Array) -> jax.Array:
+    """Oracle for :func:`..kernels.quantize.project_codes`."""
+    qf = q.astype(jnp.float32)
+    dist = jnp.abs(qf[..., None] - cset.reshape(-1).astype(jnp.float32))
+    best = jnp.argmin(dist, axis=-1)
+    return cset.reshape(-1)[best].astype(jnp.float32)
+
+
+def im2col(x: jax.Array, k: int, stride: int, pad: int) -> jax.Array:
+    """NHWC ``x`` -> patch matrix of shape (N*Ho*Wo, k*k*C).
+
+    Patch column order is (ky, kx, c) fastest-last, matching the Rust
+    engine's ``model::infer`` layout exactly (cross-checked in tests).
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[:, ky : ky + stride * ho : stride, kx : kx + stride * wo : stride, :]
+            cols.append(sl.reshape(n * ho * wo, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, stride: int, pad: int, matmul=matmul_ref
+) -> jax.Array:
+    """im2col convolution; ``w`` is OIHW, ``x``/output are NHWC.
+
+    ``matmul`` is pluggable so the same conv path runs with either the
+    jnp oracle or the Pallas systolic kernel.
+    """
+    n, h, hh, c = x.shape
+    cout, cin, k, _ = w.shape
+    assert c == cin
+    cols = im2col(x, k, stride, pad)  # (N*Ho*Wo, k*k*cin)
+    # Weight matrix rows must match the (ky, kx, c) patch order.
+    wmat = jnp.transpose(w, (2, 3, 1, 0)).reshape(k * k * cin, cout)
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (hh + 2 * pad - k) // stride + 1
+    y = matmul(cols, wmat)
+    return y.reshape(n, ho, wo, cout)

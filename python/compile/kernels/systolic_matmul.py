@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: weight-stationary systolic-tile matmul.
+
+The paper (S3.2) maps every convolution, after im2col, onto a 64x64
+weight-stationary systolic array: the weight matrix is cut into 64x64
+tiles that stay resident in the PE grid while activations stream
+through.  This kernel expresses exactly that schedule in Pallas terms:
+
+  * grid = (M/64, N/64, K/64) - the (i, j) axes walk output tiles, the
+    k axis walks the 64-deep reduction, i.e. one systolic *tile pass*
+    per k step;
+  * ``BlockSpec((64, 64), ...)`` for the weight operand = the
+    weight-stationary residency (one 64x64 weight tile per grid step,
+    exactly what is loaded into the PE grid);
+  * the accumulator block plays the role of the 22-bit partial-sum
+    chain: partial sums from tile pass k are carried into pass k+1.
+
+Hardware adaptation (see DESIGN.md SHardware-Adaptation): on a real TPU
+this lowering targets the MXU with VMEM-resident 64x64 blocks; here we
+lower with ``interpret=True`` because the CPU PJRT plugin cannot execute
+Mosaic custom-calls.  Numerics are identical; TPU efficiency is
+estimated statically in EXPERIMENTS.md SPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Systolic array dimension from the paper (64x64 weight-stationary PEs).
+TILE = 64
+
+
+def _mm_kernel(x_ref, w_ref, out_ref):
+    """One (i, j, k) grid step: multiply a 64xK block into the PE grid.
+
+    ``out_ref`` is revisited for every k (same (i, j) block), which gives
+    us the running partial-sum accumulation of the systolic column chain.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def _ceil_to_tile(n: int) -> int:
+    return ((n + TILE - 1) // TILE) * TILE
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_systolic(x: jax.Array, w: jax.Array, *, interpret: bool = True):
+    """``x @ w`` scheduled as 64x64 weight-stationary systolic tiles.
+
+    Arbitrary (M, K) x (K, N) float32 operands; internally padded to
+    multiples of :data:`TILE` (zero padding is exact for matmul).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    mp, kp, np_ = _ceil_to_tile(m), _ceil_to_tile(k), _ceil_to_tile(n)
+    xp = _pad_to(x.astype(jnp.float32), mp, kp)
+    wp = _pad_to(w.astype(jnp.float32), kp, np_)
+
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // TILE, np_ // TILE, kp // TILE),
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def tile_matmul_entry(x: jax.Array, w: jax.Array):
+    """AOT entry point for the standalone systolic-tile artifact.
+
+    The Rust ``systolic`` module loads this executable to cross-check its
+    cycle-level tile simulation against the device kernel (same tile, same
+    numbers).  Shapes are fixed at lowering time by ``aot.py``.
+    """
+    return (matmul_systolic(x, w),)

@@ -1,0 +1,456 @@
+"""Layer-2: quantization-aware CNN models (LeNet-5, ResNet-20,
+ResNet-50-lite) built on the Layer-1 kernels.
+
+The models are described by a *spec*: a flat op list (convs, pools, fcs,
+residual save/add) with every shape resolved at spec-build time.  The
+same spec is serialized into ``manifest.json`` by ``aot.py`` and parsed
+by the Rust ``model`` module, so the two engines are built from a single
+source of truth.
+
+QAT scheme (mirrored exactly by ``rust/src/quant``):
+  * weights: symmetric int8, per-layer scale ``s_w = max|w*mask| / 127``
+    recomputed from the float shadow weights every step;
+  * activations: symmetric int8 with per-quant-point scales passed in
+    (computed by a calibration pass), gated by a global ``quant_on``;
+  * weight restriction (S4.2): integer codes projected onto the layer's
+    candidate set (nearest remaining code), gated per layer;
+  * pruning: elementwise masks on conv weights;
+  * straight-through estimator for all quantization ops.
+
+Training uses the jnp reference kernels (fast under CPU PJRT); the
+eval/logits artifacts for LeNet-5 and the standalone tile artifact use
+the Pallas systolic kernel — pytest asserts both paths agree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.quantize import fake_quant, project_codes
+from .kernels.systolic_matmul import matmul_systolic
+
+QMAX = 127
+KSET = 32
+SET_SENTINEL = ref.SET_SENTINEL
+MOMENTUM = 0.9
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+class SpecBuilder:
+    """Builds the op list while tracking activation shape and allocating
+    parameter / conv / quant-point indices."""
+
+    def __init__(self, name: str, n_classes: int):
+        self.spec: Dict[str, Any] = {
+            "name": name,
+            "n_classes": n_classes,
+            "input": [32, 32, 3],
+            "ops": [],
+            "params": [],
+        }
+        self.h, self.w, self.c = 32, 32, 3
+        self.flat = None  # set after flatten/gap
+        self.n_conv = 0
+        self.n_q = 0
+        self.saved: List[Any] = []
+
+    def _param(self, name: str, shape: List[int], kind: str) -> int:
+        self.spec["params"].append({"name": name, "shape": shape, "kind": kind})
+        return len(self.spec["params"]) - 1
+
+    def conv(self, cout: int, k: int, stride: int = 1, pad: int = 0, relu: bool = True):
+        name = f"conv{self.n_conv}"
+        wi = self._param(f"{name}.w", [cout, self.c, k, k], "conv_w")
+        bi = self._param(f"{name}.b", [cout], "bias")
+        ho = (self.h + 2 * pad - k) // stride + 1
+        wo = (self.w + 2 * pad - k) // stride + 1
+        self.spec["ops"].append(
+            {
+                "op": "conv",
+                "name": name,
+                "w": wi,
+                "b": bi,
+                "conv_idx": self.n_conv,
+                "q_idx": self.n_q,
+                "cin": self.c,
+                "cout": cout,
+                "k": k,
+                "stride": stride,
+                "pad": pad,
+                "relu": relu,
+                "hin": self.h,
+                "win": self.w,
+                "hout": ho,
+                "wout": wo,
+            }
+        )
+        self.n_conv += 1
+        self.n_q += 1
+        self.h, self.w, self.c = ho, wo, cout
+        return self
+
+    def maxpool2(self):
+        self.spec["ops"].append({"op": "maxpool2"})
+        self.h //= 2
+        self.w //= 2
+        return self
+
+    def gap(self):
+        self.spec["ops"].append({"op": "gap"})
+        self.flat = self.c
+        return self
+
+    def flatten(self):
+        self.spec["ops"].append({"op": "flatten"})
+        self.flat = self.h * self.w * self.c
+        return self
+
+    def fc(self, out: int, relu: bool):
+        assert self.flat is not None, "fc before flatten/gap"
+        idx = sum(1 for o in self.spec["ops"] if o["op"] == "fc")
+        name = f"fc{idx}"
+        wi = self._param(f"{name}.w", [out, self.flat], "fc_w")
+        bi = self._param(f"{name}.b", [out], "bias")
+        self.spec["ops"].append(
+            {
+                "op": "fc",
+                "name": name,
+                "w": wi,
+                "b": bi,
+                "q_idx": self.n_q,
+                "din": self.flat,
+                "dout": out,
+                "relu": relu,
+            }
+        )
+        self.n_q += 1
+        self.flat = out
+        return self
+
+    def save(self):
+        self.spec["ops"].append({"op": "save"})
+        self.saved.append((self.h, self.w, self.c))
+        return self
+
+    def add_saved(self, relu: bool = True, proj_stride: int = 0):
+        """Residual add with the saved tensor; ``proj_stride > 0`` inserts a
+        1x1 projection conv (its own mask / wset / quant point) on the skip."""
+        sh, sw, sc = self.saved.pop()
+        entry: Dict[str, Any] = {"op": "add_saved", "relu": relu, "proj": None}
+        if proj_stride > 0:
+            name = f"conv{self.n_conv}"
+            wi = self._param(f"{name}.w", [self.c, sc, 1, 1], "conv_w")
+            bi = self._param(f"{name}.b", [self.c], "bias")
+            entry["proj"] = {
+                "name": name,
+                "w": wi,
+                "b": bi,
+                "conv_idx": self.n_conv,
+                "q_idx": self.n_q,
+                "cin": sc,
+                "cout": self.c,
+                "k": 1,
+                "stride": proj_stride,
+                "pad": 0,
+                "relu": False,
+                "hin": sh,
+                "win": sw,
+                "hout": self.h,
+                "wout": self.w,
+            }
+            self.n_conv += 1
+            self.n_q += 1
+        else:
+            assert (sh, sw, sc) == (self.h, self.w, self.c)
+        self.spec["ops"].append(entry)
+        return self
+
+    def done(self) -> Dict[str, Any]:
+        self.spec["n_conv"] = self.n_conv
+        self.spec["n_q"] = self.n_q
+        self.spec["kset"] = KSET
+        return self.spec
+
+
+def lenet5_spec() -> Dict[str, Any]:
+    """LeNet-5 adapted to 32x32x3 inputs (the CIFAR variant of Table 1)."""
+    b = SpecBuilder("lenet5", 10)
+    b.conv(6, 5, 1, 2, relu=True).maxpool2()
+    b.conv(16, 5, 1, 0, relu=True).maxpool2()
+    b.flatten()
+    b.fc(120, relu=True).fc(84, relu=True).fc(10, relu=False)
+    return b.done()
+
+
+def _basic_block(b: SpecBuilder, cout: int, stride: int):
+    proj = stride != 1 or b.c != cout
+    b.save()
+    b.conv(cout, 3, stride, 1, relu=True)
+    b.conv(cout, 3, 1, 1, relu=False)
+    b.add_saved(relu=True, proj_stride=stride if proj else 0)
+
+
+def resnet20_spec() -> Dict[str, Any]:
+    """ResNet-20 for CIFAR-10: 3 stages x 3 basic blocks, 16/32/64 ch."""
+    b = SpecBuilder("resnet20", 10)
+    b.conv(16, 3, 1, 1, relu=True)
+    for cout, stride0 in [(16, 1), (32, 2), (64, 2)]:
+        for blk in range(3):
+            _basic_block(b, cout, stride0 if blk == 0 else 1)
+    b.gap()
+    b.fc(10, relu=False)
+    return b.done()
+
+
+def _bottleneck(b: SpecBuilder, width: int, stride: int):
+    cout = width * 4
+    proj = stride != 1 or b.c != cout
+    b.save()
+    b.conv(width, 1, 1, 0, relu=True)
+    b.conv(width, 3, stride, 1, relu=True)
+    b.conv(cout, 1, 1, 0, relu=False)
+    b.add_saved(relu=True, proj_stride=stride if proj else 0)
+
+
+def resnet50lite_spec() -> Dict[str, Any]:
+    """Bottleneck ResNet scaled for single-core CPU training (DESIGN.md S2
+    substitution for ResNet-50 / CIFAR-100): 3 stages x 3 bottlenecks."""
+    b = SpecBuilder("resnet50lite", 100)
+    b.conv(16, 3, 1, 1, relu=True)
+    for width, stride0 in [(16, 1), (32, 2), (64, 2)]:
+        for blk in range(3):
+            _bottleneck(b, width, stride0 if blk == 0 else 1)
+    b.gap()
+    b.fc(100, relu=False)
+    return b.done()
+
+
+SPECS = {
+    "lenet5": lenet5_spec,
+    "resnet20": resnet20_spec,
+    "resnet50lite": resnet50lite_spec,
+}
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: Dict[str, Any], seed: int) -> List[jax.Array]:
+    """He-normal init; residual-branch-final convs scaled down (fixup-lite:
+    the quantized mirror has no batch norm, so deep nets need tamed
+    residual branches to train)."""
+    key = jax.random.PRNGKey(seed)
+    ops = spec["ops"]
+    last_before_add = set()
+    for i, op in enumerate(ops):
+        if op["op"] == "add_saved":
+            for j in range(i - 1, -1, -1):
+                if ops[j]["op"] == "conv":
+                    last_before_add.add(ops[j]["w"])
+                    break
+    params: List[jax.Array] = []
+    for i, p in enumerate(spec["params"]):
+        key, sub = jax.random.split(key)
+        shape = tuple(p["shape"])
+        if p["kind"] == "conv_w":
+            fan_in = shape[1] * shape[2] * shape[3]
+            scale = jnp.sqrt(2.0 / fan_in)
+            if i in last_before_add:
+                scale = scale * 0.2
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        elif p["kind"] == "fc_w":
+            params.append(
+                jnp.sqrt(2.0 / shape[1]) * jax.random.normal(sub, shape, jnp.float32)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass with QAT
+# ---------------------------------------------------------------------------
+
+
+def _ste(x: jax.Array, qx: jax.Array) -> jax.Array:
+    return x + jax.lax.stop_gradient(qx - x)
+
+
+def _weight_scale(w_eff: jax.Array) -> jax.Array:
+    s = jnp.max(jnp.abs(w_eff)) / QMAX
+    return jax.lax.stop_gradient(jnp.maximum(s, 1e-12))
+
+
+def _quant_weight(w, mask, wset_row, wset_on_l, use_pallas):
+    """mask -> scale -> int8 codes -> (optional) candidate-set projection."""
+    w_eff = w * mask if mask is not None else w
+    s = _weight_scale(w_eff)
+    q = jnp.clip(jnp.round(w_eff / s), -QMAX, QMAX)
+    if wset_row is not None:
+        proj = project_codes if use_pallas else ref.project_codes_ref
+        qp = proj(q, wset_row)
+        q = wset_on_l * qp + (1.0 - wset_on_l) * q
+    return _ste(w_eff, q * s), s
+
+
+def _quant_act(x, s_a, quant_on, use_pallas):
+    fq = fake_quant if use_pallas else ref.fake_quant_ref
+    xq = fq(x, s_a)
+    return x + quant_on * jax.lax.stop_gradient(xq - x)
+
+
+def _apply_conv(op, x, params, qc, stats):
+    w = params[op["w"]]
+    bvec = params[op["b"]]
+    ci = op["conv_idx"]
+    mask = qc["masks"][ci] if qc["masks"] is not None else None
+    wrow = qc["wsets"][ci] if qc["wsets"] is not None else None
+    won = qc["wset_on"][ci] if qc["wsets"] is not None else None
+    use_pallas = qc["use_pallas"]
+    stats.append(jnp.max(jnp.abs(x)))
+    xq = _quant_act(x, qc["act_scales"][op["q_idx"]], qc["quant_on"], use_pallas)
+    wq, _ = _quant_weight(w, mask, wrow, won, use_pallas)
+    if use_pallas:
+        # The systolic-tile schedule: im2col + 64x64 Pallas matmul (S3.2).
+        y = ref.conv2d_ref(xq, wq, op["stride"], op["pad"], matmul=matmul_systolic)
+    else:
+        # Training path: identical math via XLA's fused convolution
+        # (~4x faster than im2col+dot on the CPU plugin; equivalence is
+        # pinned by pytest).
+        y = jax.lax.conv_general_dilated(
+            xq,
+            wq,
+            (op["stride"], op["stride"]),
+            [(op["pad"], op["pad"])] * 2,
+            dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        )
+    y = y + bvec
+    if op.get("relu"):
+        y = jax.nn.relu(y)
+    return y
+
+
+def forward(spec, params, x, qc):
+    """Run the network.  ``qc`` (quant config) keys:
+
+    ``act_scales`` f32[n_q]; ``quant_on`` f32 scalar; ``masks`` list of
+    conv-shaped arrays or None; ``wsets`` list of f32[KSET] code rows
+    (invalid slots = SET_SENTINEL) or None; ``wset_on`` f32[n_conv];
+    ``use_pallas`` static bool.
+
+    Returns (logits, act_maxes): one max-|activation| per quant point, in
+    q_idx order (traversal order == q_idx order by construction).
+    """
+    stats: List[jax.Array] = []
+    saved: List[jax.Array] = []
+    h = x
+    for op in spec["ops"]:
+        kind = op["op"]
+        if kind == "conv":
+            h = _apply_conv(op, h, params, qc, stats)
+        elif kind == "maxpool2":
+            n, hh, ww, c = h.shape
+            h = h.reshape(n, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
+        elif kind == "gap":
+            h = h.mean(axis=(1, 2))
+        elif kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+        elif kind == "save":
+            saved.append(h)
+        elif kind == "add_saved":
+            skip = saved.pop()
+            if op["proj"] is not None:
+                skip = _apply_conv(op["proj"], skip, params, qc, stats)
+            h = h + skip
+            if op.get("relu"):
+                h = jax.nn.relu(h)
+        elif kind == "fc":
+            w = params[op["w"]]
+            bvec = params[op["b"]]
+            stats.append(jnp.max(jnp.abs(h)))
+            hq = _quant_act(
+                h, qc["act_scales"][op["q_idx"]], qc["quant_on"], qc["use_pallas"]
+            )
+            wq, _ = _quant_weight(w, None, None, None, qc["use_pallas"])
+            mm = matmul_systolic if qc["use_pallas"] else ref.matmul_ref
+            h = mm(hq, wq.T) + bvec
+            if op.get("relu"):
+                h = jax.nn.relu(h)
+        else:  # pragma: no cover - specs are internally generated
+            raise ValueError(f"unknown op {kind}")
+    return h, jnp.stack(stats)
+
+
+# ---------------------------------------------------------------------------
+# Entry points lowered by aot.py
+# ---------------------------------------------------------------------------
+
+
+def make_qc(masks, wsets, wset_on, act_scales, quant_on, use_pallas):
+    return {
+        "masks": masks,
+        "wsets": wsets,
+        "wset_on": wset_on,
+        "act_scales": act_scales,
+        "quant_on": quant_on,
+        "use_pallas": use_pallas,
+    }
+
+
+def _loss_fn(spec, params, x, y, qc):
+    logits, _ = forward(spec, params, x, qc)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+def train_step(spec, params, mom, masks, wsets, wset_on, act_scales, quant_on, lr, x, y):
+    """One SGD+momentum QAT step.  Returns (params', mom', loss)."""
+    qc = make_qc(masks, wsets, wset_on, act_scales, quant_on, False)
+    loss, grads = jax.value_and_grad(lambda p: _loss_fn(spec, p, x, y, qc))(params)
+    new_mom = [MOMENTUM * m + g for m, g in zip(mom, grads)]
+    new_params = [p - lr * m for p, m in zip(params, new_mom)]
+    return new_params, new_mom, loss
+
+
+def eval_batch(spec, params, masks, wsets, wset_on, act_scales, quant_on, x, y, use_pallas):
+    """Returns (n_correct as f32 scalar, mean loss)."""
+    qc = make_qc(masks, wsets, wset_on, act_scales, quant_on, use_pallas)
+    logits, _ = forward(spec, params, x, qc)
+    pred = jnp.argmax(logits, axis=1)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return jnp.sum((pred == y).astype(jnp.float32)), nll
+
+
+def logits_batch(spec, params, masks, wsets, wset_on, act_scales, quant_on, x, use_pallas):
+    qc = make_qc(masks, wsets, wset_on, act_scales, quant_on, use_pallas)
+    logits, _ = forward(spec, params, x, qc)
+    return logits
+
+
+def calib_batch(spec, params, x):
+    """Float forward (quant off) returning per-quant-point max |activation|.
+
+    The mean |logit| is returned too — not for calibration, but to keep
+    the final classifier parameters live in the lowered HLO (XLA drops
+    unused entry parameters, which would change the input arity the Rust
+    runtime feeds).
+    """
+    qc = make_qc(
+        None,
+        None,
+        jnp.ones((spec["n_conv"],), jnp.float32),
+        jnp.zeros((spec["n_q"],), jnp.float32),
+        jnp.float32(0.0),
+        False,
+    )
+    logits, act_maxes = forward(spec, params, x, qc)
+    return act_maxes, jnp.mean(jnp.abs(logits))

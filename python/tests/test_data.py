@@ -1,0 +1,64 @@
+"""Synthetic dataset tests, including the cross-language golden vector
+shared with `rust/tests/integration_runtime.rs`."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+#: Must match wsel::data::GOLDEN_VAL0_PREFIX on the Rust side.
+GOLDEN_VAL0_PREFIX = [193, 255, 194, 0, 0, 0, 81, 115, 117, 210, 215, 146, 245, 255, 249, 90]
+
+
+def test_cross_language_golden():
+    img, cls = D.sample(7, 1, 0, 10)
+    assert list(img.reshape(-1)[:16]) == GOLDEN_VAL0_PREFIX
+    assert cls == 2
+
+
+def test_deterministic():
+    a, ca = D.sample(7, 0, 5, 10)
+    b, cb = D.sample(7, 0, 5, 10)
+    np.testing.assert_array_equal(a, b)
+    assert ca == cb
+
+
+@given(split=st.integers(0, 2), idx=st.integers(0, 10_000), ncls=st.sampled_from([10, 100]))
+def test_sample_shape_and_range(split, idx, ncls):
+    img, cls = D.sample(7, split, idx, ncls)
+    assert img.shape == (32, 32, 3)
+    assert img.dtype == np.uint8
+    assert 0 <= cls < ncls
+
+
+def test_splits_differ():
+    a, _ = D.sample(7, 0, 3, 10)
+    b, _ = D.sample(7, 1, 3, 10)
+    assert not np.array_equal(a, b)
+
+
+def test_batch_normalization():
+    xs, ys = D.batch(7, 1, 0, 4, 10)
+    assert xs.shape == (4, 32, 32, 3)
+    assert xs.min() >= -1.0 and xs.max() <= 1.0
+    assert ys.dtype == np.int32
+
+
+def test_label_distribution_covers_classes():
+    labels = [D.sample(7, 0, i, 10)[1] for i in range(400)]
+    assert set(labels) == set(range(10))
+
+
+def test_label_noise_rate_in_band():
+    # With LABEL_NOISE_DEN = 16, ~6.25% of samples have label != image class.
+    n, noisy = 1200, 0
+    for i in range(n):
+        h = D.mix2(7 ^ (0 * 0x9E3779B97F4A7C15 & D.M64), i)
+        if (h >> 32) % D.LABEL_NOISE_DEN == 0:
+            noisy += 1
+    rate = noisy / n
+    assert 0.03 < rate < 0.10, rate

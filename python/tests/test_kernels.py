@@ -1,0 +1,134 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and seeds; every kernel must match its oracle to
+float tolerance.  This is the core correctness signal pinning the
+systolic-tile schedule to plain matmul semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantize import KSET, fake_quant, project_codes
+from compile.kernels.systolic_matmul import matmul_systolic
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestSystolicMatmul:
+    @given(
+        m=st.integers(1, 150),
+        k=st.integers(1, 150),
+        n=st.integers(1, 80),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_oracle(self, m, k, n, seed):
+        x = rand(seed, (m, k))
+        w = rand(seed + 1, (k, n))
+        got = matmul_systolic(x, w)
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_exact_on_tile_multiples(self):
+        x = rand(0, (128, 192))
+        w = rand(1, (192, 128))
+        got = matmul_systolic(x, w)
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_integer_codes_exact(self):
+        # int8-code operands must be bit-exact (the systolic mapping
+        # carries integer partial sums).
+        rng = np.random.default_rng(3)
+        x = rng.integers(-7, 8, (70, 90)).astype(np.float32)
+        w = rng.integers(-7, 8, (90, 17)).astype(np.float32)
+        got = np.asarray(matmul_systolic(jnp.array(x), jnp.array(w)))
+        want = x @ w
+        np.testing.assert_array_equal(got, want)
+
+
+class TestFakeQuant:
+    @given(
+        n=st.integers(1, 3000),
+        scale=st.floats(1e-4, 1.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_oracle(self, n, scale, seed):
+        x = rand(seed, (n,), scale=3.0)
+        s = jnp.float32(scale)
+        np.testing.assert_allclose(
+            fake_quant(x, s), ref.fake_quant_ref(x, s), rtol=0, atol=1e-6
+        )
+
+    def test_zero_scale_passes_zero(self):
+        x = rand(9, (64,))
+        out = fake_quant(x, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(out), np.zeros(64, np.float32))
+
+    def test_clips_to_127_steps(self):
+        x = jnp.array([10.0, -10.0, 0.4, -0.4], jnp.float32)
+        s = jnp.float32(0.01)
+        out = np.asarray(fake_quant(x, s))
+        np.testing.assert_allclose(out[:2], [1.27, -1.27], atol=1e-6)
+
+
+class TestProjectCodes:
+    @given(
+        n=st.integers(1, 2000),
+        k=st.integers(1, KSET),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_oracle(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.array(rng.integers(-127, 128, n).astype(np.float32))
+        codes = np.sort(rng.choice(np.arange(-127, 128), size=k, replace=False))
+        cset = np.full(KSET, ref.SET_SENTINEL, np.float32)
+        cset[:k] = codes
+        cset = jnp.array(cset)
+        got = np.asarray(project_codes(q, cset))
+        want = np.asarray(ref.project_codes_ref(q, cset))
+        np.testing.assert_array_equal(got, want)
+        assert set(np.unique(got)).issubset(set(codes.tolist()))
+
+    def test_projection_is_nearest(self):
+        cset = np.full(KSET, ref.SET_SENTINEL, np.float32)
+        cset[:3] = [-100.0, 0.0, 100.0]
+        q = jnp.array([-70.0, -30.0, 49.0, 51.0], jnp.float32)
+        got = np.asarray(project_codes(q, jnp.array(cset)))
+        np.testing.assert_array_equal(got, [-100.0, 0.0, 0.0, 100.0])
+
+
+class TestConv2dRef:
+    @given(
+        seed=st.integers(0, 2**31),
+        cin=st.integers(1, 4),
+        cout=st.integers(1, 5),
+        k=st.sampled_from([1, 3, 5]),
+        stride=st.sampled_from([1, 2]),
+    )
+    def test_im2col_conv_matches_lax(self, seed, cin, cout, k, stride):
+        pad = k // 2
+        x = rand(seed, (2, 12, 12, cin))
+        w = rand(seed + 7, (cout, cin, k, k))
+        got = ref.conv2d_ref(x, w, stride, pad)
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad)] * 2,
+            dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_pallas_conv_path(self):
+        # The conv path with the Pallas matmul plugged in.
+        x = rand(11, (1, 8, 8, 3))
+        w = rand(12, (4, 3, 3, 3))
+        got = ref.conv2d_ref(x, w, 1, 1, matmul=matmul_systolic)
+        want = ref.conv2d_ref(x, w, 1, 1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,147 @@
+"""L2 model tests: spec construction, QAT semantics, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+settings.register_profile("ci", max_examples=8, deadline=None)
+settings.load_profile("ci")
+
+
+def dense_qc_args(spec):
+    masks = [jnp.ones(p["shape"]) for p in spec["params"] if p["kind"] == "conv_w"]
+    wsets = [jnp.full((M.KSET,), M.SET_SENTINEL) for _ in range(spec["n_conv"])]
+    won = jnp.zeros((spec["n_conv"],))
+    asc = jnp.ones((spec["n_q"],))
+    return masks, wsets, won, asc
+
+
+class TestSpecs:
+    @pytest.mark.parametrize("name,n_conv,n_q", [
+        ("lenet5", 2, 5),
+        ("resnet20", 21, 22),
+        ("resnet50lite", 31, 32),
+    ])
+    def test_spec_shapes(self, name, n_conv, n_q):
+        spec = M.SPECS[name]()
+        assert spec["n_conv"] == n_conv
+        assert spec["n_q"] == n_q
+        # conv_idx and q_idx are dense ranges.
+        conv_idxs = set()
+        for op in spec["ops"]:
+            if op["op"] == "conv":
+                conv_idxs.add(op["conv_idx"])
+            if op["op"] == "add_saved" and op["proj"]:
+                conv_idxs.add(op["proj"]["conv_idx"])
+        assert conv_idxs == set(range(n_conv))
+
+    def test_param_count_resnet20(self):
+        spec = M.resnet20_spec()
+        total = sum(int(np.prod(p["shape"])) for p in spec["params"])
+        # Classic ResNet-20 ~0.27M params (plus biases, no BN).
+        assert 0.25e6 < total < 0.31e6, total
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", ["lenet5", "resnet20", "resnet50lite"])
+    def test_logit_shapes(self, name):
+        spec = M.SPECS[name]()
+        p = M.init_params(spec, 0)
+        masks, wsets, won, asc = dense_qc_args(spec)
+        x = jnp.zeros((2, 32, 32, 3))
+        logits = M.logits_batch(
+            spec, p, masks, wsets, won, asc, jnp.float32(0.0), x, False
+        )
+        assert logits.shape == (2, spec["n_classes"])
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_quantization_changes_little(self):
+        spec = M.lenet5_spec()
+        p = M.init_params(spec, 1)
+        masks, wsets, won, _ = dense_qc_args(spec)
+        key = jax.random.PRNGKey(2)
+        x = jax.random.uniform(key, (4, 32, 32, 3), jnp.float32, -1, 1)
+        calib, _ = M.calib_batch(spec, p, x)
+        asc = calib / 127.0
+        lf = M.logits_batch(spec, p, masks, wsets, won, asc, jnp.float32(0.0), x, False)
+        lq = M.logits_batch(spec, p, masks, wsets, won, asc, jnp.float32(1.0), x, False)
+        scale = float(jnp.max(jnp.abs(lf))) + 1e-6
+        assert float(jnp.max(jnp.abs(lf - lq))) < 0.2 * scale
+
+    def test_wset_projection_reduces_distinct_codes(self):
+        spec = M.lenet5_spec()
+        p = M.init_params(spec, 3)
+        masks, wsets, won, asc = dense_qc_args(spec)
+        # Restrict conv0 to codes {-64, 0, 64}.
+        t = np.full(M.KSET, M.SET_SENTINEL, np.float32)
+        t[:3] = [-64.0, 0.0, 64.0]
+        wsets = [jnp.array(t)] + wsets[1:]
+        won = jnp.array([1.0, 0.0])
+        w = p[0]
+        s = jnp.max(jnp.abs(w)) / M.QMAX
+        wq, _ = M._quant_weight(w, masks[0], wsets[0], won[0], False)
+        codes = np.unique(np.round(np.asarray(wq / s)))
+        assert set(codes.tolist()).issubset({-64.0, 0.0, 64.0})
+
+    def test_pruning_mask_zeroes(self):
+        spec = M.lenet5_spec()
+        p = M.init_params(spec, 4)
+        mask = np.ones(spec["params"][0]["shape"], np.float32)
+        mask[0] = 0.0
+        wq, _ = M._quant_weight(p[0], jnp.array(mask), None, None, False)
+        assert float(jnp.max(jnp.abs(wq[0]))) == 0.0
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        spec = M.lenet5_spec()
+        p = M.init_params(spec, 5)
+        mom = [jnp.zeros_like(q) for q in p]
+        masks, wsets, won, asc = dense_qc_args(spec)
+        key = jax.random.PRNGKey(6)
+        x = jax.random.uniform(key, (16, 32, 32, 3), jnp.float32, -1, 1)
+        y = jax.random.randint(key, (16,), 0, 10)
+        step = jax.jit(
+            lambda p, mom: M.train_step(
+                spec, p, mom, masks, wsets, won, asc, jnp.float32(0.0),
+                jnp.float32(0.05), x, y,
+            )
+        )
+        losses = []
+        for _ in range(30):
+            p, mom, loss = step(p, mom)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5, losses[::10]
+
+    def test_gradients_respect_mask(self):
+        spec = M.lenet5_spec()
+        p = M.init_params(spec, 7)
+        masks, wsets, won, asc = dense_qc_args(spec)
+        mask0 = np.ones(spec["params"][0]["shape"], np.float32)
+        mask0[1] = 0.0
+        masks = [jnp.array(mask0)] + masks[1:]
+        key = jax.random.PRNGKey(8)
+        x = jax.random.uniform(key, (4, 32, 32, 3), jnp.float32, -1, 1)
+        y = jax.random.randint(key, (4,), 0, 10)
+        mom = [jnp.zeros_like(q) for q in p]
+        p2, _, _ = M.train_step(
+            spec, p, mom, masks, wsets, won, asc, jnp.float32(0.0),
+            jnp.float32(0.1), x, y,
+        )
+        # Pruned filter's weights unchanged (zero gradient through mask).
+        np.testing.assert_array_equal(np.asarray(p[0][1]), np.asarray(p2[0][1]))
+
+
+class TestCalib:
+    def test_calib_counts_and_positive(self):
+        spec = M.resnet20_spec()
+        p = M.init_params(spec, 9)
+        x = jax.random.uniform(jax.random.PRNGKey(10), (2, 32, 32, 3), jnp.float32, -1, 1)
+        maxes, logit_mean = M.calib_batch(spec, p, x)
+        assert maxes.shape == (spec["n_q"],)
+        assert bool(jnp.all(maxes > 0))
+        assert bool(jnp.isfinite(logit_mean))

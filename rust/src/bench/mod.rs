@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `benches/*.rs` target (`harness = false` in Cargo.toml).
+//! Reports min / median / mean over timed iterations after warmup, plus a
+//! derived throughput line when the caller supplies an items count.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "bench {:40} iters={:4}  min={:>12}  median={:>12}  mean={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns)
+        );
+    }
+
+    pub fn report_throughput(&self, items: f64, unit: &str) {
+        self.report();
+        let per_sec = items / (self.median_ns as f64 * 1e-9);
+        println!("      -> {per_sec:.3e} {unit}/s (median)");
+    }
+}
+
+pub fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<u128> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    let min_ns = *samples.first().unwrap_or(&0);
+    let median_ns = samples.get(samples.len() / 2).copied().unwrap_or(0);
+    let mean_ns = samples.iter().sum::<u128>() / samples.len().max(1) as u128;
+    Measurement {
+        name: name.to_string(),
+        iters,
+        min_ns,
+        median_ns,
+        mean_ns,
+    }
+}
+
+/// Guard against dead-code elimination of benched values.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("noop-ish", 1, 5, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.min_ns <= m.median_ns && m.median_ns <= m.mean_ns * 2);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_ns(12).ends_with("ns"));
+        assert!(fmt_ns(12_000).ends_with("µs"));
+        assert!(fmt_ns(12_000_000).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000).ends_with('s'));
+    }
+}
+
+/// Shared scenario setup for the paper-table benches: a quick-preset
+/// pipeline, trained + profiled, with `float_steps` overridable so each
+/// bench balances runtime against signal.  Reuses step-tagged checkpoints
+/// when present, so repeated `cargo bench` invocations skip training.
+pub mod scenarios {
+    use crate::coordinator::{Pipeline, PipelineParams};
+    use anyhow::Result;
+    use std::path::PathBuf;
+
+    pub fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("lenet5/manifest.json").exists() {
+            Some(p)
+        } else {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    /// Quick pipeline, trained and profiled.
+    pub fn prepared(model: &str, float_steps: usize, qat_steps: usize) -> Result<Pipeline> {
+        let dir = artifacts_dir().expect("artifacts");
+        let pp = PipelineParams {
+            float_steps,
+            qat_steps,
+            calib_batches: 1,
+            val_batches: 2,
+            trace_len: 256,
+            stats_images: 4,
+            ..PipelineParams::default()
+        };
+        let mut p = Pipeline::new(&dir, model, pp)?;
+        p.train_baseline()?;
+        p.profile()?;
+        Ok(p)
+    }
+}

@@ -1,0 +1,324 @@
+//! End-to-end compression pipeline (the L3 coordinator).
+//!
+//! Owns the PJRT runtime, the int8 mirror engine, the gate-level energy
+//! substrate and the compression algorithms, and drives the paper's full
+//! flow: QAT training → calibration → per-layer statistics → per-weight
+//! energy characterization → energy-prioritized layer-wise compression →
+//! reporting.  It implements [`LayerModeler`] + [`AccuracyOracle`] so the
+//! §4 algorithms run against the real system.
+
+use crate::data::Split;
+use crate::energy::{characterize_layer, LayerEnergy, NetworkEnergy, WeightEnergyTable};
+use crate::gates::CapModel;
+use crate::model::Engine;
+use crate::quant;
+use crate::runtime::{LrSchedule, ModelRuntime};
+use crate::schedule::{energy_prioritized, ScheduleParams, ScheduleResult};
+use crate::selection::{AccuracyOracle, CompressionState};
+use crate::stats::{self, LayerStats};
+use crate::systolic::MacLib;
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+/// Pipeline hyper-parameters (scaled presets below).
+#[derive(Clone, Debug)]
+pub struct PipelineParams {
+    /// Float pre-training steps.
+    pub float_steps: usize,
+    /// QAT steps after calibration.
+    pub qat_steps: usize,
+    pub lr: LrSchedule,
+    /// Calibration batches (stats + act scales).
+    pub calib_batches: usize,
+    /// Validation batches per accuracy measurement.
+    pub val_batches: usize,
+    /// Synthetic trace length for per-weight characterization.
+    pub trace_len: usize,
+    /// Images used for capture-based statistics.
+    pub stats_images: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for PipelineParams {
+    fn default() -> Self {
+        Self {
+            float_steps: 1500,
+            qat_steps: 600,
+            lr: LrSchedule::default(),
+            calib_batches: 2,
+            val_batches: 4,
+            trace_len: 512,
+            stats_images: 8,
+            threads: crate::util::threadpool::default_threads(),
+            seed: 20250710,
+        }
+    }
+}
+
+impl PipelineParams {
+    /// Small preset for benches / smoke tests.
+    pub fn quick() -> Self {
+        Self {
+            float_steps: 120,
+            qat_steps: 40,
+            calib_batches: 1,
+            val_batches: 1,
+            trace_len: 128,
+            stats_images: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// The end-to-end pipeline.
+pub struct Pipeline {
+    pub rt: ModelRuntime,
+    pub pp: PipelineParams,
+    pub cap_model: CapModel,
+    pub maclib: MacLib,
+    /// Per-conv statistics (after `profile`).
+    pub stats: Vec<LayerStats>,
+    /// Per-conv energy tables (after `profile`).
+    pub tables: Vec<WeightEnergyTable>,
+    /// Baseline (uncompressed, quantized) accuracy.
+    pub acc0: f64,
+    /// Baseline network energy.
+    pub base_energy: Option<NetworkEnergy>,
+    pub eval_count: usize,
+    pub ft_steps_total: usize,
+}
+
+impl Pipeline {
+    pub fn new(artifacts_dir: &std::path::Path, model: &str, pp: PipelineParams) -> Result<Self> {
+        let rt = ModelRuntime::load(artifacts_dir, model)?;
+        Ok(Self {
+            rt,
+            pp,
+            cap_model: CapModel::default(),
+            maclib: MacLib::new(),
+            stats: Vec::new(),
+            tables: Vec::new(),
+            acc0: 0.0,
+            base_energy: None,
+            eval_count: 0,
+            ft_steps_total: 0,
+        })
+    }
+
+    /// Phase 1+2: float pre-training, activation calibration, QAT.
+    /// Stores the quantized baseline accuracy `acc0`.
+    pub fn train_baseline(&mut self) -> Result<f64> {
+        let dense = CompressionState::dense(self.rt.spec.n_conv);
+        let tag = format!("trained-f{}-q{}", self.pp.float_steps, self.pp.qat_steps);
+        if self.rt.load_params(&tag)? {
+            crate::info!("{}: loaded cached trained params", self.rt.spec.name);
+            self.rt.calibrate(self.pp.calib_batches)?;
+        } else {
+            crate::info!(
+                "{}: float pre-training {} steps",
+                self.rt.spec.name,
+                self.pp.float_steps
+            );
+            let loss = self
+                .rt
+                .train_steps(&dense, false, self.pp.lr, self.pp.float_steps)?;
+            crate::info!("float loss {loss:.4}; calibrating");
+            self.rt.calibrate(self.pp.calib_batches)?;
+            let qat_lr = LrSchedule {
+                base: self.pp.lr.base / 2.0,
+                decay_at: 0.5,
+            };
+            let loss = self
+                .rt
+                .train_steps(&dense, true, qat_lr, self.pp.qat_steps)?;
+            crate::info!("qat loss {loss:.4}");
+            self.rt.save_params(&tag)?;
+        }
+        self.acc0 = self
+            .rt
+            .evaluate(&dense, true, Split::Val, self.pp.val_batches)?;
+        crate::info!("{}: quantized baseline acc0 = {:.4}", self.rt.spec.name, self.acc0);
+        Ok(self.acc0)
+    }
+
+    /// Phase 3: per-layer statistics + per-weight energy tables + base
+    /// network energy (paper §3).
+    pub fn profile(&mut self) -> Result<&NetworkEnergy> {
+        let spec = self.rt.spec.clone();
+        let eng = Engine::new(&spec);
+        let qc = crate::model::QuantConfig::quantized(&spec, self.rt.act_scales.clone());
+        let bs = self.pp.stats_images;
+        let (xs, _ys) = crate::data::batch(self.rt.data_seed, Split::Train, 0, bs, spec.n_classes as u64);
+        crate::info!("{}: capturing operand streams ({} images)", spec.name, bs);
+        let fwd = eng.forward(&self.rt.params, &xs, bs, &qc, true);
+
+        let mut rng = Xoshiro256::new(self.pp.seed);
+        let mut per_conv: Vec<Vec<LayerStats>> = (0..spec.n_conv).map(|_| Vec::new()).collect();
+        for cap in &fwd.captures {
+            per_conv[cap.conv_idx].push(stats::collect(cap, &mut rng));
+        }
+        self.stats = per_conv
+            .into_iter()
+            .map(|v| {
+                assert!(!v.is_empty(), "conv layer missing capture");
+                stats::merge(v)
+            })
+            .collect();
+        self.stats.sort_by_key(|s| s.conv_idx);
+
+        crate::info!("{}: characterizing E_l(w) for {} layers", spec.name, spec.n_conv);
+        self.tables = self
+            .stats
+            .iter()
+            .map(|st| {
+                characterize_layer(
+                    st,
+                    &mut self.maclib,
+                    &self.cap_model,
+                    self.pp.trace_len,
+                    self.pp.seed ^ st.conv_idx as u64,
+                    self.pp.threads,
+                )
+            })
+            .collect();
+        let dense = CompressionState::dense(spec.n_conv);
+        let ne = self.compute_network_energy(&dense);
+        self.base_energy = Some(ne);
+        Ok(self.base_energy.as_ref().unwrap())
+    }
+
+    /// Per-image canonical energy model for one conv layer.
+    pub fn layer_energy_model(&self, conv_idx: usize) -> LayerEnergy {
+        let convs = self.rt.spec.convs();
+        let c = convs
+            .iter()
+            .find(|c| c.conv_idx == conv_idx)
+            .expect("conv idx");
+        let (m, k, n) = c.matmul_dims(1);
+        LayerEnergy {
+            conv_idx,
+            m,
+            k,
+            n,
+            table: self.tables[conv_idx].clone(),
+        }
+    }
+
+    /// Weight-code usage of a layer under `state` (mask applied, no set
+    /// restriction — the schedule restricts separately).
+    fn usage_of(&self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
+        let convs = self.rt.spec.convs();
+        let c = convs
+            .iter()
+            .find(|c| c.conv_idx == conv_idx)
+            .expect("conv idx");
+        let w = &self.rt.params[c.w];
+        let ratio = state.layers[conv_idx].prune_ratio;
+        let mask = if ratio > 0.0 {
+            Some(quant::magnitude_mask(w, ratio))
+        } else {
+            None
+        };
+        let (codes, _s) = quant::quantize_restricted(w, mask.as_deref(), None);
+        let mut usage = [0u64; 256];
+        for &c in &codes {
+            usage[(c as i32 + 128) as usize] += 1;
+        }
+        usage
+    }
+
+    /// Network energy under `state` (model mode).
+    pub fn compute_network_energy(&self, state: &CompressionState) -> NetworkEnergy {
+        let layers = (0..self.rt.spec.n_conv)
+            .map(|ci| {
+                let le = self.layer_energy_model(ci);
+                let usage = self.usage_of(ci, state);
+                let e = match &state.layers[ci].wset {
+                    Some(s) => crate::selection::set_energy(&le, &usage, s),
+                    None => le.energy_of_usage(&usage),
+                };
+                (ci, e)
+            })
+            .collect();
+        NetworkEnergy { layers }
+    }
+
+    /// Phase 4: the §4.3 schedule.
+    pub fn compress(&mut self, mut sp: ScheduleParams) -> Result<ScheduleResult> {
+        assert!(!self.tables.is_empty(), "profile() before compress()");
+        sp.acc0 = self.acc0;
+        let n_conv = self.rt.spec.n_conv;
+        Ok(energy_prioritized(self, n_conv, &sp))
+    }
+
+    /// Evaluate an arbitrary state: fine-tune then accuracy + energy
+    /// saving vs the profiled baseline (for baseline methods).
+    pub fn evaluate_state(
+        &mut self,
+        state: &CompressionState,
+        fine_tune_steps: usize,
+    ) -> Result<(f64, f64)> {
+        if fine_tune_steps > 0 {
+            self.fine_tune(state, fine_tune_steps);
+        }
+        let acc = self.accuracy(state);
+        let base = self
+            .base_energy
+            .clone()
+            .unwrap_or_else(|| self.compute_network_energy(&CompressionState::dense(self.rt.spec.n_conv)));
+        let now = self.compute_network_energy(state);
+        Ok((acc, base.saving_vs(&now)))
+    }
+
+    /// Snapshot current parameters so destructive experiments (naive
+    /// baselines) can restore them.
+    pub fn checkpoint(&self) -> Vec<Vec<f32>> {
+        self.rt.params.clone()
+    }
+
+    pub fn restore(&mut self, params: Vec<Vec<f32>>) {
+        self.rt.params = params;
+    }
+}
+
+impl crate::schedule::LayerModeler for Pipeline {
+    fn layer_energy(&mut self, conv_idx: usize) -> LayerEnergy {
+        self.layer_energy_model(conv_idx)
+    }
+
+    fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
+        self.usage_of(conv_idx, state)
+    }
+
+    fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy {
+        self.compute_network_energy(state)
+    }
+}
+
+impl AccuracyOracle for Pipeline {
+    fn accuracy(&mut self, state: &CompressionState) -> f64 {
+        self.eval_count += 1;
+        self.rt
+            .evaluate(state, true, Split::Val, self.pp.val_batches)
+            .expect("eval")
+    }
+
+    fn fine_tune(&mut self, state: &CompressionState, steps: usize) {
+        if steps == 0 {
+            return;
+        }
+        self.ft_steps_total += steps;
+        let lr = LrSchedule {
+            base: self.pp.lr.base / 4.0,
+            decay_at: 1.0,
+        };
+        self.rt
+            .train_steps(state, true, lr, steps)
+            .expect("fine-tune");
+    }
+
+    fn eval_count(&self) -> usize {
+        self.eval_count
+    }
+}

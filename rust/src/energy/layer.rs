@@ -1,0 +1,201 @@
+//! Convolution-layer and network energy (paper §3.2).
+//!
+//! A layer's im2col matmul runs as `N_ℓ` tile passes of 128 cycles on the
+//! 64×64 array.  In model mode the layer energy composes the per-weight
+//! table with the weight-code usage:
+//!
+//! ```text
+//! E_ℓ = Σ_positions E_ℓ(w_pos) · cycles_resident   + padding · E_idle
+//! cycles_resident = ceil(M/64) · 128        (per weight position)
+//! ```
+//!
+//! which is algebraically `N_ℓ · E_tile` with `E_tile = 2 P̄_tile T`,
+//! `T = 64/f` (the paper's formulation), since every weight position of a
+//! tile is live for all of the tile's passes.  Exact mode
+//! ([`crate::systolic::tile_power_exact`]) validates this composition.
+
+use super::macmodel::WeightEnergyTable;
+use crate::systolic::{n_tiles, CYCLES_PER_PASS, TILE};
+
+/// Residual clock-tree energy fraction for *padded* PE positions (tile
+/// rows/columns beyond the layer's K×N).  Weight-stationary arrays
+/// clock-gate columns/rows that carry no data (TPU-style); only a stub
+/// of the clock tree keeps toggling.  Pruned (w = 0) positions inside
+/// the layer are NOT gated — partial sums still chain through them — so
+/// they pay the full `E(0)` like the paper's zero-weight MACs.
+pub const GATED_IDLE_FRACTION: f64 = 0.15;
+
+/// Energy accounting for one conv layer.
+#[derive(Clone, Debug)]
+pub struct LayerEnergy {
+    pub conv_idx: usize,
+    /// Matmul dims (per evaluated batch).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub table: WeightEnergyTable,
+}
+
+impl LayerEnergy {
+    /// Tile passes (`N_ℓ`).
+    pub fn n_tiles(&self) -> u64 {
+        n_tiles(self.m, self.k, self.n)
+    }
+
+    /// Cycles each weight position stays resident across the layer.
+    pub fn resident_cycles(&self) -> u64 {
+        (self.m.div_ceil(TILE) as u64) * CYCLES_PER_PASS
+    }
+
+    /// Model-mode layer energy (J) for a weight-code usage histogram
+    /// (index = code + 128; total must equal K·N).
+    pub fn energy_of_usage(&self, usage: &[u64; 256]) -> f64 {
+        let cycles = self.resident_cycles() as f64;
+        let mut e = 0.0f64;
+        let mut occupied = 0u64;
+        for (i, &cnt) in usage.iter().enumerate() {
+            if cnt == 0 {
+                continue;
+            }
+            occupied += cnt;
+            let code = (i as i32 - 128) as i8;
+            e += cnt as f64 * self.table.energy(code) * cycles;
+        }
+        // Padding PEs in ragged tiles are clock-gated to a stub.
+        let k_pad = self.k.div_ceil(TILE) * TILE;
+        let n_pad = self.n.div_ceil(TILE) * TILE;
+        let padded = (k_pad * n_pad) as u64 - occupied;
+        e + padded as f64 * self.table.e_idle * GATED_IDLE_FRACTION * cycles
+    }
+
+    /// Energy from explicit weight codes (K×N row-major).
+    pub fn energy_of_codes(&self, w_codes: &[i8]) -> f64 {
+        assert_eq!(w_codes.len(), self.k * self.n);
+        let mut usage = [0u64; 256];
+        for &c in w_codes {
+            usage[(c as i32 + 128) as usize] += 1;
+        }
+        self.energy_of_usage(&usage)
+    }
+
+    /// Average tile power (W) implied by the model — the paper's
+    /// `P_tile` — at clock `f`.
+    pub fn p_tile(&self, usage: &[u64; 256], freq_hz: f64) -> f64 {
+        let e = self.energy_of_usage(usage);
+        let total_cycles = self.n_tiles() as f64 * CYCLES_PER_PASS as f64;
+        // Energy per array-cycle × f = average array power while this
+        // layer runs.
+        e / total_cycles * freq_hz
+    }
+}
+
+/// Whole-network energy report (conv layers; fc energy is negligible on
+/// the array and constant across methods, as in the paper).
+#[derive(Clone, Debug, Default)]
+pub struct NetworkEnergy {
+    pub layers: Vec<(usize, f64)>, // (conv_idx, joules)
+}
+
+impl NetworkEnergy {
+    pub fn total(&self) -> f64 {
+        self.layers.iter().map(|(_, e)| e).sum()
+    }
+
+    /// Per-layer share ρ_ℓ (paper §4.3).
+    pub fn shares(&self) -> Vec<(usize, f64)> {
+        let t = self.total();
+        self.layers
+            .iter()
+            .map(|&(i, e)| (i, if t > 0.0 { e / t } else { 0.0 }))
+            .collect()
+    }
+
+    /// Layers sorted by descending energy (the processing order of the
+    /// energy-prioritized schedule).
+    pub fn descending(&self) -> Vec<(usize, f64)> {
+        let mut v = self.layers.clone();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// Saving of `other` relative to `self` (fraction in [0, 1]).
+    pub fn saving_vs(&self, compressed: &NetworkEnergy) -> f64 {
+        let base = self.total();
+        if base <= 0.0 {
+            return 0.0;
+        }
+        1.0 - compressed.total() / base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(scale: f64) -> WeightEnergyTable {
+        let mut e = [0.0f64; 256];
+        for i in 0..256 {
+            let code = (i as i32 - 128).unsigned_abs() as f64;
+            e[i] = (1.0 + code) * 1e-15 * scale;
+        }
+        WeightEnergyTable {
+            e_per_cycle: e,
+            e_idle: 0.5e-15 * scale,
+        }
+    }
+
+    fn layer(m: usize, k: usize, n: usize) -> LayerEnergy {
+        LayerEnergy {
+            conv_idx: 0,
+            m,
+            k,
+            n,
+            table: table(1.0),
+        }
+    }
+
+    #[test]
+    fn zero_codes_cost_less() {
+        let le = layer(128, 64, 64);
+        let dense = vec![100i8; 64 * 64];
+        let sparse = vec![0i8; 64 * 64];
+        assert!(le.energy_of_codes(&dense) > le.energy_of_codes(&sparse) * 10.0);
+    }
+
+    #[test]
+    fn energy_scales_with_m_passes() {
+        let a = layer(64, 64, 64);
+        let b = layer(128, 64, 64);
+        let codes = vec![10i8; 64 * 64];
+        let ea = a.energy_of_codes(&codes);
+        let eb = b.energy_of_codes(&codes);
+        assert!((eb / ea - 2.0).abs() < 1e-9, "double M -> double passes");
+    }
+
+    #[test]
+    fn padding_counted_at_idle() {
+        // K=N=32 -> tile is 3/4 padding.
+        let le = layer(64, 32, 32);
+        let codes = vec![0i8; 32 * 32];
+        let e = le.energy_of_codes(&codes);
+        let cycles = le.resident_cycles() as f64;
+        let expect = (32.0 * 32.0) * le.table.energy(0) * cycles
+            + (4096.0 - 1024.0) * le.table.e_idle * GATED_IDLE_FRACTION * cycles;
+        assert!((e - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn network_shares_and_order() {
+        let ne = NetworkEnergy {
+            layers: vec![(0, 1.0), (1, 3.0), (2, 1.0)],
+        };
+        assert!((ne.total() - 5.0).abs() < 1e-12);
+        assert_eq!(ne.descending()[0].0, 1);
+        let shares = ne.shares();
+        assert!((shares[1].1 - 0.6).abs() < 1e-12);
+        let compressed = NetworkEnergy {
+            layers: vec![(0, 0.5), (1, 1.5), (2, 0.5)],
+        };
+        assert!((ne.saving_vs(&compressed) - 0.5).abs() < 1e-12);
+    }
+}

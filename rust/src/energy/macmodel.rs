@@ -1,0 +1,242 @@
+//! Per-weight MAC energy characterization (paper §3.1).
+//!
+//! For every int8 weight code we drive the weight-specialized MAC netlist
+//! with synthetic traces sampled from the layer's empirical activation
+//! and (grouped) partial-sum transition distributions, and measure
+//! average energy/cycle.  The result — a 256-entry `E_ℓ(w)` table per
+//! layer — is what the weight-selection algorithm (§4.2) and the layer
+//! energy model (§3.2) consume.
+
+use crate::gates::{CapModel, TraceSim};
+use crate::mac::{MacNetlist, ACC_BITS, ACT_BITS};
+use crate::stats::LayerStats;
+use crate::systolic::MacLib;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::parallel_map;
+
+/// Per-layer, per-weight-code energy table (J / cycle).
+#[derive(Clone, Debug)]
+pub struct WeightEnergyTable {
+    /// Index = code + 128 (code −128 unused: QAT clamps to ±127).
+    pub e_per_cycle: [f64; 256],
+    /// Idle energy (w = 0, a = 0 stream): pure clock/register floor.
+    pub e_idle: f64,
+}
+
+impl WeightEnergyTable {
+    #[inline]
+    pub fn energy(&self, code: i8) -> f64 {
+        self.e_per_cycle[(code as i32 + 128) as usize]
+    }
+}
+
+/// Drive one specialized MAC with an (activation, psum) step trace and
+/// return energy per cycle (J).
+fn trace_energy(
+    mac: &MacNetlist,
+    acts: &[i32],
+    psums: &[i32],
+    cap: &CapModel,
+) -> f64 {
+    debug_assert_eq!(acts.len(), psums.len());
+    let mut sim = TraceSim::new(&mac.netlist);
+    let n_in = mac.netlist.inputs.len();
+    let mut words = vec![0u64; n_in];
+    let mut i = 0;
+    while i < acts.len() {
+        let chunk = (acts.len() - i).min(64);
+        words.iter_mut().for_each(|w| *w = 0);
+        for lane in 0..chunk {
+            let a = acts[i + lane];
+            let p = psums[i + lane];
+            for bit in 0..ACT_BITS {
+                if (a >> bit) & 1 != 0 {
+                    words[bit] |= 1 << lane;
+                }
+            }
+            for bit in 0..ACC_BITS {
+                if (p >> bit) & 1 != 0 {
+                    words[ACT_BITS + bit] |= 1 << lane;
+                }
+            }
+        }
+        sim.run_chunk(&mac.netlist, &words, chunk as u32);
+        i += chunk;
+    }
+    let rep = cap.report(&mac.netlist, &sim);
+    rep.energy_per_cycle()
+}
+
+/// Characterize `E_ℓ(w)` for all codes from layer statistics.
+///
+/// `trace_len` controls the synthetic trace length per weight (the paper
+/// samples until stable; 512 gives <2 % run-to-run spread in our tests).
+pub fn characterize_layer(
+    stats: &LayerStats,
+    lib: &mut MacLib,
+    cap: &CapModel,
+    trace_len: usize,
+    seed: u64,
+    threads: usize,
+) -> WeightEnergyTable {
+    // Pre-sample shared traces: the *same* activation/psum streams are
+    // applied to every weight so the table isolates the weight effect
+    // (matching the paper's fixed-trace per-weight measurements).
+    let mut rng = Xoshiro256::new(seed);
+    let acts = stats.act.sample_chain(trace_len, &mut rng);
+    let psums = stats.psum.sample_chain(trace_len, &mut rng);
+
+    // Ensure all specializations exist before the parallel section.
+    for code in -127i32..=127 {
+        lib.get(code as i8);
+    }
+    let lib_ref: &MacLib = lib;
+    let energies = parallel_map(255, threads, |i| {
+        let code = i as i32 - 127;
+        let mac = lib_ref.get_cached(code as i8).expect("pre-specialized");
+        trace_energy(mac, &acts, &psums, cap)
+    });
+
+    let mut e_per_cycle = [0.0f64; 256];
+    for (i, &e) in energies.iter().enumerate() {
+        e_per_cycle[i + 1] = e; // code -127 at index 1
+    }
+    e_per_cycle[0] = e_per_cycle[1]; // -128 alias (never produced)
+
+    // Idle: w=0 with an all-zero stream.
+    let zeros = vec![0i32; trace_len.min(128)];
+    let e_idle = trace_energy(
+        lib.get_cached(0).unwrap(),
+        &zeros,
+        &zeros,
+        cap,
+    );
+    WeightEnergyTable { e_per_cycle, e_idle }
+}
+
+/// `E(w)` under *uniform random* transitions (no layer statistics) —
+/// the global model prior work uses; also regenerates Fig. 1.
+pub fn uniform_weight_energy(
+    lib: &mut MacLib,
+    cap: &CapModel,
+    trace_len: usize,
+    seed: u64,
+    threads: usize,
+) -> WeightEnergyTable {
+    let mut rng = Xoshiro256::new(seed);
+    let acts: Vec<i32> = (0..trace_len).map(|_| rng.code()).collect();
+    let psums: Vec<i32> = (0..trace_len)
+        .map(|_| (rng.below(1 << ACC_BITS) as i64 - (1 << (ACC_BITS - 1)) as i64) as i32)
+        .collect();
+    for code in -127i32..=127 {
+        lib.get(code as i8);
+    }
+    let lib_ref: &MacLib = lib;
+    let energies = parallel_map(255, threads, |i| {
+        let code = i as i32 - 127;
+        let mac = lib_ref.get_cached(code as i8).unwrap();
+        trace_energy(mac, &acts, &psums, cap)
+    });
+    let mut e_per_cycle = [0.0f64; 256];
+    for (i, &e) in energies.iter().enumerate() {
+        e_per_cycle[i + 1] = e;
+    }
+    e_per_cycle[0] = e_per_cycle[1];
+    let zeros = vec![0i32; 128];
+    let e_idle = trace_energy(lib.get_cached(0).unwrap(), &zeros, &zeros, cap);
+    WeightEnergyTable { e_per_cycle, e_idle }
+}
+
+/// Energy of a single alternating psum transition (p1 ⇄ p2) under a fixed
+/// weight and constant activation — the probe behind Fig. 2's
+/// power-vs-HD and power-vs-MSB analyses.
+pub fn transition_energy(
+    lib: &mut MacLib,
+    cap: &CapModel,
+    weight: i8,
+    act: i32,
+    p1: i32,
+    p2: i32,
+    steps: usize,
+) -> f64 {
+    let mac = lib.get(weight);
+    let acts = vec![act; steps];
+    let psums: Vec<i32> = (0..steps).map(|i| if i % 2 == 0 { p1 } else { p2 }).collect();
+    trace_energy(mac, &acts, &psums, cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ConvCapture;
+    use crate::stats::collect;
+
+    fn stats_fixture(seed: u64) -> LayerStats {
+        let mut rng = Xoshiro256::new(seed);
+        let (m, k, n) = (96, 64, 4);
+        let cap = ConvCapture {
+            conv_idx: 0,
+            m,
+            k,
+            n,
+            x_codes: (0..m * k)
+                .map(|_| if rng.below(2) == 0 { 0 } else { rng.code() as i8 })
+                .collect(),
+            w_codes: (0..k * n).map(|_| rng.code() as i8).collect(),
+            s_act: 0.01,
+            s_w: 0.01,
+        };
+        collect(&cap, &mut rng)
+    }
+
+    #[test]
+    fn table_shape_and_zero_is_cheap() {
+        let st = stats_fixture(1);
+        let mut lib = MacLib::new();
+        let cap = CapModel::default();
+        let t = characterize_layer(&st, &mut lib, &cap, 128, 7, 1);
+        // Energy positive everywhere (clock floor).
+        assert!(t.e_per_cycle[1..].iter().all(|&e| e > 0.0));
+        // w = 0 cheapest-or-near-cheapest; much cheaper than w = -127.
+        assert!(t.energy(0) < t.energy(-127) * 0.8);
+        assert!(t.e_idle <= t.energy(0) + 1e-18);
+    }
+
+    #[test]
+    fn spread_across_weights_exists() {
+        // Fig. 1's premise: meaningful per-weight power variation.
+        let st = stats_fixture(2);
+        let mut lib = MacLib::new();
+        let cap = CapModel::default();
+        let t = characterize_layer(&st, &mut lib, &cap, 128, 8, 1);
+        let lo = t.e_per_cycle[1..].iter().cloned().fold(f64::MAX, f64::min);
+        let hi = t.e_per_cycle[1..].iter().cloned().fold(0.0f64, f64::max);
+        assert!(hi / lo > 1.5, "spread {lo}..{hi} too flat");
+    }
+
+    #[test]
+    fn hd_monotonicity_trend() {
+        // Fig. 2a: transitions with larger Hamming distance cost more
+        // (on average).  Compare HD=1 vs HD=16 starting from the same base.
+        let mut lib = MacLib::new();
+        let cap = CapModel::default();
+        let base = 0b0101_0101_0101_0101_0101u32 as i32;
+        let e_small = transition_energy(&mut lib, &cap, 17, 5, base, base ^ 1, 64);
+        let e_large =
+            transition_energy(&mut lib, &cap, 17, 5, base, base ^ 0xFFFF, 64);
+        assert!(
+            e_large > e_small,
+            "HD16 {e_large} should exceed HD1 {e_small}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let st = stats_fixture(3);
+        let capm = CapModel::default();
+        let mut lib = MacLib::new();
+        let a = characterize_layer(&st, &mut lib, &capm, 64, 9, 1);
+        let b = characterize_layer(&st, &mut lib, &capm, 64, 9, 1);
+        assert_eq!(a.e_per_cycle.to_vec(), b.e_per_cycle.to_vec());
+    }
+}

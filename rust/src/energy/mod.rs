@@ -1,0 +1,10 @@
+//! Energy models (paper §3): per-weight MAC energy under layer-specific
+//! transition statistics, and the tile-level convolution-layer energy.
+
+pub mod layer;
+pub mod macmodel;
+
+pub use layer::{LayerEnergy, NetworkEnergy};
+pub use macmodel::{
+    characterize_layer, transition_energy, uniform_weight_energy, WeightEnergyTable,
+};

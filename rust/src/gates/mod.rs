@@ -1,0 +1,19 @@
+//! Gate-level netlist simulation substrate.
+//!
+//! Stands in for the paper's Modelsim + Synopsys DC power flow (DESIGN.md
+//! §2): structural netlists of 2-input gates, a **bit-parallel** (64
+//! simulation lanes per machine word) zero-delay logic simulator with
+//! per-node toggle counting, a NanGate-15nm-inspired capacitance model
+//! turning toggles into joules, and a constant-propagation specializer
+//! that folds the stationary weight bits into the netlist — which is
+//! precisely where weight-dependent MAC power (paper Fig. 1) comes from.
+
+pub mod netlist;
+pub mod optimize;
+pub mod power;
+pub mod sim;
+
+pub use netlist::{GateKind, NetBuilder, Netlist, Sig};
+pub use optimize::const_prop;
+pub use power::{CapModel, PowerCtx, PowerReport};
+pub use sim::TraceSim;

@@ -1,0 +1,381 @@
+//! Netlist IR: a topologically-ordered DAG of 1/2-input gates.
+//!
+//! Struct-of-arrays layout (`kinds` / `a` / `b`) keeps the simulator's
+//! inner loop branch-light and cache-friendly — this is the hottest data
+//! structure in the whole energy model.
+
+/// Gate kinds.  `Input` nodes are driven by the testbench; `Const` nodes
+/// carry a fixed logic level (0 or 1 encoded in operand `a`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum GateKind {
+    Input = 0,
+    Const = 1,
+    Buf = 2,
+    Not = 3,
+    And = 4,
+    Or = 5,
+    Nand = 6,
+    Nor = 7,
+    Xor = 8,
+    Xnor = 9,
+}
+
+impl GateKind {
+    pub fn from_u8(v: u8) -> GateKind {
+        match v {
+            0 => GateKind::Input,
+            1 => GateKind::Const,
+            2 => GateKind::Buf,
+            3 => GateKind::Not,
+            4 => GateKind::And,
+            5 => GateKind::Or,
+            6 => GateKind::Nand,
+            7 => GateKind::Nor,
+            8 => GateKind::Xor,
+            9 => GateKind::Xnor,
+            _ => panic!("bad gate kind {v}"),
+        }
+    }
+
+    pub fn is_binary(self) -> bool {
+        matches!(
+            self,
+            GateKind::And
+                | GateKind::Or
+                | GateKind::Nand
+                | GateKind::Nor
+                | GateKind::Xor
+                | GateKind::Xnor
+        )
+    }
+}
+
+/// A signal: an index into the netlist's node array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Sig(pub u32);
+
+/// Topologically-ordered gate network.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub kinds: Vec<u8>,
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+    /// Node indices of the primary inputs, in testbench order.
+    pub inputs: Vec<u32>,
+    /// Node indices of the primary outputs, in order.
+    pub outputs: Vec<u32>,
+    /// Node indices whose toggles get flip-flop (not gate) capacitance —
+    /// i.e. signals that feed sequential elements (register D pins).
+    pub ff_nodes: Vec<u32>,
+}
+
+impl Netlist {
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Count of non-input, non-const logic gates (reported as "area").
+    pub fn gate_count(&self) -> usize {
+        self.kinds
+            .iter()
+            .filter(|&&k| k != GateKind::Input as u8 && k != GateKind::Const as u8)
+            .count()
+    }
+
+    /// Fanout of every node (number of gate operand references).
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.len()];
+        for i in 0..self.len() {
+            let k = GateKind::from_u8(self.kinds[i]);
+            match k {
+                GateKind::Input | GateKind::Const => {}
+                GateKind::Buf | GateKind::Not => fo[self.a[i] as usize] += 1,
+                _ => {
+                    fo[self.a[i] as usize] += 1;
+                    fo[self.b[i] as usize] += 1;
+                }
+            }
+        }
+        fo
+    }
+
+    /// Verify topological order and operand bounds (debug aid; used by
+    /// property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        for i in 0..self.len() {
+            let k = GateKind::from_u8(self.kinds[i]);
+            match k {
+                GateKind::Input | GateKind::Const => {}
+                GateKind::Buf | GateKind::Not => {
+                    if self.a[i] as usize >= i {
+                        return Err(format!("node {i}: operand a not topo-ordered"));
+                    }
+                }
+                _ => {
+                    if self.a[i] as usize >= i || self.b[i] as usize >= i {
+                        return Err(format!("node {i}: operands not topo-ordered"));
+                    }
+                }
+            }
+        }
+        for &o in self.outputs.iter().chain(&self.inputs).chain(&self.ff_nodes) {
+            if o as usize >= self.len() {
+                return Err(format!("dangling node reference {o}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder with constant-folding and structural-hash-free peepholes.
+/// Operand signals must already exist, which guarantees topological order
+/// by construction.
+pub struct NetBuilder {
+    kinds: Vec<u8>,
+    a: Vec<u32>,
+    b: Vec<u32>,
+    inputs: Vec<u32>,
+    zero: Option<Sig>,
+    one: Option<Sig>,
+}
+
+impl Default for NetBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NetBuilder {
+    pub fn new() -> Self {
+        Self {
+            kinds: Vec::new(),
+            a: Vec::new(),
+            b: Vec::new(),
+            inputs: Vec::new(),
+            zero: None,
+            one: None,
+        }
+    }
+
+    fn push(&mut self, k: GateKind, a: u32, b: u32) -> Sig {
+        self.kinds.push(k as u8);
+        self.a.push(a);
+        self.b.push(b);
+        Sig(self.kinds.len() as u32 - 1)
+    }
+
+    pub fn input(&mut self) -> Sig {
+        let s = self.push(GateKind::Input, 0, 0);
+        self.inputs.push(s.0);
+        s
+    }
+
+    /// `n` fresh inputs (LSB first, the convention for all word builders).
+    pub fn inputs(&mut self, n: usize) -> Vec<Sig> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> Sig {
+        let cache = if v { &mut self.one } else { &mut self.zero };
+        if let Some(s) = *cache {
+            return s;
+        }
+        let s = Sig(self.kinds.len() as u32);
+        self.kinds.push(GateKind::Const as u8);
+        self.a.push(v as u32);
+        self.b.push(0);
+        if v {
+            self.one = Some(s);
+        } else {
+            self.zero = Some(s);
+        }
+        s
+    }
+
+    fn const_of(&self, s: Sig) -> Option<bool> {
+        if self.kinds[s.0 as usize] == GateKind::Const as u8 {
+            Some(self.a[s.0 as usize] != 0)
+        } else {
+            None
+        }
+    }
+
+    pub fn not(&mut self, x: Sig) -> Sig {
+        match self.const_of(x) {
+            Some(v) => self.constant(!v),
+            None => self.push(GateKind::Not, x.0, 0),
+        }
+    }
+
+    pub fn and(&mut self, x: Sig, y: Sig) -> Sig {
+        match (self.const_of(x), self.const_of(y)) {
+            (Some(false), _) | (_, Some(false)) => self.constant(false),
+            (Some(true), _) => y,
+            (_, Some(true)) => x,
+            _ if x == y => x,
+            _ => self.push(GateKind::And, x.0, y.0),
+        }
+    }
+
+    pub fn or(&mut self, x: Sig, y: Sig) -> Sig {
+        match (self.const_of(x), self.const_of(y)) {
+            (Some(true), _) | (_, Some(true)) => self.constant(true),
+            (Some(false), _) => y,
+            (_, Some(false)) => x,
+            _ if x == y => x,
+            _ => self.push(GateKind::Or, x.0, y.0),
+        }
+    }
+
+    pub fn xor(&mut self, x: Sig, y: Sig) -> Sig {
+        match (self.const_of(x), self.const_of(y)) {
+            (Some(false), _) => y,
+            (_, Some(false)) => x,
+            (Some(true), _) => self.not(y),
+            (_, Some(true)) => self.not(x),
+            _ if x == y => self.constant(false),
+            _ => self.push(GateKind::Xor, x.0, y.0),
+        }
+    }
+
+    pub fn nand(&mut self, x: Sig, y: Sig) -> Sig {
+        let t = self.and(x, y);
+        self.not(t)
+    }
+
+    pub fn nor(&mut self, x: Sig, y: Sig) -> Sig {
+        let t = self.or(x, y);
+        self.not(t)
+    }
+
+    pub fn xnor(&mut self, x: Sig, y: Sig) -> Sig {
+        let t = self.xor(x, y);
+        self.not(t)
+    }
+
+    pub fn mux(&mut self, sel: Sig, t: Sig, f: Sig) -> Sig {
+        // sel ? t : f  ==  (sel & t) | (!sel & f)
+        let ns = self.not(sel);
+        let x = self.and(sel, t);
+        let y = self.and(ns, f);
+        self.or(x, y)
+    }
+
+    /// Full adder: returns (sum, carry).
+    pub fn full_adder(&mut self, x: Sig, y: Sig, c: Sig) -> (Sig, Sig) {
+        let xy = self.xor(x, y);
+        let sum = self.xor(xy, c);
+        let t1 = self.and(xy, c);
+        let t2 = self.and(x, y);
+        let carry = self.or(t1, t2);
+        (sum, carry)
+    }
+
+    /// Ripple-carry add of two little-endian words of equal width, with
+    /// carry-in; result truncated to the input width (wrap-around), which
+    /// matches a fixed-width hardware accumulator.
+    pub fn add_words(&mut self, xs: &[Sig], ys: &[Sig], mut carry: Sig) -> Vec<Sig> {
+        assert_eq!(xs.len(), ys.len());
+        let mut out = Vec::with_capacity(xs.len());
+        for (&x, &y) in xs.iter().zip(ys) {
+            let (s, c) = self.full_adder(x, y, carry);
+            out.push(s);
+            carry = c;
+        }
+        out
+    }
+
+    pub fn finish(self, outputs: Vec<Sig>, ff_nodes: Vec<Sig>) -> Netlist {
+        let nl = Netlist {
+            kinds: self.kinds,
+            a: self.a,
+            b: self.b,
+            inputs: self.inputs,
+            outputs: outputs.into_iter().map(|s| s.0).collect(),
+            ff_nodes: ff_nodes.into_iter().map(|s| s.0).collect(),
+        };
+        debug_assert!(nl.validate().is_ok());
+        nl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::sim::TraceSim;
+
+    #[test]
+    fn const_folding() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let zero = b.constant(false);
+        let one = b.constant(true);
+        assert_eq!(b.and(x, zero), zero);
+        assert_eq!(b.and(x, one), x);
+        assert_eq!(b.xor(x, x), zero);
+        assert_eq!(b.or(x, one), one);
+    }
+
+    #[test]
+    fn full_adder_truth_table() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.input();
+        let c = b.input();
+        let (s, co) = b.full_adder(x, y, c);
+        let nl = b.finish(vec![s, co], vec![]);
+        let mut sim = TraceSim::new(&nl);
+        for bits in 0..8u32 {
+            let ins = [bits & 1 != 0, bits & 2 != 0, bits & 4 != 0];
+            let out = sim.eval_single(&nl, &ins);
+            let total = ins.iter().filter(|&&v| v).count() as u32;
+            assert_eq!(out[0], total & 1 != 0, "sum for {bits:03b}");
+            assert_eq!(out[1], total >= 2, "carry for {bits:03b}");
+        }
+    }
+
+    #[test]
+    fn adder_wraps() {
+        let mut b = NetBuilder::new();
+        let xs = b.inputs(4);
+        let ys = b.inputs(4);
+        let c0 = b.constant(false);
+        let sum = b.add_words(&xs, &ys, c0);
+        let nl = b.finish(sum, vec![]);
+        let mut sim = TraceSim::new(&nl);
+        for x in 0..16u32 {
+            for y in 0..16u32 {
+                let mut ins = [false; 8];
+                for i in 0..4 {
+                    ins[i] = (x >> i) & 1 != 0;
+                    ins[4 + i] = (y >> i) & 1 != 0;
+                }
+                let out = sim.eval_single(&nl, &ins);
+                let got = out
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (v as u32) << i)
+                    .sum::<u32>();
+                assert_eq!(got, (x + y) & 0xF);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_catches_unordered() {
+        let nl = Netlist {
+            kinds: vec![GateKind::Buf as u8],
+            a: vec![5],
+            b: vec![0],
+            inputs: vec![],
+            outputs: vec![],
+            ff_nodes: vec![],
+        };
+        assert!(nl.validate().is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Netlist specialization: constant propagation + dead-code elimination.
+//!
+//! The systolic array is weight-stationary: during a tile pass the weight
+//! register bits are constants.  Folding them into the MAC netlist yields
+//! a per-weight-value specialized circuit — smaller for sparse bit
+//! patterns, with different switching structure per weight.  This is the
+//! structural mechanism behind the paper's weight-dependent MAC power
+//! (Fig. 1) and behind pruning's energy savings (w = 0 collapses the
+//! whole multiplier).
+
+use super::netlist::{GateKind, NetBuilder, Netlist, Sig};
+
+/// Rebuild `nl` with the listed primary inputs fixed to constants.
+///
+/// `fixed[i] = (input_position, value)` refers to positions in
+/// `nl.inputs`.  The surviving inputs keep their relative order.  Gates
+/// made redundant are folded away by the builder's peepholes; nodes no
+/// longer reachable from outputs/FF taps are dropped.
+pub fn const_prop(nl: &Netlist, fixed: &[(usize, bool)]) -> Netlist {
+    let mut fixed_map: Vec<Option<bool>> = vec![None; nl.inputs.len()];
+    for &(pos, v) in fixed {
+        fixed_map[pos] = Some(v);
+    }
+
+    let mut b = NetBuilder::new();
+    // Map from old node index to new signal.
+    let mut map: Vec<Option<Sig>> = vec![None; nl.len()];
+
+    // Pre-create surviving inputs in original relative order.
+    for (pos, &node) in nl.inputs.iter().enumerate() {
+        let sig = match fixed_map[pos] {
+            Some(v) => b.constant(v),
+            None => b.input(),
+        };
+        map[node as usize] = Some(sig);
+    }
+
+    for i in 0..nl.len() {
+        if map[i].is_some() {
+            continue; // input already mapped
+        }
+        let k = GateKind::from_u8(nl.kinds[i]);
+        let sig = match k {
+            GateKind::Input => unreachable!("inputs pre-mapped"),
+            GateKind::Const => b.constant(nl.a[i] != 0),
+            GateKind::Buf => {
+                let a = map[nl.a[i] as usize].expect("topo order");
+                a
+            }
+            GateKind::Not => {
+                let a = map[nl.a[i] as usize].expect("topo order");
+                b.not(a)
+            }
+            _ => {
+                let a = map[nl.a[i] as usize].expect("topo order");
+                let bb = map[nl.b[i] as usize].expect("topo order");
+                match k {
+                    GateKind::And => b.and(a, bb),
+                    GateKind::Or => b.or(a, bb),
+                    GateKind::Nand => b.nand(a, bb),
+                    GateKind::Nor => b.nor(a, bb),
+                    GateKind::Xor => b.xor(a, bb),
+                    GateKind::Xnor => b.xnor(a, bb),
+                    _ => unreachable!(),
+                }
+            }
+        };
+        map[i] = Some(sig);
+    }
+
+    let outputs: Vec<Sig> = nl
+        .outputs
+        .iter()
+        .map(|&o| map[o as usize].unwrap())
+        .collect();
+    let ffs: Vec<Sig> = nl
+        .ff_nodes
+        .iter()
+        .map(|&o| map[o as usize].unwrap())
+        .collect();
+    let dense = b.finish(outputs, ffs);
+    dce(&dense)
+}
+
+/// Drop nodes not reachable (backwards) from outputs, FF taps, or inputs.
+pub fn dce(nl: &Netlist) -> Netlist {
+    let mut live = vec![false; nl.len()];
+    let mut stack: Vec<u32> = nl
+        .outputs
+        .iter()
+        .chain(&nl.ff_nodes)
+        .copied()
+        .collect();
+    while let Some(n) = stack.pop() {
+        let i = n as usize;
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        match GateKind::from_u8(nl.kinds[i]) {
+            GateKind::Input | GateKind::Const => {}
+            GateKind::Buf | GateKind::Not => stack.push(nl.a[i]),
+            _ => {
+                stack.push(nl.a[i]);
+                stack.push(nl.b[i]);
+            }
+        }
+    }
+    // Inputs always survive so the testbench interface is stable.
+    for &n in &nl.inputs {
+        live[n as usize] = true;
+    }
+
+    let mut remap: Vec<u32> = vec![u32::MAX; nl.len()];
+    let mut kinds = Vec::new();
+    let mut a = Vec::new();
+    let mut bv = Vec::new();
+    for i in 0..nl.len() {
+        if !live[i] {
+            continue;
+        }
+        remap[i] = kinds.len() as u32;
+        kinds.push(nl.kinds[i]);
+        let k = GateKind::from_u8(nl.kinds[i]);
+        match k {
+            GateKind::Input => {
+                a.push(0);
+                bv.push(0);
+            }
+            GateKind::Const => {
+                a.push(nl.a[i]);
+                bv.push(0);
+            }
+            GateKind::Buf | GateKind::Not => {
+                a.push(remap[nl.a[i] as usize]);
+                bv.push(0);
+            }
+            _ => {
+                a.push(remap[nl.a[i] as usize]);
+                bv.push(remap[nl.b[i] as usize]);
+            }
+        }
+    }
+    let out = Netlist {
+        kinds,
+        a,
+        b: bv,
+        inputs: nl.inputs.iter().map(|&n| remap[n as usize]).collect(),
+        outputs: nl.outputs.iter().map(|&n| remap[n as usize]).collect(),
+        ff_nodes: nl.ff_nodes.iter().map(|&n| remap[n as usize]).collect(),
+    };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::netlist::NetBuilder;
+    use crate::gates::sim::TraceSim;
+
+    /// (x & s) | (y & !s) specialized on s matches the chosen branch.
+    #[test]
+    fn specialize_mux() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.input();
+        let s = b.input();
+        let m = b.mux(s, x, y);
+        let nl = b.finish(vec![m], vec![]);
+
+        for sval in [false, true] {
+            let spec = const_prop(&nl, &[(2, sval)]);
+            // s is folded away: inputs shrink to {x, y}, logic to a wire.
+            assert_eq!(spec.inputs.len(), 2);
+            assert!(spec.gate_count() <= 1, "gates: {}", spec.gate_count());
+            let mut sim = TraceSim::new(&spec);
+            for (xv, yv) in [(false, false), (true, false), (false, true), (true, true)] {
+                let out = sim.eval_single(&spec, &[xv, yv]);
+                assert_eq!(out[0], if sval { xv } else { yv });
+            }
+        }
+    }
+
+    /// Exhaustive functional equivalence after random specialization.
+    #[test]
+    fn const_prop_preserves_function() {
+        let mut b = NetBuilder::new();
+        let ins = b.inputs(6);
+        let t1 = b.xor(ins[0], ins[1]);
+        let t2 = b.and(t1, ins[2]);
+        let t3 = b.or(t2, ins[3]);
+        let t4 = b.nand(t3, ins[4]);
+        let t5 = b.xnor(t4, ins[5]);
+        let nl = b.finish(vec![t3, t5], vec![]);
+
+        let fixed = [(1usize, true), (4usize, false)];
+        let spec = const_prop(&nl, &fixed);
+        assert_eq!(spec.inputs.len(), 4);
+        let mut sim_full = TraceSim::new(&nl);
+        let mut sim_spec = TraceSim::new(&spec);
+        for bits in 0..64u32 {
+            let mut ins_full: Vec<bool> = (0..6).map(|i| (bits >> i) & 1 != 0).collect();
+            for &(pos, v) in &fixed {
+                ins_full[pos] = v;
+            }
+            // Surviving inputs keep their relative order.
+            let ins_spec: Vec<bool> = ins_full
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !fixed.iter().any(|&(p, _)| p == *i))
+                .map(|(_, &v)| v)
+                .collect();
+            let expect = sim_full.eval_single(&nl, &ins_full);
+            let got = sim_spec.eval_single(&spec, &ins_spec);
+            assert_eq!(expect, got, "bits {bits:06b}");
+        }
+    }
+
+    #[test]
+    fn dce_drops_dead_logic() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.input();
+        let _dead = b.and(x, y);
+        let live = b.xor(x, y);
+        let nl = b.finish(vec![live], vec![]);
+        let cleaned = dce(&nl);
+        assert_eq!(cleaned.gate_count(), 1);
+        assert_eq!(cleaned.inputs.len(), 2);
+    }
+}

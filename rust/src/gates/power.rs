@@ -1,0 +1,219 @@
+//! Toggle counts -> dynamic energy.
+//!
+//! NanGate-15nm-inspired switched-capacitance model (DESIGN.md §5): each
+//! node's effective capacitance is an intrinsic output + wire term plus a
+//! per-fanin-pin term scaled by fanout; flip-flop D-pins get FF input
+//! capacitance; a constant per-cycle clock-tree energy covers the
+//! register clock load (weight-independent by construction, exactly as in
+//! the paper where only switching differences matter).
+//!
+//! `E_dyn = Σ_nodes ½ · C_node · V² · toggles(node)  +  cycles · E_clk`
+
+use super::netlist::{GateKind, Netlist};
+use super::sim::TraceSim;
+
+/// Capacitance / voltage model.  Defaults approximate a 15 nm low-Vt
+/// standard-cell library at nominal corner.
+#[derive(Clone, Copy, Debug)]
+pub struct CapModel {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Intrinsic output + local wire capacitance per gate (fF).
+    pub c_out_ff: f64,
+    /// Input-pin capacitance per fanout (fF).
+    pub c_pin_ff: f64,
+    /// Flip-flop D-pin capacitance (fF).
+    pub c_ffpin_ff: f64,
+    /// Clock-tree + register internal energy per cycle for the whole cell
+    /// under model (fJ / cycle).
+    pub e_clk_fj: f64,
+    /// Clock frequency (Hz) for power conversion.
+    pub freq_hz: f64,
+}
+
+impl Default for CapModel {
+    fn default() -> Self {
+        Self {
+            vdd: 0.8,
+            c_out_ff: 0.12,
+            c_pin_ff: 0.05,
+            c_ffpin_ff: 0.10,
+            // Fine-grained gated clock tree (low-power 15 nm flows): the
+            // per-MAC clock floor must stay well below active switching
+            // or pruning/selection gains are artificially capped — the
+            // paper's 46-63 % per-layer savings imply exactly that.
+            e_clk_fj: 0.35,
+            freq_hz: 5.0e9, // paper evaluates at 5 GHz
+        }
+    }
+}
+
+/// Energy/power accounting for one simulated trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PowerReport {
+    /// Total dynamic energy (J).
+    pub energy_j: f64,
+    /// Combinational share (J).
+    pub comb_j: f64,
+    /// Sequential (FF data + clock) share (J).
+    pub seq_j: f64,
+    /// Trace length in cycles.
+    pub cycles: u64,
+}
+
+impl PowerReport {
+    /// Average power over the trace at the model's clock frequency (W).
+    pub fn avg_power_w(&self, model: &CapModel) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.energy_j * model.freq_hz / self.cycles as f64
+    }
+
+    /// Energy per cycle (J).
+    pub fn energy_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.energy_j / self.cycles as f64
+        }
+    }
+}
+
+/// Precomputed per-netlist power context: node capacitances and the
+/// flip-flop membership mask.  Building this once per netlist (instead
+/// of per trace) is the difference between O(PEs × nodes) setup and
+/// O(weights × nodes) in the exact tile simulator — see EXPERIMENTS.md
+/// §Perf.
+#[derive(Clone, Debug)]
+pub struct PowerCtx {
+    caps_j: Vec<f64>, // 0.5 * C * V^2 per node, in joules/toggle
+    is_ff: Vec<bool>,
+    e_clk_j: f64,
+}
+
+impl PowerCtx {
+    /// Fold a finished simulation into a [`PowerReport`].
+    pub fn report(&self, sim: &TraceSim) -> PowerReport {
+        debug_assert_eq!(self.caps_j.len(), sim.toggles.len());
+        let mut comb = 0.0f64;
+        let mut seq = 0.0f64;
+        for i in 0..self.caps_j.len() {
+            let e = self.caps_j[i] * sim.toggles[i] as f64;
+            if self.is_ff[i] {
+                seq += e;
+            } else {
+                comb += e;
+            }
+        }
+        let clk = sim.steps as f64 * self.e_clk_j;
+        PowerReport {
+            energy_j: comb + seq + clk,
+            comb_j: comb,
+            seq_j: seq + clk,
+            cycles: sim.steps,
+        }
+    }
+}
+
+impl CapModel {
+    /// Build the reusable per-netlist power context.
+    pub fn ctx(&self, nl: &Netlist) -> PowerCtx {
+        let caps = self.node_caps(nl);
+        let v2 = self.vdd * self.vdd;
+        let mut is_ff = vec![false; nl.len()];
+        for &n in &nl.ff_nodes {
+            is_ff[n as usize] = true;
+        }
+        PowerCtx {
+            caps_j: caps.iter().map(|c| 0.5 * c * 1e-15 * v2).collect(),
+            is_ff,
+            e_clk_j: self.e_clk_fj * 1e-15,
+        }
+    }
+
+    /// Effective switched capacitance of each node (fF), given fanouts.
+    pub fn node_caps(&self, nl: &Netlist) -> Vec<f64> {
+        let fo = nl.fanouts();
+        let mut caps: Vec<f64> = (0..nl.len())
+            .map(|i| {
+                let k = GateKind::from_u8(nl.kinds[i]);
+                if k == GateKind::Const {
+                    0.0 // constants never toggle
+                } else {
+                    self.c_out_ff + self.c_pin_ff * fo[i] as f64
+                }
+            })
+            .collect();
+        for &n in &nl.ff_nodes {
+            caps[n as usize] += self.c_ffpin_ff;
+        }
+        caps
+    }
+
+    /// Fold a finished simulation into a [`PowerReport`] (convenience
+    /// one-shot path; hot loops should reuse [`CapModel::ctx`]).
+    pub fn report(&self, nl: &Netlist, sim: &TraceSim) -> PowerReport {
+        self.ctx(nl).report(sim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::netlist::NetBuilder;
+
+    fn toggle_net() -> Netlist {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.not(x);
+        b.finish(vec![y], vec![y])
+    }
+
+    #[test]
+    fn energy_scales_with_toggles() {
+        let nl = toggle_net();
+        let model = CapModel::default();
+        let mut sim = TraceSim::new(&nl);
+        let alternating: Vec<Vec<bool>> = (0..100).map(|t| vec![t % 2 == 1]).collect();
+        sim.run_trace(&nl, &alternating);
+        let busy = model.report(&nl, &sim);
+
+        let mut sim2 = TraceSim::new(&nl);
+        let idle: Vec<Vec<bool>> = (0..100).map(|_| vec![false]).collect();
+        sim2.run_trace(&nl, &idle);
+        let quiet = model.report(&nl, &sim2);
+
+        assert!(busy.energy_j > quiet.energy_j);
+        // Idle trace still pays the clock tree.
+        assert!(quiet.seq_j > 0.0);
+        assert_eq!(quiet.comb_j, 0.0);
+        assert_eq!(busy.cycles, 100);
+    }
+
+    #[test]
+    fn power_conversion() {
+        let nl = toggle_net();
+        let model = CapModel::default();
+        let mut sim = TraceSim::new(&nl);
+        sim.run_trace(&nl, &[vec![false], vec![true]]);
+        let rep = model.report(&nl, &sim);
+        let p = rep.avg_power_w(&model);
+        assert!(p > 0.0 && p.is_finite());
+        // E/cycle * f == avg power by definition.
+        assert!((rep.energy_per_cycle() * model.freq_hz - p).abs() / p < 1e-12);
+    }
+
+    #[test]
+    fn const_nodes_cost_nothing() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let one = b.constant(true);
+        let y = b.and(x, one); // folds to x; const node remains
+        let nl = b.finish(vec![y], vec![]);
+        let model = CapModel::default();
+        let caps = model.node_caps(&nl);
+        // Const node index 1 has zero cap.
+        assert_eq!(caps[1], 0.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Bit-parallel zero-delay logic simulation with toggle counting.
+//!
+//! 64 consecutive *time steps* of the input trace are packed into each
+//! `u64` word (lane `t` = trace step `t`), so one pass of bitwise ops
+//! evaluates 64 cycles of the whole netlist.  Toggle counting is then a
+//! `popcount(v ^ (v << 1))` per node per word, with the previous word's
+//! last lane carried across the boundary.
+//!
+//! Zero-delay (functional) toggles ignore glitching; DESIGN.md §5 absorbs
+//! the glitch factor into the capacitance constants, which is standard
+//! practice for activity-based power estimation.
+
+use super::netlist::{GateKind, Netlist};
+
+/// Reusable simulation state (scratch buffers sized to one netlist).
+pub struct TraceSim {
+    /// Node value words for the current 64-step chunk.
+    vals: Vec<u64>,
+    /// Per-node toggle accumulators.
+    pub toggles: Vec<u64>,
+    /// Last lane of the previous chunk per node (for cross-chunk toggles);
+    /// u64::MAX means "no previous step yet".
+    prev_bit: Vec<u8>,
+    first_chunk: bool,
+    /// Total trace steps simulated since the last `reset`.
+    pub steps: u64,
+}
+
+impl TraceSim {
+    pub fn new(nl: &Netlist) -> Self {
+        Self {
+            vals: vec![0; nl.len()],
+            toggles: vec![0; nl.len()],
+            prev_bit: vec![0; nl.len()],
+            first_chunk: true,
+            steps: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.toggles.iter_mut().for_each(|t| *t = 0);
+        self.first_chunk = true;
+        self.steps = 0;
+    }
+
+    /// Start a new independent trace *segment* while keeping accumulated
+    /// toggle counts: the transition from the previous segment's last
+    /// step to the new segment's first step is NOT counted.  Lets hot
+    /// loops (exact tile power) accumulate many per-PE traces into one
+    /// sim and fold the power report once at the end.
+    pub fn new_segment(&mut self) {
+        self.first_chunk = true;
+    }
+
+    /// Evaluate one chunk of up to 64 trace steps.
+    ///
+    /// `input_words[i]` packs the time series of primary input `i`
+    /// (testbench order): bit `t` = value at step `t`.  `n_steps` gives
+    /// how many low lanes are valid.  Toggle counts (including the
+    /// transition from the previous chunk's last step) are accumulated.
+    pub fn run_chunk(&mut self, nl: &Netlist, input_words: &[u64], n_steps: u32) {
+        assert_eq!(input_words.len(), nl.inputs.len());
+        assert!(n_steps >= 1 && n_steps <= 64);
+        let vals = &mut self.vals;
+        // Drive inputs.
+        for (w, &node) in input_words.iter().zip(&nl.inputs) {
+            vals[node as usize] = *w;
+        }
+        // Evaluate in topological order.
+        let kinds = &nl.kinds;
+        let aops = &nl.a;
+        let bops = &nl.b;
+        for i in 0..nl.len() {
+            let k = kinds[i];
+            if k == GateKind::Input as u8 {
+                continue;
+            }
+            let va = vals[aops[i] as usize];
+            vals[i] = match GateKind::from_u8(k) {
+                GateKind::Const => {
+                    if aops[i] != 0 {
+                        !0u64
+                    } else {
+                        0u64
+                    }
+                }
+                GateKind::Buf => va,
+                GateKind::Not => !va,
+                GateKind::And => va & vals[bops[i] as usize],
+                GateKind::Or => va | vals[bops[i] as usize],
+                GateKind::Nand => !(va & vals[bops[i] as usize]),
+                GateKind::Nor => !(va | vals[bops[i] as usize]),
+                GateKind::Xor => va ^ vals[bops[i] as usize],
+                GateKind::Xnor => !(va ^ vals[bops[i] as usize]),
+                GateKind::Input => unreachable!(),
+            };
+        }
+        // Toggle accounting.
+        let valid_mask: u64 = if n_steps == 64 {
+            !0
+        } else {
+            (1u64 << n_steps) - 1
+        };
+        // Mask of transition positions t-1 -> t for t in 1..n_steps.
+        let intra_mask = valid_mask & !1u64;
+        for i in 0..nl.len() {
+            let v = vals[i] & valid_mask;
+            let shifted = v << 1;
+            let mut trans = (v ^ shifted) & intra_mask;
+            if !self.first_chunk {
+                // Boundary transition: previous chunk's last step -> lane 0.
+                let pb = self.prev_bit[i] as u64;
+                trans |= (v ^ pb) & 1;
+            }
+            self.toggles[i] += trans.count_ones() as u64;
+            self.prev_bit[i] = ((vals[i] >> (n_steps - 1)) & 1) as u8;
+        }
+        self.first_chunk = false;
+        self.steps += n_steps as u64;
+    }
+
+    /// Run a full trace given per-step input bit vectors (LSB-first input
+    /// order matching `nl.inputs`).  Convenience wrapper over `run_chunk`.
+    pub fn run_trace(&mut self, nl: &Netlist, steps: &[Vec<bool>]) {
+        let n_in = nl.inputs.len();
+        let mut t = 0;
+        while t < steps.len() {
+            let chunk = (steps.len() - t).min(64);
+            let mut words = vec![0u64; n_in];
+            for (lane, step) in steps[t..t + chunk].iter().enumerate() {
+                assert_eq!(step.len(), n_in);
+                for (i, &bit) in step.iter().enumerate() {
+                    if bit {
+                        words[i] |= 1u64 << lane;
+                    }
+                }
+            }
+            self.run_chunk(nl, &words, chunk as u32);
+            t += chunk;
+        }
+    }
+
+    /// Evaluate a single input vector and return output bit values
+    /// (functional check; does not disturb toggle state semantics because
+    /// it resets first).
+    pub fn eval_single(&mut self, nl: &Netlist, inputs: &[bool]) -> Vec<bool> {
+        self.reset();
+        let words: Vec<u64> = inputs.iter().map(|&b| if b { 1 } else { 0 }).collect();
+        self.run_chunk(nl, &words, 1);
+        nl.outputs
+            .iter()
+            .map(|&o| self.vals[o as usize] & 1 != 0)
+            .collect()
+    }
+
+    /// Output values of the most recent chunk, lane `lane`.
+    pub fn outputs_at(&self, nl: &Netlist, lane: u32) -> Vec<bool> {
+        nl.outputs
+            .iter()
+            .map(|&o| (self.vals[o as usize] >> lane) & 1 != 0)
+            .collect()
+    }
+}
+
+/// Pack a little-endian integer into input-bit vectors (helper for word
+/// testbenches).
+pub fn word_bits(value: i64, width: usize) -> Vec<bool> {
+    (0..width).map(|i| (value >> i) & 1 != 0).collect()
+}
+
+/// Inverse of `word_bits` for unsigned interpretation.
+pub fn bits_word(bits: &[bool]) -> u64 {
+    bits.iter()
+        .enumerate()
+        .map(|(i, &b)| (b as u64) << i)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::netlist::NetBuilder;
+
+    /// xor of two inputs: toggle count equals hand-computed transitions.
+    #[test]
+    fn toggle_counting_exact() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.input();
+        let z = b.xor(x, y);
+        let nl = b.finish(vec![z], vec![]);
+        let mut sim = TraceSim::new(&nl);
+        // Trace: x = 0,1,1,0 ; y = 0,0,1,1  -> z = 0,1,0,1 (3 toggles).
+        let steps: Vec<Vec<bool>> = vec![
+            vec![false, false],
+            vec![true, false],
+            vec![true, true],
+            vec![false, true],
+        ];
+        sim.run_trace(&nl, &steps);
+        let zi = nl.outputs[0] as usize;
+        assert_eq!(sim.toggles[zi], 3);
+        // x toggles: 0->1->1->0 = 2 ; y toggles: 0->0->1->1 = 1.
+        assert_eq!(sim.toggles[nl.inputs[0] as usize], 2);
+        assert_eq!(sim.toggles[nl.inputs[1] as usize], 1);
+    }
+
+    /// Cross-chunk boundaries must not lose or invent toggles.
+    #[test]
+    fn chunk_boundary_toggles() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let nl = b.finish(vec![x], vec![]);
+        // Alternating trace over 130 steps -> 129 toggles.
+        let steps: Vec<Vec<bool>> = (0..130).map(|t| vec![t % 2 == 1]).collect();
+        let mut sim = TraceSim::new(&nl);
+        sim.run_trace(&nl, &steps);
+        assert_eq!(sim.toggles[nl.inputs[0] as usize], 129);
+        assert_eq!(sim.steps, 130);
+    }
+
+    /// Same trace in one chunk vs many chunks gives identical counts.
+    #[test]
+    fn chunking_invariance() {
+        let mut b = NetBuilder::new();
+        let xs = b.inputs(3);
+        let t1 = b.and(xs[0], xs[1]);
+        let t2 = b.xor(t1, xs[2]);
+        let nl = b.finish(vec![t2], vec![]);
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let steps: Vec<Vec<bool>> = (0..200)
+            .map(|_| (0..3).map(|_| rng.next_u64() & 1 != 0).collect())
+            .collect();
+        let mut sim_a = TraceSim::new(&nl);
+        sim_a.run_trace(&nl, &steps);
+        // Manual 7-step chunking.
+        let mut sim_b = TraceSim::new(&nl);
+        for chunk in steps.chunks(7) {
+            sim_b.run_trace_continue(&nl, chunk);
+        }
+        assert_eq!(sim_a.toggles, sim_b.toggles);
+    }
+}
+
+impl TraceSim {
+    /// Like `run_trace` but without the implicit fresh-start semantics —
+    /// simply continues from the current state (used by chunked feeders).
+    pub fn run_trace_continue(&mut self, nl: &Netlist, steps: &[Vec<bool>]) {
+        self.run_trace(nl, steps);
+    }
+}

@@ -1,0 +1,45 @@
+//! # wsel — Layer-wise Weight Selection for Power-Efficient NN Acceleration
+//!
+//! Full-system reproduction of the paper's stack (see `DESIGN.md`):
+//!
+//! * **Energy modeling (§3)** — a gate-level MAC switching-power model
+//!   ([`gates`], [`mac`]), the MSB × Hamming-weight partial-sum grouping
+//!   ([`transitions`]), per-layer statistics ([`stats`]), a cycle-level
+//!   64×64 weight-stationary systolic array ([`systolic`]) and the
+//!   im2col/tile layer-energy model ([`energy`]).
+//! * **Compression (§4)** — int8 QAT utilities ([`quant`]), the
+//!   energy–accuracy co-optimized weight selection ([`selection`]) and the
+//!   energy-prioritized layer-wise schedule ([`schedule`]).
+//! * **Execution** — AOT-compiled JAX/Pallas graphs run through PJRT
+//!   ([`runtime`]); a bit-exact int8 mirror inference engine ([`model`])
+//!   feeds the statistics and the systolic simulator; [`coordinator`]
+//!   orchestrates the end-to-end pipeline; [`data`] generates the
+//!   deterministic synthetic-CIFAR workload; [`report`] renders the
+//!   paper's tables and figures.
+//!
+//! The offline toolchain ships no tokio/clap/serde/criterion/proptest, so
+//! [`util`], [`testutil`] and [`bench`] provide the needed substrates
+//! in-repo (thread pool, CLI, JSON, PRNG, property tests, micro-benches).
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod gates;
+pub mod mac;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod selection;
+pub mod stats;
+pub mod systolic;
+pub mod testutil;
+pub mod transitions;
+pub mod util;
+
+/// Crate version string (kept in sync with `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

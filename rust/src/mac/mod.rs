@@ -1,0 +1,8 @@
+//! MAC-unit netlists: 8×8 signed Baugh-Wooley multiplier, 22-bit
+//! accumulator and weight-specialized MAC construction (paper §3.1).
+
+pub mod multiplier;
+pub mod unit;
+
+pub use multiplier::baugh_wooley_8x8;
+pub use unit::{build_mac, specialize_mac, MacNetlist, ACC_BITS, ACT_BITS};

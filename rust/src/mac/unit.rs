@@ -1,0 +1,182 @@
+//! The full MAC cell of the weight-stationary PE (paper §3.1):
+//! activation register → Baugh-Wooley multiplier → 22-bit accumulator
+//! adder → partial-sum register.
+//!
+//! The 22-bit accumulator matches the paper: a 16-bit product plus
+//! log2(64) bits of headroom for a 64-deep systolic column.  During a
+//! tile pass the weight register is stationary, so
+//! [`specialize_mac`] const-folds the weight bits into the netlist —
+//! giving each weight value its own switching profile.
+
+use crate::gates::netlist::{NetBuilder, Netlist, Sig};
+use crate::gates::optimize::const_prop;
+use crate::mac::multiplier::baugh_wooley_8x8;
+
+/// Accumulator width (bits), per the paper.
+pub const ACC_BITS: usize = 22;
+/// Activation operand width (bits).
+pub const ACT_BITS: usize = 8;
+
+/// A MAC netlist plus its input layout.
+#[derive(Clone, Debug)]
+pub struct MacNetlist {
+    pub netlist: Netlist,
+    /// True if the weight bits are primary inputs (generic MAC); false if
+    /// they have been specialized away (weight-stationary MAC).
+    pub generic: bool,
+}
+
+impl MacNetlist {
+    /// Input count expected by the testbench.
+    pub fn n_inputs(&self) -> usize {
+        if self.generic {
+            ACT_BITS + 8 + ACC_BITS
+        } else {
+            ACT_BITS + ACC_BITS
+        }
+    }
+
+    /// Pack one (activation, psum_in) step into testbench bit order.
+    /// For the generic MAC the caller must insert weight bits separately.
+    pub fn pack_step(&self, act: i32, psum_in: i32) -> Vec<bool> {
+        assert!(!self.generic, "pack_step is for specialized MACs");
+        let mut v = Vec::with_capacity(ACT_BITS + ACC_BITS);
+        for i in 0..ACT_BITS {
+            v.push((act >> i) & 1 != 0);
+        }
+        for i in 0..ACC_BITS {
+            v.push((psum_in >> i) & 1 != 0);
+        }
+        v
+    }
+}
+
+/// Build the generic MAC: inputs `[a0..a7, w0..w7, p0..p21]`, outputs the
+/// 22 bits of `psum_out = psum_in + sext22(a*w) mod 2^22`.
+pub fn build_mac() -> MacNetlist {
+    let mut b = NetBuilder::new();
+    let a = b.inputs(ACT_BITS);
+    let w = b.inputs(8);
+    let p_in = b.inputs(ACC_BITS);
+
+    let prod = baugh_wooley_8x8(&mut b, &a, &w);
+    // Sign-extend the 16-bit product to 22 bits.
+    let sign = prod[15];
+    let mut prod_ext: Vec<Sig> = prod;
+    while prod_ext.len() < ACC_BITS {
+        prod_ext.push(sign);
+    }
+    let zero = b.constant(false);
+    let psum_out = b.add_words(&p_in, &prod_ext, zero);
+
+    // Sequential loads: the activation register D-pins (driven by the
+    // streaming neighbours — modeled as the activation inputs themselves)
+    // and the psum register D-pins (the adder outputs).
+    let mut ffs: Vec<Sig> = a.clone();
+    ffs.extend(psum_out.iter().copied());
+
+    MacNetlist {
+        netlist: b.finish(psum_out, ffs),
+        generic: true,
+    }
+}
+
+/// Specialize the generic MAC for a stationary weight value
+/// (int8 code in `[-128, 127]`).
+pub fn specialize_mac(mac: &MacNetlist, weight: i32) -> MacNetlist {
+    assert!(mac.generic);
+    let fixed: Vec<(usize, bool)> = (0..8)
+        .map(|i| (ACT_BITS + i, (weight >> i) & 1 != 0))
+        .collect();
+    MacNetlist {
+        netlist: const_prop(&mac.netlist, &fixed),
+        generic: false,
+    }
+}
+
+/// Software reference for the MAC step (used by every cross-check).
+#[inline]
+pub fn mac_ref(act: i32, weight: i32, psum_in: i32) -> i32 {
+    let wide = psum_in as i64 + (act as i64 * weight as i64);
+    // Wrap to 22-bit two's complement.
+    let m = wide & ((1 << ACC_BITS) - 1);
+    ((m << (64 - ACC_BITS)) >> (64 - ACC_BITS)) as i32
+}
+
+/// Decode a 22-bit little-endian output into a signed value.
+pub fn decode_psum(bits: &[bool]) -> i32 {
+    let raw: u32 = bits
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v as u32) << i)
+        .sum();
+    ((raw as i32) << (32 - ACC_BITS)) >> (32 - ACC_BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::sim::TraceSim;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn generic_mac_matches_ref() {
+        let mac = build_mac();
+        let mut sim = TraceSim::new(&mac.netlist);
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..500 {
+            let a = rng.code();
+            let w = rng.code();
+            let p = (rng.below(1 << ACC_BITS) as i64 - (1 << (ACC_BITS - 1)) as i64) as i32;
+            let mut ins = Vec::new();
+            for i in 0..8 {
+                ins.push((a >> i) & 1 != 0);
+            }
+            for i in 0..8 {
+                ins.push((w >> i) & 1 != 0);
+            }
+            for i in 0..ACC_BITS {
+                ins.push((p >> i) & 1 != 0);
+            }
+            let out = sim.eval_single(&mac.netlist, &ins);
+            assert_eq!(decode_psum(&out), mac_ref(a, w, p), "a={a} w={w} p={p}");
+        }
+    }
+
+    #[test]
+    fn specialized_mac_matches_ref_for_every_weight() {
+        let mac = build_mac();
+        let mut rng = Xoshiro256::new(13);
+        for w in (-127i32..=127).step_by(17) {
+            let spec = specialize_mac(&mac, w);
+            assert_eq!(spec.n_inputs(), spec.netlist.inputs.len());
+            let mut sim = TraceSim::new(&spec.netlist);
+            for _ in 0..50 {
+                let a = rng.code();
+                let p = (rng.below(1 << 20) as i64 - (1 << 19)) as i32;
+                let out = sim.eval_single(&spec.netlist, &spec.pack_step(a, p));
+                assert_eq!(decode_psum(&out), mac_ref(a, w, p), "a={a} w={w} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_collapses_multiplier() {
+        let mac = build_mac();
+        let spec0 = specialize_mac(&mac, 0);
+        let spec127 = specialize_mac(&mac, -127);
+        // w=0: product is the BW constant, adder folds massively.
+        assert!(
+            spec0.netlist.gate_count() * 2 < spec127.netlist.gate_count(),
+            "w=0 gates {} vs w=-127 gates {}",
+            spec0.netlist.gate_count(),
+            spec127.netlist.gate_count()
+        );
+    }
+
+    #[test]
+    fn accumulator_wraps_at_22_bits() {
+        assert_eq!(mac_ref(0, 0, (1 << 21) - 1), (1 << 21) - 1);
+        assert_eq!(mac_ref(1, 1, (1 << 21) - 1), -(1 << 21));
+    }
+}

@@ -1,0 +1,296 @@
+//! `wsel` — CLI for the layer-wise weight-selection reproduction.
+//!
+//! Subcommands:
+//!   train      — QAT-train a model (float phase, calibration, QAT phase)
+//!   profile    — per-layer energy profile + per-weight MAC power tables
+//!   compress   — full §4 pipeline (train → profile → schedule → report)
+//!   baseline   — PowerPruning / naive baselines on a trained model
+//!   eval       — accuracy of the current (possibly compressed) params
+//!   repro      — regenerate a paper table/figure (--table N | --fig N)
+//!
+//! Every run is deterministic given --seed.
+
+use anyhow::{bail, Result};
+use wsel::coordinator::{Pipeline, PipelineParams};
+use wsel::data::Split;
+use wsel::report::{pct, Table};
+use wsel::runtime::LrSchedule;
+use wsel::schedule::ScheduleParams;
+use wsel::selection::{AccuracyOracle, CompressionState};
+use wsel::util::cli::Args;
+
+const USAGE: &str = "\
+wsel <subcommand> [options]
+
+subcommands:
+  train      --model <m> [--float-steps N] [--qat-steps N] [--lr F]
+  profile    --model <m> [--quick]
+  compress   --model <m> [--delta F] [--max-layers N] [--ft-steps N] [--quick]
+  baseline   --model <m> --method powerpruning|naive16|naive20 [--quick]
+  eval       --model <m>
+  repro      --table 1|2|3|4 | --fig 1|2|3|4   (see benches/ for scaled runs)
+
+common options:
+  --artifacts <dir>   artifact directory (default: artifacts)
+  --seed <u64>        dataset / sampling seed (default 7)
+  --quick             small preset (smoke-scale)
+models: lenet5 | resnet20 | resnet50lite";
+
+fn params_from(args: &Args) -> PipelineParams {
+    let mut pp = if args.flag("quick") {
+        PipelineParams::quick()
+    } else {
+        PipelineParams::default()
+    };
+    pp.float_steps = args.usize_or("float-steps", pp.float_steps);
+    pp.qat_steps = args.usize_or("qat-steps", pp.qat_steps);
+    pp.lr = LrSchedule {
+        base: args.f64_or("lr", pp.lr.base as f64) as f32,
+        decay_at: 0.75,
+    };
+    pp.val_batches = args.usize_or("val-batches", pp.val_batches);
+    pp
+}
+
+fn pipeline(args: &Args) -> Result<Pipeline> {
+    let dir = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let model = args
+        .opt("model")
+        .ok_or_else(|| anyhow::anyhow!("--model required\n{USAGE}"))?;
+    let mut p = Pipeline::new(&dir, model, params_from(args))?;
+    p.rt.data_seed = args.u64_or("seed", 7);
+    Ok(p)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    let acc = p.train_baseline()?;
+    println!("model={} quantized-acc0={:.4}", p.rt.spec.name, acc);
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    p.train_baseline()?;
+    p.profile()?;
+    let ne = p.base_energy.clone().unwrap();
+    let mut t = Table::new(
+        &format!("Per-layer energy profile: {}", p.rt.spec.name),
+        &["layer", "M", "K", "N", "tiles", "energy (J/img)", "share"],
+    );
+    let shares = ne.shares();
+    for (ci, e) in &ne.layers {
+        let le = p.layer_energy_model(*ci);
+        let share = shares.iter().find(|(i, _)| i == ci).unwrap().1;
+        t.row(&[
+            p.rt.spec.conv_label(*ci),
+            le.m.to_string(),
+            le.k.to_string(),
+            le.n.to_string(),
+            le.n_tiles().to_string(),
+            format!("{e:.4e}"),
+            pct(share),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("total conv energy: {:.4e} J/image", ne.total());
+    Ok(())
+}
+
+fn compress_params(args: &Args, acc_quick: bool) -> ScheduleParams {
+    let mut sp = ScheduleParams {
+        delta: args.f64_or("delta", 0.03),
+        fine_tune_steps: args.usize_or("ft-steps", if acc_quick { 10 } else { 60 }),
+        max_layers: args.opt("max-layers").map(|v| v.parse().unwrap()),
+        ..Default::default()
+    };
+    if acc_quick {
+        sp.prune_ratios = vec![0.7, 0.5];
+        sp.k_targets = vec![16, 32];
+    }
+    sp
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    p.train_baseline()?;
+    p.profile()?;
+    let sp = compress_params(args, args.flag("quick"));
+    let res = p.compress(sp)?;
+    let base = p.base_energy.clone().unwrap();
+    let now = p.compute_network_energy(&res.state);
+    let saving = base.saving_vs(&now);
+
+    let mut t = Table::new(
+        &format!("Layer-wise compression: {}", p.rt.spec.name),
+        &["layer", "share", "prune", "K", "layer saving"],
+    );
+    for oc in &res.outcomes {
+        let (ratio, k) = oc
+            .accepted
+            .map(|c| (format!("{:.2}", c.prune_ratio), c.k_target.to_string()))
+            .unwrap_or(("-".into(), "-".into()));
+        let lsave = if oc.energy_before > 0.0 {
+            pct(1.0 - oc.energy_after / oc.energy_before)
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            p.rt.spec.conv_label(oc.conv_idx),
+            pct(oc.share),
+            ratio,
+            k,
+            lsave,
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "acc0={:.4}  final-acc={:.4}  total energy saving={}  (evals={}, ft-steps={})",
+        p.acc0,
+        res.final_accuracy,
+        pct(saving),
+        p.eval_count,
+        p.ft_steps_total
+    );
+    p.rt.save_params("compressed")?;
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    p.train_baseline()?;
+    p.profile()?;
+    let method = args.opt_or("method", "powerpruning").to_string();
+    let n_conv = p.rt.spec.n_conv;
+    // Global table (uniform transition model — what PowerPruning uses).
+    let quick = args.flag("quick");
+    let ft = args.usize_or("ft-steps", if quick { 10 } else { 60 });
+    let state = match method.as_str() {
+        "powerpruning" => {
+            let glob = wsel::energy::uniform_weight_energy(
+                &mut p.maclib,
+                &p.cap_model,
+                p.pp.trace_len,
+                p.pp.seed,
+                p.pp.threads,
+            );
+            wsel::selection::powerpruning::powerpruning_state(n_conv, &glob, 32, 0.5)
+        }
+        "naive16" | "naive20" => {
+            let k = if method == "naive16" { 16 } else { 20 };
+            let glob = wsel::energy::uniform_weight_energy(
+                &mut p.maclib,
+                &p.cap_model,
+                p.pp.trace_len,
+                p.pp.seed,
+                p.pp.threads,
+            );
+            let set = wsel::selection::naive_lowest_energy(&glob, k);
+            CompressionState {
+                layers: (0..n_conv)
+                    .map(|_| wsel::selection::LayerConfig {
+                        prune_ratio: 0.5,
+                        wset: Some(set.clone()),
+                    })
+                    .collect(),
+            }
+        }
+        other => bail!("unknown method {other}"),
+    };
+    let (acc, saving) = p.evaluate_state(&state, ft)?;
+    println!(
+        "model={} method={} acc0={:.4} acc={:.4} energy-saving={}",
+        p.rt.spec.name,
+        method,
+        p.acc0,
+        acc,
+        pct(saving)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    // Use trained params if available, without re-training.
+    if !p.rt.load_params("compressed")? {
+        let tag = format!(
+            "trained-f{}-q{}",
+            p.pp.float_steps, p.pp.qat_steps
+        );
+        if !p.rt.load_params(&tag)? {
+            bail!("no checkpoint ({tag}); run `wsel train` with matching steps first");
+        }
+    }
+    p.rt.calibrate(p.pp.calib_batches)?;
+    let state = CompressionState::dense(p.rt.spec.n_conv);
+    let acc = p.accuracy(&state);
+    println!("model={} val-acc={:.4}", p.rt.spec.name, acc);
+    let test = p.rt.evaluate(&state, true, Split::Test, p.pp.val_batches)?;
+    println!("model={} test-acc={:.4}", p.rt.spec.name, test);
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    // Full-scale repro paths delegate to the same code the benches use,
+    // at full parameters.  See benches/ for the scaled variants.
+    if let Some(t) = args.opt("table") {
+        match t {
+            "1" => println!("Table 1: run `wsel compress --model <m>` for each model, and `wsel baseline --method powerpruning`.\nThe bench `table1_energy_savings` runs a scaled version end-to-end."),
+            "2" => println!("Table 2: `wsel compress --model resnet20` prints per-layer rows; bench `table2_layerwise` is the scaled run."),
+            "3" => println!("Table 3: bench `table3_layerwise_vs_global`."),
+            "4" => println!("Table 4: bench `table4_weight_selection`."),
+            other => bail!("unknown table {other}"),
+        }
+        return Ok(());
+    }
+    if let Some(f) = args.opt("fig") {
+        match f {
+            "1" => println!("Fig 1: bench `fig1_mac_power_per_weight` (full table printed)."),
+            "2" => println!("Fig 2: bench `fig2_grouping_metrics`."),
+            "3" => println!("Fig 3: bench `fig3_activation_heatmaps`."),
+            "4" => println!("Fig 4: bench `fig4_compression_components`."),
+            other => bail!("unknown figure {other}"),
+        }
+        return Ok(());
+    }
+    bail!("repro requires --table N or --fig N");
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        argv,
+        &[
+            "model",
+            "artifacts",
+            "seed",
+            "float-steps",
+            "qat-steps",
+            "lr",
+            "delta",
+            "max-layers",
+            "ft-steps",
+            "val-batches",
+            "method",
+            "table",
+            "fig",
+        ],
+    );
+    let sub = args.positional.first().map(String::as_str).unwrap_or("");
+    match sub {
+        "train" => cmd_train(&args),
+        "profile" => cmd_profile(&args),
+        "compress" => cmd_compress(&args),
+        "baseline" => cmd_baseline(&args),
+        "eval" => cmd_eval(&args),
+        "repro" => cmd_repro(&args),
+        "version" => {
+            println!("wsel {}", wsel::version());
+            Ok(())
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,559 @@
+//! int8 mirror inference engine.
+//!
+//! Bit-level mirror of the QAT forward in `python/compile/model.py`:
+//! the same symmetric int8 scheme, the same im2col layout ((ky, kx, c)
+//! patch order), the same candidate-set projection — but with exact i32
+//! accumulation instead of f32.  Logit agreement with the AOT `logits`
+//! graph is pinned by `tests/integration_runtime.rs`.
+//!
+//! Besides logits, the engine captures per-conv im2col code matrices
+//! (`ConvCapture`), which are exactly the operand streams the 64×64
+//! weight-stationary systolic array consumes — the raw material for the
+//! layer statistics (§3.1.2) and tile power simulation (§3.2).
+
+use super::spec::{ConvOp, ModelSpec, Op};
+use crate::quant::{self, WeightSet};
+
+/// Quantization configuration for a forward pass.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    /// Per-quant-point activation scales (len `n_q`); ignored when
+    /// `quant_on` is false.
+    pub act_scales: Vec<f32>,
+    pub quant_on: bool,
+    /// Per-conv pruning masks (None = dense).
+    pub masks: Vec<Option<Vec<f32>>>,
+    /// Per-conv restricted weight sets (None = unrestricted).
+    pub wsets: Vec<Option<WeightSet>>,
+}
+
+impl QuantConfig {
+    pub fn float(spec: &ModelSpec) -> Self {
+        Self {
+            act_scales: vec![1.0; spec.n_q],
+            quant_on: false,
+            masks: vec![None; spec.n_conv],
+            wsets: vec![None; spec.n_conv],
+        }
+    }
+
+    pub fn quantized(spec: &ModelSpec, act_scales: Vec<f32>) -> Self {
+        assert_eq!(act_scales.len(), spec.n_q);
+        Self {
+            act_scales,
+            quant_on: true,
+            masks: vec![None; spec.n_conv],
+            wsets: vec![None; spec.n_conv],
+        }
+    }
+}
+
+/// Captured operands of one conv layer's im2col matmul
+/// `Y(M×N) = X(M×K) · W(K×N)` in int8 code space.
+#[derive(Clone)]
+pub struct ConvCapture {
+    pub conv_idx: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Row-major M×K activation codes.
+    pub x_codes: Vec<i8>,
+    /// Row-major K×N weight codes.
+    pub w_codes: Vec<i8>,
+    pub s_act: f32,
+    pub s_w: f32,
+}
+
+/// Inference engine bound to a spec.
+pub struct Engine<'s> {
+    pub spec: &'s ModelSpec,
+}
+
+/// Forward output: logits plus optional captures / activation maxima.
+pub struct Forward {
+    pub logits: Vec<f32>, // batch × n_classes, row major
+    pub batch: usize,
+    /// Max |activation| per quant point (calibration support).
+    pub act_max: Vec<f32>,
+    /// Captures per conv (present when requested).
+    pub captures: Vec<ConvCapture>,
+}
+
+impl Forward {
+    pub fn argmax(&self, row: usize) -> usize {
+        let ncls = self.logits.len() / self.batch;
+        let r = &self.logits[row * ncls..(row + 1) * ncls];
+        let mut best = 0;
+        for i in 1..ncls {
+            if r[i] > r[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn accuracy(&self, labels: &[i32]) -> f64 {
+        assert_eq!(labels.len(), self.batch);
+        let correct = labels
+            .iter()
+            .enumerate()
+            .filter(|(i, &y)| self.argmax(*i) == y as usize)
+            .count();
+        correct as f64 / self.batch as f64
+    }
+}
+
+/// A tensor traveling through the network (NHWC) or flattened (N×D).
+#[derive(Clone)]
+struct Tensor {
+    data: Vec<f32>,
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    flat: bool,
+}
+
+impl Tensor {
+    fn nhwc(data: Vec<f32>, n: usize, h: usize, w: usize, c: usize) -> Self {
+        assert_eq!(data.len(), n * h * w * c);
+        Tensor {
+            data,
+            n,
+            h,
+            w,
+            c,
+            flat: false,
+        }
+    }
+    fn flat(data: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d);
+        Tensor {
+            data,
+            n,
+            h: 1,
+            w: 1,
+            c: d,
+            flat: true,
+        }
+    }
+}
+
+impl<'s> Engine<'s> {
+    pub fn new(spec: &'s ModelSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Run a forward pass over a batch (`x`: NHWC f32 in [-1, 1]).
+    /// `capture` collects im2col operands for every conv layer.
+    pub fn forward(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        batch: usize,
+        qc: &QuantConfig,
+        capture: bool,
+    ) -> Forward {
+        let spec = self.spec;
+        assert_eq!(x.len(), batch * 32 * 32 * 3);
+        let mut cur = Tensor::nhwc(x.to_vec(), batch, 32, 32, 3);
+        let mut saved: Vec<Tensor> = Vec::new();
+        let mut act_max = vec![0.0f32; spec.n_q];
+        let mut captures = Vec::new();
+
+        for op in &spec.ops {
+            match op {
+                Op::Conv(cv) => {
+                    cur = self.conv(
+                        cv, &cur, params, qc, capture, &mut act_max, &mut captures,
+                    );
+                }
+                Op::MaxPool2 => {
+                    let (n, h, w, c) = (cur.n, cur.h, cur.w, cur.c);
+                    let (ho, wo) = (h / 2, w / 2);
+                    let mut out = vec![f32::NEG_INFINITY; n * ho * wo * c];
+                    for b in 0..n {
+                        for y in 0..h {
+                            for xx in 0..w {
+                                let src = &cur.data[((b * h + y) * w + xx) * c..][..c];
+                                let dst_idx = ((b * ho + y / 2) * wo + xx / 2) * c;
+                                for ch in 0..c {
+                                    let d = &mut out[dst_idx + ch];
+                                    if src[ch] > *d {
+                                        *d = src[ch];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    cur = Tensor::nhwc(out, n, ho, wo, c);
+                }
+                Op::Gap => {
+                    let (n, h, w, c) = (cur.n, cur.h, cur.w, cur.c);
+                    let mut out = vec![0.0f32; n * c];
+                    for b in 0..n {
+                        for y in 0..h {
+                            for xx in 0..w {
+                                let src = &cur.data[((b * h + y) * w + xx) * c..][..c];
+                                for ch in 0..c {
+                                    out[b * c + ch] += src[ch];
+                                }
+                            }
+                        }
+                    }
+                    let inv = 1.0 / (h * w) as f32;
+                    out.iter_mut().for_each(|v| *v *= inv);
+                    cur = Tensor::flat(out, n, c);
+                }
+                Op::Flatten => {
+                    let d = cur.h * cur.w * cur.c;
+                    let n = cur.n;
+                    cur = Tensor::flat(std::mem::take(&mut cur.data), n, d);
+                }
+                Op::Save => saved.push(cur.clone()),
+                Op::AddSaved { relu, proj } => {
+                    let mut skip = saved.pop().expect("unbalanced save/add");
+                    if let Some(p) = proj {
+                        skip = self.conv(
+                            p, &skip, params, qc, capture, &mut act_max, &mut captures,
+                        );
+                    }
+                    assert_eq!(skip.data.len(), cur.data.len());
+                    for (a, &b) in cur.data.iter_mut().zip(&skip.data) {
+                        *a += b;
+                    }
+                    if *relu {
+                        cur.data.iter_mut().for_each(|v| *v = v.max(0.0));
+                    }
+                }
+                Op::Fc(fc) => {
+                    assert!(cur.flat, "fc expects flattened input");
+                    let n = cur.n;
+                    let din = fc.din;
+                    let dout = fc.dout;
+                    assert_eq!(cur.c, din);
+                    let amax = cur.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    act_max[fc.q_idx] = act_max[fc.q_idx].max(amax);
+                    let wt = &params[fc.w];
+                    let bt = &params[fc.b];
+                    let mut out = vec![0.0f32; n * dout];
+                    if qc.quant_on {
+                        let s_a = qc.act_scales[fc.q_idx];
+                        let (wq, s_w) = quant::quantize_restricted(wt, None, None);
+                        let xq: Vec<i8> = cur
+                            .data
+                            .iter()
+                            .map(|&v| quant::quantize(v, s_a) as i8)
+                            .collect();
+                        for b in 0..n {
+                            for o in 0..dout {
+                                let mut acc = 0i32;
+                                let wrow = &wq[o * din..(o + 1) * din];
+                                let xrow = &xq[b * din..(b + 1) * din];
+                                for i in 0..din {
+                                    acc += xrow[i] as i32 * wrow[i] as i32;
+                                }
+                                out[b * dout + o] = s_a * s_w * acc as f32 + bt[o];
+                            }
+                        }
+                    } else {
+                        for b in 0..n {
+                            for o in 0..dout {
+                                let mut acc = 0.0f32;
+                                let wrow = &wt[o * din..(o + 1) * din];
+                                let xrow = &cur.data[b * din..(b + 1) * din];
+                                for i in 0..din {
+                                    acc += xrow[i] * wrow[i];
+                                }
+                                out[b * dout + o] = acc + bt[o];
+                            }
+                        }
+                    }
+                    if fc.relu {
+                        out.iter_mut().for_each(|v| *v = v.max(0.0));
+                    }
+                    cur = Tensor::flat(out, n, dout);
+                }
+            }
+        }
+        Forward {
+            logits: cur.data,
+            batch,
+            act_max,
+            captures,
+        }
+    }
+
+    /// im2col of an NHWC tensor of quantized codes; (ky, kx, c) patch
+    /// column order matching `ref.im2col` on the JAX side.
+    fn im2col_codes(t: &[i8], n: usize, h: usize, w: usize, c: usize, cv: &ConvOp) -> Vec<i8> {
+        let (ho, wo, k, s, p) = (cv.hout, cv.wout, cv.k, cv.stride, cv.pad as isize);
+        let m = n * ho * wo;
+        let kk = k * k * c;
+        let mut out = vec![0i8; m * kk];
+        for b in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = (b * ho + oy) * wo + ox;
+                    let base = row * kk;
+                    for ky in 0..k {
+                        let iy = (oy * s) as isize + ky as isize - p;
+                        for kx in 0..k {
+                            let ix = (ox * s) as isize + kx as isize - p;
+                            let col0 = (ky * k + kx) * c;
+                            if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                                continue; // zero padding
+                            }
+                            let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                            out[base + col0..base + col0 + c]
+                                .copy_from_slice(&t[src..src + c]);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &self,
+        cv: &ConvOp,
+        cur: &Tensor,
+        params: &[Vec<f32>],
+        qc: &QuantConfig,
+        capture: bool,
+        act_max: &mut [f32],
+        captures: &mut Vec<ConvCapture>,
+    ) -> Tensor {
+        let (n, h, w, c) = (cur.n, cur.h, cur.w, cur.c);
+        assert_eq!(c, cv.cin, "{}: cin mismatch", cv.name);
+        assert_eq!((h, w), (cv.hin, cv.win), "{}: spatial mismatch", cv.name);
+        let amax = cur.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        act_max[cv.q_idx] = act_max[cv.q_idx].max(amax);
+
+        let wt = &params[cv.w];
+        let bt = &params[cv.b];
+        let (m, kk, nn) = cv.matmul_dims(n);
+        let mut out = vec![0.0f32; m * nn];
+
+        if qc.quant_on {
+            let s_a = qc.act_scales[cv.q_idx];
+            let mask = qc.masks[cv.conv_idx].as_deref();
+            let set = qc.wsets[cv.conv_idx].as_ref();
+            let (w_oihw, s_w) = quant::quantize_restricted(wt, mask, set);
+            // Reorder OIHW codes -> K×N ((ky,kx,ci) rows, cout cols).
+            let mut w_codes = vec![0i8; kk * nn];
+            for o in 0..cv.cout {
+                for ci in 0..cv.cin {
+                    for ky in 0..cv.k {
+                        for kx in 0..cv.k {
+                            let src = ((o * cv.cin + ci) * cv.k + ky) * cv.k + kx;
+                            let row = (ky * cv.k + kx) * cv.cin + ci;
+                            w_codes[row * nn + o] = w_oihw[src];
+                        }
+                    }
+                }
+            }
+            let x_nhwc: Vec<i8> = cur
+                .data
+                .iter()
+                .map(|&v| quant::quantize(v, s_a) as i8)
+                .collect();
+            let x_codes = Self::im2col_codes(&x_nhwc, n, h, w, c, cv);
+            // Integer matmul with exact i32 accumulation.
+            for r in 0..m {
+                let xrow = &x_codes[r * kk..(r + 1) * kk];
+                let orow = &mut out[r * nn..(r + 1) * nn];
+                for (i, &xc) in xrow.iter().enumerate() {
+                    if xc == 0 {
+                        continue;
+                    }
+                    let wrow = &w_codes[i * nn..(i + 1) * nn];
+                    let xv = xc as i32;
+                    for (o, &wc) in wrow.iter().enumerate() {
+                        orow[o] += (xv * wc as i32) as f32;
+                    }
+                }
+            }
+            let ss = s_a * s_w;
+            for r in 0..m {
+                for o in 0..nn {
+                    out[r * nn + o] = out[r * nn + o] * ss + bt[o];
+                }
+            }
+            if capture {
+                captures.push(ConvCapture {
+                    conv_idx: cv.conv_idx,
+                    m,
+                    k: kk,
+                    n: nn,
+                    x_codes,
+                    w_codes,
+                    s_act: s_a,
+                    s_w,
+                });
+            }
+        } else {
+            // Float path (calibration): direct convolution.
+            let (k, s, p) = (cv.k, cv.stride, cv.pad as isize);
+            for b in 0..n {
+                for oy in 0..cv.hout {
+                    for ox in 0..cv.wout {
+                        let row = (b * cv.hout + oy) * cv.wout + ox;
+                        let orow = &mut out[row * nn..(row + 1) * nn];
+                        for ky in 0..k {
+                            let iy = (oy * s) as isize + ky as isize - p;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * s) as isize + kx as isize - p;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                                for ci in 0..c {
+                                    let xv = cur.data[src + ci];
+                                    if xv == 0.0 {
+                                        continue;
+                                    }
+                                    for o in 0..nn {
+                                        orow[o] += xv
+                                            * wt[((o * c + ci) * k + ky) * k + kx];
+                                    }
+                                }
+                            }
+                        }
+                        for o in 0..nn {
+                            orow[o] += bt[o];
+                        }
+                    }
+                }
+            }
+        }
+        if cv.relu {
+            out.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+        Tensor::nhwc(out, n, cv.hout, cv.wout, cv.cout)
+    }
+
+    /// Calibrate activation scales: float forward over `batches`, scale =
+    /// max|act| / 127 per quant point (what the AOT `calib` graph returns,
+    /// reproduced natively).
+    pub fn calibrate(&self, params: &[Vec<f32>], xs: &[&[f32]], batch: usize) -> Vec<f32> {
+        let qc = QuantConfig::float(self.spec);
+        let mut maxes = vec![0.0f32; self.spec.n_q];
+        for x in xs {
+            let f = self.forward(params, x, batch, &qc, false);
+            for (m, &v) in maxes.iter_mut().zip(&f.act_max) {
+                *m = m.max(v);
+            }
+        }
+        maxes
+            .iter()
+            .map(|&m| (m / quant::QMAX as f32).max(1e-9))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::tests_support::tiny_spec;
+    use super::*;
+    use crate::model::Params;
+
+    fn input(batch: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        (0..batch * 32 * 32 * 3)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn float_forward_shapes() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 1);
+        let eng = Engine::new(&spec);
+        let f = eng.forward(&p.tensors, &input(2, 7), 2, &QuantConfig::float(&spec), false);
+        assert_eq!(f.logits.len(), 2 * 4);
+        assert_eq!(f.act_max.len(), 3);
+        assert!(f.act_max.iter().all(|&m| m > 0.0));
+    }
+
+    #[test]
+    fn quantized_close_to_float() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 2);
+        let eng = Engine::new(&spec);
+        let x = input(2, 8);
+        let scales = eng.calibrate(&p.tensors, &[&x], 2);
+        let ff = eng.forward(&p.tensors, &x, 2, &QuantConfig::float(&spec), false);
+        let fq = eng.forward(
+            &p.tensors,
+            &x,
+            2,
+            &QuantConfig::quantized(&spec, scales),
+            false,
+        );
+        let max_logit = ff.logits.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (a, b) in ff.logits.iter().zip(&fq.logits) {
+            assert!(
+                (a - b).abs() < 0.15 * max_logit.max(1.0),
+                "float {a} vs quant {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn captures_match_dims_and_feed_matmul() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 3);
+        let eng = Engine::new(&spec);
+        let x = input(1, 9);
+        let scales = eng.calibrate(&p.tensors, &[&x], 1);
+        let f = eng.forward(
+            &p.tensors,
+            &x,
+            1,
+            &QuantConfig::quantized(&spec, scales),
+            true,
+        );
+        assert_eq!(f.captures.len(), 2);
+        let c0 = &f.captures[0];
+        assert_eq!((c0.m, c0.k, c0.n), (32 * 32, 27, 4));
+        assert_eq!(c0.x_codes.len(), c0.m * c0.k);
+        assert_eq!(c0.w_codes.len(), c0.k * c0.n);
+    }
+
+    #[test]
+    fn pruning_mask_zeroes_outputs() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 4);
+        let eng = Engine::new(&spec);
+        let x = input(1, 10);
+        let scales = eng.calibrate(&p.tensors, &[&x], 1);
+        let mut qc = QuantConfig::quantized(&spec, scales);
+        // Prune everything in conv0 -> its capture weight codes all zero.
+        qc.masks[0] = Some(vec![0.0; spec.params[0].numel()]);
+        let f = eng.forward(&p.tensors, &x, 1, &qc, true);
+        assert!(f.captures[0].w_codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn weight_set_restricts_codes() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 5);
+        let eng = Engine::new(&spec);
+        let x = input(1, 11);
+        let scales = eng.calibrate(&p.tensors, &[&x], 1);
+        let mut qc = QuantConfig::quantized(&spec, scales);
+        let set = crate::quant::WeightSet::new(vec![-64, 0, 64]);
+        qc.wsets[0] = Some(set.clone());
+        let f = eng.forward(&p.tensors, &x, 1, &qc, true);
+        assert!(f.captures[0]
+            .w_codes
+            .iter()
+            .all(|&c| set.contains(c as i32)));
+    }
+}

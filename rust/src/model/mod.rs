@@ -1,0 +1,16 @@
+//! Network specs (parsed from the AOT `manifest.json` — single source of
+//! truth shared with the JAX side) and the int8 mirror inference engine.
+//!
+//! The engine reproduces the QAT forward of `python/compile/model.py`
+//! with integer arithmetic: activations and weights quantize to int8
+//! codes, convolutions run as im2col × integer matmul, accumulation is
+//! exact i32.  Its captures (im2col code matrices per conv layer) feed
+//! the systolic-array simulator and the per-layer statistics of §3.1.2.
+
+pub mod infer;
+pub mod params;
+pub mod spec;
+
+pub use infer::{ConvCapture, Engine, QuantConfig};
+pub use params::Params;
+pub use spec::{ConvOp, EntryMeta, FcOp, ModelSpec, Op, ParamKind, ParamSpec};

@@ -1,0 +1,115 @@
+//! Parameter storage: the flat little-endian f32 blob written by
+//! `aot.py` (`params.bin`), addressed through the manifest's param list.
+
+use super::spec::ModelSpec;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Model parameters as one tensor per `ParamSpec`, in manifest order.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl Params {
+    /// Load `params.bin` (concatenated f32 LE in param order).
+    pub fn load(spec: &ModelSpec, path: &Path) -> Result<Params> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let expect = spec.n_param_elems() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "params.bin size {} != expected {} ({} elems)",
+                bytes.len(),
+                expect,
+                spec.n_param_elems()
+            );
+        }
+        let mut tensors = Vec::with_capacity(spec.params.len());
+        let mut off = 0usize;
+        for p in &spec.params {
+            let n = p.numel();
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            tensors.push(t);
+        }
+        Ok(Params { tensors })
+    }
+
+    /// Save back to the same blob format (checkpoints of trained /
+    /// compressed models).
+    pub fn save(&self, spec: &ModelSpec, path: &Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(spec.n_param_elems() * 4);
+        for (t, p) in self.tensors.iter().zip(&spec.params) {
+            assert_eq!(t.len(), p.numel(), "tensor/spec mismatch for {}", p.name);
+            for &v in t {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Deterministic random params for tests (He-like scaling).
+    pub fn random(spec: &ModelSpec, seed: u64) -> Params {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(seed);
+        let tensors = spec
+            .params
+            .iter()
+            .map(|p| {
+                let fan_in = match p.kind {
+                    super::spec::ParamKind::ConvW => {
+                        p.shape[1] * p.shape[2] * p.shape[3]
+                    }
+                    super::spec::ParamKind::FcW => p.shape[1],
+                    super::spec::ParamKind::Bias => 1,
+                };
+                let scale = if matches!(p.kind, super::spec::ParamKind::Bias) {
+                    0.0
+                } else {
+                    (2.0 / fan_in as f32).sqrt()
+                };
+                (0..p.numel())
+                    .map(|_| {
+                        // Approximate normal via sum of uniforms (CLT).
+                        let u: f32 = (0..4).map(|_| rng.range_f32(-0.5, 0.5)).sum();
+                        scale * u
+                    })
+                    .collect()
+            })
+            .collect();
+        Params { tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::tests_support::tiny_spec;
+    use super::*;
+
+    #[test]
+    fn roundtrip_blob() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 3);
+        let dir = std::env::temp_dir().join("wsel_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        p.save(&spec, &path).unwrap();
+        let q = Params::load(&spec, &path).unwrap();
+        assert_eq!(p.tensors, q.tensors);
+    }
+
+    #[test]
+    fn load_rejects_wrong_size() {
+        let spec = tiny_spec();
+        let dir = std::env::temp_dir().join("wsel_params_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 12]).unwrap();
+        assert!(Params::load(&spec, &path).is_err());
+    }
+}

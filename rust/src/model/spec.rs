@@ -1,0 +1,381 @@
+//! Model specification, parsed from `artifacts/<model>/manifest.json`.
+//!
+//! The manifest is written by `python/compile/aot.py` from the very spec
+//! the JAX graphs were lowered from, so shapes, parameter order, conv and
+//! quant-point indices here are *definitionally* consistent with the HLO
+//! artifacts.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    ConvW,
+    FcW,
+    Bias,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Convolution op (also used for residual projection convs).
+#[derive(Clone, Debug)]
+pub struct ConvOp {
+    pub name: String,
+    pub w: usize,
+    pub b: usize,
+    pub conv_idx: usize,
+    pub q_idx: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    pub hin: usize,
+    pub win: usize,
+    pub hout: usize,
+    pub wout: usize,
+}
+
+impl ConvOp {
+    /// im2col matrix dims for batch `n`: (M, K, N) of Y(M×N) = X(M×K)·W(K×N).
+    pub fn matmul_dims(&self, n: usize) -> (usize, usize, usize) {
+        (
+            n * self.hout * self.wout,
+            self.k * self.k * self.cin,
+            self.cout,
+        )
+    }
+
+    /// MAC count for batch `n`.
+    pub fn macs(&self, n: usize) -> u64 {
+        let (m, k, nn) = self.matmul_dims(n);
+        m as u64 * k as u64 * nn as u64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FcOp {
+    pub name: String,
+    pub w: usize,
+    pub b: usize,
+    pub q_idx: usize,
+    pub din: usize,
+    pub dout: usize,
+    pub relu: bool,
+}
+
+#[derive(Clone, Debug)]
+pub enum Op {
+    Conv(ConvOp),
+    MaxPool2,
+    Gap,
+    Flatten,
+    Save,
+    AddSaved { relu: bool, proj: Option<ConvOp> },
+    Fc(FcOp),
+}
+
+/// Entry-point metadata (input arity used for runtime sanity checks).
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub file: String,
+    pub n_inputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_classes: usize,
+    pub ops: Vec<Op>,
+    pub params: Vec<ParamSpec>,
+    pub n_conv: usize,
+    pub n_q: usize,
+    pub kset: usize,
+    pub seed: u64,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub batch_logits: usize,
+    pub batch_calib: usize,
+    pub pallas_eval: bool,
+    pub entries: Vec<(String, EntryMeta)>,
+}
+
+fn parse_conv(op: &Json) -> Result<ConvOp> {
+    Ok(ConvOp {
+        name: op.req_str("name").to_string(),
+        w: op.req_usize("w"),
+        b: op.req_usize("b"),
+        conv_idx: op.req_usize("conv_idx"),
+        q_idx: op.req_usize("q_idx"),
+        cin: op.req_usize("cin"),
+        cout: op.req_usize("cout"),
+        k: op.req_usize("k"),
+        stride: op.req_usize("stride"),
+        pad: op.req_usize("pad"),
+        relu: op.get("relu").and_then(Json::as_bool).unwrap_or(false),
+        hin: op.req_usize("hin"),
+        win: op.req_usize("win"),
+        hout: op.req_usize("hout"),
+        wout: op.req_usize("wout"),
+    })
+}
+
+impl ModelSpec {
+    pub fn from_manifest_str(text: &str) -> Result<ModelSpec> {
+        let j = Json::parse(text).context("manifest.json parse")?;
+        let mut params = Vec::new();
+        for p in j.req_arr("params") {
+            let kind = match p.req_str("kind") {
+                "conv_w" => ParamKind::ConvW,
+                "fc_w" => ParamKind::FcW,
+                "bias" => ParamKind::Bias,
+                other => bail!("unknown param kind {other}"),
+            };
+            params.push(ParamSpec {
+                name: p.req_str("name").to_string(),
+                shape: p
+                    .req_arr("shape")
+                    .iter()
+                    .map(|s| s.as_usize().unwrap())
+                    .collect(),
+                kind,
+            });
+        }
+        let mut ops = Vec::new();
+        for op in j.req_arr("ops") {
+            let kind = op.req_str("op");
+            ops.push(match kind {
+                "conv" => Op::Conv(parse_conv(op)?),
+                "maxpool2" => Op::MaxPool2,
+                "gap" => Op::Gap,
+                "flatten" => Op::Flatten,
+                "save" => Op::Save,
+                "add_saved" => Op::AddSaved {
+                    relu: op.get("relu").and_then(Json::as_bool).unwrap_or(false),
+                    proj: match op.get("proj") {
+                        Some(Json::Null) | None => None,
+                        Some(p) => Some(parse_conv(p)?),
+                    },
+                },
+                "fc" => Op::Fc(FcOp {
+                    name: op.req_str("name").to_string(),
+                    w: op.req_usize("w"),
+                    b: op.req_usize("b"),
+                    q_idx: op.req_usize("q_idx"),
+                    din: op.req_usize("din"),
+                    dout: op.req_usize("dout"),
+                    relu: op.get("relu").and_then(Json::as_bool).unwrap_or(false),
+                }),
+                other => bail!("unknown op {other}"),
+            });
+        }
+        let batches = j.get("batches").context("batches")?;
+        let mut entries = Vec::new();
+        if let Some(Json::Obj(m)) = j.get("entries") {
+            for (name, e) in m {
+                entries.push((
+                    name.clone(),
+                    EntryMeta {
+                        file: e.req_str("file").to_string(),
+                        n_inputs: e.req_usize("n_inputs"),
+                    },
+                ));
+            }
+        }
+        let spec = ModelSpec {
+            name: j.req_str("model").to_string(),
+            n_classes: j.req_usize("n_classes"),
+            ops,
+            params,
+            n_conv: j.req_usize("n_conv"),
+            n_q: j.req_usize("n_q"),
+            kset: j.req_usize("kset"),
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            batch_train: batches.req_usize("train"),
+            batch_eval: batches.req_usize("eval"),
+            batch_logits: batches.req_usize("logits"),
+            batch_calib: batches.req_usize("calib"),
+            pallas_eval: j.get("pallas_eval").and_then(Json::as_bool).unwrap_or(false),
+            entries,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_manifest_file(path: &std::path::Path) -> Result<ModelSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_manifest_str(&text)
+    }
+
+    /// Structural consistency checks (shape chaining, index ranges).
+    pub fn validate(&self) -> Result<()> {
+        let mut conv_seen = vec![false; self.n_conv];
+        let mut q_seen = vec![false; self.n_q];
+        fn check_conv(
+            spec: &ModelSpec,
+            conv_seen: &mut [bool],
+            q_seen: &mut [bool],
+            c: &ConvOp,
+        ) -> Result<()> {
+            if c.w >= spec.params.len() || c.b >= spec.params.len() {
+                bail!("{}: param index out of range", c.name);
+            }
+            let ws = &spec.params[c.w];
+            if ws.shape != vec![c.cout, c.cin, c.k, c.k] {
+                bail!("{}: weight shape mismatch {:?}", c.name, ws.shape);
+            }
+            if c.conv_idx >= spec.n_conv || c.q_idx >= spec.n_q {
+                bail!("{}: conv/q index out of range", c.name);
+            }
+            conv_seen[c.conv_idx] = true;
+            q_seen[c.q_idx] = true;
+            let ho = (c.hin + 2 * c.pad - c.k) / c.stride + 1;
+            if ho != c.hout {
+                bail!("{}: hout mismatch", c.name);
+            }
+            Ok(())
+        }
+        for op in &self.ops {
+            match op {
+                Op::Conv(c) => check_conv(self, &mut conv_seen, &mut q_seen, c)?,
+                Op::AddSaved { proj: Some(c), .. } => {
+                    check_conv(self, &mut conv_seen, &mut q_seen, c)?
+                }
+                Op::Fc(f) => {
+                    q_seen[f.q_idx] = true;
+                    if self.params[f.w].shape != vec![f.dout, f.din] {
+                        bail!("{}: fc shape mismatch", f.name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !conv_seen.iter().all(|&s| s) {
+            bail!("not all conv indices used");
+        }
+        if !q_seen.iter().all(|&s| s) {
+            bail!("not all quant points used");
+        }
+        Ok(())
+    }
+
+    /// Total parameter element count.
+    pub fn n_param_elems(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+
+    /// Conv ops in `conv_idx` order (projection convs included).
+    pub fn convs(&self) -> Vec<&ConvOp> {
+        let mut out: Vec<&ConvOp> = Vec::with_capacity(self.n_conv);
+        for op in &self.ops {
+            match op {
+                Op::Conv(c) => out.push(c),
+                Op::AddSaved { proj: Some(c), .. } => out.push(c),
+                _ => {}
+            }
+        }
+        out.sort_by_key(|c| c.conv_idx);
+        out
+    }
+
+    /// Param indices of conv weights in conv_idx order.
+    pub fn conv_weight_params(&self) -> Vec<usize> {
+        self.convs().iter().map(|c| c.w).collect()
+    }
+
+    /// Human-readable layer label (e.g. for Table 2 rows).
+    pub fn conv_label(&self, conv_idx: usize) -> String {
+        format!("conv{conv_idx}")
+    }
+}
+
+/// Test support: a miniature spec exercising every op kind (shared by
+/// unit tests across modules).
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::ModelSpec;
+
+    pub(crate) fn tiny_spec() -> ModelSpec {
+        ModelSpec::from_manifest_str(super::tests::TINY_MANIFEST).unwrap()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A miniature hand-written manifest exercising every op kind.
+    pub(crate) const TINY_MANIFEST: &str = r#"{
+      "model": "tiny", "n_classes": 4, "input": [32, 32, 3],
+      "ops": [
+        {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+         "q_idx": 0, "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1,
+         "relu": true, "hin": 32, "win": 32, "hout": 32, "wout": 32},
+        {"op": "maxpool2"},
+        {"op": "save"},
+        {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+         "q_idx": 1, "cin": 4, "cout": 4, "k": 3, "stride": 1, "pad": 1,
+         "relu": false, "hin": 16, "win": 16, "hout": 16, "wout": 16},
+        {"op": "add_saved", "relu": true, "proj": null},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc0", "w": 4, "b": 5, "q_idx": 2,
+         "din": 4, "dout": 4, "relu": false}
+      ],
+      "params": [
+        {"name": "conv0.w", "shape": [4, 3, 3, 3], "kind": "conv_w"},
+        {"name": "conv0.b", "shape": [4], "kind": "bias"},
+        {"name": "conv1.w", "shape": [4, 4, 3, 3], "kind": "conv_w"},
+        {"name": "conv1.b", "shape": [4], "kind": "bias"},
+        {"name": "fc0.w", "shape": [4, 4], "kind": "fc_w"},
+        {"name": "fc0.b", "shape": [4], "kind": "bias"}
+      ],
+      "n_conv": 2, "n_q": 3, "kset": 32, "qmax": 127, "seed": 1,
+      "set_sentinel": 1e9, "momentum": 0.9,
+      "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+      "pallas_eval": false,
+      "entries": {"eval": {"file": "eval.hlo.txt", "n_inputs": 10,
+                           "input_shapes": [], "input_dtypes": []}}
+    }"#;
+
+    #[test]
+    fn parses_tiny() {
+        let spec = ModelSpec::from_manifest_str(TINY_MANIFEST).unwrap();
+        assert_eq!(spec.name, "tiny");
+        assert_eq!(spec.ops.len(), 7);
+        assert_eq!(spec.n_conv, 2);
+        assert_eq!(spec.convs().len(), 2);
+        assert_eq!(spec.n_param_elems(), 4 * 3 * 9 + 4 + 4 * 4 * 9 + 4 + 16 + 4);
+        assert_eq!(spec.entries.len(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_shape() {
+        let broken = TINY_MANIFEST.replace(
+            r#""shape": [4, 3, 3, 3]"#,
+            r#""shape": [4, 3, 3, 2]"#,
+        );
+        assert!(ModelSpec::from_manifest_str(&broken).is_err());
+    }
+
+    #[test]
+    fn conv_macs() {
+        let spec = ModelSpec::from_manifest_str(TINY_MANIFEST).unwrap();
+        let convs = spec.convs();
+        let (m, k, n) = convs[0].matmul_dims(2);
+        assert_eq!((m, k, n), (2 * 32 * 32, 27, 4));
+        assert_eq!(convs[0].macs(1), (32 * 32 * 27 * 4) as u64);
+    }
+}

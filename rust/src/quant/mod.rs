@@ -1,0 +1,283 @@
+//! Symmetric int8 quantization, candidate-set projection and magnitude
+//! pruning — the exact mirror of the Python QAT scheme in
+//! `python/compile/model.py` (single source of truth for constants is the
+//! artifact manifest; these must stay in lock-step or the runtime
+//! cross-check test fails).
+
+pub const QMAX: i32 = 127;
+/// Maximum candidate-set cardinality (the "safe initial set" size, §4.2).
+pub const KSET: usize = 32;
+/// Sentinel used for invalid candidate slots in the padded set tables.
+pub const SET_SENTINEL: f32 = 1.0e9;
+
+/// Per-tensor symmetric scale: `max|w| / 127` (with epsilon floor).
+pub fn weight_scale(w: &[f32]) -> f32 {
+    let m = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    (m / QMAX as f32).max(1e-12)
+}
+
+/// Quantize a float to an int8 code under scale `s`.
+#[inline]
+pub fn quantize(v: f32, s: f32) -> i32 {
+    let q = (v / s).round();
+    q.clamp(-(QMAX as f32), QMAX as f32) as i32
+}
+
+/// Dequantize a code.
+#[inline]
+pub fn dequantize(q: i32, s: f32) -> f32 {
+    q as f32 * s
+}
+
+/// Quantize a tensor to codes.
+pub fn quantize_tensor(w: &[f32], s: f32) -> Vec<i8> {
+    w.iter().map(|&v| quantize(v, s) as i8).collect()
+}
+
+/// A restricted weight-value set: sorted unique int8 codes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightSet {
+    codes: Vec<i32>,
+}
+
+impl WeightSet {
+    /// Build from arbitrary codes (sorted + deduped).  Panics if empty.
+    pub fn new(mut codes: Vec<i32>) -> Self {
+        assert!(!codes.is_empty(), "weight set cannot be empty");
+        assert!(codes.iter().all(|&c| (-QMAX..=QMAX).contains(&c)));
+        codes.sort_unstable();
+        codes.dedup();
+        Self { codes }
+    }
+
+    /// The full int8 code range (no restriction), cardinality 255.
+    pub fn full() -> Self {
+        Self {
+            codes: (-QMAX..=QMAX).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    pub fn codes(&self) -> &[i32] {
+        &self.codes
+    }
+
+    pub fn contains(&self, c: i32) -> bool {
+        self.codes.binary_search(&c).is_ok()
+    }
+
+    /// Nearest member to code `q` (ties resolve to the smaller member,
+    /// matching `argmin` over the ascending padded table on the JAX side).
+    pub fn project(&self, q: i32) -> i32 {
+        match self.codes.binary_search(&q) {
+            Ok(_) => q,
+            Err(pos) => {
+                if pos == 0 {
+                    self.codes[0]
+                } else if pos == self.codes.len() {
+                    self.codes[pos - 1]
+                } else {
+                    let lo = self.codes[pos - 1];
+                    let hi = self.codes[pos];
+                    if (q - lo) <= (hi - q) {
+                        lo
+                    } else {
+                        hi
+                    }
+                }
+            }
+        }
+    }
+
+    /// Remove a code, returning a new set.  Panics if it would empty the
+    /// set or the code is absent.
+    pub fn without(&self, c: i32) -> Self {
+        assert!(self.contains(c), "code {c} not in set");
+        assert!(self.len() > 1, "cannot empty a weight set");
+        Self {
+            codes: self.codes.iter().copied().filter(|&x| x != c).collect(),
+        }
+    }
+
+    /// Padded `[KSET]` f32 table (ascending codes then sentinels) in the
+    /// layout the AOT graphs expect.
+    pub fn padded_table(&self) -> [f32; KSET] {
+        assert!(self.len() <= KSET, "set larger than table: {}", self.len());
+        let mut t = [SET_SENTINEL; KSET];
+        for (i, &c) in self.codes.iter().enumerate() {
+            t[i] = c as f32;
+        }
+        t
+    }
+}
+
+/// Magnitude pruning: zero-mask the `ratio` fraction of smallest-|w|
+/// entries.  Returns a 0/1 mask of `w.len()`.
+///
+/// Ties at the threshold are broken by index order (deterministic), and
+/// exactly `floor(ratio * n)` entries are pruned.
+pub fn magnitude_mask(w: &[f32], ratio: f64) -> Vec<f32> {
+    let n = w.len();
+    let n_prune = ((n as f64) * ratio).floor() as usize;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        w[a].abs()
+            .partial_cmp(&w[b].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![1.0f32; n];
+    for &i in idx.iter().take(n_prune) {
+        mask[i] = 0.0;
+    }
+    mask
+}
+
+/// Apply mask and quantize-project a weight tensor exactly as the QAT
+/// forward does: `w_eff = w*mask; s = max|w_eff|/127; q = clip(round);
+/// q' = project(q)`.  Returns (codes, scale).
+pub fn quantize_restricted(
+    w: &[f32],
+    mask: Option<&[f32]>,
+    set: Option<&WeightSet>,
+) -> (Vec<i8>, f32) {
+    let w_eff: Vec<f32> = match mask {
+        Some(m) => w.iter().zip(m).map(|(&v, &mv)| v * mv).collect(),
+        None => w.to_vec(),
+    };
+    let s = weight_scale(&w_eff);
+    let codes: Vec<i8> = w_eff
+        .iter()
+        .map(|&v| {
+            let q = quantize(v, s);
+            match set {
+                Some(cs) => cs.project(q) as i8,
+                None => q as i8,
+            }
+        })
+        .collect();
+    (codes, s)
+}
+
+/// Histogram of code usage (|code| -> count), used by the joint
+/// energy+usage score of the safe initial set (§4.2.1).
+pub fn code_usage(codes: &[i8]) -> [u64; 256] {
+    let mut h = [0u64; 256];
+    for &c in codes {
+        h[(c as i32 + 128) as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn quantize_roundtrip_within_step() {
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..200 {
+            let s = rng.range_f32(1e-4, 0.1);
+            let v = rng.range_f32(-10.0, 10.0);
+            let q = quantize(v, s);
+            let back = dequantize(q, s);
+            let clipped = v.clamp(-(QMAX as f32) * s, QMAX as f32 * s);
+            assert!(
+                (back - clipped).abs() <= s * 0.5 + 1e-6,
+                "v={v} s={s} q={q} back={back}"
+            );
+        }
+    }
+
+    #[test]
+    fn projection_nearest_property() {
+        // Property: projection returns a member minimizing |q - c|.
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..200 {
+            let n = 1 + rng.below(20) as usize;
+            let codes: Vec<i32> = (0..n).map(|_| rng.code()).collect();
+            let set = WeightSet::new(codes);
+            for _ in 0..50 {
+                let q = rng.code();
+                let p = set.project(q);
+                assert!(set.contains(p));
+                let best = set
+                    .codes()
+                    .iter()
+                    .map(|&c| (q - c).abs())
+                    .min()
+                    .unwrap();
+                assert_eq!((q - p).abs(), best);
+            }
+        }
+    }
+
+    #[test]
+    fn projection_idempotent() {
+        let set = WeightSet::new(vec![-100, -3, 0, 7, 90]);
+        for q in -127..=127 {
+            let p = set.project(q);
+            assert_eq!(set.project(p), p);
+        }
+    }
+
+    #[test]
+    fn mask_prunes_exact_count_and_smallest() {
+        let w = vec![0.5, -0.1, 0.9, 0.05, -0.7, 0.2];
+        let mask = magnitude_mask(&w, 0.5);
+        assert_eq!(mask.iter().filter(|&&m| m == 0.0).count(), 3);
+        // The three smallest magnitudes are 0.05, 0.1, 0.2.
+        assert_eq!(mask, vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn mask_ratio_extremes() {
+        let w = vec![1.0, 2.0, 3.0];
+        assert!(magnitude_mask(&w, 0.0).iter().all(|&m| m == 1.0));
+        // ratio 1.0 prunes everything.
+        assert!(magnitude_mask(&w, 1.0).iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn restricted_quantization_lands_in_set() {
+        let mut rng = Xoshiro256::new(3);
+        let w: Vec<f32> = (0..500).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mask = magnitude_mask(&w, 0.3);
+        let set = WeightSet::new(vec![-90, -40, -10, 0, 10, 40, 90]);
+        let (codes, s) = quantize_restricted(&w, Some(&mask), Some(&set));
+        assert!(s > 0.0);
+        for (&c, &m) in codes.iter().zip(&mask) {
+            assert!(set.contains(c as i32));
+            if m == 0.0 {
+                // Pruned weights quantize to 0 and 0 is projected within
+                // the set; with 0 in the set they stay 0.
+                assert_eq!(c, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn padded_table_layout() {
+        let set = WeightSet::new(vec![5, -5, 0]);
+        let t = set.padded_table();
+        assert_eq!(&t[..3], &[-5.0, 0.0, 5.0]);
+        assert!(t[3..].iter().all(|&v| v == SET_SENTINEL));
+    }
+
+    #[test]
+    fn usage_histogram_counts() {
+        let codes: Vec<i8> = vec![0, 0, 5, -5, 5];
+        let h = code_usage(&codes);
+        assert_eq!(h[128], 2);
+        assert_eq!(h[133], 2);
+        assert_eq!(h[123], 1);
+    }
+}

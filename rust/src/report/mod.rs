@@ -1,0 +1,155 @@
+//! Paper-style table / figure renderers.
+//!
+//! Every bench and the `wsel repro` subcommand print their measurements
+//! through these helpers so the output lines up with the paper's tables
+//! (paper value and measured value side by side).
+
+use crate::util::json::Json;
+
+/// A plain-text table with aligned columns.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable form for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "headers",
+                Json::arr(self.headers.iter().map(|h| Json::str(h))),
+            ),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::str(c)))),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Percent formatting matching the paper ("58.6%").
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// An ASCII bar chart (figures in terminal form).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let maxv = values.iter().cloned().fold(f64::MIN, f64::max);
+    let maxl = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("== {title} ==\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = if maxv > 0.0 {
+            ((v / maxv) * width as f64).round() as usize
+        } else {
+            0
+        };
+        out.push_str(&format!("{:w$}  {:10.4e}  {}\n", l, v, "#".repeat(n), w = maxl));
+    }
+    out
+}
+
+/// An ASCII heatmap (Fig. 2b / Fig. 3 in terminal form): row-major
+/// `bins × bins` values rendered with a density ramp.
+pub fn heatmap(title: &str, values: &[f64], bins: usize) -> String {
+    assert_eq!(values.len(), bins * bins);
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let maxv = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-300);
+    let mut out = format!("== {title} ==  (max={maxv:.3e})\n");
+    for r in 0..bins {
+        for c in 0..bins {
+            // Log-ish scaling: sqrt emphasizes the low-mass structure.
+            let x = (values[r * bins + c] / maxv).sqrt();
+            let idx = ((x * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// A simple series printer for line-style figures.
+pub fn series(title: &str, xs: &[f64], ys: &[f64]) -> String {
+    let mut out = format!("== {title} ==\nx\ty\n");
+    for (x, y) in xs.iter().zip(ys) {
+        out.push_str(&format!("{x:.4}\t{y:.6e}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["xx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("a   bbbb"));
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"rows\""));
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.586), "58.6%");
+    }
+
+    #[test]
+    fn chart_and_heatmap_shapes() {
+        let s = bar_chart("B", &["x".into(), "yy".into()], &[1.0, 2.0], 10);
+        assert_eq!(s.lines().count(), 3);
+        let hm = heatmap("H", &vec![0.5; 16], 4);
+        assert_eq!(hm.lines().count(), 5);
+    }
+}

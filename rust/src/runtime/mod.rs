@@ -1,0 +1,399 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and drives
+//! training / evaluation / calibration from the Rust hot path.
+//!
+//! Python never runs here — the artifacts under `artifacts/<model>/` are
+//! compiled once by `PjRtClient` and then executed with concrete inputs.
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax ≥ 0.5
+//! serialized protos — see DESIGN.md / aot.py).
+
+use crate::data::{self, Split};
+use crate::model::{ModelSpec, Params};
+use crate::quant::{magnitude_mask, KSET, SET_SENTINEL};
+use crate::selection::CompressionState;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Learning-rate schedule for the training driver.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// Step fraction after which lr drops by 5×.
+    pub decay_at: f32,
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        Self {
+            base: 0.01,
+            decay_at: 0.75,
+        }
+    }
+}
+
+/// A loaded model: spec + compiled executables + resident parameters.
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    client: PjRtClient,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    dir: PathBuf,
+    /// Float shadow parameters (updated by train steps).
+    pub params: Vec<Vec<f32>>,
+    /// Momentum buffers.
+    mom: Vec<Vec<f32>>,
+    /// Per-quant-point activation scales (0 until calibrated).
+    pub act_scales: Vec<f32>,
+    /// Dataset seed (shared with data generation everywhere).
+    pub data_seed: u64,
+    /// Executed-step counter (drives the train-data cursor).
+    pub steps_done: u64,
+}
+
+impl ModelRuntime {
+    /// Load manifest + initial params and connect the PJRT CPU client.
+    /// Executables compile lazily on first use.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(model);
+        let spec = ModelSpec::from_manifest_file(&dir.join("manifest.json"))?;
+        let params = Params::load(&spec, &dir.join("params.bin"))?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mom = spec.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
+        let n_q = spec.n_q;
+        Ok(Self {
+            spec,
+            client,
+            exes: HashMap::new(),
+            dir,
+            params: params.tensors,
+            mom,
+            act_scales: vec![0.0; n_q],
+            data_seed: 7,
+            steps_done: 0,
+        })
+    }
+
+    fn exe(&mut self, entry: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.exes.contains_key(entry) {
+            let meta = self
+                .spec
+                .entries
+                .iter()
+                .find(|(n, _)| n == entry)
+                .map(|(_, m)| m.clone())
+                .ok_or_else(|| anyhow!("no entry `{entry}` in manifest"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {entry}: {e:?}"))?;
+            crate::info!(
+                "compiled {}/{} ({} inputs)",
+                self.spec.name,
+                entry,
+                meta.n_inputs
+            );
+            self.exes.insert(entry.to_string(), exe);
+        }
+        Ok(self.exes.get(entry).unwrap())
+    }
+
+    // -- literal helpers ----------------------------------------------------
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+    }
+
+    fn lit_scalar(v: f32) -> Literal {
+        Literal::scalar(v)
+    }
+
+    /// Materialize per-conv masks from the *current* params under
+    /// `state` (pruned weights receive no gradient, so recomputation is
+    /// stable across fine-tune steps).
+    pub fn masks_for(&self, state: &CompressionState) -> Vec<Vec<f32>> {
+        let convs = self.spec.convs();
+        convs
+            .iter()
+            .map(|c| {
+                let ratio = state.layers[c.conv_idx].prune_ratio;
+                if ratio <= 0.0 {
+                    vec![1.0f32; self.params[c.w].len()]
+                } else {
+                    magnitude_mask(&self.params[c.w], ratio)
+                }
+            })
+            .collect()
+    }
+
+    fn wset_tables(&self, state: &CompressionState) -> (Vec<[f32; KSET]>, Vec<f32>) {
+        let mut tables = Vec::with_capacity(self.spec.n_conv);
+        let mut on = Vec::with_capacity(self.spec.n_conv);
+        for l in &state.layers {
+            match &l.wset {
+                Some(s) => {
+                    tables.push(s.padded_table());
+                    on.push(1.0f32);
+                }
+                None => {
+                    tables.push([SET_SENTINEL; KSET]);
+                    on.push(0.0f32);
+                }
+            }
+        }
+        (tables, on)
+    }
+
+    /// Common input prefix for eval/logits: params, masks, wsets,
+    /// wset_on, act_scales, quant_on.
+    fn common_inputs(
+        &self,
+        state: &CompressionState,
+        quant_on: bool,
+    ) -> Result<Vec<Literal>> {
+        let mut ins = Vec::new();
+        for (t, p) in self.params.iter().zip(&self.spec.params) {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            ins.push(Self::lit_f32(t, &dims)?);
+        }
+        let masks = self.masks_for(state);
+        for (m, c) in masks.iter().zip(self.spec.convs()) {
+            let p = &self.spec.params[c.w];
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            ins.push(Self::lit_f32(m, &dims)?);
+        }
+        let (tables, on) = self.wset_tables(state);
+        for t in &tables {
+            ins.push(Self::lit_f32(t, &[KSET as i64])?);
+        }
+        ins.push(Self::lit_f32(&on, &[self.spec.n_conv as i64])?);
+        ins.push(Self::lit_f32(&self.act_scales, &[self.spec.n_q as i64])?);
+        ins.push(Self::lit_scalar(if quant_on { 1.0 } else { 0.0 }));
+        Ok(ins)
+    }
+
+    fn batch_literals(&self, split: Split, start: u64, size: usize) -> Result<(Literal, Literal)> {
+        let (xs, ys) = data::batch(self.data_seed, split, start, size, self.spec.n_classes as u64);
+        let x = Self::lit_f32(&xs, &[size as i64, 32, 32, 3])?;
+        let y = Literal::vec1(&ys);
+        Ok((x, y))
+    }
+
+    // -- drivers -------------------------------------------------------------
+
+    /// Run `steps` SGD+momentum steps.  Returns the mean loss of the
+    /// final 10 steps.
+    pub fn train_steps(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        lr: LrSchedule,
+        steps: usize,
+    ) -> Result<f32> {
+        let bs = self.spec.batch_train;
+        let n_p = self.spec.params.len();
+        let mut recent = Vec::new();
+        for s in 0..steps {
+            let step_lr = if (s as f32) < lr.decay_at * steps as f32 {
+                lr.base
+            } else {
+                lr.base / 5.0
+            };
+            let cursor = self.steps_done * bs as u64;
+            let (x, y) = self.batch_literals(Split::Train, cursor, bs)?;
+
+            let mut ins: Vec<Literal> = Vec::new();
+            for (t, p) in self.params.iter().zip(&self.spec.params) {
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                ins.push(Self::lit_f32(t, &dims)?);
+            }
+            for (t, p) in self.mom.iter().zip(&self.spec.params) {
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                ins.push(Self::lit_f32(t, &dims)?);
+            }
+            let masks = self.masks_for(state);
+            for (m, c) in masks.iter().zip(self.spec.convs()) {
+                let p = &self.spec.params[c.w];
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                ins.push(Self::lit_f32(m, &dims)?);
+            }
+            let (tables, on) = self.wset_tables(state);
+            for t in &tables {
+                ins.push(Self::lit_f32(t, &[KSET as i64])?);
+            }
+            ins.push(Self::lit_f32(&on, &[self.spec.n_conv as i64])?);
+            ins.push(Self::lit_f32(&self.act_scales, &[self.spec.n_q as i64])?);
+            ins.push(Self::lit_scalar(if quant_on { 1.0 } else { 0.0 }));
+            ins.push(Self::lit_scalar(step_lr));
+            ins.push(x);
+            ins.push(y);
+
+            let exe = self.exe("train")?;
+            let result = exe
+                .execute::<Literal>(&ins)
+                .map_err(|e| anyhow!("train exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("train sync: {e:?}"))?;
+            let outs = result.to_tuple().map_err(|e| anyhow!("train tuple: {e:?}"))?;
+            if outs.len() != 2 * n_p + 1 {
+                bail!("train output arity {} != {}", outs.len(), 2 * n_p + 1);
+            }
+            for (i, o) in outs.iter().enumerate().take(n_p) {
+                self.params[i] = o.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            }
+            for i in 0..n_p {
+                self.mom[i] = outs[n_p + i]
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{e:?}"))?;
+            }
+            let loss: f32 = outs[2 * n_p]
+                .get_first_element()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            if !loss.is_finite() {
+                bail!("training diverged at step {s} (loss = {loss})");
+            }
+            recent.push(loss);
+            if recent.len() > 10 {
+                recent.remove(0);
+            }
+            self.steps_done += 1;
+        }
+        Ok(recent.iter().sum::<f32>() / recent.len().max(1) as f32)
+    }
+
+    /// Accuracy over `n_batches` of the given split (batch = spec eval
+    /// batch).  Returns fraction correct.
+    pub fn evaluate(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        split: Split,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let bs = self.spec.batch_eval;
+        let mut correct = 0.0f64;
+        for b in 0..n_batches {
+            let mut ins = self.common_inputs(state, quant_on)?;
+            let (x, y) = self.batch_literals(split, (b * bs) as u64, bs)?;
+            ins.push(x);
+            ins.push(y);
+            let exe = self.exe("eval")?;
+            let result = exe
+                .execute::<Literal>(&ins)
+                .map_err(|e| anyhow!("eval exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("eval sync: {e:?}"))?;
+            let (nc, _loss) = result
+                .to_tuple2()
+                .map_err(|e| anyhow!("eval tuple: {e:?}"))?;
+            let nc: f32 = nc.get_first_element().map_err(|e| anyhow!("{e:?}"))?;
+            correct += nc as f64;
+        }
+        Ok(correct / (n_batches * bs) as f64)
+    }
+
+    /// Logits for a raw input batch (must match `batch_logits`).
+    pub fn logits(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let bs = self.spec.batch_logits;
+        assert_eq!(x.len(), bs * 32 * 32 * 3);
+        let mut ins = self.common_inputs(state, quant_on)?;
+        ins.push(Self::lit_f32(x, &[bs as i64, 32, 32, 3])?);
+        let exe = self.exe("logits")?;
+        let result = exe
+            .execute::<Literal>(&ins)
+            .map_err(|e| anyhow!("logits exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("logits sync: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("logits tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Calibrate activation scales over `n_batches` of train data using
+    /// the AOT `calib` graph; stores and returns the scales.
+    pub fn calibrate(&mut self, n_batches: usize) -> Result<Vec<f32>> {
+        let bs = self.spec.batch_calib;
+        let mut maxes = vec![0.0f32; self.spec.n_q];
+        for b in 0..n_batches {
+            let mut ins: Vec<Literal> = Vec::new();
+            for (t, p) in self.params.iter().zip(&self.spec.params) {
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                ins.push(Self::lit_f32(t, &dims)?);
+            }
+            let (x, _y) = self.batch_literals(Split::Train, (b * bs) as u64, bs)?;
+            ins.push(x);
+            let exe = self.exe("calib")?;
+            let result = exe
+                .execute::<Literal>(&ins)
+                .map_err(|e| anyhow!("calib exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("calib sync: {e:?}"))?;
+            let (out, _logit_mean) = result
+                .to_tuple2()
+                .map_err(|e| anyhow!("calib tuple: {e:?}"))?;
+            let v = out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            for (m, x) in maxes.iter_mut().zip(&v) {
+                *m = m.max(*x);
+            }
+        }
+        self.act_scales = maxes
+            .iter()
+            .map(|&m| (m / crate::quant::QMAX as f32).max(1e-9))
+            .collect();
+        Ok(self.act_scales.clone())
+    }
+
+    /// Persist current params next to the artifacts (checkpointing).
+    pub fn save_params(&self, tag: &str) -> Result<PathBuf> {
+        let path = self.dir.join(format!("params.{tag}.bin"));
+        let p = Params {
+            tensors: self.params.clone(),
+        };
+        p.save(&self.spec, &path).context("save params")?;
+        Ok(path)
+    }
+
+    /// Load params from a checkpoint produced by [`save_params`].
+    pub fn load_params(&mut self, tag: &str) -> Result<bool> {
+        let path = self.dir.join(format!("params.{tag}.bin"));
+        if !path.exists() {
+            return Ok(false);
+        }
+        let p = Params::load(&self.spec, &path)?;
+        self.params = p.tensors;
+        Ok(true)
+    }
+}
+
+/// Standalone tile-kernel cross-check: run `artifacts/tile_matmul.hlo.txt`
+/// (the Pallas systolic kernel) on (128,192)×(192,128) operands.
+pub fn run_tile_kernel(artifacts_dir: &Path, x: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+    assert_eq!(x.len(), 128 * 192);
+    assert_eq!(w.len(), 192 * 128);
+    let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+    let proto = HloModuleProto::from_text_file(artifacts_dir.join("tile_matmul.hlo.txt"))
+        .map_err(|e| anyhow!("tile hlo: {e:?}"))?;
+    let exe = client
+        .compile(&XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow!("tile compile: {e:?}"))?;
+    let xl = ModelRuntime::lit_f32(x, &[128, 192])?;
+    let wl = ModelRuntime::lit_f32(w, &[192, 128])?;
+    let result = exe
+        .execute::<Literal>(&[xl, wl])
+        .map_err(|e| anyhow!("tile exec: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("tile sync: {e:?}"))?;
+    let out = result.to_tuple1().map_err(|e| anyhow!("tile tuple: {e:?}"))?;
+    out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}

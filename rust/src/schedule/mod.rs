@@ -1,0 +1,383 @@
+//! Layer-wise compression schedules (paper §4.3).
+//!
+//! [`energy_prioritized`] is the paper's method: rank layers by energy
+//! share ρ_ℓ, process in descending order, and per layer pick the most
+//! aggressive (prune-ratio, K) configuration that keeps global validation
+//! accuracy above `Acc₀ − δ`.  [`global_uniform`] is the ablation
+//! baseline (Table 3): the same configuration applied to every layer at
+//! once, layer-agnostically.
+
+use crate::energy::{LayerEnergy, NetworkEnergy};
+use crate::selection::{
+    greedy_backward_eliminate, safe_initial_set, AccuracyOracle, CompressionState, GreedyParams,
+    LayerConfig,
+};
+
+/// A candidate per-layer configuration of the §4.3 sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Config {
+    pub prune_ratio: f64,
+    pub k_target: usize,
+}
+
+/// Schedule hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ScheduleParams {
+    /// Candidate pruning ratios, most aggressive first (paper: 0.7, 0.5, 0.3).
+    pub prune_ratios: Vec<f64>,
+    /// Candidate set sizes, most aggressive first (paper: 16, 24, 32).
+    pub k_targets: Vec<usize>,
+    /// Accuracy budget δ.
+    pub delta: f64,
+    /// Baseline accuracy Acc₀.
+    pub acc0: f64,
+    /// Fine-tune steps after applying each candidate config.
+    pub fine_tune_steps: usize,
+    /// Only process the top-`max_layers` energy layers (None = all); the
+    /// remaining layers stay uncompressed, mirroring the paper's focus on
+    /// the dominant blocks (Table 2).
+    pub max_layers: Option<usize>,
+    /// Minimum energy share ρ_ℓ for a layer to be worth compressing.
+    pub min_share: f64,
+    pub greedy: GreedyParams,
+}
+
+impl Default for ScheduleParams {
+    fn default() -> Self {
+        Self {
+            prune_ratios: vec![0.7, 0.5, 0.3],
+            k_targets: vec![16, 24, 32],
+            delta: 0.03,
+            acc0: 1.0,
+            fine_tune_steps: 50,
+            max_layers: None,
+            min_share: 0.005,
+            greedy: GreedyParams::default(),
+        }
+    }
+}
+
+/// Per-layer outcome for reporting (Table 2 rows).
+#[derive(Clone, Debug)]
+pub struct LayerOutcome {
+    pub conv_idx: usize,
+    pub share: f64,
+    pub accepted: Option<Config>,
+    pub energy_before: f64,
+    pub energy_after: f64,
+    pub accuracy_after: f64,
+}
+
+/// Schedule result.
+#[derive(Clone, Debug)]
+pub struct ScheduleResult {
+    pub state: CompressionState,
+    pub outcomes: Vec<LayerOutcome>,
+    pub final_accuracy: f64,
+}
+
+/// Callback bundle the schedule needs from the coordinator: per-layer
+/// energy models and usage histograms that *reflect the current state*
+/// (pruning changes usage), recomputed on demand.
+pub trait LayerModeler {
+    /// Energy model of layer `conv_idx`.
+    fn layer_energy(&mut self, conv_idx: usize) -> LayerEnergy;
+    /// Weight-code usage of the layer under `state` (mask applied,
+    /// quantized, *not* yet set-restricted).
+    fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256];
+    /// Current per-layer energies under `state` (for ρ_ℓ and reporting).
+    fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy;
+}
+
+/// §4.3 — energy-prioritized layer-wise compression.
+///
+/// `host` provides both the energy models (`LayerModeler`) and the
+/// accuracy oracle — the coordinator's pipeline implements both.
+pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
+    host: &mut H,
+    n_conv: usize,
+    sp: &ScheduleParams,
+) -> ScheduleResult {
+    let mut state = CompressionState::dense(n_conv);
+    let base = host.network_energy(&state);
+    let shares = base.shares();
+    let mut order = base.descending();
+    if let Some(maxl) = sp.max_layers {
+        order.truncate(maxl);
+    }
+
+    let mut outcomes = Vec::new();
+    for (conv_idx, e_before) in order {
+        let share = shares
+            .iter()
+            .find(|(i, _)| *i == conv_idx)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0);
+        if share < sp.min_share {
+            continue;
+        }
+        let le = host.layer_energy(conv_idx);
+        let mut accepted: Option<Config> = None;
+        let mut acc_after = 0.0;
+        // Candidate configs, most aggressive first.
+        'configs: for &ratio in &sp.prune_ratios {
+            for &k in &sp.k_targets {
+                let mut trial = state.clone();
+                trial.layers[conv_idx] = LayerConfig {
+                    prune_ratio: ratio,
+                    wset: None,
+                };
+                // Build the restricted set for this (ratio, K).
+                let usage = host.usage(conv_idx, &trial);
+                let set0 = safe_initial_set(&usage, &le, sp.greedy.k_init);
+                let gp = GreedyParams {
+                    k_target: k,
+                    acc0: sp.acc0,
+                    delta: sp.delta,
+                    ..sp.greedy.clone()
+                };
+                let (set, _trace) = greedy_backward_eliminate(
+                    set0,
+                    &usage,
+                    &le,
+                    host,
+                    &mut trial,
+                    conv_idx,
+                    &gp,
+                );
+                trial.layers[conv_idx].wset = Some(set);
+                // Short fine-tune then global accuracy check (§4.3 step 3).
+                host.fine_tune(&trial, sp.fine_tune_steps);
+                let acc = host.accuracy(&trial);
+                if acc >= sp.acc0 - sp.delta {
+                    state = trial;
+                    accepted = Some(Config {
+                        prune_ratio: ratio,
+                        k_target: k,
+                    });
+                    acc_after = acc;
+                    break 'configs;
+                }
+            }
+        }
+        let after = host.network_energy(&state);
+        let e_after = after
+            .layers
+            .iter()
+            .find(|(i, _)| *i == conv_idx)
+            .map(|(_, e)| *e)
+            .unwrap_or(e_before);
+        outcomes.push(LayerOutcome {
+            conv_idx,
+            share,
+            accepted,
+            energy_before: e_before,
+            energy_after: e_after,
+            accuracy_after: acc_after,
+        });
+    }
+    let final_accuracy = host.accuracy(&state);
+    ScheduleResult {
+        state,
+        outcomes,
+        final_accuracy,
+    }
+}
+
+/// Table 3 baseline: one (ratio, K) configuration applied uniformly to
+/// the given layers (or all), with a single global set per layer built
+/// *without* the energy-prioritized ordering or per-layer search.
+pub fn global_uniform<H: LayerModeler + AccuracyOracle>(
+    host: &mut H,
+    n_conv: usize,
+    layers: &[usize],
+    cfg: Config,
+    fine_tune_steps: usize,
+    naive_global_set: bool,
+) -> ScheduleResult {
+    let mut state = CompressionState::dense(n_conv);
+    // Global usage / energy pooled across target layers.
+    let mut pooled_usage = [0u64; 256];
+    for &l in layers {
+        let mut trial = state.clone();
+        trial.layers[l].prune_ratio = cfg.prune_ratio;
+        let u = host.usage(l, &trial);
+        for i in 0..256 {
+            pooled_usage[i] += u[i];
+        }
+    }
+    let le0 = host.layer_energy(layers[0]);
+    let set = if naive_global_set {
+        crate::selection::naive_lowest_energy(&le0.table, cfg.k_target)
+    } else {
+        // Global variant of the selection: initial set + elimination on
+        // pooled statistics, applied identically everywhere.
+        let set0 = safe_initial_set(&pooled_usage, &le0, 32);
+        let mut tmp_state = CompressionState::dense(n_conv);
+        let gp = GreedyParams {
+            k_target: cfg.k_target,
+            check_every_removal: false,
+            ..Default::default()
+        };
+        let (s, _) = greedy_backward_eliminate(
+            set0,
+            &pooled_usage,
+            &le0,
+            host,
+            &mut tmp_state,
+            layers[0],
+            &gp,
+        );
+        s
+    };
+    for &l in layers {
+        state.layers[l] = LayerConfig {
+            prune_ratio: cfg.prune_ratio,
+            wset: Some(set.clone()),
+        };
+    }
+    host.fine_tune(&state, fine_tune_steps);
+    let final_accuracy = host.accuracy(&state);
+    let outcomes = Vec::new();
+    ScheduleResult {
+        state,
+        outcomes,
+        final_accuracy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::WeightEnergyTable;
+
+    fn table() -> WeightEnergyTable {
+        let mut e = [0.0f64; 256];
+        for i in 0..256 {
+            let code = (i as i32 - 128).unsigned_abs() as f64;
+            e[i] = (1.0 + code) * 1e-15;
+        }
+        WeightEnergyTable {
+            e_per_cycle: e,
+            e_idle: 1e-16,
+        }
+    }
+
+    /// Combined host: 3 layers with energy shares ~60/30/10 %, and an
+    /// accuracy response that drops with aggressiveness but recovers a
+    /// little with fine-tuning.
+    struct FakeHost {
+        tuned: f64,
+    }
+
+    impl LayerModeler for FakeHost {
+        fn layer_energy(&mut self, conv_idx: usize) -> LayerEnergy {
+            let m = [192, 96, 32][conv_idx];
+            LayerEnergy {
+                conv_idx,
+                m,
+                k: 64,
+                n: 64,
+                table: table(),
+            }
+        }
+        fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
+            let mut u = [0u64; 256];
+            let pruned = (4096.0 * state.layers[conv_idx].prune_ratio) as u64;
+            u[128] = pruned;
+            let rest = 4096 - pruned;
+            for c in 1..=64 {
+                u[128 + c as usize] = rest / 128;
+                u[128 - c as usize] = rest / 128;
+            }
+            u
+        }
+        fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy {
+            let layers = (0..3)
+                .map(|i| {
+                    let le = self.layer_energy(i);
+                    let usage = self.usage(i, state);
+                    let e = match &state.layers[i].wset {
+                        Some(s) => crate::selection::set_energy(&le, &usage, s),
+                        None => le.energy_of_usage(&usage),
+                    };
+                    (i, e)
+                })
+                .collect();
+            NetworkEnergy { layers }
+        }
+    }
+
+    impl AccuracyOracle for FakeHost {
+        fn accuracy(&mut self, state: &CompressionState) -> f64 {
+            let mut acc = 0.95 + self.tuned;
+            for l in &state.layers {
+                acc -= 0.010 * l.prune_ratio;
+                if let Some(s) = &l.wset {
+                    acc -= 0.004 * (32.0 - s.len() as f64) / 16.0;
+                }
+            }
+            acc
+        }
+        fn fine_tune(&mut self, _: &CompressionState, steps: usize) {
+            self.tuned = (self.tuned + 1e-4 * steps as f64).min(0.01);
+        }
+    }
+
+    #[test]
+    fn processes_high_energy_layers_first_and_compresses() {
+        let mut host = FakeHost { tuned: 0.0 };
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.05,
+            fine_tune_steps: 10,
+            ..Default::default()
+        };
+        let res = energy_prioritized(&mut host, 3, &sp);
+        // Layer 0 (share 60%) processed first.
+        assert_eq!(res.outcomes[0].conv_idx, 0);
+        assert!(res.outcomes.iter().all(|oc| oc.accepted.is_some()));
+        let top = res.outcomes[0].accepted.unwrap();
+        assert_eq!(top.prune_ratio, 0.7);
+        assert_eq!(top.k_target, 16);
+        assert!(res.outcomes[0].energy_after < res.outcomes[0].energy_before);
+    }
+
+    #[test]
+    fn tight_budget_yields_conservative_configs() {
+        let mut host = FakeHost { tuned: 0.0 };
+        let sp = ScheduleParams {
+            acc0: 0.96,
+            delta: 0.012, // very tight
+            fine_tune_steps: 0,
+            ..Default::default()
+        };
+        let res = energy_prioritized(&mut host, 3, &sp);
+        let all_max = res
+            .outcomes
+            .iter()
+            .all(|oc| matches!(oc.accepted, Some(c) if c.prune_ratio == 0.7 && c.k_target == 16));
+        assert!(!all_max, "tight budget cannot accept max aggression everywhere");
+    }
+
+    #[test]
+    fn global_uniform_applies_same_config() {
+        let mut host = FakeHost { tuned: 0.0 };
+        let res = global_uniform(
+            &mut host,
+            3,
+            &[0, 1, 2],
+            Config {
+                prune_ratio: 0.5,
+                k_target: 16,
+            },
+            5,
+            false,
+        );
+        let s0 = res.state.layers[0].wset.clone().unwrap();
+        for l in &res.state.layers {
+            assert_eq!(l.prune_ratio, 0.5);
+            assert_eq!(l.wset.as_ref().unwrap().codes(), s0.codes());
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Safe initial candidate set + greedy backward elimination (§4.2).
+//!
+//! Elimination score for removing code `w` from set `S`:
+//!
+//! ```text
+//! S(w) = ΔE_ℓ(w) / (ΔAcc(w) + ε)
+//! ```
+//!
+//! `ΔE_ℓ(w)` comes from the layer energy model with usage re-projected
+//! onto `S \ {w}`.  `ΔAcc(w)` is estimated by a calibration-style proxy —
+//! the L1 weight perturbation caused by remapping `w`'s occurrences to
+//! the nearest survivor (`usage[w] · |w − proj(w)|`, normalized) — the
+//! "calibration pass" variant the paper allows; optionally every accepted
+//! removal is additionally validated against the real accuracy oracle
+//! (`check_every_removal`), which is the paper's full procedure.
+
+use super::{AccuracyOracle, CompressionState};
+use crate::energy::LayerEnergy;
+use crate::quant::{WeightSet, QMAX};
+
+/// Parameters of the §4.2 procedure.
+#[derive(Clone, Debug)]
+pub struct GreedyParams {
+    /// Initial candidate-set size (§4.2.1, "typically 32").
+    pub k_init: usize,
+    /// Target size (§4.2.2, e.g. 16).
+    pub k_target: usize,
+    /// ε in the removal score.
+    pub eps: f64,
+    /// Allowed accuracy drop δ below `acc0`.
+    pub delta: f64,
+    /// Baseline accuracy Acc₀.
+    pub acc0: f64,
+    /// Validate each accepted removal against the oracle (paper-exact;
+    /// expensive) instead of only trusting the proxy.
+    pub check_every_removal: bool,
+}
+
+impl Default for GreedyParams {
+    fn default() -> Self {
+        Self {
+            k_init: 32,
+            k_target: 16,
+            eps: 1e-3,
+            delta: 0.03,
+            acc0: 1.0,
+            check_every_removal: false,
+        }
+    }
+}
+
+/// Usage histogram after projecting codes onto a set.
+pub fn projected_usage(usage: &[u64; 256], set: &WeightSet) -> [u64; 256] {
+    let mut out = [0u64; 256];
+    for (i, &cnt) in usage.iter().enumerate() {
+        if cnt == 0 {
+            continue;
+        }
+        let code = i as i32 - 128;
+        let p = set.project(code.clamp(-QMAX, QMAX));
+        out[(p + 128) as usize] += cnt;
+    }
+    out
+}
+
+/// Layer energy when its codes are restricted to `set`.
+pub fn set_energy(le: &LayerEnergy, usage: &[u64; 256], set: &WeightSet) -> f64 {
+    le.energy_of_usage(&projected_usage(usage, set))
+}
+
+/// §4.2.1 — safe initial candidate set: rank codes by a joint score
+/// favoring frequent use and low energy, keep the top `k_init`.
+/// Code 0 is always included (pruning maps weights there), as are the
+/// extreme codes ±127 (the scale anchors: without them the effective
+/// dynamic range collapses).
+pub fn safe_initial_set(usage: &[u64; 256], le: &LayerEnergy, k_init: usize) -> WeightSet {
+    let e_min = le
+        .table
+        .e_per_cycle
+        .iter()
+        .cloned()
+        .fold(f64::MAX, f64::min);
+    let e_max = le.table.e_per_cycle.iter().cloned().fold(0.0f64, f64::max);
+    let total: u64 = usage.iter().sum();
+    let mut scored: Vec<(f64, i32)> = (-QMAX..=QMAX)
+        .map(|code| {
+            let u = usage[(code + 128) as usize] as f64 / total.max(1) as f64;
+            let e = le.table.energy(code as i8);
+            let e_norm = if e_max > e_min {
+                (e - e_min) / (e_max - e_min)
+            } else {
+                0.0
+            };
+            // Frequent codes are valuable; expensive codes are penalized.
+            let score = u - 0.3 * e_norm / 255.0;
+            (score, code)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut codes: Vec<i32> = vec![0, -QMAX, QMAX];
+    for &(_, c) in &scored {
+        if codes.len() >= k_init {
+            break;
+        }
+        if !codes.contains(&c) {
+            codes.push(c);
+        }
+    }
+    WeightSet::new(codes)
+}
+
+/// Record of one elimination run (drives Table 4 / ablation reporting).
+#[derive(Clone, Debug, Default)]
+pub struct GreedyTrace {
+    /// (removed_code, energy_after, proxy_acc_drop) per accepted removal.
+    pub removals: Vec<(i32, f64, f64)>,
+    /// Codes marked essential (removal rejected by the oracle).
+    pub essential: Vec<i32>,
+    pub oracle_evals: usize,
+}
+
+/// §4.2.2 — greedy backward elimination from `set0` down to `k_target`.
+///
+/// `usage` is the layer's weight-code usage *before* restriction (after
+/// masking/quantization); `le` its energy model; `state`/`conv_idx`
+/// locate the layer inside the network-level compression state used for
+/// oracle checks.
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_backward_eliminate(
+    set0: WeightSet,
+    usage: &[u64; 256],
+    le: &LayerEnergy,
+    oracle: &mut dyn AccuracyOracle,
+    state: &mut CompressionState,
+    conv_idx: usize,
+    p: &GreedyParams,
+) -> (WeightSet, GreedyTrace) {
+    let mut set = set0;
+    let mut trace = GreedyTrace::default();
+    let total_usage: f64 = usage.iter().sum::<u64>().max(1) as f64;
+    let mut essential: Vec<i32> = Vec::new();
+
+    while set.len() > p.k_target {
+        let e_cur = set_energy(le, usage, &set);
+        // Rank all removable codes by S(w) = ΔE / (ΔAccProxy + ε).
+        let mut best: Option<(f64, i32, f64, f64)> = None; // (score, code, e_new, proxy)
+        for &w in set.codes() {
+            if w == 0 || essential.contains(&w) {
+                continue; // 0 anchors pruning; essentials are frozen
+            }
+            let smaller = set.without(w);
+            let e_new = set_energy(le, usage, &smaller);
+            let de = (e_cur - e_new).max(0.0);
+            // Calibration proxy for ΔAcc: normalized L1 perturbation of
+            // remapping w's occurrences to the nearest survivor.
+            let remap = smaller.project(w);
+            let perturb =
+                usage[(w + 128) as usize] as f64 * (w - remap).abs() as f64;
+            let proxy = perturb / (total_usage * QMAX as f64);
+            let score = de / (proxy + p.eps * 1e-15); // ε scaled to J
+            if best.map(|(s, ..)| score > s).unwrap_or(true) {
+                best = Some((score, w, e_new, proxy));
+            }
+        }
+        let Some((_, w_star, e_new, proxy)) = best else {
+            break; // nothing removable
+        };
+        let candidate = set.without(w_star);
+        if p.check_every_removal {
+            state.layers[conv_idx].wset = Some(candidate.clone());
+            let acc = oracle.accuracy(state);
+            trace.oracle_evals += 1;
+            if acc < p.acc0 - p.delta {
+                essential.push(w_star);
+                trace.essential.push(w_star);
+                // Restore state and try the next-best candidate.
+                state.layers[conv_idx].wset = Some(set.clone());
+                continue;
+            }
+        }
+        set = candidate;
+        trace.removals.push((w_star, e_new, proxy));
+    }
+    state.layers[conv_idx].wset = Some(set.clone());
+    (set, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::WeightEnergyTable;
+
+    fn le_fixture() -> LayerEnergy {
+        let mut e = [0.0f64; 256];
+        for i in 0..256 {
+            let code = (i as i32 - 128).unsigned_abs() as f64;
+            // Energy grows with |code| (the Fig. 1 trend).
+            e[i] = (1.0 + code) * 1e-15;
+        }
+        LayerEnergy {
+            conv_idx: 0,
+            m: 64,
+            k: 64,
+            n: 64,
+            table: WeightEnergyTable {
+                e_per_cycle: e,
+                e_idle: 0.5e-15,
+            },
+        }
+    }
+
+    fn usage_fixture() -> [u64; 256] {
+        // Gaussian-ish usage centered at 0 with tails.
+        let mut u = [0u64; 256];
+        for code in -127i32..=127 {
+            let x = code as f64 / 30.0;
+            u[(code + 128) as usize] = (1000.0 * (-x * x).exp()) as u64 + 1;
+        }
+        u
+    }
+
+    struct NullOracle;
+    impl AccuracyOracle for NullOracle {
+        fn accuracy(&mut self, _: &CompressionState) -> f64 {
+            1.0
+        }
+        fn fine_tune(&mut self, _: &CompressionState, _: usize) {}
+    }
+
+    #[test]
+    fn initial_set_contains_anchors_and_frequent() {
+        let le = le_fixture();
+        let usage = usage_fixture();
+        let set = safe_initial_set(&usage, &le, 32);
+        assert_eq!(set.len(), 32);
+        assert!(set.contains(0));
+        assert!(set.contains(QMAX) && set.contains(-QMAX));
+        // The most frequent nonzero codes (near 0) should be in.
+        assert!(set.contains(1) || set.contains(-1));
+    }
+
+    #[test]
+    fn elimination_reaches_target_and_reduces_energy() {
+        let le = le_fixture();
+        let usage = usage_fixture();
+        let set0 = safe_initial_set(&usage, &le, 32);
+        let e0 = set_energy(&le, &usage, &set0);
+        let mut state = CompressionState::dense(1);
+        let mut oracle = NullOracle;
+        let p = GreedyParams::default();
+        let (set, trace) = greedy_backward_eliminate(
+            set0, &usage, &le, &mut oracle, &mut state, 0, &p,
+        );
+        assert_eq!(set.len(), 16);
+        assert_eq!(trace.removals.len(), 16);
+        let e1 = set_energy(&le, &usage, &set);
+        assert!(e1 <= e0, "energy must not increase: {e0} -> {e1}");
+        assert!(set.contains(0));
+    }
+
+    #[test]
+    fn oracle_rejection_marks_essential() {
+        let le = le_fixture();
+        let usage = usage_fixture();
+        let set0 = WeightSet::new(vec![-127, -64, -32, 0, 32, 64, 127]);
+        struct Fussy {
+            evals: usize,
+        }
+        impl AccuracyOracle for Fussy {
+            fn accuracy(&mut self, state: &CompressionState) -> f64 {
+                self.evals += 1;
+                // Reject any set that drops 64 or -64.
+                let s = state.layers[0].wset.as_ref().unwrap();
+                if s.contains(64) && s.contains(-64) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            fn fine_tune(&mut self, _: &CompressionState, _: usize) {}
+            fn eval_count(&self) -> usize {
+                self.evals
+            }
+        }
+        let mut oracle = Fussy { evals: 0 };
+        let mut state = CompressionState::dense(1);
+        let p = GreedyParams {
+            k_target: 5,
+            check_every_removal: true,
+            delta: 0.01,
+            acc0: 1.0,
+            ..Default::default()
+        };
+        let (set, trace) = greedy_backward_eliminate(
+            set0, &usage, &le, &mut oracle, &mut state, 0, &p,
+        );
+        assert!(set.contains(64) && set.contains(-64));
+        assert_eq!(set.len(), 5);
+        assert!(!trace.essential.is_empty());
+    }
+
+    #[test]
+    fn projected_usage_conserves_mass() {
+        let usage = usage_fixture();
+        let set = WeightSet::new(vec![-100, -20, 0, 20, 100]);
+        let pu = projected_usage(&usage, &set);
+        assert_eq!(
+            usage.iter().sum::<u64>(),
+            pu.iter().sum::<u64>(),
+            "projection must conserve weight count"
+        );
+        for (i, &c) in pu.iter().enumerate() {
+            if c > 0 {
+                assert!(set.contains(i as i32 - 128));
+            }
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Energy–accuracy co-optimized weight-set selection (paper §4.2) plus
+//! the baselines it is evaluated against (naive top-K, PowerPruning).
+
+pub mod greedy;
+pub mod naive;
+pub mod powerpruning;
+
+pub use greedy::{
+    greedy_backward_eliminate, projected_usage, safe_initial_set, set_energy, GreedyParams,
+    GreedyTrace,
+};
+pub use naive::naive_lowest_energy;
+pub use powerpruning::powerpruning_set;
+
+use crate::quant::WeightSet;
+
+/// Per-conv-layer compression configuration.
+#[derive(Clone, Debug, Default)]
+pub struct LayerConfig {
+    /// Magnitude-pruning ratio (0 = dense).
+    pub prune_ratio: f64,
+    /// Restricted weight set (None = full int8 range).
+    pub wset: Option<WeightSet>,
+}
+
+/// Whole-network compression state (len = `n_conv`).
+#[derive(Clone, Debug)]
+pub struct CompressionState {
+    pub layers: Vec<LayerConfig>,
+}
+
+impl CompressionState {
+    pub fn dense(n_conv: usize) -> Self {
+        Self {
+            layers: vec![LayerConfig::default(); n_conv],
+        }
+    }
+}
+
+/// Accuracy oracle: the coordinator backs this with the AOT fine-tune /
+/// eval graphs on PJRT; unit tests use synthetic functions.
+pub trait AccuracyOracle {
+    /// Validation accuracy (0..1) with `state` applied.
+    fn accuracy(&mut self, state: &CompressionState) -> f64;
+
+    /// Fine-tune the underlying weights for `steps` with `state` applied
+    /// (QAT with projection), mutating the oracle's parameters.
+    fn fine_tune(&mut self, state: &CompressionState, steps: usize);
+
+    /// Number of accuracy evaluations performed (cost accounting).
+    fn eval_count(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,62 @@
+//! Naive baseline (§4.2 motivation, Table 4): pick the K weight values
+//! with the lowest average MAC energy, ignoring representational
+//! importance.  This is the strategy whose "catastrophic accuracy
+//! degradation" motivates the co-optimized selection.
+
+use crate::energy::WeightEnergyTable;
+use crate::quant::{WeightSet, QMAX};
+
+/// K lowest-energy codes.  Ties break toward smaller |code| so the result
+/// is deterministic.  (0 usually wins anyway — it is the cheapest MAC.)
+pub fn naive_lowest_energy(table: &WeightEnergyTable, k: usize) -> WeightSet {
+    assert!(k >= 1);
+    let mut codes: Vec<i32> = (-QMAX..=QMAX).collect();
+    codes.sort_by(|&a, &b| {
+        table
+            .energy(a as i8)
+            .partial_cmp(&table.energy(b as i8))
+            .unwrap()
+            .then(a.abs().cmp(&b.abs()))
+            .then(a.cmp(&b))
+    });
+    WeightSet::new(codes.into_iter().take(k).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> WeightEnergyTable {
+        let mut e = [0.0f64; 256];
+        for i in 0..256 {
+            let code = (i as i32 - 128).unsigned_abs() as f64;
+            e[i] = (1.0 + code) * 1e-15;
+        }
+        WeightEnergyTable {
+            e_per_cycle: e,
+            e_idle: 1e-16,
+        }
+    }
+
+    #[test]
+    fn picks_lowest_energy_codes() {
+        let t = table();
+        let set = naive_lowest_energy(&t, 5);
+        assert_eq!(set.len(), 5);
+        // With |code|-monotone energy, the 5 cheapest are {0, ±1, ±2}.
+        for c in [0, 1, -1, 2, -2] {
+            assert!(set.contains(c), "missing {c}");
+        }
+        assert!(!set.contains(64));
+    }
+
+    #[test]
+    fn no_dynamic_range_in_naive_sets() {
+        // The failure mode the paper highlights: the naive set has tiny
+        // spread, destroying expressiveness.
+        let t = table();
+        let set = naive_lowest_energy(&t, 16);
+        let max_abs = set.codes().iter().map(|c| c.abs()).max().unwrap();
+        assert!(max_abs <= 8, "naive 16-set spread {max_abs} too large");
+    }
+}

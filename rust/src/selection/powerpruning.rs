@@ -1,0 +1,101 @@
+//! PowerPruning [15]-style baseline (Table 1's comparison row).
+//!
+//! Reimplemented per its published description: a **global** activation
+//! model (MAC energy averaged over the whole network, not per layer), a
+//! single 32-value weight set selected for low energy while keeping
+//! enough dynamic range to train, and a **uniform** pruning ratio across
+//! layers.  The two deliberate limitations relative to our method —
+//! global statistics and layer-agnostic policy — are exactly what the
+//! paper's ablations quantify.
+
+use crate::energy::WeightEnergyTable;
+use crate::quant::{WeightSet, QMAX};
+use crate::selection::{CompressionState, LayerConfig};
+
+/// Global low-energy set of size `k`, PowerPruning-style: greedily take
+/// cheap codes but guarantee coverage of the dynamic range by reserving
+/// logarithmically-spaced magnitude anchors (the published method selects
+/// low-power weights subject to trainability; anchors are how we realize
+/// that constraint deterministically).
+pub fn powerpruning_set(table: &WeightEnergyTable, k: usize) -> WeightSet {
+    assert!(k >= 8, "PowerPruning uses sets of >= 8 values");
+    let mut codes: Vec<i32> = vec![0];
+    // Anchors: ±{127, 64, 32, 16} preserve range.
+    for a in [127, -127, 64, -64, 32, -32, 16, -16] {
+        if codes.len() < k {
+            codes.push(a);
+        }
+    }
+    // Fill the rest with the cheapest remaining codes.
+    let mut rest: Vec<i32> = (-QMAX..=QMAX)
+        .filter(|c| !codes.contains(c))
+        .collect();
+    rest.sort_by(|&a, &b| {
+        table
+            .energy(a as i8)
+            .partial_cmp(&table.energy(b as i8))
+            .unwrap()
+            .then(a.abs().cmp(&b.abs()))
+            .then(a.cmp(&b))
+    });
+    codes.extend(rest.into_iter().take(k - codes.len().min(k)));
+    codes.truncate(k);
+    WeightSet::new(codes)
+}
+
+/// The full PowerPruning network policy: one global set, one uniform
+/// pruning ratio for every conv layer.
+pub fn powerpruning_state(
+    n_conv: usize,
+    table: &WeightEnergyTable,
+    k: usize,
+    uniform_ratio: f64,
+) -> CompressionState {
+    let set = powerpruning_set(table, k);
+    CompressionState {
+        layers: (0..n_conv)
+            .map(|_| LayerConfig {
+                prune_ratio: uniform_ratio,
+                wset: Some(set.clone()),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> WeightEnergyTable {
+        let mut e = [0.0f64; 256];
+        for i in 0..256 {
+            let code = (i as i32 - 128).unsigned_abs() as f64;
+            e[i] = (1.0 + code) * 1e-15;
+        }
+        WeightEnergyTable {
+            e_per_cycle: e,
+            e_idle: 1e-16,
+        }
+    }
+
+    #[test]
+    fn set_has_range_and_cheap_codes() {
+        let s = powerpruning_set(&table(), 32);
+        assert_eq!(s.len(), 32);
+        assert!(s.contains(0) && s.contains(127) && s.contains(-127));
+        // Majority of members are cheap (small |code|).
+        let cheap = s.codes().iter().filter(|c| c.abs() <= 16).count();
+        assert!(cheap >= 16, "only {cheap} cheap codes");
+    }
+
+    #[test]
+    fn state_is_uniform() {
+        let st = powerpruning_state(5, &table(), 32, 0.5);
+        assert_eq!(st.layers.len(), 5);
+        let first = st.layers[0].wset.clone().unwrap();
+        for l in &st.layers {
+            assert_eq!(l.prune_ratio, 0.5);
+            assert_eq!(l.wset.as_ref().unwrap(), &first);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Per-layer activation & partial-sum statistics (paper §3.1.2).
+//!
+//! Built from the int8 engine's [`ConvCapture`]s: the im2col code matrix
+//! X (M×K) *is* the set of operand streams the weight-stationary array
+//! sees — column k of X is exactly the activation sequence entering PE
+//! row `k mod 64`, and the within-tile prefix sums over rows are the
+//! partial-sum chains.  Layer-specific histograms of both feed the
+//! per-weight MAC characterization in [`crate::energy`].
+
+use crate::model::ConvCapture;
+use crate::transitions::{ActTransHist, PsumGroupHist};
+use crate::util::rng::Xoshiro256;
+
+/// Tile dimension of the systolic array (64×64 weight-stationary).
+pub const TILE: usize = 64;
+
+/// Statistics of one convolution layer.
+#[derive(Clone)]
+pub struct LayerStats {
+    pub conv_idx: usize,
+    pub act: ActTransHist,
+    pub psum: PsumGroupHist,
+    /// Weight-code usage histogram (index = code + 128), §4.2.1 input.
+    pub weight_usage: [u64; 256],
+    /// Matmul dims observed (per calibration batch).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Number of (k-tile, output-column) pairs sampled for psum statistics.
+const PSUM_SAMPLES: usize = 6;
+/// Within each sampled pair, psum streams are recorded at these PE rows.
+const PSUM_ROWS: [usize; 4] = [8, 24, 40, 56];
+
+/// Collect layer statistics from a capture.
+pub fn collect(cap: &ConvCapture, rng: &mut Xoshiro256) -> LayerStats {
+    let mut act = ActTransHist::new();
+    // Activation transitions: every im2col column is a PE operand stream.
+    // For large layers, sample columns to bound cost.
+    let col_stride = (cap.k / 96).max(1);
+    let mut col = 0;
+    let mut stream = Vec::with_capacity(cap.m);
+    while col < cap.k {
+        stream.clear();
+        for m in 0..cap.m {
+            stream.push(cap.x_codes[m * cap.k + col]);
+        }
+        act.record_stream(&stream);
+        col += col_stride;
+    }
+
+    // Partial-sum streams: sample (k-tile, out-column) pairs, sweep the
+    // 64 PE rows maintaining per-m accumulators, record at PSUM_ROWS.
+    let mut psum = PsumGroupHist::new();
+    let k_tiles = cap.k.div_ceil(TILE);
+    let mut acc = vec![0i32; cap.m];
+    for _ in 0..PSUM_SAMPLES {
+        let kt = rng.below(k_tiles as u64) as usize;
+        let c = rng.below(cap.n as u64) as usize;
+        let k0 = kt * TILE;
+        let kh = (cap.k - k0).min(TILE);
+        acc.iter_mut().for_each(|v| *v = 0);
+        for r in 0..kh {
+            if PSUM_ROWS.contains(&r) {
+                psum.record_stream(&acc, rng);
+            }
+            let w = cap.w_codes[(k0 + r) * cap.n + c] as i32;
+            if w != 0 {
+                for m in 0..cap.m {
+                    let a = cap.x_codes[m * cap.k + (k0 + r)] as i32;
+                    // 22-bit wrap matches the hardware accumulator.
+                    acc[m] = crate::mac::unit::mac_ref(a, w, acc[m]);
+                }
+            }
+        }
+        // Top-of-column stream too (what the next tile pass inherits).
+        psum.record_stream(&acc, rng);
+    }
+
+    let mut weight_usage = [0u64; 256];
+    for &w in &cap.w_codes {
+        weight_usage[(w as i32 + 128) as usize] += 1;
+    }
+
+    LayerStats {
+        conv_idx: cap.conv_idx,
+        act,
+        psum,
+        weight_usage,
+        m: cap.m,
+        k: cap.k,
+        n: cap.n,
+    }
+}
+
+/// Merge statistics from several captures of the same layer (multiple
+/// calibration batches).
+pub fn merge(mut stats: Vec<LayerStats>) -> LayerStats {
+    assert!(!stats.is_empty());
+    let mut base = stats.remove(0);
+    for s in stats {
+        assert_eq!(s.conv_idx, base.conv_idx);
+        for i in 0..256 * 256 {
+            base.act.counts[i] += s.act.counts[i];
+        }
+        base.act.total += s.act.total;
+        for i in 0..base.psum.counts.len() {
+            base.psum.counts[i] += s.psum.counts[i];
+        }
+        base.psum.total += s.psum.total;
+        // weight usage identical across batches (same weights) — keep base.
+    }
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_capture(m: usize, k: usize, n: usize, seed: u64) -> ConvCapture {
+        let mut rng = Xoshiro256::new(seed);
+        ConvCapture {
+            conv_idx: 0,
+            m,
+            k,
+            n,
+            x_codes: (0..m * k)
+                .map(|_| if rng.below(3) == 0 { 0 } else { rng.code() as i8 })
+                .collect(),
+            w_codes: (0..k * n).map(|_| rng.code() as i8).collect(),
+            s_act: 0.01,
+            s_w: 0.005,
+        }
+    }
+
+    #[test]
+    fn collect_populates_histograms() {
+        let cap = fake_capture(100, 80, 8, 1);
+        let mut rng = Xoshiro256::new(2);
+        let st = collect(&cap, &mut rng);
+        assert!(st.act.total > 0);
+        assert!(st.psum.total > 0);
+        let usage_total: u64 = st.weight_usage.iter().sum();
+        assert_eq!(usage_total, (80 * 8) as u64);
+    }
+
+    #[test]
+    fn relu_sparsity_visible() {
+        // 2/3 random + 1/3 zeros in x -> zero_fraction near 1/3.
+        let cap = fake_capture(200, 64, 4, 3);
+        let mut rng = Xoshiro256::new(4);
+        let st = collect(&cap, &mut rng);
+        let zf = st.act.zero_fraction();
+        assert!(zf > 0.2 && zf < 0.5, "zero fraction {zf}");
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let cap = fake_capture(50, 64, 4, 5);
+        let mut rng = Xoshiro256::new(6);
+        let a = collect(&cap, &mut rng);
+        let b = collect(&cap, &mut rng);
+        let at = a.act.total;
+        let m = merge(vec![a, b]);
+        assert_eq!(m.act.total, at * 2);
+    }
+}

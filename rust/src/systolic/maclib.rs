@@ -1,0 +1,76 @@
+//! Cache of weight-specialized MAC netlists.
+//!
+//! Specializing the generic MAC for one of the 255 int8 codes costs a
+//! const-prop pass (~1 ms); the library memoizes all of them so tile
+//! simulation and per-weight characterization amortize the cost.
+
+use crate::mac::{build_mac, specialize_mac, MacNetlist};
+
+pub struct MacLib {
+    generic: MacNetlist,
+    /// Index = code + 128.
+    cache: Vec<Option<MacNetlist>>,
+}
+
+impl Default for MacLib {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MacLib {
+    pub fn new() -> Self {
+        Self {
+            generic: build_mac(),
+            cache: (0..256).map(|_| None).collect(),
+        }
+    }
+
+    /// The generic (weight-as-input) MAC.
+    pub fn generic(&self) -> &MacNetlist {
+        &self.generic
+    }
+
+    /// Specialized netlist for a weight code.
+    pub fn get(&mut self, weight: i8) -> &MacNetlist {
+        let idx = (weight as i32 + 128) as usize;
+        if self.cache[idx].is_none() {
+            self.cache[idx] = Some(specialize_mac(&self.generic, weight as i32));
+        }
+        self.cache[idx].as_ref().unwrap()
+    }
+
+    /// Shared-reference lookup for pre-specialized codes (lets the
+    /// characterization loop fan out over a `&MacLib`).
+    pub fn get_cached(&self, weight: i8) -> Option<&MacNetlist> {
+        self.cache[(weight as i32 + 128) as usize].as_ref()
+    }
+
+    /// Gate count per weight (area proxy; also a quick Fig. 1 sanity
+    /// signal since switching scales with surviving logic).
+    pub fn gate_count(&mut self, weight: i8) -> usize {
+        self.get(weight).netlist.gate_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_reuses() {
+        let mut lib = MacLib::new();
+        let g1 = lib.get(5).netlist.gate_count();
+        let g2 = lib.get(5).netlist.gate_count();
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn sparse_codes_are_smaller() {
+        let mut lib = MacLib::new();
+        // |w| with few set bits -> fewer surviving gates than dense codes.
+        let g1 = lib.gate_count(1);
+        let g_dense = lib.gate_count(0b0101_0101u8 as i8 ^ 0); // 85
+        assert!(g1 < g_dense, "g(1)={g1} g(85)={g_dense}");
+    }
+}

@@ -1,0 +1,272 @@
+//! Cycle-level 64×64 weight-stationary systolic array (paper §3.2).
+//!
+//! The layer matmul `Y(M×N) = X(M×K)·W(K×N)` is cut into tile *passes*:
+//! a 64×64 weight tile stays resident while a 64-row block of X streams
+//! through (128 cycles per pass: 64 fill + 64 drain).  This module
+//! provides
+//!
+//! * the tile schedule ([`passes_of`]) — the paper's `N_ℓ`;
+//! * a functional simulation ([`simulate_tile`]) that reproduces the
+//!   matmul result from per-PE MAC steps (validating the mapping against
+//!   the engine / the Pallas tile artifact);
+//! * an **exact gate-level power mode** ([`tile_power_exact`]) that
+//!   drives every PE's specialized MAC netlist with its real operand
+//!   streams — the ground truth used to validate the statistical model
+//!   of [`crate::energy`].
+
+pub mod maclib;
+
+use crate::gates::{CapModel, TraceSim};
+use crate::mac::unit::mac_ref;
+pub use maclib::MacLib;
+
+/// Systolic array dimension.
+pub const TILE: usize = 64;
+/// Cycles per tile pass at clock f (64 fill + 64 drain), per the paper.
+pub const CYCLES_PER_PASS: u64 = 128;
+
+/// One tile pass: weight sub-block [k0..k0+kh) × [n0..n0+nw) against X
+/// rows [m0..m0+mh).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pass {
+    pub m0: usize,
+    pub mh: usize,
+    pub k0: usize,
+    pub kh: usize,
+    pub n0: usize,
+    pub nw: usize,
+}
+
+/// All tile passes of an (M, K, N) matmul, k-major then n then m —
+/// the order a weight-stationary scheduler loads tiles.
+pub fn passes_of(m: usize, k: usize, n: usize) -> Vec<Pass> {
+    let mut out = Vec::new();
+    for n0 in (0..n).step_by(TILE) {
+        for k0 in (0..k).step_by(TILE) {
+            for m0 in (0..m).step_by(TILE) {
+                out.push(Pass {
+                    m0,
+                    mh: (m - m0).min(TILE),
+                    k0,
+                    kh: (k - k0).min(TILE),
+                    n0,
+                    nw: (n - n0).min(TILE),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The paper's `N_ℓ`: number of tile passes for a layer matmul.
+pub fn n_tiles(m: usize, k: usize, n: usize) -> u64 {
+    (m.div_ceil(TILE) * k.div_ceil(TILE) * n.div_ceil(TILE)) as u64
+}
+
+/// Functionally simulate one pass: accumulate `partial[mh × nw]` using
+/// per-PE MAC steps with 22-bit accumulators (wrap included), exactly as
+/// the hardware columns chain partial sums.
+pub fn simulate_tile(
+    x_codes: &[i8],
+    w_codes: &[i8],
+    k: usize,
+    n: usize,
+    pass: &Pass,
+    partial: &mut [i32],
+) {
+    assert_eq!(partial.len(), pass.mh * pass.nw);
+    for mi in 0..pass.mh {
+        let xrow = &x_codes[(pass.m0 + mi) * k..];
+        for c in 0..pass.nw {
+            let mut acc = partial[mi * pass.nw + c];
+            for r in 0..pass.kh {
+                let a = xrow[pass.k0 + r] as i32;
+                let w = w_codes[(pass.k0 + r) * n + (pass.n0 + c)] as i32;
+                acc = mac_ref(a, w, acc);
+            }
+            partial[mi * pass.nw + c] = acc;
+        }
+    }
+}
+
+/// Full matmul through the tile schedule (returns M×N i32; values are
+/// exact when K·127² fits 22 bits per column chain — callers validate
+/// against the engine's wide accumulation).
+pub fn matmul_tiled(x_codes: &[i8], w_codes: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut y = vec![0i32; m * n];
+    let mut partial = vec![0i32; TILE * TILE];
+    for pass in passes_of(m, k, n) {
+        partial[..pass.mh * pass.nw]
+            .iter_mut()
+            .enumerate()
+            .for_each(|(i, v)| {
+                let mi = i / pass.nw;
+                let c = i % pass.nw;
+                *v = y[(pass.m0 + mi) * n + (pass.n0 + c)];
+            });
+        simulate_tile(x_codes, w_codes, k, n, &pass, &mut partial[..pass.mh * pass.nw]);
+        for mi in 0..pass.mh {
+            for c in 0..pass.nw {
+                y[(pass.m0 + mi) * n + (pass.n0 + c)] = partial[mi * pass.nw + c];
+            }
+        }
+    }
+    y
+}
+
+/// Exact gate-level energy of one tile pass (J): every PE's specialized
+/// netlist is driven with its true (activation, psum-in) streams.
+///
+/// Returns (energy_joules, simulated_mac_steps).
+pub fn tile_power_exact(
+    x_codes: &[i8],
+    w_codes: &[i8],
+    k: usize,
+    n: usize,
+    pass: &Pass,
+    lib: &mut MacLib,
+    cap: &CapModel,
+) -> (f64, u64) {
+    let mh = pass.mh;
+    // Per-weight simulation state (power ctx + trace sim + word buffer)
+    // is reused across the up-to-4096 PEs of the pass, and the power
+    // report is folded ONCE per weight at the end (toggle counts are
+    // additive across trace segments) — building/reporting per PE
+    // dominated the profile before (EXPERIMENTS.md §Perf).
+    let mut state: std::collections::HashMap<i8, (crate::gates::PowerCtx, TraceSim, Vec<u64>)> =
+        std::collections::HashMap::new();
+    // Column-major sweep: maintain psum-in streams incrementally.
+    let mut psum_in = vec![0i32; mh];
+    let mut act_stream = vec![0i32; mh];
+    for c in 0..pass.nw {
+        psum_in.iter_mut().for_each(|v| *v = 0);
+        for r in 0..pass.kh {
+            let w = w_codes[(pass.k0 + r) * n + (pass.n0 + c)];
+            for mi in 0..mh {
+                act_stream[mi] = x_codes[(pass.m0 + mi) * k + pass.k0 + r] as i32;
+            }
+            let mac = lib.get(w);
+            let (_ctx, sim, words) = state.entry(w).or_insert_with(|| {
+                let n_in = mac.netlist.inputs.len();
+                (
+                    cap.ctx(&mac.netlist),
+                    TraceSim::new(&mac.netlist),
+                    vec![0u64; n_in],
+                )
+            });
+            sim.new_segment();
+            // Pack the (a, psum) trace in 64-step chunks.
+            let mut mi = 0;
+            while mi < mh {
+                let chunk = (mh - mi).min(64);
+                words.iter_mut().for_each(|w| *w = 0);
+                for lane in 0..chunk {
+                    // Branchless bit-plane transpose of (a, psum_in).
+                    let a = act_stream[mi + lane] as u32;
+                    let p = psum_in[mi + lane] as u32;
+                    for (bit, wslot) in words[..crate::mac::ACT_BITS].iter_mut().enumerate() {
+                        *wslot |= (((a >> bit) & 1) as u64) << lane;
+                    }
+                    for (bit, wslot) in words[crate::mac::ACT_BITS..].iter_mut().enumerate() {
+                        *wslot |= (((p >> bit) & 1) as u64) << lane;
+                    }
+                }
+                sim.run_chunk(&mac.netlist, words, chunk as u32);
+                mi += chunk;
+            }
+            // Update psum streams for the next row.
+            if w != 0 {
+                for mi in 0..mh {
+                    psum_in[mi] = mac_ref(act_stream[mi], w as i32, psum_in[mi]);
+                }
+            }
+        }
+    }
+    // Fold power once per distinct weight value.
+    let mut total = 0.0f64;
+    let mut steps = 0u64;
+    for (_w, (ctx, sim, _)) in &state {
+        let rep = ctx.report(sim);
+        total += rep.energy_j;
+        steps += rep.cycles;
+    }
+    (total, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_codes(n: usize, seed: u64, sparsity: u64) -> Vec<i8> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                if rng.below(sparsity) == 0 {
+                    0
+                } else {
+                    rng.code() as i8
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn schedule_covers_matrix() {
+        let (m, k, n) = (130, 100, 70);
+        let passes = passes_of(m, k, n);
+        assert_eq!(passes.len() as u64, n_tiles(m, k, n));
+        // Every (m, k, n) cell covered exactly once.
+        let mut cover = vec![0u8; m * k * n];
+        for p in &passes {
+            for mi in p.m0..p.m0 + p.mh {
+                for r in p.k0..p.k0 + p.kh {
+                    for c in p.n0..p.n0 + p.nw {
+                        cover[(mi * k + r) * n + c] += 1;
+                    }
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1));
+    }
+
+    /// The tiled systolic simulation must reproduce the plain matmul
+    /// (with small-K operands so 22-bit accumulators never wrap).
+    #[test]
+    fn tiled_matmul_matches_reference() {
+        let (m, k, n) = (70, 90, 17);
+        let x = rand_codes(m * k, 1, 3);
+        let w = rand_codes(k * n, 2, 3);
+        let y = matmul_tiled(&x, &w, m, k, n);
+        for mi in 0..m {
+            for c in 0..n {
+                let mut acc = 0i64;
+                for r in 0..k {
+                    acc += x[mi * k + r] as i64 * w[r * n + c] as i64;
+                }
+                // Value must fit 22 bits for this test's dims.
+                assert_eq!(y[mi * n + c] as i64, acc, "({mi},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_power_positive_and_weight_dependent() {
+        let (m, k, n) = (64, 64, 2);
+        let x = rand_codes(m * k, 3, 2);
+        // Compare an all-zero weight tile against a dense one.
+        let w_zero = vec![0i8; k * n];
+        let w_dense = rand_codes(k * n, 4, 1000);
+        let mut lib = MacLib::new();
+        let cap = CapModel::default();
+        let pass = passes_of(m, k, n)[0];
+        let (e_zero, s1) = tile_power_exact(&x, &w_zero, k, n, &pass, &mut lib, &cap);
+        let (e_dense, s2) = tile_power_exact(&x, &w_dense, k, n, &pass, &mut lib, &cap);
+        assert_eq!(s1, s2);
+        assert!(e_zero > 0.0, "idle power must include clock energy");
+        assert!(
+            e_dense > e_zero * 1.5,
+            "dense tile {e_dense} should dwarf zero tile {e_zero}"
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `cases(n, seed, |rng| ...)` runs a property over `n` generated cases
+//! with deterministic seeding and reports the failing case index on
+//! panic, which is what we actually use proptest for in this codebase.
+//! Generators live on [`Gen`].
+
+use crate::util::rng::Xoshiro256;
+
+/// Deterministic case runner.  On panic, re-raises with the case index
+/// and per-case seed so the failure reproduces with `case_seed`.
+pub fn cases<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(n: usize, seed: u64, prop: F) {
+    for i in 0..n {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Xoshiro256::new(case_seed),
+            };
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            eprintln!("property failed at case {i}/{n} (case_seed = {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Value generators over a deterministic PRNG.
+pub struct Gen {
+    pub rng: Xoshiro256,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i8_code(&mut self) -> i8 {
+        self.rng.code() as i8
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_codes(&mut self, len: usize) -> Vec<i8> {
+        (0..len).map(|_| self.i8_code()).collect()
+    }
+
+    /// Non-empty sorted unique code set of size <= max_k.
+    pub fn weight_set(&mut self, max_k: usize) -> crate::quant::WeightSet {
+        let k = self.usize_in(1, max_k);
+        let codes: Vec<i32> = (0..k).map(|_| self.rng.code()).collect();
+        crate::quant::WeightSet::new(codes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases_deterministically() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        cases(5, 42, |g| {
+            let v = g.usize_in(0, 1000);
+            assert!(v <= 1000);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        cases(10, 1, |g| {
+            let v = g.usize_in(0, 0);
+            assert!(v == 1, "always fails: v = {v}");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        cases(50, 7, |g| {
+            let c = g.i8_code();
+            assert!((-127..=127).contains(&(c as i32)));
+            let f = g.f32_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&f));
+            let s = g.weight_set(8);
+            assert!(!s.is_empty() && s.len() <= 8);
+        });
+    }
+}

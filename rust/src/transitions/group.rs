@@ -1,0 +1,202 @@
+//! The two-stage MSB × Hamming-weight grouping of 22-bit partial sums.
+//!
+//! Stage 1: the MSB position (0..=22, where 0 = value 0) is uniformly
+//! partitioned into [`MSB_BINS`] bins.  Stage 2: within an MSB bin,
+//! values are split by Hamming weight into [`HW_BINS`] uniform bins
+//! (weight range 0..=22).  Total [`N_GROUPS`] = 50 representative
+//! clusters, exactly the paper's 10 × 5 scheme.
+//!
+//! Values are the raw 22-bit accumulator patterns (two's complement), so
+//! the MSB of a negative value is high — matching what the adder's
+//! carry chain actually sees.
+
+use crate::mac::ACC_BITS;
+
+pub const MSB_BINS: usize = 10;
+pub const HW_BINS: usize = 5;
+pub const N_GROUPS: usize = MSB_BINS * HW_BINS;
+
+/// MSB position of the 22-bit pattern: 0 for value 0, else 1 + index of
+/// the highest set bit (1..=22).
+#[inline]
+pub fn msb_position(psum_bits: u32) -> u32 {
+    debug_assert!(psum_bits < (1 << ACC_BITS));
+    32 - psum_bits.leading_zeros()
+}
+
+/// Hamming weight (number of set bits) of the 22-bit pattern.
+#[inline]
+pub fn hamming_weight(psum_bits: u32) -> u32 {
+    psum_bits.count_ones()
+}
+
+/// Map a signed accumulator value to its raw 22-bit pattern.
+#[inline]
+pub fn to_bits(psum: i32) -> u32 {
+    (psum as u32) & ((1 << ACC_BITS) - 1)
+}
+
+/// The grouping function: 22-bit pattern -> group id in `0..N_GROUPS`.
+#[inline]
+pub fn group_of(psum_bits: u32) -> usize {
+    // MSB range 0..=22 -> 10 uniform bins.
+    let msb = msb_position(psum_bits) as usize;
+    let msb_bin = (msb * MSB_BINS) / (ACC_BITS + 1);
+    // Hamming weight range 0..=22 -> 5 uniform bins.
+    let hw = hamming_weight(psum_bits) as usize;
+    let hw_bin = (hw * HW_BINS) / (ACC_BITS + 1);
+    msb_bin * HW_BINS + hw_bin
+}
+
+/// A grouping scheme abstraction so ablations can swap partitions
+/// (uniform vs alternatives) while the rest of the model is unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grouping {
+    /// The paper's uniform 10 × 5 MSB × HW partition.
+    MsbHamming,
+    /// MSB-only partition into 50 uniform bins (ablation).
+    MsbOnly,
+    /// Hamming-weight-only partition into 50 bins capped at 23 distinct
+    /// weights (ablation).
+    HammingOnly,
+}
+
+impl Grouping {
+    pub fn group(&self, psum_bits: u32) -> usize {
+        match self {
+            Grouping::MsbHamming => group_of(psum_bits),
+            Grouping::MsbOnly => {
+                let msb = msb_position(psum_bits) as usize;
+                (msb * N_GROUPS) / (ACC_BITS + 1)
+            }
+            Grouping::HammingOnly => {
+                let hw = hamming_weight(psum_bits) as usize;
+                (hw * N_GROUPS) / (ACC_BITS + 1)
+            }
+        }
+    }
+}
+
+/// Grouping quality metric from the paper: variance of inter-group means
+/// divided by mean intra-group variance, computed over per-sample scalar
+/// costs (e.g. measured MAC energies) labeled with group ids.
+///
+/// Returns `f64::INFINITY` when all intra-group variances are zero and
+/// the inter-group variance is positive (perfect separation).
+pub fn stability_ratio(samples: &[(usize, f64)]) -> f64 {
+    let mut sums = vec![0.0f64; N_GROUPS];
+    let mut sqs = vec![0.0f64; N_GROUPS];
+    let mut counts = vec![0usize; N_GROUPS];
+    for &(g, v) in samples {
+        sums[g] += v;
+        sqs[g] += v * v;
+        counts[g] += 1;
+    }
+    let mut means = Vec::new();
+    let mut intra = Vec::new();
+    for g in 0..N_GROUPS {
+        if counts[g] < 2 {
+            continue;
+        }
+        let n = counts[g] as f64;
+        let mean = sums[g] / n;
+        means.push(mean);
+        intra.push((sqs[g] / n - mean * mean).max(0.0));
+    }
+    if means.len() < 2 {
+        return 0.0;
+    }
+    let gm = means.iter().sum::<f64>() / means.len() as f64;
+    let inter = means.iter().map(|m| (m - gm) * (m - gm)).sum::<f64>() / means.len() as f64;
+    let mean_intra = intra.iter().sum::<f64>() / intra.len() as f64;
+    if mean_intra == 0.0 {
+        return if inter > 0.0 { f64::INFINITY } else { 0.0 };
+    }
+    inter / mean_intra
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_is_total_and_bounded() {
+        // Property: every 22-bit pattern lands in a valid group
+        // (sampled sweep + structured corners).
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        for _ in 0..10_000 {
+            let v = (rng.next_u64() & ((1 << ACC_BITS) - 1)) as u32;
+            assert!(group_of(v) < N_GROUPS);
+        }
+        for v in [0u32, 1, (1 << ACC_BITS) - 1, 1 << 21, 0x2AAAAA] {
+            assert!(group_of(v) < N_GROUPS);
+        }
+    }
+
+    #[test]
+    fn all_groups_reachable_enough() {
+        // The uniform partition must spread mass: at least 40 of the 50
+        // groups are hit by uniform random patterns + low-magnitude
+        // values (some (low-MSB, high-HW) combos are impossible: HW can
+        // never exceed MSB position).
+        let mut seen = vec![false; N_GROUPS];
+        let mut rng = crate::util::rng::Xoshiro256::new(6);
+        for _ in 0..200_000 {
+            let v = (rng.next_u64() & ((1 << ACC_BITS) - 1)) as u32;
+            seen[group_of(v)] = true;
+        }
+        for m in 0..=21 {
+            seen[group_of(1u32 << m)] = true;
+            seen[group_of((1u32 << (m + 1)) - 1)] = true;
+        }
+        let n_seen = seen.iter().filter(|&&s| s).count();
+        assert!(n_seen >= 30, "only {n_seen} groups reachable");
+    }
+
+    #[test]
+    fn msb_and_hw_helpers() {
+        assert_eq!(msb_position(0), 0);
+        assert_eq!(msb_position(1), 1);
+        assert_eq!(msb_position(1 << 21), 22);
+        assert_eq!(hamming_weight(0b1011), 3);
+        assert_eq!(to_bits(-1), (1 << ACC_BITS) - 1);
+        assert_eq!(to_bits(5), 5);
+    }
+
+    #[test]
+    fn monotone_in_msb() {
+        // Group id is non-decreasing in MSB position for fixed HW=1.
+        let mut last = 0;
+        for m in 0..22 {
+            let g = group_of(1u32 << m);
+            assert!(g >= last, "msb {m}");
+            last = g;
+        }
+    }
+
+    #[test]
+    fn stability_ratio_separates() {
+        // Synthetic: group g has cost g with tiny jitter -> huge ratio.
+        let mut samples = Vec::new();
+        for g in 0..N_GROUPS {
+            for i in 0..5 {
+                samples.push((g, g as f64 + i as f64 * 1e-6));
+            }
+        }
+        assert!(stability_ratio(&samples) > 1e6);
+        // All-identical costs -> ratio 0.
+        let flat: Vec<(usize, f64)> = (0..N_GROUPS).flat_map(|g| [(g, 1.0), (g, 1.0)]).collect();
+        assert_eq!(stability_ratio(&flat), 0.0);
+    }
+
+    #[test]
+    fn ablation_groupings_valid() {
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        for _ in 0..1000 {
+            let v = (rng.next_u64() & ((1 << ACC_BITS) - 1)) as u32;
+            for g in [Grouping::MsbHamming, Grouping::MsbOnly, Grouping::HammingOnly] {
+                assert!(g.group(v) < N_GROUPS);
+            }
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! Transition histograms + probabilistic trace synthesis (paper §3.1.2).
+//!
+//! Per layer we estimate two independent empirical distributions from
+//! calibration traces produced by the Rust int8 engine / systolic
+//! scheduler:
+//!
+//! * [`ActTransHist`] — activation transitions: a 256×256 count matrix
+//!   over consecutive int8 activation codes seen by a PE.
+//! * [`PsumGroupHist`] — partial-sum transitions collapsed onto the
+//!   50×50 group-pair matrix of [`super::group`].
+//!
+//! Synthetic MAC input traces are then re-sampled from these histograms
+//! (activation chain via the conditional row distribution; partial sums
+//! by drawing a representative pattern per group).
+
+use crate::mac::ACC_BITS;
+use crate::transitions::group::{group_of, to_bits, N_GROUPS};
+use crate::util::rng::Xoshiro256;
+
+/// 256×256 activation transition counts; code index = `code + 128`.
+#[derive(Clone)]
+pub struct ActTransHist {
+    pub counts: Vec<u32>, // [256 * 256], row = from, col = to
+    pub total: u64,
+}
+
+impl Default for ActTransHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ActTransHist {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; 256 * 256],
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn idx(from: i32, to: i32) -> usize {
+        debug_assert!((-128..=127).contains(&from) && (-128..=127).contains(&to));
+        ((from + 128) as usize) * 256 + (to + 128) as usize
+    }
+
+    #[inline]
+    pub fn record(&mut self, from: i32, to: i32) {
+        self.counts[Self::idx(from, to)] += 1;
+        self.total += 1;
+    }
+
+    /// Record a whole code stream.
+    pub fn record_stream(&mut self, codes: &[i8]) {
+        for w in codes.windows(2) {
+            self.record(w[0] as i32, w[1] as i32);
+        }
+    }
+
+    pub fn prob(&self, from: i32, to: i32) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts[Self::idx(from, to)] as f64 / self.total as f64
+    }
+
+    /// Marginal distribution of the `from` code.
+    pub fn from_marginal(&self) -> Vec<f64> {
+        let mut m = vec![0.0f64; 256];
+        for f in 0..256 {
+            let row = &self.counts[f * 256..(f + 1) * 256];
+            m[f] = row.iter().map(|&c| c as f64).sum();
+        }
+        let t = self.total.max(1) as f64;
+        m.iter_mut().for_each(|v| *v /= t);
+        m
+    }
+
+    /// Sample an activation code chain of length `n` following the
+    /// empirical transition kernel (falls back to the marginal when a row
+    /// is empty).  Codes returned in `[-128, 127]`.
+    pub fn sample_chain(&self, n: usize, rng: &mut Xoshiro256) -> Vec<i32> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let marginal = self.from_marginal();
+        let mut out = Vec::with_capacity(n);
+        let mut cur = rng.weighted(&marginal) as i32 - 128;
+        out.push(cur);
+        let mut row_buf = vec![0.0f64; 256];
+        for _ in 1..n {
+            let row = &self.counts[((cur + 128) as usize) * 256..((cur + 128) as usize + 1) * 256];
+            let row_total: u64 = row.iter().map(|&c| c as u64).sum();
+            let next = if row_total == 0 {
+                rng.weighted(&marginal) as i32 - 128
+            } else {
+                for (i, &c) in row.iter().enumerate() {
+                    row_buf[i] = c as f64;
+                }
+                rng.weighted(&row_buf) as i32 - 128
+            };
+            out.push(next);
+            cur = next;
+        }
+        out
+    }
+
+    /// Sparsity: fraction of transition mass with `to == 0` (ReLU layers
+    /// show high values here — the layer-to-layer variability the paper's
+    /// Fig. 3 visualizes).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut z = 0u64;
+        for f in 0..256 {
+            z += self.counts[f * 256 + 128] as u64;
+        }
+        z as f64 / self.total as f64
+    }
+
+    /// Downsample to a `bins`×`bins` heatmap (for Fig. 3 rendering).
+    pub fn heatmap(&self, bins: usize) -> Vec<f64> {
+        let mut hm = vec![0.0f64; bins * bins];
+        for f in 0..256 {
+            for t in 0..256 {
+                let c = self.counts[f * 256 + t];
+                if c > 0 {
+                    hm[(f * bins / 256) * bins + (t * bins / 256)] += c as f64;
+                }
+            }
+        }
+        let total = self.total.max(1) as f64;
+        hm.iter_mut().for_each(|v| *v /= total);
+        hm
+    }
+}
+
+/// 50×50 grouped partial-sum transition counts, plus one representative
+/// reservoir pattern per group for trace synthesis.
+#[derive(Clone)]
+pub struct PsumGroupHist {
+    pub counts: Vec<u32>, // [N_GROUPS * N_GROUPS]
+    pub total: u64,
+    /// Up to `RESERVOIR` observed raw patterns per group.
+    reservoirs: Vec<Vec<u32>>,
+    seen_per_group: Vec<u64>,
+}
+
+const RESERVOIR: usize = 32;
+
+impl Default for PsumGroupHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PsumGroupHist {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_GROUPS * N_GROUPS],
+            total: 0,
+            reservoirs: vec![Vec::new(); N_GROUPS],
+            seen_per_group: vec![0; N_GROUPS],
+        }
+    }
+
+    /// Record a signed psum transition.
+    pub fn record(&mut self, from: i32, to: i32, rng: &mut Xoshiro256) {
+        let fb = to_bits(from);
+        let tb = to_bits(to);
+        let gf = group_of(fb);
+        let gt = group_of(tb);
+        self.counts[gf * N_GROUPS + gt] += 1;
+        self.total += 1;
+        for (g, bits) in [(gf, fb), (gt, tb)] {
+            self.seen_per_group[g] += 1;
+            let res = &mut self.reservoirs[g];
+            if res.len() < RESERVOIR {
+                res.push(bits);
+            } else {
+                // Reservoir sampling keeps representatives unbiased.
+                let j = rng.below(self.seen_per_group[g]) as usize;
+                if j < RESERVOIR {
+                    res[j] = bits;
+                }
+            }
+        }
+    }
+
+    /// Record a whole signed psum stream.
+    pub fn record_stream(&mut self, psums: &[i32], rng: &mut Xoshiro256) {
+        for w in psums.windows(2) {
+            self.record(w[0], w[1], rng);
+        }
+    }
+
+    pub fn prob(&self, gf: usize, gt: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts[gf * N_GROUPS + gt] as f64 / self.total as f64
+    }
+
+    /// Draw a representative raw pattern for a group (falls back to a
+    /// synthetic member when the reservoir is empty).
+    pub fn representative(&self, g: usize, rng: &mut Xoshiro256) -> u32 {
+        let res = &self.reservoirs[g];
+        if !res.is_empty() {
+            return res[rng.below(res.len() as u64) as usize];
+        }
+        synth_member(g, rng)
+    }
+
+    /// Sample a psum value chain of length `n`: group chain follows the
+    /// empirical group-pair kernel; raw patterns come from reservoirs.
+    pub fn sample_chain(&self, n: usize, rng: &mut Xoshiro256) -> Vec<i32> {
+        if n == 0 {
+            return Vec::new();
+        }
+        // Marginal over `from` groups.
+        let mut marg = vec![0.0f64; N_GROUPS];
+        for g in 0..N_GROUPS {
+            marg[g] = self.counts[g * N_GROUPS..(g + 1) * N_GROUPS]
+                .iter()
+                .map(|&c| c as f64)
+                .sum();
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut gcur = rng.weighted(&marg);
+        out.push(from_bits(self.representative(gcur, rng)));
+        let mut row_buf = vec![0.0f64; N_GROUPS];
+        for _ in 1..n {
+            let row = &self.counts[gcur * N_GROUPS..(gcur + 1) * N_GROUPS];
+            let row_total: u32 = row.iter().sum();
+            let gnext = if row_total == 0 {
+                rng.weighted(&marg)
+            } else {
+                for (i, &c) in row.iter().enumerate() {
+                    row_buf[i] = c as f64;
+                }
+                rng.weighted(&row_buf)
+            };
+            out.push(from_bits(self.representative(gnext, rng)));
+            gcur = gnext;
+        }
+        out
+    }
+}
+
+/// Signed value from a raw 22-bit pattern.
+#[inline]
+pub fn from_bits(bits: u32) -> i32 {
+    ((bits as i32) << (32 - ACC_BITS)) >> (32 - ACC_BITS)
+}
+
+/// Construct *some* member of group `g` (used before any data is seen):
+/// pick an MSB and Hamming weight consistent with the bin, then scatter
+/// the remaining ones below the MSB.
+fn synth_member(g: usize, rng: &mut Xoshiro256) -> u32 {
+    use crate::transitions::group::{HW_BINS, MSB_BINS};
+    let msb_bin = g / HW_BINS;
+    let hw_bin = g % HW_BINS;
+    // Invert the uniform binning: smallest msb with (msb*MSB_BINS)/(B+1)
+    // == msb_bin is ceil(msb_bin*(B+1)/MSB_BINS).
+    let msb = ((msb_bin * (ACC_BITS + 1) + MSB_BINS - 1) / MSB_BINS).min(ACC_BITS);
+    if msb == 0 {
+        return 0;
+    }
+    let hw_target = ((hw_bin * (ACC_BITS + 1) + HW_BINS - 1) / HW_BINS)
+        .max(1)
+        .min(msb);
+    let mut v = 1u32 << (msb - 1);
+    let mut ones = 1;
+    let mut guard = 0;
+    while ones < hw_target && guard < 200 {
+        let pos = rng.below(msb as u64 - 1) as u32;
+        if v & (1 << pos) == 0 {
+            v |= 1 << pos;
+            ones += 1;
+        }
+        guard += 1;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_hist_records_and_samples() {
+        let mut h = ActTransHist::new();
+        // A deterministic 0 -> 5 -> 0 -> 5 ... stream.
+        let stream: Vec<i8> = (0..100).map(|i| if i % 2 == 0 { 0 } else { 5 }).collect();
+        h.record_stream(&stream);
+        assert_eq!(h.total, 99);
+        assert!(h.prob(0, 5) > 0.4);
+        assert!(h.prob(5, 0) > 0.4);
+        let mut rng = Xoshiro256::new(1);
+        let chain = h.sample_chain(1000, &mut rng);
+        // The chain must only visit {0, 5}.
+        assert!(chain.iter().all(|&c| c == 0 || c == 5));
+        // And alternate nearly always.
+        let alternations = chain.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(alternations > 900);
+    }
+
+    #[test]
+    fn zero_fraction_tracks_relu_sparsity() {
+        let mut h = ActTransHist::new();
+        let stream: Vec<i8> = (0..1000).map(|i| if i % 4 == 0 { 7 } else { 0 }).collect();
+        h.record_stream(&stream);
+        assert!(h.zero_fraction() > 0.6);
+    }
+
+    #[test]
+    fn psum_hist_roundtrip() {
+        let mut rng = Xoshiro256::new(2);
+        let mut h = PsumGroupHist::new();
+        let stream: Vec<i32> = (0..2000)
+            .map(|_| (rng.next_u64() & 0xFFFF) as i32 - 0x8000)
+            .collect();
+        h.record_stream(&stream, &mut rng);
+        assert_eq!(h.total, 1999);
+        let chain = h.sample_chain(500, &mut rng);
+        assert_eq!(chain.len(), 500);
+        // Sampled values stay in the 22-bit signed range.
+        assert!(chain.iter().all(|&v| (-(1 << 21)..(1 << 21)).contains(&v)));
+    }
+
+    #[test]
+    fn synth_member_hits_group() {
+        let mut rng = Xoshiro256::new(3);
+        for g in 0..N_GROUPS {
+            let v = synth_member(g, &mut rng);
+            // Member must be *near* the requested bins (exact for MSB bin).
+            let got = crate::transitions::group::group_of(v);
+            let msb_bin = got / crate::transitions::group::HW_BINS;
+            assert!(
+                msb_bin == g / crate::transitions::group::HW_BINS || v == 0,
+                "g={g} v={v:#x} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn heatmap_mass_normalized() {
+        let mut h = ActTransHist::new();
+        let stream: Vec<i8> = (0..500).map(|i| (i % 7 - 3) as i8).collect();
+        h.record_stream(&stream);
+        let hm = h.heatmap(16);
+        let mass: f64 = hm.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Partial-sum transition grouping and transition statistics (paper §3.1.1).
+//!
+//! The 22-bit accumulator's transition space (2^22 × 2^22) is collapsed
+//! into 50 groups — 10 uniform MSB-position bins × 5 Hamming-weight bins —
+//! chosen because MSB position tracks carry-propagation depth and Hamming
+//! distance tracks toggled-bit count (validated in Fig. 2 / the
+//! `fig2_grouping_metrics` bench).
+
+pub mod group;
+pub mod histogram;
+
+pub use group::{group_of, hamming_weight, msb_position, stability_ratio, Grouping, N_GROUPS};
+pub use histogram::{ActTransHist, PsumGroupHist};

@@ -1,0 +1,122 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Unknown flags are collected so callers can reject them with a usage
+//! message.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    /// `value_opts` lists the option names that consume a value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, value_opts: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&body) {
+                    let v = it.next().unwrap_or_default();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Flags that nobody consumed (for strict CLIs).
+    pub fn unknown_flags<'a>(&'a self, known: &[&str]) -> Vec<&'a str> {
+        self.flags
+            .iter()
+            .filter(|f| !known.contains(&f.as_str()))
+            .map(String::as_str)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            sv(&["run", "--steps", "100", "--fast", "--out=x.json", "extra"]),
+            &["steps"],
+        );
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(sv(&[]), &[]);
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = Args::parse(sv(&["--weird"]), &[]);
+        assert_eq!(a.unknown_flags(&["fast"]), vec!["weird"]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal leveled logger with wall-clock-relative timestamps.
+//!
+//! Level is controlled by `WSEL_LOG` (`error|warn|info|debug`, default
+//! `info`).  Output goes to stderr so report tables on stdout stay clean.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != u8::MAX {
+        return l;
+    }
+    let from_env = match std::env::var("WSEL_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+/// Override the level programmatically (tests, quiet benches).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+#[doc(hidden)]
+pub fn log(l: Level, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if (l as u8) > level() {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let secs = t0.elapsed().as_secs_f64();
+    eprintln!("[{secs:9.3}s {tag:5}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, "info", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, "warn", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, "debug", format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering_is_monotone() {
+        set_level(Level::Warn);
+        assert!((Level::Error as u8) <= (Level::Warn as u8));
+        assert!((Level::Debug as u8) > (Level::Warn as u8));
+        set_level(Level::Info);
+    }
+}

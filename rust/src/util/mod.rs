@@ -1,0 +1,10 @@
+//! Offline-substrate utilities: the crates this repo would normally pull
+//! from crates.io (rand, serde_json, clap, a thread pool, a logger) are
+//! unavailable in the offline build image, so minimal production-quality
+//! equivalents live here (see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,176 @@
+//! Deterministic PRNGs.
+//!
+//! [`SplitMix64`] is the cross-language workhorse: `python/compile/data.py`
+//! implements the identical step function, which is what lets the Rust and
+//! Python sides generate bit-identical synthetic datasets
+//! (`tests/integration_data.rs` pins a golden vector).
+//!
+//! [`Xoshiro256`] (xoshiro256**) is the general-purpose generator for
+//! sampling, trace synthesis and the property-test harness.
+
+/// SplitMix64 stepper — one `u64` out per step.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// One SplitMix64 step (must match `data.splitmix64` in Python).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Order-sensitive 2-word hash used for random-access sample addressing
+/// (must match `data.mix2` in Python).
+#[inline]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    let mut sm = SplitMix64::new(a ^ 0x6A09_E667_F3BC_C909);
+    sm.next_u64();
+    sm.state ^= b;
+    sm.next_u64()
+}
+
+/// xoshiro256** — fast, high-quality general-purpose PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        // Seed the state via SplitMix64 as recommended by the authors.
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift (unbiased enough
+    /// for simulation sampling; n is tiny relative to 2^64 here).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[lo, hi)`.
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f64() as f32
+    }
+
+    /// Random `i8` code in `[-127, 127]`.
+    #[inline]
+    pub fn code(&mut self) -> i32 {
+        self.below(255) as i32 - 127
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    /// Falls back to uniform if the total mass is zero.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.below(weights.len() as u64) as usize;
+        }
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_golden() {
+        // Golden values cross-checked against the Python reference
+        // implementation in python/compile/data.py.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_eq!(a, 0xE220_A839_7B1D_CDAF);
+        assert_eq!(b, 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn mix2_order_sensitive() {
+        assert_ne!(mix2(1, 2), mix2(2, 1));
+        assert_eq!(mix2(7, 9), mix2(7, 9));
+    }
+
+    #[test]
+    fn xoshiro_uniformish() {
+        let mut rng = Xoshiro256::new(42);
+        let mut counts = [0usize; 8];
+        for _ in 0..8000 {
+            counts[rng.below(8) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 800 && c < 1200, "bucket count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut rng = Xoshiro256::new(1);
+        let w = [0.0, 0.0, 10.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(rng.weighted(&w), 2);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256::new(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

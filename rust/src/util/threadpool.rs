@@ -1,0 +1,91 @@
+//! Scoped work-stealing-free thread pool for data-parallel simulation
+//! (per-layer characterization, per-tile power).  The offline image has no
+//! rayon/tokio; this covers the fork-join pattern those would provide.
+//!
+//! Work items are indices `0..n`; workers pull from a shared atomic
+//! counter, so load imbalance between items self-schedules.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads: `WSEL_THREADS` env override, else the
+/// available parallelism (the CI image exposes a single core — the pool
+/// degenerates to serial execution with no overhead beyond one atomic).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("WSEL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing across `threads`
+/// workers, and collect results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    if threads <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = Some(f(i));
+        }
+        return out.into_iter().map(Option::unwrap).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let out_ptr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index is claimed by exactly one worker via
+                // the atomic counter, so writes never alias.
+                unsafe { *out_ptr.0.add(i) = Some(v) };
+            });
+        }
+    });
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: raw pointer shared across scoped threads; disjoint writes only
+// (see parallel_map).
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn serial_path() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

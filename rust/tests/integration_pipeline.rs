@@ -1,0 +1,186 @@
+//! Integration: the full compression pipeline at smoke scale, plus
+//! cross-module property tests that need the real artifacts.
+
+use std::path::{Path, PathBuf};
+use wsel::coordinator::{Pipeline, PipelineParams};
+use wsel::schedule::ScheduleParams;
+use wsel::selection::CompressionState;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("lenet5/manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ not built");
+        None
+    }
+}
+
+fn quick_pipeline(dir: &Path) -> Pipeline {
+    let mut pp = PipelineParams::quick();
+    pp.float_steps = 60;
+    pp.qat_steps = 20;
+    Pipeline::new(dir, "lenet5", pp).expect("pipeline")
+}
+
+/// Train → profile → compress completes and produces a consistent
+/// result: restricted sets within size budget, saving in (0, 1),
+/// accuracy within the schedule's constraint of the measured acc0.
+#[test]
+fn pipeline_end_to_end_smoke() {
+    let Some(dir) = artifacts() else { return };
+    let mut p = quick_pipeline(&dir);
+    p.train_baseline().expect("train");
+    p.profile().expect("profile");
+    let base = p.base_energy.clone().unwrap();
+    assert!(base.total() > 0.0);
+    let sp = ScheduleParams {
+        prune_ratios: vec![0.5],
+        k_targets: vec![16],
+        fine_tune_steps: 5,
+        delta: 0.10,
+        ..Default::default()
+    };
+    let res = p.compress(sp).expect("compress");
+    for l in &res.state.layers {
+        if let Some(s) = &l.wset {
+            assert!(s.len() <= 16, "set size {}", s.len());
+            assert!(s.contains(0), "0 must stay (pruning anchor)");
+        }
+    }
+    let now = p.compute_network_energy(&res.state);
+    let saving = base.saving_vs(&now);
+    assert!(
+        (0.0..1.0).contains(&saving),
+        "saving out of range: {saving}"
+    );
+    // If any layer was accepted, energy must strictly drop.
+    if res.state.layers.iter().any(|l| l.wset.is_some()) {
+        assert!(saving > 0.0);
+    }
+}
+
+/// The energy model is deterministic given the seed: two pipelines over
+/// the same checkpoint produce identical layer energies.
+#[test]
+fn energy_model_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mk = || {
+        let mut p = quick_pipeline(&dir);
+        p.train_baseline().expect("train");
+        p.profile().expect("profile");
+        p.base_energy.clone().unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.layers.len(), b.layers.len());
+    for ((i1, e1), (i2, e2)) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(i1, i2);
+        assert!(
+            (e1 - e2).abs() < 1e-18 + 1e-9 * e1.abs(),
+            "layer {i1}: {e1} vs {e2}"
+        );
+    }
+}
+
+/// Compression monotonicity: more pruning can only reduce modeled energy.
+#[test]
+fn pruning_monotone_in_energy_model() {
+    let Some(dir) = artifacts() else { return };
+    let mut p = quick_pipeline(&dir);
+    p.train_baseline().expect("train");
+    p.profile().expect("profile");
+    let n = p.rt.spec.n_conv;
+    let mut prev = f64::MAX;
+    for ratio in [0.0, 0.3, 0.5, 0.7, 0.9] {
+        let state = CompressionState {
+            layers: (0..n)
+                .map(|_| wsel::selection::LayerConfig {
+                    prune_ratio: ratio,
+                    wset: None,
+                })
+                .collect(),
+        };
+        let e = p.compute_network_energy(&state).total();
+        assert!(
+            e <= prev * (1.0 + 1e-9),
+            "energy increased with pruning {ratio}: {e} > {prev}"
+        );
+        prev = e;
+    }
+}
+
+/// The statistical layer-energy model must track the exact gate-level
+/// tile simulation within a small constant factor (model validation,
+/// DESIGN.md §5).
+#[test]
+fn model_mode_tracks_exact_tile_power() {
+    let Some(dir) = artifacts() else { return };
+    let mut p = quick_pipeline(&dir);
+    p.train_baseline().expect("train");
+    p.profile().expect("profile");
+
+    let spec = p.rt.spec.clone();
+    let eng = wsel::model::Engine::new(&spec);
+    let qc = wsel::model::QuantConfig::quantized(&spec, p.rt.act_scales.clone());
+    let (xs, _) = wsel::data::batch(p.rt.data_seed, wsel::data::Split::Train, 0, 2, 10);
+    let fwd = eng.forward(&p.rt.params, &xs, 2, &qc, true);
+    let cap = fwd
+        .captures
+        .iter()
+        .find(|c| c.conv_idx == 1)
+        .expect("conv1");
+
+    let cm = p.cap_model;
+    let mut lib = wsel::systolic::MacLib::new();
+    let pass = wsel::systolic::passes_of(cap.m, cap.k, cap.n)[0];
+    let (e_exact, _steps) = wsel::systolic::tile_power_exact(
+        &cap.x_codes,
+        &cap.w_codes,
+        cap.k,
+        cap.n,
+        &pass,
+        &mut lib,
+        &cm,
+    );
+    // Model: same weight positions, per-cycle energies from the table.
+    let le = p.layer_energy_model(1);
+    let mut e_model = 0.0;
+    for r in 0..pass.kh {
+        for c in 0..pass.nw {
+            let w = cap.w_codes[(pass.k0 + r) * cap.n + (pass.n0 + c)];
+            e_model += le.table.energy(w) * pass.mh as f64;
+        }
+    }
+    let ratio = e_model / e_exact;
+    assert!(
+        (0.3..3.0).contains(&ratio),
+        "statistical model should track exact tile power: ratio {ratio:.3}"
+    );
+}
+
+/// Determinism of the whole compression decision: same seeds -> same
+/// accepted configs and identical final weight sets.
+#[test]
+fn compression_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let run = || {
+        let mut p = quick_pipeline(&dir);
+        p.train_baseline().expect("train");
+        p.profile().expect("profile");
+        let sp = ScheduleParams {
+            prune_ratios: vec![0.5],
+            k_targets: vec![16],
+            fine_tune_steps: 0,
+            delta: 0.5,
+            ..Default::default()
+        };
+        let res = p.compress(sp).expect("compress");
+        res.state
+            .layers
+            .iter()
+            .map(|l| l.wset.as_ref().map(|s| s.codes().to_vec()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}

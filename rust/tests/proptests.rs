@@ -1,0 +1,190 @@
+//! Cross-module property tests (testutil-based, no artifacts needed).
+
+use wsel::gates::{CapModel, TraceSim};
+use wsel::mac::unit::{decode_psum, mac_ref};
+use wsel::mac::{build_mac, specialize_mac};
+use wsel::quant::{magnitude_mask, quantize_restricted, WeightSet};
+use wsel::systolic::{matmul_tiled, passes_of, simulate_tile};
+use wsel::testutil::cases;
+use wsel::transitions::{group_of, N_GROUPS};
+
+/// Systolic tile schedule reproduces arbitrary-shape integer matmuls
+/// (when products fit the 22-bit column accumulators).
+#[test]
+fn prop_systolic_matmul_equals_reference() {
+    cases(25, 0xA11CE, |g| {
+        let m = g.usize_in(1, 90);
+        let k = g.usize_in(1, 90);
+        let n = g.usize_in(1, 40);
+        // Small codes: |acc| <= 90*8*8 << 2^21.
+        let x: Vec<i8> = (0..m * k).map(|_| (g.rng.below(17) as i8) - 8).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| (g.rng.below(17) as i8) - 8).collect();
+        let y = matmul_tiled(&x, &w, m, k, n);
+        let mi = g.usize_in(0, m - 1);
+        let ci = g.usize_in(0, n - 1);
+        let mut acc = 0i64;
+        for r in 0..k {
+            acc += x[mi * k + r] as i64 * w[r * n + ci] as i64;
+        }
+        assert_eq!(y[mi * n + ci] as i64, acc);
+    });
+}
+
+/// Tile passes partition the iteration space: accumulating per-pass
+/// partials equals the one-shot result.
+#[test]
+fn prop_pass_accumulation_associative() {
+    cases(10, 0xB0B, |g| {
+        let m = g.usize_in(1, 70);
+        let k = g.usize_in(65, 130); // force >= 2 k-tiles
+        let n = g.usize_in(1, 70);
+        let x: Vec<i8> = (0..m * k).map(|_| (g.rng.below(9) as i8) - 4).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| (g.rng.below(9) as i8) - 4).collect();
+        let full = matmul_tiled(&x, &w, m, k, n);
+        // Manual re-accumulation in a different pass order (m-major).
+        let mut y = vec![0i32; m * n];
+        let mut passes = passes_of(m, k, n);
+        passes.reverse();
+        let mut partial = vec![0i32; 64 * 64];
+        for pass in passes {
+            for mi in 0..pass.mh {
+                for c in 0..pass.nw {
+                    partial[mi * pass.nw + c] = y[(pass.m0 + mi) * n + (pass.n0 + c)];
+                }
+            }
+            simulate_tile(&x, &w, k, n, &pass, &mut partial[..pass.mh * pass.nw]);
+            for mi in 0..pass.mh {
+                for c in 0..pass.nw {
+                    y[(pass.m0 + mi) * n + (pass.n0 + c)] = partial[mi * pass.nw + c];
+                }
+            }
+        }
+        assert_eq!(y, full, "pass order must not change the result");
+    });
+}
+
+/// Specialized MAC == generic MAC == software reference, on random
+/// weights and streams.
+#[test]
+fn prop_mac_specialization_sound() {
+    let generic = build_mac();
+    cases(12, 0xC0DE, |g| {
+        let w = g.rng.code();
+        let spec = specialize_mac(&generic, w);
+        let mut sim = TraceSim::new(&spec.netlist);
+        for _ in 0..20 {
+            let a = g.rng.code();
+            let p = (g.rng.below(1 << 22) as i64 - (1 << 21)) as i32;
+            let out = sim.eval_single(&spec.netlist, &spec.pack_step(a, p));
+            assert_eq!(decode_psum(&out), mac_ref(a, w, p), "a={a} w={w} p={p}");
+        }
+    });
+}
+
+/// Gate-count of the specialized MAC is bounded by the generic MAC and
+/// monotone-ish in weight bit count (structural sanity of const-prop).
+#[test]
+fn prop_specialization_shrinks() {
+    let generic = build_mac();
+    let g_full = generic.netlist.gate_count();
+    cases(30, 0xDEAD, |g| {
+        let w = g.rng.code();
+        let spec = specialize_mac(&generic, w);
+        assert!(spec.netlist.gate_count() < g_full);
+        spec.netlist.validate().expect("valid");
+    });
+}
+
+/// Pruning + restricted quantization: pruned fraction exact, all codes
+/// in set, scale positive, projection idempotent under re-application.
+#[test]
+fn prop_quantize_restricted_invariants() {
+    cases(40, 0xFEED, |g| {
+        let n = g.usize_in(8, 600);
+        let w = g.vec_f32(n, -2.0, 2.0);
+        let ratio = g.usize_in(0, 9) as f64 / 10.0;
+        let mask = magnitude_mask(&w, ratio);
+        assert_eq!(
+            mask.iter().filter(|&&m| m == 0.0).count(),
+            (n as f64 * ratio).floor() as usize
+        );
+        let mut set = g.weight_set(24);
+        if !set.contains(0) {
+            let mut codes = set.codes().to_vec();
+            codes.push(0);
+            set = WeightSet::new(codes);
+        }
+        let (codes, s) = quantize_restricted(&w, Some(&mask), Some(&set));
+        assert!(s > 0.0);
+        for &c in &codes {
+            assert!(set.contains(c as i32));
+        }
+        // Idempotence: projecting already-projected codes is identity.
+        for &c in &codes {
+            assert_eq!(set.project(c as i32), c as i32);
+        }
+    });
+}
+
+/// Grouping is total, stable, and respects the MSB/HW construction on
+/// random patterns.
+#[test]
+fn prop_grouping_structure() {
+    cases(100, 0x9009, |g| {
+        let v = (g.rng.next_u64() & 0x3F_FFFF) as u32;
+        let grp = group_of(v);
+        assert!(grp < N_GROUPS);
+        assert_eq!(grp, group_of(v), "stable");
+        // Flipping a bit BELOW the msb never changes the MSB bin.
+        let msb = 32 - v.leading_zeros();
+        if msb > 1 {
+            let flip = 1u32 << g.usize_in(0, (msb - 2) as usize);
+            let grp2 = group_of(v | flip);
+            assert_eq!(grp / 5, grp2 / 5, "msb bin must be invariant");
+        }
+    });
+}
+
+/// The toggle model is additive: concatenating two traces yields the sum
+/// of their toggles plus the boundary transition.
+#[test]
+fn prop_toggle_additivity() {
+    let mac = build_mac();
+    cases(8, 0xADD, |g| {
+        let steps: Vec<Vec<bool>> = (0..100)
+            .map(|_| (0..mac.netlist.inputs.len()).map(|_| g.bool()).collect())
+            .collect();
+        let mut sim_whole = TraceSim::new(&mac.netlist);
+        sim_whole.run_trace(&mac.netlist, &steps);
+        let mut sim_parts = TraceSim::new(&mac.netlist);
+        let cut = g.usize_in(1, 99);
+        sim_parts.run_trace_continue(&mac.netlist, &steps[..cut]);
+        sim_parts.run_trace_continue(&mac.netlist, &steps[cut..]);
+        assert_eq!(sim_whole.toggles, sim_parts.toggles);
+        assert_eq!(sim_whole.steps, 100);
+    });
+}
+
+/// CapModel energy is monotone in toggles and zero-cycle traces report
+/// zero energy.
+#[test]
+fn prop_power_model_sane() {
+    let mac = build_mac();
+    let cap = CapModel::default();
+    let mut sim = TraceSim::new(&mac.netlist);
+    let rep0 = cap.report(&mac.netlist, &sim);
+    assert_eq!(rep0.cycles, 0);
+    assert_eq!(rep0.energy_j, 0.0);
+    cases(6, 0x50F7, |g| {
+        let steps: Vec<Vec<bool>> = (0..64)
+            .map(|_| (0..mac.netlist.inputs.len()).map(|_| g.bool()).collect())
+            .collect();
+        let mut s1 = TraceSim::new(&mac.netlist);
+        s1.run_trace(&mac.netlist, &steps[..32]);
+        let e1 = cap.report(&mac.netlist, &s1).energy_j;
+        let mut s2 = TraceSim::new(&mac.netlist);
+        s2.run_trace(&mac.netlist, &steps);
+        let e2 = cap.report(&mac.netlist, &s2).energy_j;
+        assert!(e2 >= e1, "longer trace cannot cost less: {e1} vs {e2}");
+    });
+}
