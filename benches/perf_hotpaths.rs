@@ -4,6 +4,12 @@
 //!   * weight-specialized MAC trace energy (the inner loop of E_ℓ(w)
 //!     characterization),
 //!   * exact tile power simulation,
+//!   * the memoized + parallel [`EnergyEvaluator`] vs the direct
+//!     sequential un-cached path (table1/table3-style workloads),
+//!   * the table3 layer-wise schedule evaluation, before/after the
+//!     evaluator refactor (asserts the ≥2× win at 4+ threads),
+//!   * the [`TransitionCostCache`] first-order table vs a full
+//!     re-characterization,
 //!   * int8 mirror-engine forward,
 //!   * selection loop (greedy elimination, proxy mode),
 //!   * PJRT eval-graph execution latency.
@@ -11,12 +17,118 @@
 //! Before/after numbers for the optimization pass are recorded in
 //! EXPERIMENTS.md §Perf.
 
+use std::sync::Arc;
 use wsel::bench::{bench, black_box, scenarios};
+use wsel::energy::cache::{EnergyEvaluator, EvalLayer, TransitionCostCache};
+use wsel::energy::{LayerEnergy, NetworkEnergy, WeightEnergyTable};
 use wsel::gates::{CapModel, TraceSim};
 use wsel::mac::build_mac;
-use wsel::selection::CompressionState;
+use wsel::quant::WeightSet;
+use wsel::schedule::{energy_prioritized, LayerModeler, ScheduleParams};
+use wsel::selection::{AccuracyOracle, CompressionState, LayerConfig};
 use wsel::systolic::{self, MacLib};
 use wsel::util::rng::Xoshiro256;
+use wsel::util::threadpool::default_threads;
+
+fn synth_table() -> WeightEnergyTable {
+    wsel::testutil::linear_energy_table(1e-15)
+}
+
+/// Synthetic conv layers with the given (M, K, N) im2col dims and
+/// random float weights — stand-ins for the table1/table3 workloads
+/// when no artifacts are built.
+fn synth_layers(dims: &[(usize, usize, usize)], seed: u64) -> Vec<EvalLayer> {
+    let mut rng = Xoshiro256::new(seed);
+    dims.iter()
+        .enumerate()
+        .map(|(ci, &(m, k, n))| EvalLayer {
+            le: LayerEnergy {
+                conv_idx: ci,
+                m,
+                k,
+                n,
+                table: synth_table(),
+            },
+            weights: (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+        })
+        .collect()
+}
+
+/// Candidate-state menu the schedule sweep touches: a few prune ratios
+/// crossed with a few restricted sets, cycled over `count` states.
+fn synth_states(n_conv: usize, count: usize) -> Vec<CompressionState> {
+    let sets = [
+        None,
+        Some(WeightSet::new(vec![
+            -127, -64, -32, -16, -8, 0, 8, 16, 32, 64, 127,
+        ])),
+        Some(WeightSet::new(vec![-81, -27, -9, -3, 0, 3, 9, 27, 81])),
+    ];
+    let ratios = [0.0, 0.5, 0.7];
+    (0..count)
+        .map(|i| CompressionState {
+            layers: (0..n_conv)
+                .map(|l| LayerConfig {
+                    prune_ratio: ratios[(i + l) % ratios.len()],
+                    wset: sets[(i / ratios.len() + l) % sets.len()].clone(),
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// Schedule host over a synthetic evaluator.  `cached = false` models
+/// the pre-refactor pipeline: every usage histogram recomputed inline,
+/// sequential network-energy walks, no evaluator for the schedule to
+/// fan out against.
+struct SynthHost {
+    ev: Arc<EnergyEvaluator>,
+    cached: bool,
+}
+
+impl LayerModeler for SynthHost {
+    fn layer_energy(&mut self, conv_idx: usize) -> LayerEnergy {
+        self.ev.layer_model(conv_idx).clone()
+    }
+    fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
+        let ratio = state.layers[conv_idx].prune_ratio;
+        if self.cached {
+            *self.ev.usage_for_conv(conv_idx, ratio)
+        } else {
+            EnergyEvaluator::compute_usage(&self.ev.layer_by_conv(conv_idx).weights, ratio)
+        }
+    }
+    fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy {
+        if self.cached {
+            self.ev.eval(state)
+        } else {
+            self.ev.eval_direct(state)
+        }
+    }
+    fn evaluator(&mut self) -> Option<Arc<EnergyEvaluator>> {
+        if self.cached {
+            Some(self.ev.clone())
+        } else {
+            None
+        }
+    }
+}
+
+impl AccuracyOracle for SynthHost {
+    fn accuracy(&mut self, state: &CompressionState) -> f64 {
+        // Deterministic response: mild penalty per compressed layer so
+        // the sweep exercises several candidates before accepting.
+        let mut acc = 0.99;
+        for l in &state.layers {
+            acc -= 0.004 * l.prune_ratio;
+            if let Some(s) = &l.wset {
+                acc -= 0.002 * (32.0 - s.len() as f64) / 16.0;
+            }
+        }
+        acc
+    }
+    fn fine_tune(&mut self, _: &CompressionState, _: usize) {}
+}
 
 fn main() {
     let cap = CapModel::default();
@@ -71,6 +183,158 @@ fn main() {
         ));
     });
     m.report_throughput((mm * kk * nn) as f64, "MAC-steps");
+
+    // ---- EnergyEvaluator: memoized+parallel vs direct ---------------------
+    // Table-1-style workload (resnet20-ish conv stack, no artifacts
+    // needed): many candidate states over the same frozen weights —
+    // exactly the shape of the schedule's inner loop.
+    let threads = default_threads();
+    let resnet_dims: Vec<(usize, usize, usize)> =
+        (0..6).map(|_| (256usize, 576usize, 32usize)).collect();
+    let ev_serial = EnergyEvaluator::new(synth_layers(&resnet_dims, 31), 1);
+    let ev_par = EnergyEvaluator::new(synth_layers(&resnet_dims, 31), threads);
+    let states = synth_states(resnet_dims.len(), 36);
+    let m_direct = bench("perf/evaluator_direct_uncached_36states", 1, 3, || {
+        for st in &states {
+            black_box(ev_serial.eval_direct(st));
+        }
+    });
+    m_direct.report_throughput(36.0, "state-evals");
+    let m_cached = bench("perf/evaluator_cached_serial_36states", 1, 3, || {
+        for st in &states {
+            black_box(ev_serial.eval(st));
+        }
+    });
+    m_cached.report_throughput(36.0, "state-evals");
+    let m_cached_par = bench(
+        &format!("perf/evaluator_cached_parallel_t{threads}_36states"),
+        1,
+        3,
+        || {
+            for st in &states {
+                black_box(ev_par.eval(st));
+            }
+        },
+    );
+    m_cached_par.report_throughput(36.0, "state-evals");
+    let speedup = m_direct.median_ns as f64 / m_cached_par.median_ns.max(1) as f64;
+    println!("      -> evaluator cached+parallel speedup vs direct: {speedup:.1}x");
+    assert!(
+        speedup >= 2.0,
+        "memoized evaluator must be >= 2x the direct path (got {speedup:.2}x)"
+    );
+
+    // ---- table3 layer-wise schedule evaluation: before/after --------------
+    // The §4.3 sweep at table3's (ratio, K) menu over the synthetic
+    // stack, fine-tune-free (the evaluation cost itself).  `before`
+    // models the pre-refactor pipeline (inline usage recompute, serial);
+    // `after` runs against the shared evaluator with parallel candidate
+    // precompute.
+    let n_conv = resnet_dims.len();
+    let sp = ScheduleParams {
+        prune_ratios: vec![0.7, 0.5, 0.3],
+        k_targets: vec![16, 24, 32],
+        fine_tune_steps: 0,
+        delta: 0.004,
+        acc0: 0.99,
+        ..Default::default()
+    };
+    let mut sp_par = sp.clone();
+    sp_par.greedy.threads = threads;
+    let ev_sched = Arc::new(EnergyEvaluator::new(synth_layers(&resnet_dims, 31), 1));
+    let ev_sched_par = Arc::new(EnergyEvaluator::new(synth_layers(&resnet_dims, 31), threads));
+    let m_before = bench("perf/table3_schedule_eval_before", 1, 3, || {
+        let mut host = SynthHost {
+            ev: ev_sched.clone(),
+            cached: false,
+        };
+        black_box(energy_prioritized(&mut host, n_conv, &sp));
+    });
+    m_before.report();
+    let m_after = bench(
+        &format!("perf/table3_schedule_eval_after_t{threads}"),
+        1,
+        3,
+        || {
+            ev_sched_par.clear_cache();
+            let mut host = SynthHost {
+                ev: ev_sched_par.clone(),
+                cached: true,
+            };
+            black_box(energy_prioritized(&mut host, n_conv, &sp_par));
+        },
+    );
+    m_after.report();
+    let sched_speedup = m_before.median_ns as f64 / m_after.median_ns.max(1) as f64;
+    println!("      -> table3 schedule evaluation speedup: {sched_speedup:.1}x");
+    // Acceptance gate: >= 2x at 4+ threads.  (Cold cache every
+    // iteration, so the win is structural, not warm-cache residue.)
+    if threads >= 4 {
+        assert!(
+            sched_speedup >= 2.0,
+            "schedule evaluation must be >= 2x at {threads} threads (got {sched_speedup:.2}x)"
+        );
+    } else {
+        println!("      (speedup assertion skipped: only {threads} thread(s) available)");
+    }
+    // Both hosts must agree on the chosen compression plan exactly.
+    {
+        let mut h_before = SynthHost {
+            ev: ev_sched.clone(),
+            cached: false,
+        };
+        let mut h_after = SynthHost {
+            ev: ev_sched_par.clone(),
+            cached: true,
+        };
+        let r_before = energy_prioritized(&mut h_before, n_conv, &sp);
+        let r_after = energy_prioritized(&mut h_after, n_conv, &sp_par);
+        assert_eq!(
+            format!("{}", r_before.to_json()),
+            format!("{}", r_after.to_json()),
+            "cached/parallel schedule must match the direct schedule exactly"
+        );
+    }
+
+    // ---- TransitionCostCache: first-order table vs re-characterization ----
+    {
+        let mut rng = Xoshiro256::new(5);
+        let (sm, sk, sn) = (96usize, 64usize, 4usize);
+        let capture = wsel::model::ConvCapture {
+            conv_idx: 0,
+            m: sm,
+            k: sk,
+            n: sn,
+            x_codes: (0..sm * sk)
+                .map(|_| if rng.below(2) == 0 { 0 } else { rng.code() as i8 })
+                .collect(),
+            w_codes: (0..sk * sn).map(|_| rng.code() as i8).collect(),
+            s_act: 0.01,
+            s_w: 0.01,
+        };
+        let st = wsel::stats::collect(&capture, &mut rng);
+        let mut lib3 = MacLib::new();
+        lib3.specialize_all(threads);
+        let m_char = bench("perf/characterize_layer_trace256", 1, 3, || {
+            black_box(wsel::energy::characterize_layer_shared(
+                &st, &lib3, &cap, 256, 7, threads,
+            ));
+        });
+        m_char.report();
+        let tc = TransitionCostCache::new(&st, 7);
+        let m_cold = bench("perf/transition_cache_table_cold", 0, 1, || {
+            black_box(tc.approx_table(&st, &lib3, &cap, threads));
+        });
+        m_cold.report();
+        let m_warm = bench("perf/transition_cache_table_warm", 1, 5, || {
+            black_box(tc.approx_table(&st, &lib3, &cap, threads));
+        });
+        m_warm.report();
+        println!(
+            "      -> warm first-order table vs full characterization: {:.1}x",
+            m_char.median_ns as f64 / m_warm.median_ns.max(1) as f64
+        );
+    }
 
     // ---- pipeline-dependent paths (need artifacts) ------------------------
     let Some(_) = scenarios::artifacts_dir() else {

@@ -8,7 +8,8 @@
 //! §4 algorithms run against the real system.
 
 use crate::data::Split;
-use crate::energy::{characterize_layer, LayerEnergy, NetworkEnergy, WeightEnergyTable};
+use crate::energy::cache::{EnergyEvaluator, EvalLayer};
+use crate::energy::{characterize_layer_shared, LayerEnergy, NetworkEnergy, WeightEnergyTable};
 use crate::gates::CapModel;
 use crate::model::Engine;
 use crate::quant;
@@ -18,7 +19,10 @@ use crate::selection::{AccuracyOracle, CompressionState};
 use crate::stats::{self, LayerStats};
 use crate::systolic::MacLib;
 use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::parallel_map;
 use anyhow::Result;
+use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Pipeline hyper-parameters (scaled presets below).
 #[derive(Clone, Debug)]
@@ -87,6 +91,11 @@ pub struct Pipeline {
     pub base_energy: Option<NetworkEnergy>,
     pub eval_count: usize,
     pub ft_steps_total: usize,
+    /// Bumped whenever `rt.params` or the energy tables change; tags the
+    /// memoized evaluator so stale snapshots are never served.
+    params_epoch: u64,
+    /// Lazily built [`EnergyEvaluator`] for the current epoch.
+    eval_cache: RefCell<Option<(u64, Arc<EnergyEvaluator>)>>,
 }
 
 impl Pipeline {
@@ -103,7 +112,16 @@ impl Pipeline {
             base_energy: None,
             eval_count: 0,
             ft_steps_total: 0,
+            params_epoch: 0,
+            eval_cache: RefCell::new(None),
         })
+    }
+
+    /// Invalidate the memoized energy evaluator.  Called internally
+    /// after every parameter/table mutation; call it yourself if you
+    /// mutate `rt.params` directly.
+    pub fn touch_params(&mut self) {
+        self.params_epoch += 1;
     }
 
     /// Phase 1+2: float pre-training, activation calibration, QAT.
@@ -135,6 +153,7 @@ impl Pipeline {
             crate::info!("qat loss {loss:.4}");
             self.rt.save_params(&tag)?;
         }
+        self.touch_params();
         self.acc0 = self
             .rt
             .evaluate(&dense, true, Split::Val, self.pp.val_batches)?;
@@ -168,24 +187,68 @@ impl Pipeline {
         self.stats.sort_by_key(|s| s.conv_idx);
 
         crate::info!("{}: characterizing E_l(w) for {} layers", spec.name, spec.n_conv);
-        self.tables = self
-            .stats
-            .iter()
-            .map(|st| {
-                characterize_layer(
-                    st,
-                    &mut self.maclib,
-                    &self.cap_model,
-                    self.pp.trace_len,
-                    self.pp.seed ^ st.conv_idx as u64,
-                    self.pp.threads,
-                )
-            })
-            .collect();
+        // Fan out across conv layers against one shared pre-specialized
+        // MacLib; the per-layer traces only depend on (stats, seed), so
+        // the tables are bit-identical to the sequential path.  Thread
+        // budget is split between the layer level and the per-code level
+        // inside each characterization.
+        self.maclib.specialize_all(self.pp.threads);
+        let n_layers = self.stats.len();
+        let outer = self.pp.threads.clamp(1, n_layers.max(1));
+        let inner = (self.pp.threads / outer).max(1);
+        let stats_ref = &self.stats;
+        let lib_ref = &self.maclib;
+        let cap_ref = &self.cap_model;
+        let (trace_len, seed) = (self.pp.trace_len, self.pp.seed);
+        self.tables = parallel_map(n_layers, outer, |i| {
+            let st = &stats_ref[i];
+            characterize_layer_shared(
+                st,
+                lib_ref,
+                cap_ref,
+                trace_len,
+                seed ^ st.conv_idx as u64,
+                inner,
+            )
+        });
+        // Tables changed: any memoized evaluator is stale.
+        self.touch_params();
         let dense = CompressionState::dense(spec.n_conv);
         let ne = self.compute_network_energy(&dense);
         self.base_energy = Some(ne);
         Ok(self.base_energy.as_ref().unwrap())
+    }
+
+    /// Build a fresh [`EnergyEvaluator`] snapshotting the current energy
+    /// tables and float weights.  Requires [`Self::profile`] to have run.
+    fn build_evaluator(&self) -> EnergyEvaluator {
+        assert!(!self.tables.is_empty(), "profile() before energy evaluation");
+        let convs = self.rt.spec.convs();
+        let layers = (0..self.rt.spec.n_conv)
+            .map(|ci| {
+                let c = convs.iter().find(|c| c.conv_idx == ci).expect("conv idx");
+                EvalLayer {
+                    le: self.layer_energy_model(ci),
+                    weights: self.rt.params[c.w].clone(),
+                }
+            })
+            .collect();
+        EnergyEvaluator::new(layers, self.pp.threads)
+    }
+
+    /// The memoized evaluator for the *current* parameters/tables.
+    /// Rebuilt automatically whenever the params epoch moves (training,
+    /// fine-tuning, restore, re-profile).
+    pub fn evaluator(&self) -> Arc<EnergyEvaluator> {
+        let mut slot = self.eval_cache.borrow_mut();
+        if let Some((epoch, ev)) = slot.as_ref() {
+            if *epoch == self.params_epoch {
+                return ev.clone();
+            }
+        }
+        let ev = Arc::new(self.build_evaluator());
+        *slot = Some((self.params_epoch, ev.clone()));
+        ev
     }
 
     /// Per-image canonical energy model for one conv layer.
@@ -206,7 +269,9 @@ impl Pipeline {
     }
 
     /// Weight-code usage of a layer under `state` (mask applied, no set
-    /// restriction — the schedule restricts separately).
+    /// restriction — the schedule restricts separately).  Direct
+    /// (uncached) computation from the live params; the hot paths go
+    /// through [`Self::evaluator`] instead.
     fn usage_of(&self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
         let convs = self.rt.spec.convs();
         let c = convs
@@ -228,8 +293,16 @@ impl Pipeline {
         usage
     }
 
-    /// Network energy under `state` (model mode).
+    /// Network energy under `state` (model mode): memoized + parallel
+    /// through the shared [`EnergyEvaluator`].
     pub fn compute_network_energy(&self, state: &CompressionState) -> NetworkEnergy {
+        self.evaluator().eval(state)
+    }
+
+    /// The historical sequential, uncached path (reference for property
+    /// tests and before/after benches; bit-identical to
+    /// [`Self::compute_network_energy`]).
+    pub fn compute_network_energy_direct(&self, state: &CompressionState) -> NetworkEnergy {
         let layers = (0..self.rt.spec.n_conv)
             .map(|ci| {
                 let le = self.layer_energy_model(ci);
@@ -248,6 +321,9 @@ impl Pipeline {
     pub fn compress(&mut self, mut sp: ScheduleParams) -> Result<ScheduleResult> {
         assert!(!self.tables.is_empty(), "profile() before compress()");
         sp.acc0 = self.acc0;
+        if sp.greedy.threads == 0 {
+            sp.greedy.threads = self.pp.threads;
+        }
         let n_conv = self.rt.spec.n_conv;
         Ok(energy_prioritized(self, n_conv, &sp))
     }
@@ -279,6 +355,7 @@ impl Pipeline {
 
     pub fn restore(&mut self, params: Vec<Vec<f32>>) {
         self.rt.params = params;
+        self.touch_params();
     }
 }
 
@@ -288,11 +365,17 @@ impl crate::schedule::LayerModeler for Pipeline {
     }
 
     fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
-        self.usage_of(conv_idx, state)
+        *self
+            .evaluator()
+            .usage_for_conv(conv_idx, state.layers[conv_idx].prune_ratio)
     }
 
     fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy {
         self.compute_network_energy(state)
+    }
+
+    fn evaluator(&mut self) -> Option<Arc<EnergyEvaluator>> {
+        Some(Pipeline::evaluator(self))
     }
 }
 
@@ -316,6 +399,7 @@ impl AccuracyOracle for Pipeline {
         self.rt
             .train_steps(state, true, lr, steps)
             .expect("fine-tune");
+        self.touch_params();
     }
 
     fn eval_count(&self) -> usize {

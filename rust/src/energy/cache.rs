@@ -1,0 +1,480 @@
+//! Memoized, parallel energy-evaluation engine (the enabling refactor
+//! for every schedule/selection hot loop).
+//!
+//! Two caches live here:
+//!
+//! * [`EnergyEvaluator`] — the model-mode network-energy engine.  Built
+//!   once from the per-layer energy tables + float weight tensors, it
+//!   memoizes the expensive per-(layer, prune-ratio) weight-code usage
+//!   histograms (each one costs a magnitude sort + full re-quantization
+//!   of the layer tensor) and evaluates all conv layers through
+//!   [`parallel_map`].  `eval(state)` is **bit-identical** to the
+//!   direct sequential path ([`EnergyEvaluator::eval_direct`], asserted
+//!   by property tests): per-layer energies are computed by exactly the
+//!   same f64 expression on exactly the same inputs and assembled in
+//!   layer order, so neither memoization nor thread count can change a
+//!   single bit of the result.
+//!
+//! * [`TransitionCostCache`] — a first-order (FODLAM-style) memo of
+//!   gate-level MAC energies keyed by (weight code, MSB×Hamming
+//!   partial-sum group pair), with group representatives drawn
+//!   deterministically from the layer's empirical reservoirs (paper
+//!   §3.1).  [`TransitionCostCache::approx_table`] composes the memo
+//!   with the layer's group-pair transition distribution into a fast
+//!   approximate `E_ℓ(w)` table — the cheap surrogate for
+//!   [`characterize_layer`](crate::energy::characterize_layer) when a
+//!   candidate sweep needs many re-characterizations.
+//!
+//! Cache keying: usage histograms key on `(conv_idx,
+//! prune_ratio.to_bits())`; transition costs key on `(weight_code,
+//! group_from * N_GROUPS + group_to)`.  Both caches are internally
+//! locked so `parallel_map` workers share them safely; values are
+//! deterministic, so a racing duplicate computation is harmless (first
+//! insert wins, all candidates are equal).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::energy::layer::{LayerEnergy, NetworkEnergy};
+use crate::energy::macmodel::{trace_energy, WeightEnergyTable};
+use crate::gates::CapModel;
+use crate::quant::{magnitude_mask, quantize_restricted};
+use crate::selection::CompressionState;
+use crate::stats::LayerStats;
+use crate::systolic::MacLib;
+use crate::transitions::group::N_GROUPS;
+use crate::transitions::histogram::from_bits;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::parallel_map;
+
+/// One conv layer as the evaluator sees it: the energy model plus the
+/// float weight tensor the usage histograms derive from.
+#[derive(Clone)]
+pub struct EvalLayer {
+    pub le: LayerEnergy,
+    /// Float weight tensor (pre-mask, pre-quantization).
+    pub weights: Vec<f32>,
+}
+
+/// Memoized network-energy evaluator.  Build once (snapshot of tables +
+/// weights), then `eval(state)` is cheap: usage histograms are computed
+/// at most once per (layer, prune-ratio) and layers fan out across the
+/// thread pool.
+///
+/// The snapshot semantics matter: if the underlying weights change
+/// (fine-tuning, restore), build a fresh evaluator — the coordinator
+/// does this automatically via its params epoch.
+pub struct EnergyEvaluator {
+    layers: Vec<EvalLayer>,
+    threads: usize,
+    usage_cache: Mutex<HashMap<(usize, u64), Arc<[u64; 256]>>>,
+}
+
+impl EnergyEvaluator {
+    /// `layers` must be sorted by `conv_idx` (one entry per conv layer);
+    /// `threads` is the fan-out width for [`eval`](Self::eval).
+    pub fn new(layers: Vec<EvalLayer>, threads: usize) -> Self {
+        debug_assert!(layers.windows(2).all(|w| w[0].le.conv_idx < w[1].le.conv_idx));
+        Self {
+            layers,
+            threads: threads.max(1),
+            usage_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, slot: usize) -> &EvalLayer {
+        &self.layers[slot]
+    }
+
+    /// Change the fan-out width (cache is kept).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Number of memoized usage histograms (observability / tests).
+    pub fn cached_usages(&self) -> usize {
+        self.usage_cache.lock().unwrap().len()
+    }
+
+    /// Drop all memoized usage histograms (benchmark cold paths).
+    pub fn clear_cache(&self) {
+        self.usage_cache.lock().unwrap().clear();
+    }
+
+    /// The direct (uncached) usage computation — the exact mirror of the
+    /// coordinator's historical inline path: magnitude-mask at `ratio`,
+    /// re-quantize, histogram.
+    pub fn compute_usage(weights: &[f32], ratio: f64) -> [u64; 256] {
+        let mask = if ratio > 0.0 {
+            Some(magnitude_mask(weights, ratio))
+        } else {
+            None
+        };
+        let (codes, _s) = quantize_restricted(weights, mask.as_deref(), None);
+        let mut usage = [0u64; 256];
+        for &c in &codes {
+            usage[(c as i32 + 128) as usize] += 1;
+        }
+        usage
+    }
+
+    /// Memoized usage histogram of layer slot `slot` at `prune_ratio`.
+    pub fn usage(&self, slot: usize, prune_ratio: f64) -> Arc<[u64; 256]> {
+        let key = (self.layers[slot].le.conv_idx, prune_ratio.to_bits());
+        if let Some(u) = self.usage_cache.lock().unwrap().get(&key) {
+            return u.clone();
+        }
+        // Computed outside the lock: duplicates are deterministic and
+        // the first insert wins.
+        let u = Arc::new(Self::compute_usage(&self.layers[slot].weights, prune_ratio));
+        self.usage_cache
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(u)
+            .clone()
+    }
+
+    /// Memoized usage histogram addressed by `conv_idx`.
+    pub fn usage_for_conv(&self, conv_idx: usize, prune_ratio: f64) -> Arc<[u64; 256]> {
+        let slot = self
+            .layers
+            .iter()
+            .position(|l| l.le.conv_idx == conv_idx)
+            .expect("conv idx");
+        self.usage(slot, prune_ratio)
+    }
+
+    /// Energy model of a layer (addressed by `conv_idx`).
+    pub fn layer_model(&self, conv_idx: usize) -> &LayerEnergy {
+        &self.layer_by_conv(conv_idx).le
+    }
+
+    /// Full layer entry (addressed by `conv_idx`).
+    pub fn layer_by_conv(&self, conv_idx: usize) -> &EvalLayer {
+        let slot = self
+            .layers
+            .iter()
+            .position(|l| l.le.conv_idx == conv_idx)
+            .expect("conv idx");
+        &self.layers[slot]
+    }
+
+    /// Model-mode energy of layer slot `slot` under `state` (cached
+    /// usage; identical math to the direct path).
+    fn layer_energy(&self, slot: usize, state: &CompressionState) -> f64 {
+        let l = &self.layers[slot];
+        let lc = &state.layers[l.le.conv_idx];
+        let usage = self.usage(slot, lc.prune_ratio);
+        match &lc.wset {
+            Some(s) => crate::selection::set_energy(&l.le, &usage, s),
+            None => l.le.energy_of_usage(&usage),
+        }
+    }
+
+    /// Network energy under `state`: layers fan out over the thread
+    /// pool against the shared usage cache.  Bit-identical to
+    /// [`eval_direct`](Self::eval_direct) for any thread count.
+    pub fn eval(&self, state: &CompressionState) -> NetworkEnergy {
+        let layers = parallel_map(self.layers.len(), self.threads, |i| {
+            (self.layers[i].le.conv_idx, self.layer_energy(i, state))
+        });
+        NetworkEnergy { layers }
+    }
+
+    /// Reference path: sequential, no memoization — every usage
+    /// histogram recomputed from the weight tensors.  This is what the
+    /// coordinator did inline before the evaluator existed; property
+    /// tests assert `eval == eval_direct` bit-for-bit.
+    pub fn eval_direct(&self, state: &CompressionState) -> NetworkEnergy {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let lc = &state.layers[l.le.conv_idx];
+                let usage = Self::compute_usage(&l.weights, lc.prune_ratio);
+                let e = match &lc.wset {
+                    Some(s) => crate::selection::set_energy(&l.le, &usage, s),
+                    None => l.le.energy_of_usage(&usage),
+                };
+                (l.le.conv_idx, e)
+            })
+            .collect();
+        NetworkEnergy { layers }
+    }
+}
+
+/// Memo of gate-level MAC probe energies per (weight code, partial-sum
+/// group pair), with representatives fixed per layer statistics.
+///
+/// A probe drives the weight-specialized MAC with a constant activation
+/// (the mode of the layer's activation marginal) and an alternating
+/// `rep[g_from] ⇄ rep[g_to]` partial-sum stream for
+/// [`PROBE_STEPS`](Self::PROBE_STEPS) cycles — the Fig. 2 measurement,
+/// memoized.  All draws are deterministic in the seed, so the cache is
+/// reproducible.
+pub struct TransitionCostCache {
+    /// Representative 22-bit pattern per group (from the layer's
+    /// reservoirs, synthetic members for unseen groups).
+    reps: Vec<u32>,
+    /// Constant activation code used by probes.
+    act: i32,
+    memo: Mutex<HashMap<(i8, u16), f64>>,
+}
+
+impl TransitionCostCache {
+    /// Probe trace length per (code, group-pair) measurement.
+    pub const PROBE_STEPS: usize = 64;
+
+    /// Build the per-layer cache: pick one representative pattern per
+    /// group and the modal activation, both deterministic in `seed`.
+    pub fn new(stats: &LayerStats, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let reps: Vec<u32> = (0..N_GROUPS)
+            .map(|g| stats.psum.representative(g, &mut rng))
+            .collect();
+        let marg = stats.act.from_marginal();
+        let mut act = 0i32;
+        let mut best = -1.0f64;
+        for (i, &p) in marg.iter().enumerate() {
+            if p > best {
+                best = p;
+                act = i as i32 - 128;
+            }
+        }
+        Self {
+            reps,
+            act,
+            memo: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Number of memoized (code, group-pair) probes.
+    pub fn len(&self) -> usize {
+        self.memo.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The gate-level probe itself (no memo access): alternate
+    /// `rep[g_from] ⇄ rep[g_to]` under the modal activation.
+    fn probe(&self, lib: &MacLib, cap: &CapModel, w: i8, g_from: usize, g_to: usize) -> f64 {
+        let mac = lib.get_cached(w).expect("MacLib must be pre-specialized");
+        let p1 = from_bits(self.reps[g_from]);
+        let p2 = from_bits(self.reps[g_to]);
+        let acts = vec![self.act; Self::PROBE_STEPS];
+        let psums: Vec<i32> = (0..Self::PROBE_STEPS)
+            .map(|i| if i % 2 == 0 { p1 } else { p2 })
+            .collect();
+        trace_energy(mac, &acts, &psums, cap)
+    }
+
+    /// Memoized per-cycle energy (J) of weight `w` under the
+    /// `g_from → g_to` transition.  `lib` must be pre-specialized (see
+    /// [`MacLib::specialize_all`]).
+    pub fn cost(&self, lib: &MacLib, cap: &CapModel, w: i8, g_from: usize, g_to: usize) -> f64 {
+        let key = (w, (g_from * N_GROUPS + g_to) as u16);
+        if let Some(&e) = self.memo.lock().unwrap().get(&key) {
+            return e;
+        }
+        let e = self.probe(lib, cap, w, g_from, g_to);
+        *self.memo.lock().unwrap().entry(key).or_insert(e)
+    }
+
+    /// First-order approximate `E_ℓ(w)` table: the expectation of the
+    /// memoized probe costs under the layer's empirical group-pair
+    /// transition distribution.  Orders of magnitude cheaper than a full
+    /// re-characterization once the memo is warm, and deterministic.
+    pub fn approx_table(
+        &self,
+        stats: &LayerStats,
+        lib: &MacLib,
+        cap: &CapModel,
+        threads: usize,
+    ) -> WeightEnergyTable {
+        // Non-zero group-pair probabilities in fixed (g_from, g_to) order.
+        let total = stats.psum.total.max(1) as f64;
+        let mut pairs: Vec<(usize, usize, f64)> = Vec::new();
+        for gf in 0..N_GROUPS {
+            for gt in 0..N_GROUPS {
+                let c = stats.psum.counts[gf * N_GROUPS + gt];
+                if c > 0 {
+                    pairs.push((gf, gt, c as f64 / total));
+                }
+            }
+        }
+        // Fill the memo for every missing (code, pair) in one parallel
+        // batch (the expensive gate-level probes), then do the weighted
+        // sums against a single snapshot — one lock total on the warm
+        // path instead of one per lookup.
+        let missing: Vec<(i8, usize, usize)> = {
+            let memo = self.memo.lock().unwrap();
+            let mut v = Vec::new();
+            for i in 0..255 {
+                let code = (i as i32 - 127) as i8;
+                for &(gf, gt, _) in &pairs {
+                    if !memo.contains_key(&(code, (gf * N_GROUPS + gt) as u16)) {
+                        v.push((code, gf, gt));
+                    }
+                }
+            }
+            v
+        };
+        if !missing.is_empty() {
+            let missing_ref = &missing;
+            let probed = parallel_map(missing.len(), threads, |i| {
+                let (w, gf, gt) = missing_ref[i];
+                self.probe(lib, cap, w, gf, gt)
+            });
+            let mut memo = self.memo.lock().unwrap();
+            for (&(w, gf, gt), e) in missing.iter().zip(probed) {
+                memo.entry((w, (gf * N_GROUPS + gt) as u16)).or_insert(e);
+            }
+        }
+        let memo = self.memo.lock().unwrap();
+        let energies: Vec<f64> = (0..255)
+            .map(|i| {
+                let code = (i as i32 - 127) as i8;
+                let mut e = 0.0f64;
+                for &(gf, gt, p) in &pairs {
+                    e += p * memo[&(code, (gf * N_GROUPS + gt) as u16)];
+                }
+                e
+            })
+            .collect();
+        drop(memo);
+        let mut e_per_cycle = [0.0f64; 256];
+        for (i, &e) in energies.iter().enumerate() {
+            e_per_cycle[i + 1] = e; // code -127 at index 1
+        }
+        e_per_cycle[0] = e_per_cycle[1]; // -128 alias (never produced)
+
+        // Idle matches characterize_layer's definition: w = 0 driven by
+        // an all-zero stream.
+        let zeros = vec![0i32; Self::PROBE_STEPS];
+        let e_idle = trace_energy(
+            lib.get_cached(0).expect("MacLib must be pre-specialized"),
+            &zeros,
+            &zeros,
+            cap,
+        );
+        WeightEnergyTable { e_per_cycle, e_idle }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ConvCapture;
+    use crate::quant::WeightSet;
+    use crate::selection::LayerConfig;
+    use crate::stats::collect;
+
+    fn synth_table() -> WeightEnergyTable {
+        crate::testutil::linear_energy_table(1e-15)
+    }
+
+    fn synth_evaluator(threads: usize) -> EnergyEvaluator {
+        let mut rng = Xoshiro256::new(9);
+        let layers = (0..3)
+            .map(|ci| EvalLayer {
+                le: LayerEnergy {
+                    conv_idx: ci,
+                    m: 64 * (ci + 1),
+                    k: 75 + 25 * ci,
+                    n: 8 << ci,
+                    table: synth_table(),
+                },
+                weights: (0..(75 + 25 * ci) * (8 << ci))
+                    .map(|_| rng.range_f32(-1.0, 1.0))
+                    .collect(),
+            })
+            .collect();
+        EnergyEvaluator::new(layers, threads)
+    }
+
+    fn states() -> Vec<CompressionState> {
+        let set = WeightSet::new(vec![-127, -64, -16, -4, 0, 4, 16, 64, 127]);
+        let dense = CompressionState::dense(3);
+        let mut pruned = CompressionState::dense(3);
+        for l in &mut pruned.layers {
+            l.prune_ratio = 0.5;
+        }
+        let mut restricted = CompressionState::dense(3);
+        restricted.layers[1] = LayerConfig {
+            prune_ratio: 0.7,
+            wset: Some(set),
+        };
+        vec![dense, pruned, restricted]
+    }
+
+    #[test]
+    fn cached_parallel_matches_direct_bitwise() {
+        let ev = synth_evaluator(4);
+        for st in states() {
+            let a = ev.eval(&st);
+            let b = ev.eval_direct(&st);
+            assert_eq!(a.layers.len(), b.layers.len());
+            for ((i1, e1), (i2, e2)) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(i1, i2);
+                assert_eq!(e1.to_bits(), e2.to_bits(), "layer {i1}: {e1} vs {e2}");
+            }
+        }
+    }
+
+    #[test]
+    fn usage_is_memoized_per_layer_and_ratio() {
+        let ev = synth_evaluator(2);
+        assert_eq!(ev.cached_usages(), 0);
+        let st = states().remove(1); // all layers at ratio 0.5
+        ev.eval(&st);
+        assert_eq!(ev.cached_usages(), 3);
+        ev.eval(&st); // second eval hits the cache
+        assert_eq!(ev.cached_usages(), 3);
+        ev.clear_cache();
+        assert_eq!(ev.cached_usages(), 0);
+    }
+
+    #[test]
+    fn transition_cache_memoizes_and_orders_costs() {
+        let mut rng = Xoshiro256::new(4);
+        let (m, k, n) = (96, 64, 4);
+        let cap = ConvCapture {
+            conv_idx: 0,
+            m,
+            k,
+            n,
+            x_codes: (0..m * k)
+                .map(|_| if rng.below(2) == 0 { 0 } else { rng.code() as i8 })
+                .collect(),
+            w_codes: (0..k * n).map(|_| rng.code() as i8).collect(),
+            s_act: 0.01,
+            s_w: 0.01,
+        };
+        let st = collect(&cap, &mut rng);
+        let mut lib = MacLib::new();
+        lib.specialize_all(1);
+        let cm = CapModel::default();
+        let tc = TransitionCostCache::new(&st, 11);
+        let c1 = tc.cost(&lib, &cm, 17, 3, 7);
+        let n1 = tc.len();
+        let c2 = tc.cost(&lib, &cm, 17, 3, 7);
+        assert_eq!(c1.to_bits(), c2.to_bits(), "memo must be stable");
+        assert_eq!(tc.len(), n1, "second lookup must not grow the memo");
+
+        let t = tc.approx_table(&st, &lib, &cm, 2);
+        assert!(t.e_per_cycle[1..].iter().all(|&e| e > 0.0));
+        // Fig. 1 shape: w = 0 is much cheaper than the heaviest code.
+        assert!(t.energy(0) < t.energy(-127) * 0.9);
+        // Deterministic across a rebuild with the same seed.
+        let tc2 = TransitionCostCache::new(&st, 11);
+        let t2 = tc2.approx_table(&st, &lib, &cm, 1);
+        assert_eq!(t.e_per_cycle.to_vec(), t2.e_per_cycle.to_vec());
+    }
+}

@@ -126,6 +126,22 @@ impl NetworkEnergy {
         }
         1.0 - compressed.total() / base
     }
+
+    /// Machine-readable form for reports and the golden-file regression
+    /// harness (see `testutil::golden`): per-layer `[conv_idx, joules]`
+    /// pairs plus the total.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "layers",
+                Json::arr(self.layers.iter().map(|&(i, e)| {
+                    Json::arr([Json::num(i as f64), Json::num(e)])
+                })),
+            ),
+            ("total", Json::num(self.total())),
+        ])
+    }
 }
 
 #[cfg(test)]

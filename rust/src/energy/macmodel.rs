@@ -31,8 +31,9 @@ impl WeightEnergyTable {
 }
 
 /// Drive one specialized MAC with an (activation, psum) step trace and
-/// return energy per cycle (J).
-fn trace_energy(
+/// return energy per cycle (J).  Shared with [`crate::energy::cache`]'s
+/// memoized transition probes.
+pub(crate) fn trace_energy(
     mac: &MacNetlist,
     acts: &[i32],
     psums: &[i32],
@@ -79,6 +80,24 @@ pub fn characterize_layer(
     seed: u64,
     threads: usize,
 ) -> WeightEnergyTable {
+    // Ensure all specializations exist before the parallel section.
+    lib.specialize_all(threads);
+    characterize_layer_shared(stats, lib, cap, trace_len, seed, threads)
+}
+
+/// [`characterize_layer`] against a pre-specialized, shared `MacLib` —
+/// the form the coordinator fans out across conv layers (see
+/// [`MacLib::specialize_all`]).  Bit-identical to the `&mut` variant:
+/// the trace sampling and per-code measurements only depend on `stats`,
+/// `seed` and `trace_len`.
+pub fn characterize_layer_shared(
+    stats: &LayerStats,
+    lib: &MacLib,
+    cap: &CapModel,
+    trace_len: usize,
+    seed: u64,
+    threads: usize,
+) -> WeightEnergyTable {
     // Pre-sample shared traces: the *same* activation/psum streams are
     // applied to every weight so the table isolates the weight effect
     // (matching the paper's fixed-trace per-weight measurements).
@@ -86,14 +105,9 @@ pub fn characterize_layer(
     let acts = stats.act.sample_chain(trace_len, &mut rng);
     let psums = stats.psum.sample_chain(trace_len, &mut rng);
 
-    // Ensure all specializations exist before the parallel section.
-    for code in -127i32..=127 {
-        lib.get(code as i8);
-    }
-    let lib_ref: &MacLib = lib;
     let energies = parallel_map(255, threads, |i| {
         let code = i as i32 - 127;
-        let mac = lib_ref.get_cached(code as i8).expect("pre-specialized");
+        let mac = lib.get_cached(code as i8).expect("pre-specialized");
         trace_energy(mac, &acts, &psums, cap)
     });
 
@@ -128,9 +142,7 @@ pub fn uniform_weight_energy(
     let psums: Vec<i32> = (0..trace_len)
         .map(|_| (rng.below(1 << ACC_BITS) as i64 - (1 << (ACC_BITS - 1)) as i64) as i32)
         .collect();
-    for code in -127i32..=127 {
-        lib.get(code as i8);
-    }
+    lib.specialize_all(threads);
     let lib_ref: &MacLib = lib;
     let energies = parallel_map(255, threads, |i| {
         let code = i as i32 - 127;

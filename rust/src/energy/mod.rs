@@ -1,10 +1,15 @@
 //! Energy models (paper §3): per-weight MAC energy under layer-specific
-//! transition statistics, and the tile-level convolution-layer energy.
+//! transition statistics, the tile-level convolution-layer energy, and
+//! the memoized parallel evaluation engine ([`cache`]) the compression
+//! hot loops run against.
 
+pub mod cache;
 pub mod layer;
 pub mod macmodel;
 
+pub use cache::{EnergyEvaluator, EvalLayer, TransitionCostCache};
 pub use layer::{LayerEnergy, NetworkEnergy};
 pub use macmodel::{
-    characterize_layer, transition_energy, uniform_weight_energy, WeightEnergyTable,
+    characterize_layer, characterize_layer_shared, transition_energy, uniform_weight_energy,
+    WeightEnergyTable,
 };

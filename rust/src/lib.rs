@@ -6,7 +6,14 @@
 //!   ([`gates`], [`mac`]), the MSB × Hamming-weight partial-sum grouping
 //!   ([`transitions`]), per-layer statistics ([`stats`]), a cycle-level
 //!   64×64 weight-stationary systolic array ([`systolic`]) and the
-//!   im2col/tile layer-energy model ([`energy`]).
+//!   im2col/tile layer-energy model ([`energy`]).  The hot evaluation
+//!   path is [`energy::cache::EnergyEvaluator`] — a memoized, parallel
+//!   engine (built once per parameter snapshot, bit-identical to the
+//!   direct path).  Its companion [`energy::cache::TransitionCostCache`]
+//!   memoizes gate-level MAC probe energies per (weight code,
+//!   MSB×Hamming group pair) and derives fast first-order `E_ℓ(w)`
+//!   tables for candidate sweeps (benched in `perf_hotpaths`; not yet
+//!   on the default pipeline path).
 //! * **Compression (§4)** — int8 QAT utilities ([`quant`]), the
 //!   energy–accuracy co-optimized weight selection ([`selection`]) and the
 //!   energy-prioritized layer-wise schedule ([`schedule`]).
@@ -19,7 +26,11 @@
 //!
 //! The offline toolchain ships no tokio/clap/serde/criterion/proptest, so
 //! [`util`], [`testutil`] and [`bench`] provide the needed substrates
-//! in-repo (thread pool, CLI, JSON, PRNG, property tests, micro-benches).
+//! in-repo (thread pool, CLI, JSON, PRNG, property tests, golden-file
+//! regression harness, micro-benches); `vendor/` carries minimal shims
+//! for `anyhow` and the `xla` PJRT bindings.  See `rust/README.md` for
+//! the evaluator architecture, cache keying and how to bless golden
+//! snapshots.
 
 pub mod bench;
 pub mod coordinator;

@@ -7,11 +7,15 @@
 //! baseline (Table 3): the same configuration applied to every layer at
 //! once, layer-agnostically.
 
+use crate::energy::cache::EnergyEvaluator;
 use crate::energy::{LayerEnergy, NetworkEnergy};
+use crate::quant::WeightSet;
 use crate::selection::{
     greedy_backward_eliminate, safe_initial_set, AccuracyOracle, CompressionState, GreedyParams,
     LayerConfig,
 };
+use crate::util::threadpool::parallel_map;
+use std::sync::Arc;
 
 /// A candidate per-layer configuration of the §4.3 sweep.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -76,6 +80,53 @@ pub struct ScheduleResult {
     pub final_accuracy: f64,
 }
 
+impl ScheduleResult {
+    /// Machine-readable form for the golden-file regression harness
+    /// (see `testutil::golden`): the accepted per-layer configuration,
+    /// every outcome row, and the final accuracy.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let state = Json::arr(self.state.layers.iter().map(|l| {
+            Json::obj(vec![
+                ("prune_ratio", Json::num(l.prune_ratio)),
+                (
+                    "wset",
+                    match &l.wset {
+                        Some(s) => Json::arr(
+                            s.codes().iter().map(|&c| Json::num(c as f64)),
+                        ),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        }));
+        let outcomes = Json::arr(self.outcomes.iter().map(|oc| {
+            Json::obj(vec![
+                ("conv_idx", Json::num(oc.conv_idx as f64)),
+                ("share", Json::num(oc.share)),
+                (
+                    "accepted",
+                    match oc.accepted {
+                        Some(c) => Json::obj(vec![
+                            ("prune_ratio", Json::num(c.prune_ratio)),
+                            ("k_target", Json::num(c.k_target as f64)),
+                        ]),
+                        None => Json::Null,
+                    },
+                ),
+                ("energy_before", Json::num(oc.energy_before)),
+                ("energy_after", Json::num(oc.energy_after)),
+                ("accuracy_after", Json::num(oc.accuracy_after)),
+            ])
+        }));
+        Json::obj(vec![
+            ("state", state),
+            ("outcomes", outcomes),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+        ])
+    }
+}
+
 /// Callback bundle the schedule needs from the coordinator: per-layer
 /// energy models and usage histograms that *reflect the current state*
 /// (pruning changes usage), recomputed on demand.
@@ -87,6 +138,57 @@ pub trait LayerModeler {
     fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256];
     /// Current per-layer energies under `state` (for ρ_ℓ and reporting).
     fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy;
+    /// Shared memoized evaluator, when the host provides one — lets the
+    /// schedule precompute a layer's candidate weight sets in parallel
+    /// (only used when the search is oracle-free, i.e. no fine-tuning
+    /// between candidates and no per-removal accuracy checks).
+    fn evaluator(&mut self) -> Option<Arc<EnergyEvaluator>> {
+        None
+    }
+}
+
+/// Oracle stand-in for oracle-free candidate precomputation (the greedy
+/// elimination never consults it when `check_every_removal` is off).
+struct NeverConsulted;
+
+impl AccuracyOracle for NeverConsulted {
+    fn accuracy(&mut self, _: &CompressionState) -> f64 {
+        unreachable!("oracle-free candidate precompute must not evaluate accuracy")
+    }
+    fn fine_tune(&mut self, _: &CompressionState, _: usize) {}
+}
+
+/// Build the restricted set for one `(prune_ratio, k_target)` candidate
+/// of `conv_idx` from a usage histogram (the §4.2 procedure, proxy
+/// mode).  Pure given its inputs, which is what makes the parallel
+/// precompute below bit-identical to the sequential sweep.
+fn candidate_set(
+    usage: &[u64; 256],
+    le: &LayerEnergy,
+    n_conv: usize,
+    conv_idx: usize,
+    cfg: Config,
+    sp: &ScheduleParams,
+) -> WeightSet {
+    let set0 = safe_initial_set(usage, le, sp.greedy.k_init);
+    let gp = GreedyParams {
+        k_target: cfg.k_target,
+        acc0: sp.acc0,
+        delta: sp.delta,
+        threads: 1, // already inside a layer-level fan-out
+        ..sp.greedy.clone()
+    };
+    let mut tmp = CompressionState::dense(n_conv);
+    let (set, _trace) = greedy_backward_eliminate(
+        set0,
+        usage,
+        le,
+        &mut NeverConsulted,
+        &mut tmp,
+        conv_idx,
+        &gp,
+    );
+    set
 }
 
 /// §4.3 — energy-prioritized layer-wise compression.
@@ -120,44 +222,99 @@ pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
         let mut accepted: Option<Config> = None;
         let mut acc_after = 0.0;
         // Candidate configs, most aggressive first.
-        'configs: for &ratio in &sp.prune_ratios {
-            for &k in &sp.k_targets {
-                let mut trial = state.clone();
-                trial.layers[conv_idx] = LayerConfig {
-                    prune_ratio: ratio,
-                    wset: None,
-                };
-                // Build the restricted set for this (ratio, K).
-                let usage = host.usage(conv_idx, &trial);
-                let set0 = safe_initial_set(&usage, &le, sp.greedy.k_init);
-                let gp = GreedyParams {
-                    k_target: k,
-                    acc0: sp.acc0,
-                    delta: sp.delta,
-                    ..sp.greedy.clone()
-                };
-                let (set, _trace) = greedy_backward_eliminate(
-                    set0,
-                    &usage,
-                    &le,
-                    host,
-                    &mut trial,
-                    conv_idx,
-                    &gp,
-                );
-                trial.layers[conv_idx].wset = Some(set);
-                // Short fine-tune then global accuracy check (§4.3 step 3).
-                host.fine_tune(&trial, sp.fine_tune_steps);
-                let acc = host.accuracy(&trial);
-                if acc >= sp.acc0 - sp.delta {
-                    state = trial;
-                    accepted = Some(Config {
-                        prune_ratio: ratio,
-                        k_target: k,
-                    });
-                    acc_after = acc;
-                    break 'configs;
+        let candidates: Vec<Config> = sp
+            .prune_ratios
+            .iter()
+            .flat_map(|&prune_ratio| {
+                sp.k_targets.iter().map(move |&k_target| Config {
+                    prune_ratio,
+                    k_target,
+                })
+            })
+            .collect();
+        // When no fine-tuning happens between candidates and the greedy
+        // elimination never consults the oracle, every candidate's
+        // restricted set is a pure function of the frozen parameters —
+        // build them in parallel *waves* of `threads` against the shared
+        // evaluator, one wave ahead of consumption.  The wave (rather
+        // than all-at-once) bound keeps the common first-candidate-
+        // accepted case at one elimination of wall-clock instead of
+        // eagerly paying for the whole menu.  (With fine-tuning, params
+        // drift between candidates, so sets are built inline, in order.)
+        let oracle_free = sp.fine_tune_steps == 0 && !sp.greedy.check_every_removal;
+        let evaluator = if oracle_free { host.evaluator() } else { None };
+        let mut precomputed: Vec<Option<WeightSet>> = vec![None; candidates.len()];
+        for (ci_cand, &cfg) in candidates.iter().enumerate() {
+            let mut trial = state.clone();
+            trial.layers[conv_idx] = LayerConfig {
+                prune_ratio: cfg.prune_ratio,
+                wset: None,
+            };
+            // The restricted set for this (ratio, K): precomputed, or
+            // built inline against the live oracle/params.
+            let set = match &evaluator {
+                Some(ev) => {
+                    if precomputed[ci_cand].is_none() {
+                        let threads = sp.greedy.threads.max(1);
+                        let wave_end = (ci_cand + threads).min(candidates.len());
+                        let wave = &candidates[ci_cand..wave_end];
+                        // Pre-warm the wave's distinct prune ratios (one
+                        // usage computation each, in parallel) so the
+                        // candidate fan-out below hits the memo instead
+                        // of racing duplicate magnitude-sorts for
+                        // candidates that share a ratio.
+                        let mut ratios: Vec<f64> = Vec::new();
+                        for c in wave {
+                            if !ratios.iter().any(|r| r.to_bits() == c.prune_ratio.to_bits()) {
+                                ratios.push(c.prune_ratio);
+                            }
+                        }
+                        let ratios_ref = &ratios;
+                        parallel_map(ratios.len(), threads, |j| {
+                            ev.usage_for_conv(conv_idx, ratios_ref[j]);
+                        });
+                        let le_ref = &le;
+                        let sets = parallel_map(wave.len(), threads, |j| {
+                            let cfg = wave[j];
+                            let usage = ev.usage_for_conv(conv_idx, cfg.prune_ratio);
+                            candidate_set(&usage, le_ref, n_conv, conv_idx, cfg, sp)
+                        });
+                        for (j, s) in sets.into_iter().enumerate() {
+                            precomputed[ci_cand + j] = Some(s);
+                        }
+                    }
+                    precomputed[ci_cand].clone().expect("wave fill")
                 }
+                None => {
+                    let usage = host.usage(conv_idx, &trial);
+                    let set0 = safe_initial_set(&usage, &le, sp.greedy.k_init);
+                    let gp = GreedyParams {
+                        k_target: cfg.k_target,
+                        acc0: sp.acc0,
+                        delta: sp.delta,
+                        ..sp.greedy.clone()
+                    };
+                    let (set, _trace) = greedy_backward_eliminate(
+                        set0,
+                        &usage,
+                        &le,
+                        host,
+                        &mut trial,
+                        conv_idx,
+                        &gp,
+                    );
+                    set
+                }
+            };
+            trial.layers[conv_idx].wset = Some(set);
+            // Short fine-tune then global accuracy check (§4.3 step 3).
+            host.fine_tune(&trial, sp.fine_tune_steps);
+            let acc = host.accuracy(&trial);
+            if acc >= sp.acc0 - sp.delta {
+                state = trial;
+                accepted = Some(cfg);
+                acc_after = acc;
+                break;
             }
         }
         let after = host.network_energy(&state);

@@ -17,6 +17,7 @@
 use super::{AccuracyOracle, CompressionState};
 use crate::energy::LayerEnergy;
 use crate::quant::{WeightSet, QMAX};
+use crate::util::threadpool::parallel_map;
 
 /// Parameters of the §4.2 procedure.
 #[derive(Clone, Debug)]
@@ -34,6 +35,12 @@ pub struct GreedyParams {
     /// Validate each accepted removal against the oracle (paper-exact;
     /// expensive) instead of only trusting the proxy.
     pub check_every_removal: bool,
+    /// Worker threads for scoring removal candidates (0 = inherit the
+    /// caller's default, which the coordinator sets to its pool width;
+    /// scoring falls back to serial for small sets where fan-out costs
+    /// more than it saves).  The chosen removal is independent of this
+    /// value — scores are reduced in candidate order.
+    pub threads: usize,
 }
 
 impl Default for GreedyParams {
@@ -45,6 +52,7 @@ impl Default for GreedyParams {
             delta: 0.03,
             acc0: 1.0,
             check_every_removal: false,
+            threads: 0,
         }
     }
 }
@@ -142,11 +150,14 @@ pub fn greedy_backward_eliminate(
 
     while set.len() > p.k_target {
         let e_cur = set_energy(le, usage, &set);
-        // Rank all removable codes by S(w) = ΔE / (ΔAccProxy + ε).
-        let mut best: Option<(f64, i32, f64, f64)> = None; // (score, code, e_new, proxy)
-        for &w in set.codes() {
+        // Score every removable code by S(w) = ΔE / (ΔAccProxy + ε).
+        // Each candidate is independent, so the scoring fans out over
+        // the thread pool; the winner is then reduced in candidate
+        // order, which keeps the result bit-identical to the serial
+        // sweep (first strict maximum wins either way).
+        let score_one = |w: i32| -> Option<(f64, i32, f64, f64)> {
             if w == 0 || essential.contains(&w) {
-                continue; // 0 anchors pruning; essentials are frozen
+                return None; // 0 anchors pruning; essentials are frozen
             }
             let smaller = set.without(w);
             let e_new = set_energy(le, usage, &smaller);
@@ -154,12 +165,21 @@ pub fn greedy_backward_eliminate(
             // Calibration proxy for ΔAcc: normalized L1 perturbation of
             // remapping w's occurrences to the nearest survivor.
             let remap = smaller.project(w);
-            let perturb =
-                usage[(w + 128) as usize] as f64 * (w - remap).abs() as f64;
+            let perturb = usage[(w + 128) as usize] as f64 * (w - remap).abs() as f64;
             let proxy = perturb / (total_usage * QMAX as f64);
             let score = de / (proxy + p.eps * 1e-15); // ε scaled to J
-            if best.map(|(s, ..)| score > s).unwrap_or(true) {
-                best = Some((score, w, e_new, proxy));
+            Some((score, w, e_new, proxy))
+        };
+        let codes = set.codes();
+        let scored: Vec<Option<(f64, i32, f64, f64)>> = if p.threads > 1 && codes.len() >= 24 {
+            parallel_map(codes.len(), p.threads, |i| score_one(codes[i]))
+        } else {
+            codes.iter().map(|&w| score_one(w)).collect()
+        };
+        let mut best: Option<(f64, i32, f64, f64)> = None; // (score, code, e_new, proxy)
+        for cand in scored.into_iter().flatten() {
+            if best.map(|(s, ..)| cand.0 > s).unwrap_or(true) {
+                best = Some(cand);
             }
         }
         let Some((_, w_star, e_new, proxy)) = best else {

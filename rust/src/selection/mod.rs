@@ -10,7 +10,7 @@ pub use greedy::{
     GreedyTrace,
 };
 pub use naive::naive_lowest_energy;
-pub use powerpruning::powerpruning_set;
+pub use powerpruning::{powerpruning_set, powerpruning_set_with};
 
 use crate::quant::WeightSet;
 

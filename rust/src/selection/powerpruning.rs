@@ -11,6 +11,7 @@
 use crate::energy::WeightEnergyTable;
 use crate::quant::{WeightSet, QMAX};
 use crate::selection::{CompressionState, LayerConfig};
+use crate::util::threadpool::parallel_map;
 
 /// Global low-energy set of size `k`, PowerPruning-style: greedily take
 /// cheap codes but guarantee coverage of the dynamic range by reserving
@@ -18,6 +19,14 @@ use crate::selection::{CompressionState, LayerConfig};
 /// low-power weights subject to trainability; anchors are how we realize
 /// that constraint deterministically).
 pub fn powerpruning_set(table: &WeightEnergyTable, k: usize) -> WeightSet {
+    powerpruning_set_with(table, k, 1)
+}
+
+/// [`powerpruning_set`] with an explicit worker count: the per-code
+/// energy keys are materialized once through `parallel_map` (in code
+/// order, so the ranking is thread-count independent) instead of being
+/// re-read inside the comparator.
+pub fn powerpruning_set_with(table: &WeightEnergyTable, k: usize, threads: usize) -> WeightSet {
     assert!(k >= 8, "PowerPruning uses sets of >= 8 values");
     let mut codes: Vec<i32> = vec![0];
     // Anchors: ±{127, 64, 32, 16} preserve range.
@@ -27,18 +36,26 @@ pub fn powerpruning_set(table: &WeightEnergyTable, k: usize) -> WeightSet {
         }
     }
     // Fill the rest with the cheapest remaining codes.
-    let mut rest: Vec<i32> = (-QMAX..=QMAX)
+    let rest: Vec<i32> = (-QMAX..=QMAX)
         .filter(|c| !codes.contains(c))
         .collect();
-    rest.sort_by(|&a, &b| {
-        table
-            .energy(a as i8)
-            .partial_cmp(&table.energy(b as i8))
+    let rest_ref = &rest;
+    let keys: Vec<f64> = parallel_map(rest.len(), threads, |i| table.energy(rest_ref[i] as i8));
+    let mut order: Vec<usize> = (0..rest.len()).collect();
+    order.sort_by(|&ia, &ib| {
+        let (a, b) = (rest[ia], rest[ib]);
+        keys[ia]
+            .partial_cmp(&keys[ib])
             .unwrap()
             .then(a.abs().cmp(&b.abs()))
             .then(a.cmp(&b))
     });
-    codes.extend(rest.into_iter().take(k - codes.len().min(k)));
+    codes.extend(
+        order
+            .into_iter()
+            .map(|i| rest[i])
+            .take(k - codes.len().min(k)),
+    );
     codes.truncate(k);
     WeightSet::new(codes)
 }

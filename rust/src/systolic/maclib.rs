@@ -5,6 +5,7 @@
 //! simulation and per-weight characterization amortize the cost.
 
 use crate::mac::{build_mac, specialize_mac, MacNetlist};
+use crate::util::threadpool::parallel_map;
 
 pub struct MacLib {
     generic: MacNetlist,
@@ -46,6 +47,26 @@ impl MacLib {
         self.cache[(weight as i32 + 128) as usize].as_ref()
     }
 
+    /// Specialize every code in `[-127, 127]` that is still missing,
+    /// fanning the const-prop passes out over `threads` workers.  After
+    /// this, the library can be shared immutably across threads
+    /// ([`Self::get_cached`] never misses).
+    pub fn specialize_all(&mut self, threads: usize) {
+        let missing: Vec<i32> = (-127i32..=127)
+            .filter(|&c| self.cache[(c + 128) as usize].is_none())
+            .collect();
+        if missing.is_empty() {
+            return;
+        }
+        let generic = &self.generic;
+        let built = parallel_map(missing.len(), threads, |i| {
+            specialize_mac(generic, missing[i])
+        });
+        for (c, nl) in missing.iter().zip(built) {
+            self.cache[(c + 128) as usize] = Some(nl);
+        }
+    }
+
     /// Gate count per weight (area proxy; also a quick Fig. 1 sanity
     /// signal since switching scales with surviving logic).
     pub fn gate_count(&mut self, weight: i8) -> usize {
@@ -63,6 +84,25 @@ mod tests {
         let g1 = lib.get(5).netlist.gate_count();
         let g2 = lib.get(5).netlist.gate_count();
         assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn specialize_all_fills_cache_and_matches_lazy() {
+        let mut a = MacLib::new();
+        a.specialize_all(4);
+        for c in -127i32..=127 {
+            assert!(a.get_cached(c as i8).is_some(), "code {c} missing");
+        }
+        // Idempotent and identical to the lazy path.
+        a.specialize_all(2);
+        let mut b = MacLib::new();
+        for c in [-127i32, -1, 0, 1, 85, 127] {
+            assert_eq!(
+                a.get_cached(c as i8).unwrap().netlist.gate_count(),
+                b.get(c as i8).netlist.gate_count(),
+                "code {c}"
+            );
+        }
     }
 
     #[test]

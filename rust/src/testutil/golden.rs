@@ -1,0 +1,163 @@
+//! Golden-file regression harness.
+//!
+//! Snapshots live under `rust/tests/golden/*.json`.  A check parses the
+//! stored JSON and compares it structurally against the actual value —
+//! numbers with a tight relative tolerance (`1e-9` by default, far
+//! below any legitimate modeling change), everything else exactly.
+//!
+//! Blessing: run with `WSEL_BLESS=1` to (re)write the snapshot instead
+//! of comparing, e.g.
+//!
+//! ```text
+//! WSEL_BLESS=1 cargo test -q --test golden_model
+//! ```
+//!
+//! A missing golden file fails the check (that is the harness's whole
+//! point: numbers cannot drift — or appear — silently); the failure
+//! message says how to bless.
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Default relative tolerance for numeric comparisons.
+pub const DEFAULT_RTOL: f64 = 1e-9;
+
+/// Directory holding the golden snapshots.
+pub fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// True when bless mode is active (`WSEL_BLESS=1`).
+pub fn blessing() -> bool {
+    std::env::var("WSEL_BLESS").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Compare `actual` against the stored snapshot `<name>.json`, or
+/// rewrite the snapshot in bless mode.  Panics with a pinpointed path
+/// on mismatch.
+pub fn check(name: &str, actual: &Json) {
+    check_with_rtol(name, actual, DEFAULT_RTOL)
+}
+
+/// Like [`check`], but a *missing* snapshot is written (with a loud
+/// warning) instead of failing.  For artifact-gated tests whose
+/// snapshots cannot ship with the repo (they depend on locally built
+/// artifacts): the first run in a fresh artifact build bootstraps the
+/// baseline, every later run pins against it.
+pub fn check_or_init(name: &str, actual: &Json) {
+    let path = golden_dir().join(format!("{name}.json"));
+    if !blessing() && !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+        std::fs::write(&path, format!("{actual}\n")).expect("write golden");
+        eprintln!(
+            "BOOTSTRAPPED golden {} (first run against these artifacts); \
+             subsequent runs will pin against it",
+            path.display()
+        );
+        return;
+    }
+    check(name, actual)
+}
+
+/// [`check`] with an explicit relative tolerance (0.0 = exact).
+pub fn check_with_rtol(name: &str, actual: &Json, rtol: f64) {
+    let path = golden_dir().join(format!("{name}.json"));
+    if blessing() {
+        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+        std::fs::write(&path, format!("{actual}\n")).expect("write golden");
+        eprintln!("BLESSED {}", path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "golden snapshot {} missing ({e}); run with WSEL_BLESS=1 to create it",
+            path.display()
+        )
+    });
+    let want = Json::parse(text.trim()).unwrap_or_else(|e| {
+        panic!("golden snapshot {} unparsable: {e}", path.display())
+    });
+    if let Err(diff) = approx_eq(&want, actual, rtol, "$") {
+        panic!(
+            "golden mismatch vs {} at {}\n  (bless with WSEL_BLESS=1 after verifying the change is intended)",
+            path.display(),
+            diff
+        );
+    }
+}
+
+/// Structural comparison: numbers within `rtol` (relative, with a tiny
+/// absolute floor for values near zero), everything else exact.
+/// Returns `Err(description)` naming the first diverging path.
+pub fn approx_eq(want: &Json, got: &Json, rtol: f64, path: &str) -> Result<(), String> {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = rtol * a.abs().max(b.abs()) + 1e-300;
+            if (a - b).abs() <= tol || (a.is_nan() && b.is_nan()) {
+                Ok(())
+            } else {
+                Err(format!("{path}: {a} != {b} (rtol {rtol})"))
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                return Err(format!("{path}: array len {} != {}", a.len(), b.len()));
+            }
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                approx_eq(x, y, rtol, &format!("{path}[{i}]"))?;
+            }
+            Ok(())
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            if a.len() != b.len() {
+                let ka: Vec<_> = a.keys().collect();
+                let kb: Vec<_> = b.keys().collect();
+                return Err(format!("{path}: keys {ka:?} != {kb:?}"));
+            }
+            for (k, x) in a {
+                let y = b
+                    .get(k)
+                    .ok_or_else(|| format!("{path}: missing key {k:?}"))?;
+                approx_eq(x, y, rtol, &format!("{path}.{k}"))?;
+            }
+            Ok(())
+        }
+        (a, b) => {
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{path}: {a} != {b}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_tolerates_and_rejects() {
+        let a = Json::parse(r#"{"x": [1.0, 2.0], "s": "hi"}"#).unwrap();
+        let b = Json::parse(r#"{"x": [1.0000000000001, 2.0], "s": "hi"}"#).unwrap();
+        assert!(approx_eq(&a, &b, 1e-9, "$").is_ok());
+        let c = Json::parse(r#"{"x": [1.01, 2.0], "s": "hi"}"#).unwrap();
+        let err = approx_eq(&a, &c, 1e-9, "$").unwrap_err();
+        assert!(err.contains("$.x[0]"), "{err}");
+        let d = Json::parse(r#"{"x": [1.0, 2.0], "s": "no"}"#).unwrap();
+        assert!(approx_eq(&a, &d, 1e-9, "$").is_err());
+    }
+
+    #[test]
+    fn exact_mode_is_strict() {
+        let a = Json::Num(1.0);
+        let b = Json::Num(1.0 + f64::EPSILON);
+        assert!(approx_eq(&a, &b, 0.0, "$").is_err());
+        assert!(approx_eq(&a, &a, 0.0, "$").is_ok());
+    }
+
+    #[test]
+    fn golden_dir_is_under_tests() {
+        assert!(golden_dir().ends_with("rust/tests/golden"));
+    }
+}

@@ -5,7 +5,25 @@
 //! panic, which is what we actually use proptest for in this codebase.
 //! Generators live on [`Gen`].
 
+pub mod golden;
+
 use crate::util::rng::Xoshiro256;
+
+/// Shared synthetic energy-table fixture: energy grows linearly with
+/// |code| (`(1 + |code|) * quantum`, idle at half the quantum) — the
+/// Fig. 1 shape used by tests and benches.  Pass a dyadic quantum
+/// (e.g. `2^-50`) when exact cross-platform arithmetic matters.
+pub fn linear_energy_table(quantum: f64) -> crate::energy::WeightEnergyTable {
+    let mut e = [0.0f64; 256];
+    for (i, slot) in e.iter_mut().enumerate() {
+        let code = (i as i32 - 128).unsigned_abs() as f64;
+        *slot = (1.0 + code) * quantum;
+    }
+    crate::energy::WeightEnergyTable {
+        e_per_cycle: e,
+        e_idle: quantum * 0.5,
+    }
+}
 
 /// Deterministic case runner.  On panic, re-raises with the case index
 /// and per-case seed so the failure reproduces with `case_seed`.

@@ -164,6 +164,86 @@ mod tests {
     }
 
     #[test]
+    fn sign_boundary_negatives_land_in_top_msb_bin() {
+        // Two's-complement: every negative accumulator value has bit 21
+        // set, so its MSB position is 22 and its MSB bin is the top one —
+        // exactly what the adder's carry chain sees at the sign boundary.
+        for v in [-1i32, -2, -5, -1000, -(1 << 20), -(1 << 21)] {
+            let bits = to_bits(v);
+            assert_eq!(msb_position(bits), ACC_BITS as u32, "v={v}");
+            let g = group_of(bits);
+            assert_eq!(g / HW_BINS, MSB_BINS - 1, "v={v} bits={bits:#x} g={g}");
+        }
+        // The sign boundary itself: -1 (all ones) vs 0 sit in opposite
+        // corners of the partition.
+        assert_eq!(group_of(to_bits(0)), 0);
+        assert_eq!(group_of(to_bits(-1)), N_GROUPS - 1);
+    }
+
+    #[test]
+    fn zero_value_is_its_own_group_corner() {
+        // Value 0: MSB position 0, Hamming weight 0 -> group 0, and no
+        // positive-magnitude pattern may share bin (0, 0) with it except
+        // via the uniform binning of tiny values.
+        assert_eq!(msb_position(0), 0);
+        assert_eq!(hamming_weight(0), 0);
+        assert_eq!(group_of(0), 0);
+        // A zero *weight* stalls the accumulator: the psum transition is
+        // p -> p, so all recorded mass must land on the group-pair
+        // diagonal (g, g).
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let mut h = crate::transitions::histogram::PsumGroupHist::new();
+        for p in [0i32, 7, -3, 1 << 12] {
+            h.record(p, p, &mut rng);
+        }
+        assert_eq!(h.total, 4);
+        for gf in 0..N_GROUPS {
+            for gt in 0..N_GROUPS {
+                if gf != gt {
+                    assert_eq!(
+                        h.counts[gf * N_GROUPS + gt],
+                        0,
+                        "stalled transition leaked off-diagonal ({gf}, {gt})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_wraps_into_22_bits() {
+        // The hardware accumulator wraps at 22 bits; to_bits must mask
+        // identically so grouping sees the same pattern the adder holds.
+        assert_eq!(to_bits(1 << ACC_BITS as i32), 0);
+        assert_eq!(to_bits((1 << ACC_BITS) + 5), 5);
+        // Positive overflow past 2^21 - 1 becomes the negative pattern.
+        assert_eq!(to_bits(1 << 21), 1 << 21);
+        assert_eq!(group_of(to_bits(1 << 21)) / HW_BINS, MSB_BINS - 1);
+        // Max magnitude in range still maps to a valid group.
+        assert!(group_of(to_bits((1 << 21) - 1)) < N_GROUPS);
+        assert!(group_of(to_bits(-(1 << 21))) < N_GROUPS);
+    }
+
+    #[test]
+    fn uniform_bin_edges() {
+        // Exact edges of the uniform partitions: msb 0..=2 -> bin 0,
+        // msb 3 -> bin 1; hw 0..=4 -> bin 0, hw 5 -> bin 1 (with 23
+        // possible values in 10 resp. 5 bins).
+        assert_eq!((2 * MSB_BINS) / (ACC_BITS + 1), 0);
+        assert_eq!((3 * MSB_BINS) / (ACC_BITS + 1), 1);
+        assert_eq!(group_of(0b10) / HW_BINS, 0); // msb 2
+        assert_eq!(group_of(0b100) / HW_BINS, 1); // msb 3
+        assert_eq!((4 * HW_BINS) / (ACC_BITS + 1), 0);
+        assert_eq!((5 * HW_BINS) / (ACC_BITS + 1), 1);
+        // msb 22 fixed, hw 4 vs 5 crosses the first HW edge.
+        let base = 1u32 << 21;
+        let hw4 = base | 0b111;
+        let hw5 = base | 0b1111;
+        assert_eq!(group_of(hw4) % HW_BINS, 0);
+        assert_eq!(group_of(hw5) % HW_BINS, 1);
+    }
+
+    #[test]
     fn monotone_in_msb() {
         // Group id is non-decreasing in MSB position for fixed HW=1.
         let mut last = 0;

@@ -1,0 +1,127 @@
+//! Property tests for the memoized, parallel [`EnergyEvaluator`]
+//! (testutil-based, no artifacts needed):
+//!
+//! * the cached + parallel path is **bit-identical** to the direct
+//!   sequential un-cached path, and
+//! * results are independent of the thread count (1, 2, N).
+
+use wsel::energy::cache::{EnergyEvaluator, EvalLayer};
+use wsel::energy::{LayerEnergy, WeightEnergyTable};
+use wsel::selection::{CompressionState, LayerConfig};
+use wsel::testutil::{cases, Gen};
+
+fn table_from(g: &mut Gen) -> WeightEnergyTable {
+    wsel::testutil::linear_energy_table(g.f32_in(0.5, 2.0) as f64 * 1e-15)
+}
+
+fn layers_from(g: &mut Gen) -> Vec<EvalLayer> {
+    let n_layers = g.usize_in(1, 4);
+    (0..n_layers)
+        .map(|ci| {
+            let k = g.usize_in(8, 120);
+            let n = g.usize_in(1, 24);
+            EvalLayer {
+                le: LayerEnergy {
+                    conv_idx: ci,
+                    m: g.usize_in(1, 200),
+                    k,
+                    n,
+                    table: table_from(g),
+                },
+                weights: g.vec_f32(k * n, -2.0, 2.0),
+            }
+        })
+        .collect()
+}
+
+fn state_from(g: &mut Gen, n_layers: usize) -> CompressionState {
+    CompressionState {
+        layers: (0..n_layers)
+            .map(|_| LayerConfig {
+                prune_ratio: [0.0, 0.3, 0.5, 0.7, 0.9][g.usize_in(0, 4)],
+                wset: if g.bool() { Some(g.weight_set(24)) } else { None },
+            })
+            .collect(),
+    }
+}
+
+fn assert_bitwise_eq(a: &wsel::energy::NetworkEnergy, b: &wsel::energy::NetworkEnergy, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for ((i1, e1), (i2, e2)) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(i1, i2, "{what}: layer order");
+        assert_eq!(
+            e1.to_bits(),
+            e2.to_bits(),
+            "{what}: layer {i1} energy {e1} vs {e2}"
+        );
+    }
+}
+
+/// Cached + parallel evaluation is bit-identical to the direct
+/// sequential un-cached path, for arbitrary layers and states.
+#[test]
+fn prop_evaluator_bit_identical_to_direct() {
+    cases(20, 0xE7A1, |g| {
+        let layers = layers_from(g);
+        let n = layers.len();
+        let ev = EnergyEvaluator::new(layers, 4);
+        for _ in 0..3 {
+            let st = state_from(g, n);
+            let cached = ev.eval(&st);
+            let direct = ev.eval_direct(&st);
+            assert_bitwise_eq(&cached, &direct, "cached vs direct");
+        }
+        // Re-evaluating a state with a warm cache changes nothing.
+        let st = state_from(g, n);
+        let first = ev.eval(&st);
+        let again = ev.eval(&st);
+        assert_bitwise_eq(&first, &again, "cold vs warm cache");
+    });
+}
+
+/// `parallel_map` fan-out width never changes a bit of the result.
+#[test]
+fn prop_evaluator_thread_count_independent() {
+    cases(15, 0x7EAD, |g| {
+        let layers = layers_from(g);
+        let n = layers.len();
+        let ev1 = EnergyEvaluator::new(layers.clone(), 1);
+        let ev2 = EnergyEvaluator::new(layers.clone(), 2);
+        let ev7 = EnergyEvaluator::new(layers, 7);
+        for _ in 0..3 {
+            let st = state_from(g, n);
+            let a = ev1.eval(&st);
+            let b = ev2.eval(&st);
+            let c = ev7.eval(&st);
+            assert_bitwise_eq(&a, &b, "1 vs 2 threads");
+            assert_bitwise_eq(&a, &c, "1 vs 7 threads");
+        }
+    });
+}
+
+/// The memo only ever holds one histogram per (layer, ratio), no matter
+/// how many states share it, and clearing it does not change results.
+#[test]
+fn prop_usage_cache_is_sound() {
+    cases(10, 0xCAC4E, |g| {
+        let layers = layers_from(g);
+        let n = layers.len();
+        let ev = EnergyEvaluator::new(layers, 3);
+        let mut distinct = std::collections::HashSet::new();
+        let mut states = Vec::new();
+        for _ in 0..4 {
+            let st = state_from(g, n);
+            for (ci, l) in st.layers.iter().enumerate() {
+                distinct.insert((ci, l.prune_ratio.to_bits()));
+            }
+            states.push(st);
+        }
+        let before: Vec<_> = states.iter().map(|s| ev.eval(s)).collect();
+        assert_eq!(ev.cached_usages(), distinct.len());
+        ev.clear_cache();
+        let after: Vec<_> = states.iter().map(|s| ev.eval(s)).collect();
+        for (a, b) in before.iter().zip(&after) {
+            assert_bitwise_eq(a, b, "pre vs post cache clear");
+        }
+    });
+}

@@ -1,0 +1,131 @@
+//! Artifact-free golden regression tests for the core energy model.
+//!
+//! The fixtures are chosen so every quantity is either integer-valued
+//! or dyadic (power-of-two scaled), which makes the committed snapshots
+//! reproducible bit-for-bit across platforms.  Regenerate with
+//! `WSEL_BLESS=1 cargo test -q --test golden_model` after an
+//! *intentional* model change (and say why in the commit).
+//!
+//! The snapshots pin:
+//! * `energy_of_usage` / `set_energy` / `NetworkEnergy::saving_vs`
+//!   (`network_energy_model.json`),
+//! * weight-set projection of a usage histogram
+//!   (`projected_usage_setA_layer1.json`),
+//! * the MSB×Hamming group mapping (`transition_groups.json`).
+
+use wsel::energy::{LayerEnergy, NetworkEnergy, WeightEnergyTable};
+use wsel::quant::WeightSet;
+use wsel::selection::{projected_usage, set_energy};
+use wsel::testutil::golden;
+use wsel::transitions::group::{group_of, to_bits};
+use wsel::util::json::Json;
+
+/// 2^-50 J/cycle quantum: keeps every table entry exactly representable.
+fn scale() -> f64 {
+    (2.0f64).powi(-50)
+}
+
+fn dyadic_table() -> WeightEnergyTable {
+    // (1 + |code|) * 2^-50 with idle 2^-51 — every entry exactly
+    // representable (mirrored by scripts/mirror_goldens.py).
+    wsel::testutil::linear_energy_table(scale())
+}
+
+fn layer(conv_idx: usize, m: usize, k: usize, n: usize) -> LayerEnergy {
+    LayerEnergy {
+        conv_idx,
+        m,
+        k,
+        n,
+        table: dyadic_table(),
+    }
+}
+
+/// LeNet-5-shaped conv dims (im2col matmuls at batch 1-ish scale).
+fn layers() -> Vec<LayerEnergy> {
+    vec![
+        layer(0, 256, 75, 6),
+        layer(1, 196, 150, 16),
+        layer(2, 64, 400, 32),
+    ]
+}
+
+/// Deterministic, integer-valued usage histogram per layer.
+fn usage(layer_idx: usize) -> [u64; 256] {
+    let mut u = [0u64; 256];
+    for c in -127i32..=127 {
+        let pos = u64::from(c > 0);
+        u[(c + 128) as usize] = (3 * c.unsigned_abs() as u64 + pos + 5 * layer_idx as u64) % 17;
+    }
+    u
+}
+
+fn set_a() -> WeightSet {
+    WeightSet::new(vec![-127, -64, -32, -16, -8, 0, 8, 16, 32, 64, 127])
+}
+
+fn set_b() -> WeightSet {
+    WeightSet::new(vec![-81, -27, -9, -3, 0, 3, 9, 27, 81])
+}
+
+#[test]
+fn golden_network_energy_model() {
+    let ls = layers();
+    let net = |f: &dyn Fn(usize, &LayerEnergy) -> f64| NetworkEnergy {
+        layers: ls
+            .iter()
+            .enumerate()
+            .map(|(i, le)| (le.conv_idx, f(i, le)))
+            .collect(),
+    };
+    let dense = net(&|i, le| le.energy_of_usage(&usage(i)));
+    let a = net(&|i, le| set_energy(le, &usage(i), &set_a()));
+    let b = net(&|i, le| set_energy(le, &usage(i), &set_b()));
+    let j = Json::obj(vec![
+        ("dense", dense.to_json()),
+        ("setA", a.to_json()),
+        ("setB", b.to_json()),
+        ("saving_setA", Json::num(dense.saving_vs(&a))),
+        ("saving_setB", Json::num(dense.saving_vs(&b))),
+    ]);
+    golden::check("network_energy_model", &j);
+}
+
+#[test]
+fn golden_projected_usage() {
+    let pa = projected_usage(&usage(1), &set_a());
+    let j = Json::arr(pa.iter().map(|&c| Json::num(c as f64)));
+    golden::check("projected_usage_setA_layer1", &j);
+    // Projection conserves mass regardless of the snapshot.
+    assert_eq!(
+        usage(1).iter().sum::<u64>(),
+        pa.iter().sum::<u64>(),
+        "projection must conserve weight count"
+    );
+}
+
+#[test]
+fn golden_transition_groups() {
+    let pats: [u32; 15] = [
+        0,
+        1,
+        2,
+        3,
+        5,
+        255,
+        4096,
+        0x15_5555,
+        0x2A_AAAA,
+        1 << 20,
+        1 << 21,
+        (1 << 21) + 1,
+        (1 << 22) - 1,
+        0x3F_FFFE,
+        0x20_0001,
+    ];
+    let j = Json::arr(pats.iter().map(|&p| Json::num(group_of(p) as f64)));
+    golden::check("transition_groups", &j);
+    // Signed wrap agrees with the raw patterns at the corners.
+    assert_eq!(group_of(to_bits(-1)), group_of((1 << 22) - 1));
+    assert_eq!(group_of(to_bits(0)), group_of(0));
+}

@@ -1,10 +1,16 @@
 //! Integration: the full compression pipeline at smoke scale, plus
 //! cross-module property tests that need the real artifacts.
+//!
+//! Energy numbers are pinned by the golden harness (`testutil::golden`):
+//! the first run against a fresh artifact build bootstraps the
+//! snapshots automatically; refresh intentional changes with
+//! `WSEL_BLESS=1 cargo test -q --test integration_pipeline`.
 
 use std::path::{Path, PathBuf};
 use wsel::coordinator::{Pipeline, PipelineParams};
 use wsel::schedule::ScheduleParams;
 use wsel::selection::CompressionState;
+use wsel::testutil::golden;
 
 fn artifacts() -> Option<PathBuf> {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -58,6 +64,16 @@ fn pipeline_end_to_end_smoke() {
     if res.state.layers.iter().any(|l| l.wset.is_some()) {
         assert!(saving > 0.0);
     }
+    // The evaluator's cached parallel path must equal the direct path
+    // on the real pipeline, bit for bit.
+    let direct = p.compute_network_energy_direct(&res.state);
+    for ((i1, e1), (i2, e2)) in now.layers.iter().zip(&direct.layers) {
+        assert_eq!(i1, i2);
+        assert_eq!(e1.to_bits(), e2.to_bits(), "layer {i1}: {e1} vs {e2}");
+    }
+    // Pin the full schedule outcome (baseline bootstraps on the first
+    // run against a fresh artifact build, then drift fails).
+    golden::check_or_init("pipeline_lenet5_schedule", &res.to_json());
 }
 
 /// The energy model is deterministic given the seed: two pipelines over
@@ -81,6 +97,10 @@ fn energy_model_deterministic() {
             "layer {i1}: {e1} vs {e2}"
         );
     }
+    // Pin the baseline network energy so it cannot drift silently
+    // across refactors (baseline bootstraps on the first run against a
+    // fresh artifact build).
+    golden::check_or_init("pipeline_lenet5_base_energy", &a.to_json());
 }
 
 /// Compression monotonicity: more pruning can only reduce modeled energy.

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Independent mirror of the core energy-model arithmetic, used to
+generate the committed golden snapshots under rust/tests/golden/.
+
+The Rust test `golden_model.rs` computes the same quantities through the
+production code path; this script re-derives them from the paper's
+formulas with plain IEEE-754 doubles (Python floats), mirroring the
+exact operation order of the Rust implementation.  The fixtures are
+dyadic/integer-valued so both sides agree bit-for-bit.
+
+Normally the snapshots are (re)blessed from the Rust side with
+`WSEL_BLESS=1 cargo test -q --test golden_model`; this mirror exists so
+the initial snapshots are *independent* of the implementation they pin,
+and stays useful as a cross-check.
+"""
+
+import json
+import os
+
+SCALE = 2.0 ** -50
+E_IDLE = SCALE / 2.0
+GATED_IDLE_FRACTION = 0.15
+TILE = 64
+CYCLES_PER_PASS = 128
+ACC_BITS = 22
+MSB_BINS, HW_BINS = 10, 5
+
+LAYERS = [(0, 256, 75, 6), (1, 196, 150, 16), (2, 64, 400, 32)]
+SET_A = [-127, -64, -32, -16, -8, 0, 8, 16, 32, 64, 127]
+SET_B = [-81, -27, -9, -3, 0, 3, 9, 27, 81]
+
+
+def table(i):
+    """e_per_cycle[i] = (1 + |code|) * 2^-50, code = i - 128."""
+    return (1.0 + float(abs(i - 128))) * SCALE
+
+
+def usage(layer_idx):
+    u = [0] * 256
+    for c in range(-127, 128):
+        pos = 1 if c > 0 else 0
+        u[c + 128] = (3 * abs(c) + pos + 5 * layer_idx) % 17
+    return u
+
+
+def project(codes, q):
+    """Nearest member; ties resolve to the smaller member."""
+    return min(codes, key=lambda c: (abs(q - c), c))
+
+
+def projected_usage(u, codes):
+    out = [0] * 256
+    for i in range(256):
+        cnt = u[i]
+        if cnt == 0:
+            continue
+        code = i - 128
+        code = max(-127, min(127, code))
+        out[project(codes, code) + 128] += cnt
+    return out
+
+
+def energy_of_usage(m, k, n, u):
+    cycles = float(-(-m // TILE) * CYCLES_PER_PASS)
+    e = 0.0
+    occupied = 0
+    for i in range(256):
+        cnt = u[i]
+        if cnt == 0:
+            continue
+        occupied += cnt
+        e += float(cnt) * table(i) * cycles
+    k_pad = -(-k // TILE) * TILE
+    n_pad = -(-n // TILE) * TILE
+    padded = k_pad * n_pad - occupied
+    return e + float(padded) * E_IDLE * GATED_IDLE_FRACTION * cycles
+
+
+def network(per_layer):
+    total = 0.0
+    for _, e in per_layer:
+        total += e
+    return {"layers": [[i, e] for i, e in per_layer], "total": total}
+
+
+def group_of(v):
+    msb = v.bit_length()
+    msb_bin = (msb * MSB_BINS) // (ACC_BITS + 1)
+    hw = bin(v).count("1")
+    hw_bin = (hw * HW_BINS) // (ACC_BITS + 1)
+    return msb_bin * HW_BINS + hw_bin
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "golden")
+    os.makedirs(out_dir, exist_ok=True)
+
+    dense, set_a, set_b = [], [], []
+    for idx, (ci, m, k, n) in enumerate(LAYERS):
+        u = usage(idx)
+        dense.append((ci, energy_of_usage(m, k, n, u)))
+        set_a.append((ci, energy_of_usage(m, k, n, projected_usage(u, SET_A))))
+        set_b.append((ci, energy_of_usage(m, k, n, projected_usage(u, SET_B))))
+
+    def total(net):
+        return net["total"]
+
+    nd, na, nb = network(dense), network(set_a), network(set_b)
+    model = {
+        "dense": nd,
+        "setA": na,
+        "setB": nb,
+        "saving_setA": 1.0 - total(na) / total(nd),
+        "saving_setB": 1.0 - total(nb) / total(nd),
+    }
+    with open(os.path.join(out_dir, "network_energy_model.json"), "w") as f:
+        json.dump(model, f)
+        f.write("\n")
+
+    proj = projected_usage(usage(1), SET_A)
+    with open(os.path.join(out_dir, "projected_usage_setA_layer1.json"), "w") as f:
+        json.dump(proj, f)
+        f.write("\n")
+
+    pats = [
+        0, 1, 2, 3, 5, 255, 4096, 0x155555, 0x2AAAAA,
+        1 << 20, 1 << 21, (1 << 21) + 1, (1 << 22) - 1, 0x3FFFFE, 0x200001,
+    ]
+    with open(os.path.join(out_dir, "transition_groups.json"), "w") as f:
+        json.dump([group_of(p) for p in pats], f)
+        f.write("\n")
+
+    print("wrote goldens to", os.path.abspath(out_dir))
+
+
+if __name__ == "__main__":
+    main()

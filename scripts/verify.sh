@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (see ROADMAP.md):
+#   cargo build --release && cargo test -q, plus clippy when available.
+#
+# Usage: scripts/verify.sh
+# Env:   WSEL_BLESS=1 scripts/verify.sh   # re-bless golden snapshots
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy (soft-fail if unavailable) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy not installed; skipping (soft-fail)"
+fi
+
+echo "verify: OK"

@@ -1,0 +1,151 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The build image for this repo has no `xla_extension` native library,
+//! so this crate provides the exact API surface `wsel::runtime` consumes
+//! but reports the backend as unavailable at runtime.  Everything that
+//! needs PJRT (artifact-gated tests, examples, the training CLI paths)
+//! already skips gracefully when `artifacts/` is absent, and
+//! `PjRtClient::cpu()` returning an error makes the failure mode
+//! explicit if someone does point it at artifacts.
+
+use std::path::Path;
+
+/// Error type; formatted with `{:?}` by callers.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT/XLA native runtime not available in this build \
+         (offline stub; install xla_extension and swap the vendored `xla` crate)"
+    ))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for u8 {}
+impl NativeType for i32 {}
+impl NativeType for u32 {}
+impl NativeType for i64 {}
+impl NativeType for u64 {}
+
+/// Host-side tensor value (stub: shape/data are not retained).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation built from an HLO proto (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: construction fails, making the missing native
+/// backend explicit at the first point of use).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2]).is_ok());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
