@@ -163,32 +163,56 @@ fn main() {
     m.report_throughput(512.0, "MAC-cycles");
     black_box((acts, psums));
 
-    // ---- exact tile power -------------------------------------------------
+    // ---- exact tile power: sequential reference vs parallel engine --------
+    // Before: the historical single-threaded path (per-gate dispatch,
+    // per-lane bit packing).  After: TilePowerEngine — column-parallel,
+    // levelized SoA evaluation, transpose packing.  Same MacLib, warm.
+    let threads = default_threads();
     let mut rng = Xoshiro256::new(2);
     let (mm, kk, nn) = (64usize, 64usize, 64usize);
     let x: Vec<i8> = (0..mm * kk).map(|_| rng.code() as i8).collect();
     let w: Vec<i8> = (0..kk * nn).map(|_| rng.code() as i8).collect();
     let pass = systolic::passes_of(mm, kk, nn)[0];
-    let m = bench("perf/tile_power_exact_64x64x64", 1, 5, || {
-        let mut lib2 = MacLib::new();
-        black_box(systolic::tile_power_exact(
-            &x, &w, kk, nn, &pass, &mut lib2, &cap,
-        ));
+    lib.specialize_all(threads);
+    let m_seq = bench("perf/tile_power_exact_seq_64x64x64", 1, 5, || {
+        black_box(systolic::tile_power_exact(&x, &w, kk, nn, &pass, &lib, &cap));
     });
-    m.report_throughput((mm * kk * nn) as f64, "MAC-steps");
-    // Warm-library variant (the pipeline's steady state).
-    let m = bench("perf/tile_power_exact_warm_maclib", 1, 5, || {
-        black_box(systolic::tile_power_exact(
-            &x, &w, kk, nn, &pass, &mut lib, &cap,
-        ));
-    });
-    m.report_throughput((mm * kk * nn) as f64, "MAC-steps");
+    m_seq.report_throughput((mm * kk * nn) as f64, "MAC-steps");
+    let engine = systolic::TilePowerEngine::new(&lib, &cap);
+    let m_eng = bench(
+        &format!("perf/tile_power_engine_t{threads}_64x64x64"),
+        1,
+        5,
+        || {
+            black_box(engine.pass_power(&x, &w, kk, nn, &pass, threads));
+        },
+    );
+    m_eng.report_throughput((mm * kk * nn) as f64, "MAC-steps");
+    let tile_speedup = m_seq.median_ns as f64 / m_eng.median_ns.max(1) as f64;
+    println!("      -> tile power engine speedup vs sequential: {tile_speedup:.1}x");
+    // The engine must be exact, not just fast: bit-identical energy and
+    // identical MAC-step counts vs the sequential reference.
+    let (e_seq, s_seq) = systolic::tile_power_exact(&x, &w, kk, nn, &pass, &lib, &cap);
+    let (e_eng, s_eng) = engine.pass_power(&x, &w, kk, nn, &pass, threads);
+    assert_eq!(
+        (e_seq.to_bits(), s_seq),
+        (e_eng.to_bits(), s_eng),
+        "engine must be bit-identical to the sequential reference"
+    );
+    // Acceptance gate: >= 2x tile-power throughput at 4+ threads.
+    if threads >= 4 {
+        assert!(
+            tile_speedup >= 2.0,
+            "tile power engine must be >= 2x at {threads} threads (got {tile_speedup:.2}x)"
+        );
+    } else {
+        println!("      (tile speedup assertion skipped: only {threads} thread(s) available)");
+    }
 
     // ---- EnergyEvaluator: memoized+parallel vs direct ---------------------
     // Table-1-style workload (resnet20-ish conv stack, no artifacts
     // needed): many candidate states over the same frozen weights —
     // exactly the shape of the schedule's inner loop.
-    let threads = default_threads();
     let resnet_dims: Vec<(usize, usize, usize)> =
         (0..6).map(|_| (256usize, 576usize, 32usize)).collect();
     let ev_serial = EnergyEvaluator::new(synth_layers(&resnet_dims, 31), 1);

@@ -52,9 +52,10 @@ fn main() -> Result<()> {
     // (b) Exact gate-level power of the first pass.
     let cm = CapModel::default();
     let mut lib = MacLib::new();
+    lib.specialize_for(&cap.w_codes, wsel::util::threadpool::default_threads());
     let pass = systolic::passes_of(cap.m, cap.k, cap.n)[0];
     let (e_exact, steps) =
-        systolic::tile_power_exact(&cap.x_codes, &cap.w_codes, cap.k, cap.n, &pass, &mut lib, &cm);
+        systolic::tile_power_exact(&cap.x_codes, &cap.w_codes, cap.k, cap.n, &pass, &lib, &cm);
     let p_exact = e_exact / steps as f64 * cm.freq_hz * 64.0; // per-PE -> array-of-64-rows scale
     println!(
         "exact gate-level: pass energy {e_exact:.3e} J over {steps} MAC-steps  (P_tile ~ {:.2} mW)",
@@ -86,5 +87,18 @@ fn main() -> Result<()> {
         "model should track exact simulation within small constant factor"
     );
     println!("model tracks exact gate-level simulation ✓");
+
+    // (d) Network scale: every pass of every captured conv layer through
+    // the parallel levelized engine, column streams deduplicated.
+    let threads = wsel::util::threadpool::default_threads();
+    p.maclib.specialize_all(threads);
+    let exact = systolic::network_power_exact(&fwd.captures, &p.maclib, &cm, threads);
+    for l in &exact.layers {
+        println!(
+            "conv{}: exact {:.3e} J over {} MAC-steps ({} of {} column streams simulated)",
+            l.conv_idx, l.energy_j, l.mac_steps, l.columns_unique, l.columns_total
+        );
+    }
+    println!("network exact total: {:.3e} J", exact.total_j());
     Ok(())
 }

@@ -161,16 +161,27 @@ impl Pipeline {
         Ok(self.acc0)
     }
 
+    /// Capture real operand streams for `images` training inputs — the
+    /// single recipe (seed, split, batch offset, quantized forward with
+    /// captures on) shared by [`Self::profile`] and
+    /// [`Self::validate_exact`], so the model tables and the exact
+    /// ground truth always see the same streams.
+    fn capture_streams(&self, images: usize) -> crate::model::infer::Forward {
+        let spec = &self.rt.spec;
+        let eng = Engine::new(spec);
+        let qc = crate::model::QuantConfig::quantized(spec, self.rt.act_scales.clone());
+        let (xs, _ys) =
+            crate::data::batch(self.rt.data_seed, Split::Train, 0, images, spec.n_classes as u64);
+        eng.forward(&self.rt.params, &xs, images, &qc, true)
+    }
+
     /// Phase 3: per-layer statistics + per-weight energy tables + base
     /// network energy (paper §3).
     pub fn profile(&mut self) -> Result<&NetworkEnergy> {
         let spec = self.rt.spec.clone();
-        let eng = Engine::new(&spec);
-        let qc = crate::model::QuantConfig::quantized(&spec, self.rt.act_scales.clone());
         let bs = self.pp.stats_images;
-        let (xs, _ys) = crate::data::batch(self.rt.data_seed, Split::Train, 0, bs, spec.n_classes as u64);
         crate::info!("{}: capturing operand streams ({} images)", spec.name, bs);
-        let fwd = eng.forward(&self.rt.params, &xs, bs, &qc, true);
+        let fwd = self.capture_streams(bs);
 
         let mut rng = Xoshiro256::new(self.pp.seed);
         let mut per_conv: Vec<Vec<LayerStats>> = (0..spec.n_conv).map(|_| Vec::new()).collect();
@@ -217,6 +228,29 @@ impl Pipeline {
         let ne = self.compute_network_energy(&dense);
         self.base_energy = Some(ne);
         Ok(self.base_energy.as_ref().unwrap())
+    }
+
+    /// Network-scale exact-vs-model validation (paper §3.2): capture
+    /// real operand streams for `images` inputs, stream every tile pass
+    /// of every conv layer through the exact gate-level
+    /// [`crate::systolic::TilePowerEngine`], and diff per-layer exact
+    /// energy against the statistical model's prediction on the same
+    /// streams.  Requires [`Self::profile`] (the model tables).
+    ///
+    /// Per-layer exact energies are bit-identical for any thread count;
+    /// the returned report is what experiment drivers log next to the
+    /// model-mode [`EnergyEvaluator`] numbers.
+    pub fn validate_exact(&mut self, images: usize) -> crate::energy::ValidationReport {
+        assert!(!self.tables.is_empty(), "profile() before validate_exact()");
+        let fwd = self.capture_streams(images);
+        self.maclib.specialize_all(self.pp.threads);
+        let exact = crate::systolic::network_power_exact(
+            &fwd.captures,
+            &self.maclib,
+            &self.cap_model,
+            self.pp.threads,
+        );
+        crate::energy::validate_captures(&fwd.captures, &self.tables, &exact)
     }
 
     /// Build a fresh [`EnergyEvaluator`] snapshotting the current energy

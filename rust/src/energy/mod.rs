@@ -1,11 +1,14 @@
 //! Energy models (paper §3): per-weight MAC energy under layer-specific
-//! transition statistics, the tile-level convolution-layer energy, and
-//! the memoized parallel evaluation engine ([`cache`]) the compression
-//! hot loops run against.
+//! transition statistics, the tile-level convolution-layer energy, the
+//! memoized parallel evaluation engine ([`cache`]) the compression hot
+//! loops run against, and the exact-vs-model validation plumbing
+//! ([`validate`]) that diffs the model against the gate-level tile-power
+//! engine on captured operand streams.
 
 pub mod cache;
 pub mod layer;
 pub mod macmodel;
+pub mod validate;
 
 pub use cache::{EnergyEvaluator, EvalLayer, TransitionCostCache};
 pub use layer::{LayerEnergy, NetworkEnergy};
@@ -13,3 +16,4 @@ pub use macmodel::{
     characterize_layer, characterize_layer_shared, transition_energy, uniform_weight_energy,
     WeightEnergyTable,
 };
+pub use validate::{validate_captures, LayerValidation, ValidationReport};

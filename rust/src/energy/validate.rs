@@ -1,0 +1,170 @@
+//! Exact-vs-model validation plumbing (paper §3.2).
+//!
+//! The statistical layer model ([`LayerEnergy`]) predicts conv energy
+//! from per-weight tables; the exact tile-power engine
+//! ([`crate::systolic::network_power_exact`]) measures it gate-by-gate
+//! on the same captured operand streams.  This module diffs the two per
+//! layer, which is the network-scale version of the paper's model
+//! validation (previously feasible only for cherry-picked single tiles).
+
+use crate::energy::layer::LayerEnergy;
+use crate::energy::macmodel::WeightEnergyTable;
+use crate::model::ConvCapture;
+use crate::systolic::ExactNetworkPower;
+use crate::util::json::Json;
+
+/// One conv layer's exact/model comparison.
+#[derive(Clone, Debug)]
+pub struct LayerValidation {
+    pub conv_idx: usize,
+    /// Exact gate-level energy (J) over the layer's captured streams.
+    pub exact_j: f64,
+    /// Model-mode prediction (J) on the same streams (same M, K, N and
+    /// weight codes as each capture).
+    pub model_j: f64,
+}
+
+impl LayerValidation {
+    /// model / exact — the paper's validation tracks this within a small
+    /// constant factor.
+    pub fn ratio(&self) -> f64 {
+        if self.exact_j > 0.0 {
+            self.model_j / self.exact_j
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Per-layer exact-vs-model report, ascending `conv_idx`.
+#[derive(Clone, Debug, Default)]
+pub struct ValidationReport {
+    pub layers: Vec<LayerValidation>,
+}
+
+impl ValidationReport {
+    /// Largest spread of model/exact ratios across layers (1.0 = the
+    /// model mis-ranks nothing; the schedule only needs *relative*
+    /// layer energies to order its work).
+    pub fn ratio_spread(&self) -> f64 {
+        let mut lo = f64::MAX;
+        let mut hi = 0.0f64;
+        for l in &self.layers {
+            let r = l.ratio();
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        if self.layers.is_empty() || lo <= 0.0 {
+            return f64::INFINITY;
+        }
+        hi / lo
+    }
+
+    /// Machine-readable form for reports / golden harness.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "layers",
+            Json::arr(self.layers.iter().map(|l| {
+                Json::obj(vec![
+                    ("conv_idx", Json::num(l.conv_idx as f64)),
+                    ("exact_j", Json::num(l.exact_j)),
+                    ("model_j", Json::num(l.model_j)),
+                ])
+            })),
+        )])
+    }
+}
+
+/// Diff an exact engine run against the model's prediction on the same
+/// captures.  `tables` is indexed by `conv_idx` (the coordinator's
+/// layout).  Captures sharing a `conv_idx` accumulate into one entry, in
+/// capture order, mirroring [`crate::systolic::network_power_exact`].
+pub fn validate_captures(
+    captures: &[ConvCapture],
+    tables: &[WeightEnergyTable],
+    exact: &ExactNetworkPower,
+) -> ValidationReport {
+    let mut layers: Vec<LayerValidation> = Vec::new();
+    for cap in captures {
+        let le = LayerEnergy {
+            conv_idx: cap.conv_idx,
+            m: cap.m,
+            k: cap.k,
+            n: cap.n,
+            table: tables[cap.conv_idx].clone(),
+        };
+        let e = le.energy_of_codes(&cap.w_codes);
+        if let Some(pos) = layers.iter().position(|l| l.conv_idx == cap.conv_idx) {
+            layers[pos].model_j += e;
+        } else {
+            layers.push(LayerValidation {
+                conv_idx: cap.conv_idx,
+                exact_j: 0.0,
+                model_j: e,
+            });
+        }
+    }
+    for l in &mut layers {
+        if let Some(x) = exact.layers.iter().find(|x| x.conv_idx == l.conv_idx) {
+            l.exact_j = x.energy_j;
+        }
+    }
+    layers.sort_by_key(|l| l.conv_idx);
+    ValidationReport { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::ExactLayerPower;
+
+    fn table() -> WeightEnergyTable {
+        crate::testutil::linear_energy_table(1e-15)
+    }
+
+    #[test]
+    fn report_accumulates_and_sorts() {
+        let caps: Vec<ConvCapture> = [1usize, 0, 1]
+            .iter()
+            .map(|&ci| ConvCapture {
+                conv_idx: ci,
+                m: 4,
+                k: 3,
+                n: 2,
+                x_codes: vec![0i8; 12],
+                w_codes: vec![5i8; 6],
+                s_act: 1.0,
+                s_w: 1.0,
+            })
+            .collect();
+        let exact = ExactNetworkPower {
+            layers: vec![
+                ExactLayerPower {
+                    conv_idx: 0,
+                    energy_j: 1e-12,
+                    mac_steps: 10,
+                    columns_total: 2,
+                    columns_unique: 1,
+                },
+                ExactLayerPower {
+                    conv_idx: 1,
+                    energy_j: 2e-12,
+                    mac_steps: 20,
+                    columns_total: 4,
+                    columns_unique: 2,
+                },
+            ],
+        };
+        let rep = validate_captures(&caps, &[table(), table()], &exact);
+        assert_eq!(rep.layers.len(), 2);
+        assert_eq!(rep.layers[0].conv_idx, 0);
+        assert_eq!(rep.layers[1].conv_idx, 1);
+        // conv 1 had two captures: model energy doubles conv 0's.
+        assert!((rep.layers[1].model_j / rep.layers[0].model_j - 2.0).abs() < 1e-12);
+        assert_eq!(rep.layers[0].exact_j, 1e-12);
+        assert!(rep.layers[0].ratio() > 0.0);
+        assert!(rep.ratio_spread() >= 1.0);
+        let js = format!("{}", rep.to_json());
+        assert!(js.contains("exact_j"));
+    }
+}

@@ -16,4 +16,4 @@ pub mod sim;
 pub use netlist::{GateKind, NetBuilder, Netlist, Sig};
 pub use optimize::const_prop;
 pub use power::{CapModel, PowerCtx, PowerReport};
-pub use sim::TraceSim;
+pub use sim::{transpose64, EvalSchedule, TraceSim};

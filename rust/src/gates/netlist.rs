@@ -87,6 +87,22 @@ impl Netlist {
             .count()
     }
 
+    /// Topological level of every node: inputs and constants at level 0,
+    /// every gate one past its deepest operand.  Nodes of one level are
+    /// mutually independent, which is what lets the levelized evaluation
+    /// schedule ([`crate::gates::EvalSchedule`]) regroup gates by kind.
+    pub fn levels(&self) -> Vec<u32> {
+        let mut lv = vec![0u32; self.len()];
+        for i in 0..self.len() {
+            lv[i] = match GateKind::from_u8(self.kinds[i]) {
+                GateKind::Input | GateKind::Const => 0,
+                GateKind::Buf | GateKind::Not => lv[self.a[i] as usize] + 1,
+                _ => lv[self.a[i] as usize].max(lv[self.b[i] as usize]) + 1,
+            };
+        }
+        lv
+    }
+
     /// Fanout of every node (number of gate operand references).
     pub fn fanouts(&self) -> Vec<u32> {
         let mut fo = vec![0u32; self.len()];
@@ -364,6 +380,35 @@ mod tests {
                 assert_eq!(got, (x + y) & 0xF);
             }
         }
+    }
+
+    #[test]
+    fn levels_respect_structure() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.input();
+        let c = b.input();
+        let (s, co) = b.full_adder(x, y, c);
+        let nl = b.finish(vec![s, co], vec![]);
+        let lv = nl.levels();
+        // Inputs at level 0; every gate strictly above its operands.
+        for &i in &nl.inputs {
+            assert_eq!(lv[i as usize], 0);
+        }
+        for i in 0..nl.len() {
+            match GateKind::from_u8(nl.kinds[i]) {
+                GateKind::Input | GateKind::Const => {}
+                GateKind::Buf | GateKind::Not => {
+                    assert!(lv[i] > lv[nl.a[i] as usize]);
+                }
+                _ => {
+                    assert!(lv[i] > lv[nl.a[i] as usize]);
+                    assert!(lv[i] > lv[nl.b[i] as usize]);
+                }
+            }
+        }
+        // full adder: sum = xor(xor(x,y), c) sits at level 2.
+        assert_eq!(lv[nl.outputs[0] as usize], 2);
     }
 
     #[test]

@@ -95,23 +95,31 @@ pub struct PowerCtx {
 impl PowerCtx {
     /// Fold a finished simulation into a [`PowerReport`].
     pub fn report(&self, sim: &TraceSim) -> PowerReport {
-        debug_assert_eq!(self.caps_j.len(), sim.toggles.len());
+        self.report_raw(&sim.toggles, sim.steps)
+    }
+
+    /// Fold raw per-node toggle counts (e.g. merged across workers by
+    /// the parallel tile-power engine) into a [`PowerReport`].  The
+    /// node-order summation is fixed, so identical toggle vectors give
+    /// bit-identical energies.
+    pub fn report_raw(&self, toggles: &[u64], steps: u64) -> PowerReport {
+        debug_assert_eq!(self.caps_j.len(), toggles.len());
         let mut comb = 0.0f64;
         let mut seq = 0.0f64;
         for i in 0..self.caps_j.len() {
-            let e = self.caps_j[i] * sim.toggles[i] as f64;
+            let e = self.caps_j[i] * toggles[i] as f64;
             if self.is_ff[i] {
                 seq += e;
             } else {
                 comb += e;
             }
         }
-        let clk = sim.steps as f64 * self.e_clk_j;
+        let clk = steps as f64 * self.e_clk_j;
         PowerReport {
             energy_j: comb + seq + clk,
             comb_j: comb,
             seq_j: seq + clk,
-            cycles: sim.steps,
+            cycles: steps,
         }
     }
 }

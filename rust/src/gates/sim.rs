@@ -6,11 +6,119 @@
 //! `popcount(v ^ (v << 1))` per node per word, with the previous word's
 //! last lane carried across the boundary.
 //!
+//! Two evaluation paths produce bit-identical toggles:
+//!
+//! * [`TraceSim::run_chunk`] — the reference path: walk nodes in index
+//!   (topological) order with one kind-dispatch per gate.
+//! * [`TraceSim::run_chunk_scheduled`] — the levelized SoA fast path
+//!   used by the exact tile-power engine: an [`EvalSchedule`] groups
+//!   gates into kind-homogeneous runs ordered by topological level, so
+//!   the inner loop is one branch per *run* instead of one per gate.
+//!
+//! [`transpose64`] (Hacker's Delight §7-3) converts lane-major operand
+//! words into the simulator's bit-plane layout in ~6·64 ops, replacing
+//! per-lane bit-extraction loops in hot packers.
+//!
 //! Zero-delay (functional) toggles ignore glitching; DESIGN.md §5 absorbs
 //! the glitch factor into the capacitance constants, which is standard
 //! practice for activity-based power estimation.
 
 use super::netlist::{GateKind, Netlist};
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight §7-3, widened
+/// to 64 lanes): `out[r]` bit `c` == `in[c]` bit `r`.  An involution.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j: usize = 32;
+    let mut m: u64 = 0xFFFF_FFFF_0000_0000;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] << j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t >> j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        if j != 0 {
+            m ^= m >> j;
+        }
+    }
+}
+
+/// Levelized, kind-grouped evaluation schedule for one netlist.
+///
+/// Gates are ordered by topological level (inputs/consts at level 0;
+/// see [`Netlist::levels`]) and, within a level, by kind.  Any order
+/// that respects levels is a valid evaluation order, so sorting by kind
+/// creates long kind-homogeneous runs the simulator can execute with a
+/// single dispatch each — the struct-of-arrays (`dst`/`a`/`b`) flat
+/// buffers are walked run-by-run into the shared value vector.
+///
+/// Build once per netlist (the tile-power engine builds one per
+/// weight-specialized MAC) and share read-only across threads.
+#[derive(Clone, Debug)]
+pub struct EvalSchedule {
+    /// Kind-homogeneous runs: (gate kind, start, end) into the flat
+    /// arrays below.  Executing runs in order evaluates every non-input
+    /// node in a level-respecting order.
+    runs: Vec<(u8, u32, u32)>,
+    dst: Vec<u32>,
+    a: Vec<u32>,
+    b: Vec<u32>,
+    /// Primary input node indices (testbench order), copied from the
+    /// netlist so the scheduled path needs no netlist at run time.
+    inputs: Vec<u32>,
+    n_nodes: usize,
+}
+
+impl EvalSchedule {
+    pub fn new(nl: &Netlist) -> Self {
+        let levels = nl.levels();
+        // Every non-input node, ordered by (level, kind, index).  The
+        // order is globally topological: a gate's operands live at
+        // strictly lower levels, hence strictly earlier in the order.
+        let mut order: Vec<u32> = (0..nl.len() as u32)
+            .filter(|&i| nl.kinds[i as usize] != GateKind::Input as u8)
+            .collect();
+        order.sort_by_key(|&i| (levels[i as usize], nl.kinds[i as usize], i));
+
+        let mut runs: Vec<(u8, u32, u32)> = Vec::new();
+        let mut dst = Vec::with_capacity(order.len());
+        let mut a = Vec::with_capacity(order.len());
+        let mut b = Vec::with_capacity(order.len());
+        for &i in &order {
+            let iu = i as usize;
+            dst.push(i);
+            a.push(nl.a[iu]);
+            b.push(nl.b[iu]);
+            let end = dst.len() as u32;
+            let extend = matches!(runs.last(), Some(r) if r.0 == nl.kinds[iu]);
+            if extend {
+                runs.last_mut().expect("run exists").2 = end;
+            } else {
+                runs.push((nl.kinds[iu], end - 1, end));
+            }
+        }
+        Self {
+            runs,
+            dst,
+            a,
+            b,
+            inputs: nl.inputs.clone(),
+            n_nodes: nl.len(),
+        }
+    }
+
+    /// Primary input count (testbench word count per chunk).
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Number of kind-homogeneous runs (observability / tests).
+    pub fn n_runs(&self) -> usize {
+        self.runs.len()
+    }
+}
 
 /// Reusable simulation state (scratch buffers sized to one netlist).
 pub struct TraceSim {
@@ -18,12 +126,13 @@ pub struct TraceSim {
     vals: Vec<u64>,
     /// Per-node toggle accumulators.
     pub toggles: Vec<u64>,
-    /// Last lane of the previous chunk per node (for cross-chunk toggles);
-    /// u64::MAX means "no previous step yet".
+    /// Last lane of the previous chunk per node (for cross-chunk toggles).
     prev_bit: Vec<u8>,
     first_chunk: bool,
     /// Total trace steps simulated since the last `reset`.
     pub steps: u64,
+    /// Toggle/step accounting multiplicity (see [`Self::set_multiplicity`]).
+    mult: u64,
 }
 
 impl TraceSim {
@@ -34,6 +143,7 @@ impl TraceSim {
             prev_bit: vec![0; nl.len()],
             first_chunk: true,
             steps: 0,
+            mult: 1,
         }
     }
 
@@ -41,6 +151,7 @@ impl TraceSim {
         self.toggles.iter_mut().for_each(|t| *t = 0);
         self.first_chunk = true;
         self.steps = 0;
+        self.mult = 1;
     }
 
     /// Start a new independent trace *segment* while keeping accumulated
@@ -52,15 +163,19 @@ impl TraceSim {
         self.first_chunk = true;
     }
 
-    /// Evaluate one chunk of up to 64 trace steps.
-    ///
-    /// `input_words[i]` packs the time series of primary input `i`
-    /// (testbench order): bit `t` = value at step `t`.  `n_steps` gives
-    /// how many low lanes are valid.  Toggle counts (including the
-    /// transition from the previous chunk's last step) are accumulated.
-    pub fn run_chunk(&mut self, nl: &Netlist, input_words: &[u64], n_steps: u32) {
+    /// Accounting multiplicity for subsequent chunks: toggle counts and
+    /// steps are scaled by `m`.  Toggle counting is linear in identical
+    /// trace segments, so a deduplicated segment simulated once and
+    /// accounted `m` times is *exact*, not approximate — this is what
+    /// lets the tile-power engine collapse repeated column streams.
+    pub fn set_multiplicity(&mut self, m: u64) {
+        assert!(m >= 1, "multiplicity must be >= 1");
+        self.mult = m;
+    }
+
+    /// Compute node values for one chunk without touching toggle state.
+    fn eval_values(&mut self, nl: &Netlist, input_words: &[u64]) {
         assert_eq!(input_words.len(), nl.inputs.len());
-        assert!(n_steps >= 1 && n_steps <= 64);
         let vals = &mut self.vals;
         // Drive inputs.
         for (w, &node) in input_words.iter().zip(&nl.inputs) {
@@ -95,7 +210,11 @@ impl TraceSim {
                 GateKind::Input => unreachable!(),
             };
         }
-        // Toggle accounting.
+    }
+
+    /// Fold the current chunk's values into the toggle accumulators
+    /// (shared by both evaluation paths, so they are bit-identical).
+    fn account_toggles(&mut self, n_steps: u32) {
         let valid_mask: u64 = if n_steps == 64 {
             !0
         } else {
@@ -103,30 +222,121 @@ impl TraceSim {
         };
         // Mask of transition positions t-1 -> t for t in 1..n_steps.
         let intra_mask = valid_mask & !1u64;
-        for i in 0..nl.len() {
-            let v = vals[i] & valid_mask;
+        let first = self.first_chunk;
+        let mult = self.mult;
+        for i in 0..self.vals.len() {
+            let v = self.vals[i] & valid_mask;
             let shifted = v << 1;
             let mut trans = (v ^ shifted) & intra_mask;
-            if !self.first_chunk {
+            if !first {
                 // Boundary transition: previous chunk's last step -> lane 0.
                 let pb = self.prev_bit[i] as u64;
                 trans |= (v ^ pb) & 1;
             }
-            self.toggles[i] += trans.count_ones() as u64;
-            self.prev_bit[i] = ((vals[i] >> (n_steps - 1)) & 1) as u8;
+            self.toggles[i] += trans.count_ones() as u64 * mult;
+            self.prev_bit[i] = ((self.vals[i] >> (n_steps - 1)) & 1) as u8;
         }
         self.first_chunk = false;
-        self.steps += n_steps as u64;
+        self.steps += n_steps as u64 * mult;
+    }
+
+    /// Evaluate one chunk of up to 64 trace steps.
+    ///
+    /// `input_words[i]` packs the time series of primary input `i`
+    /// (testbench order): bit `t` = value at step `t`.  `n_steps` gives
+    /// how many low lanes are valid.  Toggle counts (including the
+    /// transition from the previous chunk's last step) are accumulated.
+    pub fn run_chunk(&mut self, nl: &Netlist, input_words: &[u64], n_steps: u32) {
+        assert!(n_steps >= 1 && n_steps <= 64);
+        self.eval_values(nl, input_words);
+        self.account_toggles(n_steps);
+    }
+
+    /// Evaluate one chunk through a levelized [`EvalSchedule`] — the
+    /// struct-of-arrays fast path of the exact tile-power engine.
+    /// Bit-identical in values, toggles and steps to [`Self::run_chunk`]
+    /// on the schedule's netlist (property-tested below).
+    pub fn run_chunk_scheduled(
+        &mut self,
+        sched: &EvalSchedule,
+        input_words: &[u64],
+        n_steps: u32,
+    ) {
+        assert!(n_steps >= 1 && n_steps <= 64);
+        assert_eq!(input_words.len(), sched.inputs.len());
+        assert_eq!(self.vals.len(), sched.n_nodes);
+        let vals = &mut self.vals;
+        for (w, &node) in input_words.iter().zip(&sched.inputs) {
+            vals[node as usize] = *w;
+        }
+        let dst = &sched.dst;
+        let aops = &sched.a;
+        let bops = &sched.b;
+        for &(kind, start, end) in &sched.runs {
+            let (s, e) = (start as usize, end as usize);
+            match GateKind::from_u8(kind) {
+                GateKind::Const => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = if aops[j] != 0 { !0u64 } else { 0u64 };
+                    }
+                }
+                GateKind::Buf => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = vals[aops[j] as usize];
+                    }
+                }
+                GateKind::Not => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = !vals[aops[j] as usize];
+                    }
+                }
+                GateKind::And => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = vals[aops[j] as usize] & vals[bops[j] as usize];
+                    }
+                }
+                GateKind::Or => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = vals[aops[j] as usize] | vals[bops[j] as usize];
+                    }
+                }
+                GateKind::Nand => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = !(vals[aops[j] as usize] & vals[bops[j] as usize]);
+                    }
+                }
+                GateKind::Nor => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = !(vals[aops[j] as usize] | vals[bops[j] as usize]);
+                    }
+                }
+                GateKind::Xor => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = vals[aops[j] as usize] ^ vals[bops[j] as usize];
+                    }
+                }
+                GateKind::Xnor => {
+                    for j in s..e {
+                        vals[dst[j] as usize] = !(vals[aops[j] as usize] ^ vals[bops[j] as usize]);
+                    }
+                }
+                GateKind::Input => unreachable!("inputs are never scheduled"),
+            }
+        }
+        self.account_toggles(n_steps);
     }
 
     /// Run a full trace given per-step input bit vectors (LSB-first input
     /// order matching `nl.inputs`).  Convenience wrapper over `run_chunk`.
     pub fn run_trace(&mut self, nl: &Netlist, steps: &[Vec<bool>]) {
         let n_in = nl.inputs.len();
+        // One packing buffer reused across chunks (hot loops used to
+        // re-allocate it per 64-step chunk).
+        let mut words = vec![0u64; n_in];
         let mut t = 0;
         while t < steps.len() {
             let chunk = (steps.len() - t).min(64);
-            let mut words = vec![0u64; n_in];
+            words.iter_mut().for_each(|w| *w = 0);
             for (lane, step) in steps[t..t + chunk].iter().enumerate() {
                 assert_eq!(step.len(), n_in);
                 for (i, &bit) in step.iter().enumerate() {
@@ -140,13 +350,15 @@ impl TraceSim {
         }
     }
 
-    /// Evaluate a single input vector and return output bit values
-    /// (functional check; does not disturb toggle state semantics because
-    /// it resets first).
+    /// Evaluate a single input vector and return output bit values — a
+    /// purely functional probe.  Only the value scratch is written:
+    /// toggle counts, step totals and the chunk-boundary carry survive,
+    /// so probes can interleave with an ongoing toggle-counting trace
+    /// (regression-tested below; this used to `reset()` and silently
+    /// clobber accumulated toggle state).
     pub fn eval_single(&mut self, nl: &Netlist, inputs: &[bool]) -> Vec<bool> {
-        self.reset();
         let words: Vec<u64> = inputs.iter().map(|&b| if b { 1 } else { 0 }).collect();
-        self.run_chunk(nl, &words, 1);
+        self.eval_values(nl, &words);
         nl.outputs
             .iter()
             .map(|&o| self.vals[o as usize] & 1 != 0)
@@ -239,6 +451,111 @@ mod tests {
             sim_b.run_trace_continue(&nl, chunk);
         }
         assert_eq!(sim_a.toggles, sim_b.toggles);
+    }
+
+    /// The Hacker's-Delight transpose is a true (index, LSB-bit)
+    /// transpose and an involution.
+    #[test]
+    fn transpose64_matches_naive() {
+        let mut rng = crate::util::rng::Xoshiro256::new(77);
+        for _ in 0..4 {
+            let mut m = [0u64; 64];
+            for w in m.iter_mut() {
+                *w = rng.next_u64();
+            }
+            let mut t = m;
+            transpose64(&mut t);
+            for r in 0..64 {
+                for c in 0..64 {
+                    assert_eq!((t[r] >> c) & 1, (m[c] >> r) & 1, "({r},{c})");
+                }
+            }
+            let mut back = t;
+            transpose64(&mut back);
+            assert_eq!(back, m);
+        }
+    }
+
+    /// The levelized scheduled path is bit-identical to the topological
+    /// reference path: same values, toggles and steps, on a real MAC
+    /// netlist over randomly-chunked random traces.
+    #[test]
+    fn scheduled_path_bit_identical() {
+        let mac = crate::mac::build_mac();
+        let spec = crate::mac::specialize_mac(&mac, 91);
+        for nl in [&mac.netlist, &spec.netlist] {
+            let sched = EvalSchedule::new(nl);
+            assert!(sched.n_runs() > 0);
+            assert_eq!(sched.n_inputs(), nl.inputs.len());
+            let mut rng = crate::util::rng::Xoshiro256::new(123);
+            let mut sim_ref = TraceSim::new(nl);
+            let mut sim_lvl = TraceSim::new(nl);
+            let mut words = vec![0u64; nl.inputs.len()];
+            for round in 0..12 {
+                for w in words.iter_mut() {
+                    *w = rng.next_u64();
+                }
+                let n_steps = 1 + (rng.below(64) as u32);
+                if round == 6 {
+                    // Segment boundaries must behave identically too.
+                    sim_ref.new_segment();
+                    sim_lvl.new_segment();
+                }
+                sim_ref.run_chunk(nl, &words, n_steps);
+                sim_lvl.run_chunk_scheduled(&sched, &words, n_steps);
+                assert_eq!(
+                    sim_ref.outputs_at(nl, n_steps - 1),
+                    sim_lvl.outputs_at(nl, n_steps - 1),
+                    "round {round}"
+                );
+            }
+            assert_eq!(sim_ref.toggles, sim_lvl.toggles);
+            assert_eq!(sim_ref.steps, sim_lvl.steps);
+        }
+    }
+
+    /// Multiplicity-weighted accounting is exact: one segment at
+    /// multiplicity 2 equals the same segment simulated twice.
+    #[test]
+    fn multiplicity_scales_toggles_exactly() {
+        let mac = crate::mac::build_mac();
+        let nl = &mac.netlist;
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let steps: Vec<Vec<bool>> = (0..90)
+            .map(|_| (0..nl.inputs.len()).map(|_| rng.next_u64() & 1 != 0).collect())
+            .collect();
+        let mut sim_twice = TraceSim::new(nl);
+        sim_twice.run_trace_continue(nl, &steps);
+        sim_twice.new_segment();
+        sim_twice.run_trace_continue(nl, &steps);
+        let mut sim_mult = TraceSim::new(nl);
+        sim_mult.set_multiplicity(2);
+        sim_mult.run_trace_continue(nl, &steps);
+        assert_eq!(sim_twice.toggles, sim_mult.toggles);
+        assert_eq!(sim_twice.steps, sim_mult.steps);
+    }
+
+    /// `eval_single` is a pure functional probe: interleaving it with an
+    /// ongoing trace leaves toggle accounting untouched (it used to
+    /// `reset()`, losing all accumulated state).
+    #[test]
+    fn eval_single_preserves_toggle_state() {
+        let mut b = NetBuilder::new();
+        let x = b.input();
+        let y = b.not(x);
+        let nl = b.finish(vec![y], vec![]);
+        let steps: Vec<Vec<bool>> = (0..10).map(|t| vec![t % 2 == 1]).collect();
+        let mut sim_plain = TraceSim::new(&nl);
+        sim_plain.run_trace(&nl, &steps);
+
+        let mut sim_probed = TraceSim::new(&nl);
+        sim_probed.run_trace_continue(&nl, &steps[..5]);
+        let out = sim_probed.eval_single(&nl, &[true]);
+        assert!(!out[0], "probe itself must still be functionally correct");
+        sim_probed.run_trace_continue(&nl, &steps[5..]);
+
+        assert_eq!(sim_plain.toggles, sim_probed.toggles);
+        assert_eq!(sim_plain.steps, sim_probed.steps);
     }
 }
 

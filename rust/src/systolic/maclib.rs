@@ -55,6 +55,25 @@ impl MacLib {
         let missing: Vec<i32> = (-127i32..=127)
             .filter(|&c| self.cache[(c + 128) as usize].is_none())
             .collect();
+        self.build_missing(missing, threads);
+    }
+
+    /// Specialize exactly the codes appearing in `codes` (deduplicated)
+    /// that are still missing — the cheap alternative to
+    /// [`Self::specialize_all`] when only one tile's weights are needed
+    /// before handing a `&MacLib` to the exact tile-power path.
+    pub fn specialize_for(&mut self, codes: &[i8], threads: usize) {
+        let mut missing: Vec<i32> = codes
+            .iter()
+            .map(|&c| c as i32)
+            .filter(|&c| self.cache[(c + 128) as usize].is_none())
+            .collect();
+        missing.sort_unstable();
+        missing.dedup();
+        self.build_missing(missing, threads);
+    }
+
+    fn build_missing(&mut self, missing: Vec<i32>, threads: usize) {
         if missing.is_empty() {
             return;
         }
@@ -103,6 +122,16 @@ mod tests {
                 "code {c}"
             );
         }
+    }
+
+    #[test]
+    fn specialize_for_fills_only_requested() {
+        let mut lib = MacLib::new();
+        lib.specialize_for(&[3, -7, 3, 0], 2);
+        for c in [3i8, -7, 0] {
+            assert!(lib.get_cached(c).is_some(), "code {c} missing");
+        }
+        assert!(lib.get_cached(55).is_none());
     }
 
     #[test]

@@ -12,13 +12,20 @@
 //! * an **exact gate-level power mode** ([`tile_power_exact`]) that
 //!   drives every PE's specialized MAC netlist with its real operand
 //!   streams — the ground truth used to validate the statistical model
-//!   of [`crate::energy`].
+//!   of [`crate::energy`];
+//! * the **network-scale parallel engine** ([`power`]):
+//!   [`TilePowerEngine`] fans deduplicated column streams out over the
+//!   thread pool through a levelized evaluation schedule, and
+//!   [`network_power_exact`] streams every pass of every captured conv
+//!   layer — same ground truth, whole-network scale.
 
 pub mod maclib;
+pub mod power;
 
 use crate::gates::{CapModel, TraceSim};
 use crate::mac::unit::mac_ref;
 pub use maclib::MacLib;
+pub use power::{network_power_exact, ExactLayerPower, ExactNetworkPower, TilePowerEngine};
 
 /// Systolic array dimension.
 pub const TILE: usize = 64;
@@ -117,6 +124,16 @@ pub fn matmul_tiled(x_codes: &[i8], w_codes: &[i8], m: usize, k: usize, n: usize
 /// Exact gate-level energy of one tile pass (J): every PE's specialized
 /// netlist is driven with its true (activation, psum-in) streams.
 ///
+/// This is the **sequential reference**: single-threaded, per-gate
+/// topological evaluation, per-lane bit-plane packing.  The production
+/// path is [`TilePowerEngine::pass_power`] — column-parallel, levelized,
+/// deduplicated, and bit-identical to this function (property-tested in
+/// `rust/tests/exact_power.rs`).
+///
+/// `lib` must already hold every weight code of the tile
+/// ([`MacLib::specialize_all`] or [`MacLib::specialize_for`]); borrowing
+/// it shared is what lets callers fan many passes out over one library.
+///
 /// Returns (energy_joules, simulated_mac_steps).
 pub fn tile_power_exact(
     x_codes: &[i8],
@@ -124,7 +141,7 @@ pub fn tile_power_exact(
     k: usize,
     n: usize,
     pass: &Pass,
-    lib: &mut MacLib,
+    lib: &MacLib,
     cap: &CapModel,
 ) -> (f64, u64) {
     let mh = pass.mh;
@@ -132,9 +149,13 @@ pub fn tile_power_exact(
     // is reused across the up-to-4096 PEs of the pass, and the power
     // report is folded ONCE per weight at the end (toggle counts are
     // additive across trace segments) — building/reporting per PE
-    // dominated the profile before (EXPERIMENTS.md §Perf).
-    let mut state: std::collections::HashMap<i8, (crate::gates::PowerCtx, TraceSim, Vec<u64>)> =
-        std::collections::HashMap::new();
+    // dominated the profile before (EXPERIMENTS.md §Perf).  The state
+    // lives in a fixed 256-slot array indexed by weight code (+128):
+    // no hashing in the row loop, and the final fold walks ascending
+    // codes so the f64 energy total is reproducible run-to-run (the
+    // HashMap this replaces leaked its iteration order into the sum).
+    let mut state: Vec<Option<(crate::gates::PowerCtx, TraceSim, Vec<u64>)>> =
+        (0..256).map(|_| None).collect();
     // Column-major sweep: maintain psum-in streams incrementally.
     let mut psum_in = vec![0i32; mh];
     let mut act_stream = vec![0i32; mh];
@@ -145,8 +166,10 @@ pub fn tile_power_exact(
             for mi in 0..mh {
                 act_stream[mi] = x_codes[(pass.m0 + mi) * k + pass.k0 + r] as i32;
             }
-            let mac = lib.get(w);
-            let (_ctx, sim, words) = state.entry(w).or_insert_with(|| {
+            let mac = lib
+                .get_cached(w)
+                .expect("MacLib must be pre-specialized (specialize_all / specialize_for)");
+            let (_ctx, sim, words) = state[(w as i32 + 128) as usize].get_or_insert_with(|| {
                 let n_in = mac.netlist.inputs.len();
                 (
                     cap.ctx(&mac.netlist),
@@ -182,10 +205,10 @@ pub fn tile_power_exact(
             }
         }
     }
-    // Fold power once per distinct weight value.
+    // Fold power once per distinct weight value, in ascending code order.
     let mut total = 0.0f64;
     let mut steps = 0u64;
-    for (_w, (ctx, sim, _)) in &state {
+    for (ctx, sim, _) in state.iter().flatten() {
         let rep = ctx.report(sim);
         total += rep.energy_j;
         steps += rep.cycles;
@@ -258,10 +281,12 @@ mod tests {
         let w_zero = vec![0i8; k * n];
         let w_dense = rand_codes(k * n, 4, 1000);
         let mut lib = MacLib::new();
+        lib.specialize_for(&w_zero, 2);
+        lib.specialize_for(&w_dense, 2);
         let cap = CapModel::default();
         let pass = passes_of(m, k, n)[0];
-        let (e_zero, s1) = tile_power_exact(&x, &w_zero, k, n, &pass, &mut lib, &cap);
-        let (e_dense, s2) = tile_power_exact(&x, &w_dense, k, n, &pass, &mut lib, &cap);
+        let (e_zero, s1) = tile_power_exact(&x, &w_zero, k, n, &pass, &lib, &cap);
+        let (e_dense, s2) = tile_power_exact(&x, &w_dense, k, n, &pass, &lib, &cap);
         assert_eq!(s1, s2);
         assert!(e_zero > 0.0, "idle power must include clock energy");
         assert!(

@@ -58,6 +58,54 @@ where
     out.into_iter().map(Option::unwrap).collect()
 }
 
+/// Run `f(&mut state, i)` for every `i in 0..n` with **worker-local
+/// state**: each worker builds one `S` via `init` and threads it through
+/// every item it claims, then all worker states are returned (order
+/// unspecified — callers must merge with order-insensitive operations,
+/// e.g. integer adds).  This is the fork-join shape of the exact
+/// tile-power engine: per-thread simulation scratch accumulates toggle
+/// counts across work items and is folded once at the end.
+pub fn parallel_for_with<S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<S>
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        let mut state = init();
+        for i in 0..n {
+            f(&mut state, i);
+        }
+        return vec![state];
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                let init = &init;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        f(&mut state, i);
+                    }
+                    state
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
 struct SendPtr<T>(*mut T);
 // SAFETY: raw pointer shared across scoped threads; disjoint writes only
 // (see parallel_map).
@@ -87,5 +135,26 @@ mod tests {
     fn empty() {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn for_with_covers_every_item_once() {
+        // Each item's index lands in exactly one worker-local sum.
+        let states = parallel_for_with(100, 4, || 0u64, |s, i| *s += i as u64);
+        assert!(states.len() <= 4 && !states.is_empty());
+        assert_eq!(states.iter().sum::<u64>(), 4950);
+    }
+
+    #[test]
+    fn for_with_serial_preserves_order() {
+        let states = parallel_for_with(7, 1, Vec::<usize>::new, |s, i| s.push(i));
+        assert_eq!(states.len(), 1);
+        assert_eq!(states[0], vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn for_with_empty() {
+        let states = parallel_for_with(0, 4, || 1u32, |_s, _i| {});
+        assert_eq!(states, vec![1]);
     }
 }

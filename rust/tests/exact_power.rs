@@ -1,0 +1,121 @@
+//! Exact tile-power engine tests: the parallel levelized engine vs the
+//! sequential reference across random tiles, thread counts and ragged
+//! edge passes, plus the `--quick` exact-vs-model smoke check wired into
+//! `scripts/verify.sh`.
+
+use wsel::gates::CapModel;
+use wsel::model::ConvCapture;
+use wsel::systolic::{self, network_power_exact, MacLib, TilePowerEngine};
+use wsel::testutil::cases;
+use wsel::util::rng::Xoshiro256;
+use wsel::util::threadpool::default_threads;
+
+fn rand_codes(len: usize, rng: &mut Xoshiro256, zero_one_in: u64) -> Vec<i8> {
+    (0..len)
+        .map(|_| {
+            if rng.below(zero_one_in) == 0 {
+                0
+            } else {
+                rng.code() as i8
+            }
+        })
+        .collect()
+}
+
+/// Tentpole property: the column-parallel, levelized, deduplicated
+/// engine is bit-identical to the sequential `tile_power_exact`
+/// reference — same toggle-derived energy bits and the same MAC-step
+/// counts — across random tiles, ragged edges (mh/kh/nw < 64) and
+/// thread counts.
+#[test]
+fn prop_engine_bit_identical_to_sequential_reference() {
+    let mut lib = MacLib::new();
+    lib.specialize_all(default_threads());
+    let cap = CapModel::default();
+    let engine = TilePowerEngine::new(&lib, &cap);
+    cases(5, 0x711E, |g| {
+        let m = g.usize_in(1, 66);
+        let k = g.usize_in(1, 66);
+        let n = g.usize_in(1, 40);
+        let mut rng = Xoshiro256::new(g.rng.next_u64());
+        let x = rand_codes(m * k, &mut rng, 3);
+        let w = rand_codes(k * n, &mut rng, 2);
+        let passes = systolic::passes_of(m, k, n);
+        let pass = passes[g.usize_in(0, passes.len() - 1)];
+        let (e_ref, s_ref) = systolic::tile_power_exact(&x, &w, k, n, &pass, &lib, &cap);
+        for threads in [1usize, 2, 5] {
+            let (e, s) = engine.pass_power(&x, &w, k, n, &pass, threads);
+            assert_eq!(s, s_ref, "steps at {threads} threads");
+            assert_eq!(
+                e.to_bits(),
+                e_ref.to_bits(),
+                "energy at {threads} threads: {e} vs {e_ref} (pass {pass:?})"
+            );
+        }
+    });
+}
+
+/// The fully-ragged corner: a 1×1×1 trailing pass.
+#[test]
+fn ragged_trailing_pass_exact() {
+    let (m, k, n) = (65usize, 65, 65);
+    let mut rng = Xoshiro256::new(9);
+    let x = rand_codes(m * k, &mut rng, 2);
+    let w = rand_codes(k * n, &mut rng, 2);
+    let mut lib = MacLib::new();
+    lib.specialize_for(&w, default_threads());
+    let cap = CapModel::default();
+    let engine = TilePowerEngine::new(&lib, &cap);
+    let passes = systolic::passes_of(m, k, n);
+    let last = passes[passes.len() - 1];
+    assert_eq!((last.mh, last.kh, last.nw), (1, 1, 1));
+    let (e_ref, s_ref) = systolic::tile_power_exact(&x, &w, k, n, &last, &lib, &cap);
+    let (e, s) = engine.pass_power(&x, &w, k, n, &last, 3);
+    assert_eq!((e.to_bits(), s), (e_ref.to_bits(), s_ref));
+    assert_eq!(s, 1, "1x1x1 pass is a single MAC step");
+}
+
+/// Exact-vs-model validation smoke over a synthetic capture: the
+/// characterized statistical table must track the exact engine within a
+/// small constant factor.  `scripts/verify.sh --quick` runs exactly
+/// this test as the fast ground-truth regression check.
+#[test]
+fn quick_exact_vs_model() {
+    let mut rng = Xoshiro256::new(41);
+    let (m, k, n) = (96usize, 70, 6);
+    let capture = ConvCapture {
+        conv_idx: 0,
+        m,
+        k,
+        n,
+        x_codes: rand_codes(m * k, &mut rng, 2),
+        w_codes: rand_codes(k * n, &mut rng, 4),
+        s_act: 0.01,
+        s_w: 0.01,
+    };
+    let stats = wsel::stats::collect(&capture, &mut rng);
+    let threads = default_threads();
+    let mut lib = MacLib::new();
+    lib.specialize_all(threads);
+    let cm = CapModel::default();
+    let table = wsel::energy::characterize_layer_shared(&stats, &lib, &cm, 128, 9, threads);
+
+    let exact = network_power_exact(std::slice::from_ref(&capture), &lib, &cm, threads);
+    assert_eq!(exact.layers.len(), 1);
+    assert!(exact.layers[0].energy_j > 0.0);
+    assert!(exact.layers[0].columns_unique <= exact.layers[0].columns_total);
+
+    let report = wsel::energy::validate_captures(
+        std::slice::from_ref(&capture),
+        std::slice::from_ref(&table),
+        &exact,
+    );
+    assert_eq!(report.layers.len(), 1);
+    let l = &report.layers[0];
+    assert!(l.exact_j > 0.0 && l.model_j > 0.0);
+    let ratio = l.ratio();
+    assert!(
+        (0.05..20.0).contains(&ratio),
+        "statistical model should track the exact engine: model/exact = {ratio:.3}"
+    );
+}

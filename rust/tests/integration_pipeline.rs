@@ -153,6 +153,7 @@ fn model_mode_tracks_exact_tile_power() {
 
     let cm = p.cap_model;
     let mut lib = wsel::systolic::MacLib::new();
+    lib.specialize_for(&cap.w_codes, p.pp.threads);
     let pass = wsel::systolic::passes_of(cap.m, cap.k, cap.n)[0];
     let (e_exact, _steps) = wsel::systolic::tile_power_exact(
         &cap.x_codes,
@@ -160,7 +161,7 @@ fn model_mode_tracks_exact_tile_power() {
         cap.k,
         cap.n,
         &pass,
-        &mut lib,
+        &lib,
         &cm,
     );
     // Model: same weight positions, per-cycle energies from the table.
@@ -177,6 +178,48 @@ fn model_mode_tracks_exact_tile_power() {
         (0.3..3.0).contains(&ratio),
         "statistical model should track exact tile power: ratio {ratio:.3}"
     );
+}
+
+/// Network-scale ground truth over the quickstart model's captures:
+/// `validate_exact` streams every pass of every conv layer through the
+/// parallel tile-power engine and the per-layer exact energies must
+/// (a) be positive, (b) track the statistical model within a small
+/// constant factor, and (c) be bit-identical across thread counts.
+#[test]
+fn network_exact_power_quickstart() {
+    let Some(dir) = artifacts() else { return };
+    let mut p = quick_pipeline(&dir);
+    p.train_baseline().expect("train");
+    p.profile().expect("profile");
+
+    let rep = p.validate_exact(2);
+    assert_eq!(rep.layers.len(), p.rt.spec.n_conv);
+    for l in &rep.layers {
+        assert!(l.exact_j > 0.0, "conv{} exact energy", l.conv_idx);
+        let ratio = l.ratio();
+        assert!(
+            (0.05..20.0).contains(&ratio),
+            "conv{}: model/exact = {ratio:.3}",
+            l.conv_idx
+        );
+    }
+
+    // Thread-count invariance at the pipeline level.
+    let mut p1 = quick_pipeline(&dir);
+    p1.pp.threads = 1;
+    p1.train_baseline().expect("train");
+    p1.profile().expect("profile");
+    let rep1 = p1.validate_exact(2);
+    assert_eq!(rep.layers.len(), rep1.layers.len());
+    for (a, b) in rep.layers.iter().zip(&rep1.layers) {
+        assert_eq!(a.conv_idx, b.conv_idx);
+        assert_eq!(
+            a.exact_j.to_bits(),
+            b.exact_j.to_bits(),
+            "conv{} exact energy must not depend on thread count",
+            a.conv_idx
+        );
+    }
 }
 
 /// Determinism of the whole compression decision: same seeds -> same

@@ -2,16 +2,32 @@
 # Tier-1 verification in one command (see ROADMAP.md):
 #   cargo build --release && cargo test -q, plus clippy when available.
 #
-# Usage: scripts/verify.sh
+# Usage: scripts/verify.sh [--quick]
+#   --quick  additionally run the exact-vs-model validation smoke check
+#            (release mode: the gate-level tile-power engine vs the
+#            statistical energy model on a synthetic capture)
 # Env:   WSEL_BLESS=1 scripts/verify.sh   # re-bless golden snapshots
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+QUICK=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) QUICK=1 ;;
+        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+    esac
+done
 
 echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [ "$QUICK" -eq 1 ]; then
+    echo "== exact-vs-model validation smoke (--quick) =="
+    cargo test --release -q --test exact_power quick_exact_vs_model
+fi
 
 echo "== cargo clippy (soft-fail if unavailable) =="
 if cargo clippy --version >/dev/null 2>&1; then
