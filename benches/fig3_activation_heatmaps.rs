@@ -55,13 +55,16 @@ fn main() {
         "post-ReLU layer must be sparser: {zf0:.3} vs {zf1:.3}"
     );
 
-    // Perf: stats collection throughput.
+    // Perf: stats collection throughput (captures via the parallel
+    // executor + materializing sink).
     let spec = p.rt.spec.clone();
-    let eng = wsel::model::Engine::new(&spec);
     let qc = wsel::model::QuantConfig::quantized(&spec, p.rt.act_scales.clone());
+    let threads = wsel::util::threadpool::default_threads();
+    let eng = wsel::model::ParallelEngine::new(&spec, &p.rt.params, &qc, threads);
     let (xs, _) = wsel::data::batch(7, wsel::data::Split::Train, 0, 4, 10);
-    let fwd = eng.forward(&p.rt.params, &xs, 4, &qc, true);
-    let cap0 = fwd.captures[0].clone();
+    let mut buf = wsel::model::CaptureBuffer::new();
+    eng.forward(&xs, 4, &mut buf);
+    let cap0 = buf.into_captures().swap_remove(0);
     let mut rng = wsel::util::rng::Xoshiro256::new(5);
     let m = bench("fig3/collect_layer_stats_conv0", 1, 5, || {
         wsel::bench::black_box(wsel::stats::collect(&cap0, &mut rng));

@@ -34,6 +34,42 @@ fn synth_table() -> WeightEnergyTable {
     wsel::testutil::linear_energy_table(1e-15)
 }
 
+/// Artifact-free conv stack for the forward before/after bench
+/// (LeNet-ish depth at CIFAR input dims).
+const FWD_BENCH_MANIFEST: &str = r#"{
+  "model": "fwdbench", "n_classes": 10, "input": [32, 32, 3],
+  "ops": [
+    {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+     "q_idx": 0, "cin": 3, "cout": 16, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 32, "win": 32, "hout": 32, "wout": 32},
+    {"op": "maxpool2"},
+    {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+     "q_idx": 1, "cin": 16, "cout": 32, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 16, "win": 16, "hout": 16, "wout": 16},
+    {"op": "maxpool2"},
+    {"op": "conv", "name": "conv2", "w": 4, "b": 5, "conv_idx": 2,
+     "q_idx": 2, "cin": 32, "cout": 32, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 8, "win": 8, "hout": 8, "wout": 8},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc0", "w": 6, "b": 7, "q_idx": 3,
+     "din": 32, "dout": 10, "relu": false}
+  ],
+  "params": [
+    {"name": "conv0.w", "shape": [16, 3, 3, 3], "kind": "conv_w"},
+    {"name": "conv0.b", "shape": [16], "kind": "bias"},
+    {"name": "conv1.w", "shape": [32, 16, 3, 3], "kind": "conv_w"},
+    {"name": "conv1.b", "shape": [32], "kind": "bias"},
+    {"name": "conv2.w", "shape": [32, 32, 3, 3], "kind": "conv_w"},
+    {"name": "conv2.b", "shape": [32], "kind": "bias"},
+    {"name": "fc0.w", "shape": [10, 32], "kind": "fc_w"},
+    {"name": "fc0.b", "shape": [10], "kind": "bias"}
+  ],
+  "n_conv": 3, "n_q": 4, "kset": 32, "qmax": 127, "seed": 1,
+  "set_sentinel": 1e9, "momentum": 0.9,
+  "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+  "pallas_eval": false
+}"#;
+
 /// Synthetic conv layers with the given (M, K, N) im2col dims and
 /// random float weights — stand-ins for the table1/table3 workloads
 /// when no artifacts are built.
@@ -358,6 +394,53 @@ fn main() {
             "      -> warm first-order table vs full characterization: {:.1}x",
             m_char.median_ns as f64 / m_warm.median_ns.max(1) as f64
         );
+    }
+
+    // ---- int8 forward: scalar reference vs blocked parallel executor ------
+    // Artifact-free synthetic conv stack.  Before: the monolithic scalar
+    // engine (per-call weight quantization, unblocked loops, single
+    // thread).  After: ParallelEngine — IR-lowered plan with
+    // pre-quantized blocked weight tiles, cache-blocked i32 GEMM,
+    // per-image fan-out over the pool.  Must be bit-identical AND >= 2x
+    // at 4+ threads.
+    {
+        let spec = wsel::model::ModelSpec::from_manifest_str(FWD_BENCH_MANIFEST)
+            .expect("bench manifest");
+        let p = wsel::model::Params::random(&spec, 3);
+        let qc = wsel::model::QuantConfig::quantized(&spec, vec![0.02; spec.n_q]);
+        let scalar = wsel::model::Engine::new(&spec);
+        let mut rng = Xoshiro256::new(11);
+        let batch = 8usize;
+        let xs: Vec<f32> = (0..batch * 32 * 32 * 3)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        let m_scalar = bench("perf/forward_scalar_b8", 1, 5, || {
+            black_box(scalar.forward(&p.tensors, &xs, batch, &qc, false));
+        });
+        m_scalar.report_throughput(batch as f64, "images");
+        let par = wsel::model::ParallelEngine::new(&spec, &p.tensors, &qc, threads);
+        let m_par = bench(&format!("perf/forward_parallel_t{threads}_b8"), 1, 5, || {
+            black_box(par.forward_plain(&xs, batch));
+        });
+        m_par.report_throughput(batch as f64, "images");
+        let fwd_speedup = m_scalar.median_ns as f64 / m_par.median_ns.max(1) as f64;
+        println!("      -> parallel forward speedup vs scalar: {fwd_speedup:.1}x");
+        let want = scalar.forward(&p.tensors, &xs, batch, &qc, false);
+        let got = par.forward_plain(&xs, batch);
+        assert_eq!(
+            want.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "parallel executor must be bit-identical to the scalar reference"
+        );
+        // Acceptance gate: >= 2x forward throughput at 4+ threads.
+        if threads >= 4 {
+            assert!(
+                fwd_speedup >= 2.0,
+                "parallel forward must be >= 2x at {threads} threads (got {fwd_speedup:.2}x)"
+            );
+        } else {
+            println!("      (forward speedup assertion skipped: only {threads} thread(s) available)");
+        }
     }
 
     // ---- pipeline-dependent paths (need artifacts) ------------------------

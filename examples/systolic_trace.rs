@@ -9,7 +9,7 @@
 use anyhow::Result;
 use wsel::coordinator::{Pipeline, PipelineParams};
 use wsel::gates::CapModel;
-use wsel::model::{Engine, QuantConfig};
+use wsel::model::{CaptureBuffer, ParallelEngine, QuantConfig};
 use wsel::systolic::{self, MacLib};
 
 fn main() -> Result<()> {
@@ -18,17 +18,20 @@ fn main() -> Result<()> {
         eprintln!("run `make artifacts` first");
         std::process::exit(1);
     }
+    let threads = wsel::util::threadpool::default_threads();
     let mut p = Pipeline::new(artifacts, "lenet5", PipelineParams::quick())?;
     p.train_baseline()?;
 
-    // Capture real operand streams for conv1 (the 16×5×5 layer).
+    // Capture real operand streams for conv1 (the 16×5×5 layer) via the
+    // blocked parallel executor + a materializing capture sink.
     let spec = p.rt.spec.clone();
-    let eng = Engine::new(&spec);
     let qc = QuantConfig::quantized(&spec, p.rt.act_scales.clone());
+    let eng = ParallelEngine::new(&spec, &p.rt.params, &qc, threads);
     let (xs, _) = wsel::data::batch(p.rt.data_seed, wsel::data::Split::Train, 0, 2, 10);
-    let fwd = eng.forward(&p.rt.params, &xs, 2, &qc, true);
-    let cap = fwd
-        .captures
+    let mut buf = CaptureBuffer::new();
+    eng.forward(&xs, 2, &mut buf);
+    let captures = buf.into_captures();
+    let cap = captures
         .iter()
         .find(|c| c.conv_idx == 1)
         .expect("conv1 capture");
@@ -52,7 +55,7 @@ fn main() -> Result<()> {
     // (b) Exact gate-level power of the first pass.
     let cm = CapModel::default();
     let mut lib = MacLib::new();
-    lib.specialize_for(&cap.w_codes, wsel::util::threadpool::default_threads());
+    lib.specialize_for(&cap.w_codes, threads);
     let pass = systolic::passes_of(cap.m, cap.k, cap.n)[0];
     let (e_exact, steps) =
         systolic::tile_power_exact(&cap.x_codes, &cap.w_codes, cap.k, cap.n, &pass, &lib, &cm);
@@ -90,9 +93,8 @@ fn main() -> Result<()> {
 
     // (d) Network scale: every pass of every captured conv layer through
     // the parallel levelized engine, column streams deduplicated.
-    let threads = wsel::util::threadpool::default_threads();
     p.maclib.specialize_all(threads);
-    let exact = systolic::network_power_exact(&fwd.captures, &p.maclib, &cm, threads);
+    let exact = systolic::network_power_exact(&captures, &p.maclib, &cm, threads);
     for l in &exact.layers {
         println!(
             "conv{}: exact {:.3e} J over {} MAC-steps ({} of {} column streams simulated)",

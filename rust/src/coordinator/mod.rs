@@ -11,14 +11,13 @@ use crate::data::Split;
 use crate::energy::cache::{EnergyEvaluator, EvalLayer};
 use crate::energy::{characterize_layer_shared, LayerEnergy, NetworkEnergy, WeightEnergyTable};
 use crate::gates::CapModel;
-use crate::model::Engine;
+use crate::model::{CaptureSink, ParallelEngine, QuantConfig};
 use crate::quant;
 use crate::runtime::{LrSchedule, ModelRuntime};
 use crate::schedule::{energy_prioritized, ScheduleParams, ScheduleResult};
 use crate::selection::{AccuracyOracle, CompressionState};
-use crate::stats::{self, LayerStats};
+use crate::stats::{LayerStats, StatsSink};
 use crate::systolic::MacLib;
-use crate::util::rng::Xoshiro256;
 use crate::util::threadpool::parallel_map;
 use anyhow::Result;
 use std::cell::RefCell;
@@ -161,41 +160,36 @@ impl Pipeline {
         Ok(self.acc0)
     }
 
-    /// Capture real operand streams for `images` training inputs — the
-    /// single recipe (seed, split, batch offset, quantized forward with
-    /// captures on) shared by [`Self::profile`] and
+    /// Stream real operand tiles for `images` training inputs into
+    /// `sink` — the single recipe (seed, split, batch offset, quantized
+    /// parallel forward) shared by [`Self::profile`] and
     /// [`Self::validate_exact`], so the model tables and the exact
     /// ground truth always see the same streams.
-    fn capture_streams(&self, images: usize) -> crate::model::infer::Forward {
+    fn capture_streams(
+        &self,
+        images: usize,
+        sink: &mut dyn CaptureSink,
+    ) -> crate::model::infer::Forward {
         let spec = &self.rt.spec;
-        let eng = Engine::new(spec);
-        let qc = crate::model::QuantConfig::quantized(spec, self.rt.act_scales.clone());
+        let qc = QuantConfig::quantized(spec, self.rt.act_scales.clone());
+        let eng = ParallelEngine::new(spec, &self.rt.params, &qc, self.pp.threads);
         let (xs, _ys) =
             crate::data::batch(self.rt.data_seed, Split::Train, 0, images, spec.n_classes as u64);
-        eng.forward(&self.rt.params, &xs, images, &qc, true)
+        eng.forward(&xs, images, sink)
     }
 
     /// Phase 3: per-layer statistics + per-weight energy tables + base
-    /// network energy (paper §3).
+    /// network energy (paper §3).  Statistics are collected *streaming*
+    /// ([`StatsSink`]): only the sampled operand columns are buffered,
+    /// never a conv's full im2col matrix.
     pub fn profile(&mut self) -> Result<&NetworkEnergy> {
         let spec = self.rt.spec.clone();
         let bs = self.pp.stats_images;
         crate::info!("{}: capturing operand streams ({} images)", spec.name, bs);
-        let fwd = self.capture_streams(bs);
-
-        let mut rng = Xoshiro256::new(self.pp.seed);
-        let mut per_conv: Vec<Vec<LayerStats>> = (0..spec.n_conv).map(|_| Vec::new()).collect();
-        for cap in &fwd.captures {
-            per_conv[cap.conv_idx].push(stats::collect(cap, &mut rng));
-        }
-        self.stats = per_conv
-            .into_iter()
-            .map(|v| {
-                assert!(!v.is_empty(), "conv layer missing capture");
-                stats::merge(v)
-            })
-            .collect();
-        self.stats.sort_by_key(|s| s.conv_idx);
+        let mut sink = StatsSink::new(self.pp.seed);
+        self.capture_streams(bs, &mut sink);
+        self.stats = sink.into_stats();
+        assert_eq!(self.stats.len(), spec.n_conv, "conv layer missing capture");
 
         crate::info!("{}: characterizing E_l(w) for {} layers", spec.name, spec.n_conv);
         // Fan out across conv layers against one shared pre-specialized
@@ -230,27 +224,24 @@ impl Pipeline {
         Ok(self.base_energy.as_ref().unwrap())
     }
 
-    /// Network-scale exact-vs-model validation (paper §3.2): capture
-    /// real operand streams for `images` inputs, stream every tile pass
-    /// of every conv layer through the exact gate-level
-    /// [`crate::systolic::TilePowerEngine`], and diff per-layer exact
-    /// energy against the statistical model's prediction on the same
-    /// streams.  Requires [`Self::profile`] (the model tables).
+    /// Network-scale exact-vs-model validation (paper §3.2): stream
+    /// real operand tiles for `images` inputs through the exact
+    /// gate-level [`crate::systolic::PowerSink`] — each tile simulated
+    /// on arrival, no full im2col copies retained — and diff per-layer
+    /// exact energy against the statistical model's prediction on the
+    /// same streams.  Requires [`Self::profile`] (the model tables).
     ///
     /// Per-layer exact energies are bit-identical for any thread count;
     /// the returned report is what experiment drivers log next to the
     /// model-mode [`EnergyEvaluator`] numbers.
     pub fn validate_exact(&mut self, images: usize) -> crate::energy::ValidationReport {
         assert!(!self.tables.is_empty(), "profile() before validate_exact()");
-        let fwd = self.capture_streams(images);
         self.maclib.specialize_all(self.pp.threads);
-        let exact = crate::systolic::network_power_exact(
-            &fwd.captures,
-            &self.maclib,
-            &self.cap_model,
-            self.pp.threads,
-        );
-        crate::energy::validate_captures(&fwd.captures, &self.tables, &exact)
+        let mut sink =
+            crate::systolic::PowerSink::new(&self.maclib, &self.cap_model, self.pp.threads);
+        self.capture_streams(images, &mut sink);
+        let (metas, exact) = sink.into_parts();
+        crate::energy::validate_streams(&metas, &self.tables, &exact)
     }
 
     /// Build a fresh [`EnergyEvaluator`] snapshotting the current energy

@@ -16,4 +16,4 @@ pub use macmodel::{
     characterize_layer, characterize_layer_shared, transition_energy, uniform_weight_energy,
     WeightEnergyTable,
 };
-pub use validate::{validate_captures, LayerValidation, ValidationReport};
+pub use validate::{validate_captures, validate_streams, LayerValidation, StreamMeta, ValidationReport};

@@ -75,30 +75,51 @@ impl ValidationReport {
     }
 }
 
+/// One conv layer's operand-pair metadata: what the model side of an
+/// exact-vs-model validation needs (dims + weight codes), without any
+/// activation copies.  Produced by the streaming
+/// [`crate::systolic::PowerSink`].
+#[derive(Clone, Debug)]
+pub struct StreamMeta {
+    pub conv_idx: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// K×N row-major weight codes.
+    pub w_codes: Vec<i8>,
+}
+
 /// Diff an exact engine run against the model's prediction on the same
-/// captures.  `tables` is indexed by `conv_idx` (the coordinator's
-/// layout).  Captures sharing a `conv_idx` accumulate into one entry, in
-/// capture order, mirroring [`crate::systolic::network_power_exact`].
-pub fn validate_captures(
-    captures: &[ConvCapture],
+/// operand streams, described by per-conv [`StreamMeta`].  Entries
+/// sharing a `conv_idx` accumulate into one layer, in order.
+///
+/// The `exact` side is whatever tile schedule produced it: buffered
+/// captures through [`crate::systolic::network_power_exact`] (whole-M
+/// packing, cross-pass stream dedup) or the streaming
+/// [`crate::systolic::PowerSink`] (per-block tiling, dedup within each
+/// block).  Both are exact gate-level energies of their respective
+/// schedules, but they tile M differently, so their absolute joules are
+/// not interchangeable — compare reports produced by the same path.
+pub fn validate_streams(
+    metas: &[StreamMeta],
     tables: &[WeightEnergyTable],
     exact: &ExactNetworkPower,
 ) -> ValidationReport {
     let mut layers: Vec<LayerValidation> = Vec::new();
-    for cap in captures {
+    for meta in metas {
         let le = LayerEnergy {
-            conv_idx: cap.conv_idx,
-            m: cap.m,
-            k: cap.k,
-            n: cap.n,
-            table: tables[cap.conv_idx].clone(),
+            conv_idx: meta.conv_idx,
+            m: meta.m,
+            k: meta.k,
+            n: meta.n,
+            table: tables[meta.conv_idx].clone(),
         };
-        let e = le.energy_of_codes(&cap.w_codes);
-        if let Some(pos) = layers.iter().position(|l| l.conv_idx == cap.conv_idx) {
+        let e = le.energy_of_codes(&meta.w_codes);
+        if let Some(pos) = layers.iter().position(|l| l.conv_idx == meta.conv_idx) {
             layers[pos].model_j += e;
         } else {
             layers.push(LayerValidation {
-                conv_idx: cap.conv_idx,
+                conv_idx: meta.conv_idx,
                 exact_j: 0.0,
                 model_j: e,
             });
@@ -111,6 +132,28 @@ pub fn validate_captures(
     }
     layers.sort_by_key(|l| l.conv_idx);
     ValidationReport { layers }
+}
+
+/// Diff an exact engine run against the model's prediction on the same
+/// captures.  `tables` is indexed by `conv_idx` (the coordinator's
+/// layout).  Captures sharing a `conv_idx` accumulate into one entry, in
+/// capture order, mirroring [`crate::systolic::network_power_exact`].
+pub fn validate_captures(
+    captures: &[ConvCapture],
+    tables: &[WeightEnergyTable],
+    exact: &ExactNetworkPower,
+) -> ValidationReport {
+    let metas: Vec<StreamMeta> = captures
+        .iter()
+        .map(|cap| StreamMeta {
+            conv_idx: cap.conv_idx,
+            m: cap.m,
+            k: cap.k,
+            n: cap.n,
+            w_codes: cap.w_codes.clone(),
+        })
+        .collect();
+    validate_streams(&metas, tables, exact)
 }
 
 #[cfg(test)]

@@ -33,6 +33,7 @@ subcommands:
 common options:
   --artifacts <dir>   artifact directory (default: artifacts)
   --seed <u64>        dataset / sampling seed (default 7)
+  --threads <n>       worker threads for parallel engines (default: autodetect)
   --quick             small preset (smoke-scale)
 models: lenet5 | resnet20 | resnet50lite";
 
@@ -49,6 +50,7 @@ fn params_from(args: &Args) -> PipelineParams {
         decay_at: 0.75,
     };
     pp.val_batches = args.usize_or("val-batches", pp.val_batches);
+    pp.threads = args.threads_or(pp.threads);
     pp
 }
 
@@ -264,6 +266,7 @@ fn main() -> Result<()> {
             "model",
             "artifacts",
             "seed",
+            "threads",
             "float-steps",
             "qat-steps",
             "lr",

@@ -80,6 +80,11 @@ pub struct Forward {
 }
 
 impl Forward {
+    /// Index of the largest logit in `row`.  Ties break
+    /// **deterministically to the lowest index** (strict `>` never
+    /// replaces an equal earlier maximum), so accuracy numbers are
+    /// reproducible across engines and thread counts even when
+    /// quantized logits collide exactly.
     pub fn argmax(&self, row: usize) -> usize {
         let ncls = self.logits.len() / self.batch;
         let r = &self.logits[row * ncls..(row + 1) * ncls];
@@ -155,8 +160,9 @@ impl<'s> Engine<'s> {
         capture: bool,
     ) -> Forward {
         let spec = self.spec;
-        assert_eq!(x.len(), batch * 32 * 32 * 3);
-        let mut cur = Tensor::nhwc(x.to_vec(), batch, 32, 32, 3);
+        use super::spec::{INPUT_C, INPUT_ELEMS, INPUT_H, INPUT_W};
+        assert_eq!(x.len(), batch * INPUT_ELEMS);
+        let mut cur = Tensor::nhwc(x.to_vec(), batch, INPUT_H, INPUT_W, INPUT_C);
         let mut saved: Vec<Tensor> = Vec::new();
         let mut act_max = vec![0.0f32; spec.n_q];
         let mut captures = Vec::new();
@@ -361,25 +367,29 @@ impl<'s> Engine<'s> {
                 .map(|&v| quant::quantize(v, s_a) as i8)
                 .collect();
             let x_codes = Self::im2col_codes(&x_nhwc, n, h, w, c, cv);
-            // Integer matmul with exact i32 accumulation.
+            // Integer matmul with exact i32 accumulation (the i32 sum —
+            // not an f32-accumulated approximation of it — so the result
+            // is independent of summation order and the blocked parallel
+            // executor can be pinned bit-identical against it).
+            let mut acc = vec![0i32; m * nn];
             for r in 0..m {
                 let xrow = &x_codes[r * kk..(r + 1) * kk];
-                let orow = &mut out[r * nn..(r + 1) * nn];
+                let arow = &mut acc[r * nn..(r + 1) * nn];
                 for (i, &xc) in xrow.iter().enumerate() {
                     if xc == 0 {
                         continue;
                     }
                     let wrow = &w_codes[i * nn..(i + 1) * nn];
                     let xv = xc as i32;
-                    for (o, &wc) in wrow.iter().enumerate() {
-                        orow[o] += (xv * wc as i32) as f32;
+                    for (a, &wc) in arow.iter_mut().zip(wrow) {
+                        *a += xv * wc as i32;
                     }
                 }
             }
             let ss = s_a * s_w;
             for r in 0..m {
                 for o in 0..nn {
-                    out[r * nn + o] = out[r * nn + o] * ss + bt[o];
+                    out[r * nn + o] = acc[r * nn + o] as f32 * ss + bt[o];
                 }
             }
             if capture {
@@ -441,19 +451,15 @@ impl<'s> Engine<'s> {
     /// Calibrate activation scales: float forward over `batches`, scale =
     /// max|act| / 127 per quant point (what the AOT `calib` graph returns,
     /// reproduced natively).
+    ///
+    /// Delegates to the compiled executor
+    /// ([`super::engine::ParallelEngine::calibrate`]), which builds one
+    /// forward scratch and reuses it across the whole batch loop instead
+    /// of re-allocating every tensor per image; bit-identical to the
+    /// historical per-forward fold (max-merge of per-image maxima).
     pub fn calibrate(&self, params: &[Vec<f32>], xs: &[&[f32]], batch: usize) -> Vec<f32> {
         let qc = QuantConfig::float(self.spec);
-        let mut maxes = vec![0.0f32; self.spec.n_q];
-        for x in xs {
-            let f = self.forward(params, x, batch, &qc, false);
-            for (m, &v) in maxes.iter_mut().zip(&f.act_max) {
-                *m = m.max(v);
-            }
-        }
-        maxes
-            .iter()
-            .map(|&m| (m / quant::QMAX as f32).max(1e-9))
-            .collect()
+        super::engine::ParallelEngine::new(self.spec, params, &qc, 1).calibrate(xs, batch)
     }
 }
 
@@ -468,6 +474,21 @@ mod tests {
         (0..batch * 32 * 32 * 3)
             .map(|_| rng.range_f32(-1.0, 1.0))
             .collect()
+    }
+
+    #[test]
+    fn argmax_breaks_ties_to_lowest_index() {
+        // Row 0: duplicate maxima at 1 and 3 -> must pick 1.
+        // Row 1: all equal -> must pick 0.
+        let f = Forward {
+            logits: vec![0.5, 2.0, -1.0, 2.0, 7.0, 7.0, 7.0, 7.0],
+            batch: 2,
+            act_max: vec![],
+            captures: vec![],
+        };
+        assert_eq!(f.argmax(0), 1);
+        assert_eq!(f.argmax(1), 0);
+        assert_eq!(f.accuracy(&[1, 0]), 1.0);
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! IR lowering: compile a [`ModelSpec`] + parameter snapshot +
+//! [`QuantConfig`] into an executable [`Plan`] once, ahead of any
+//! forward pass.
+//!
+//! The scalar reference re-derives everything per call (weight
+//! quantization, OIHW→K×N reorder, output allocation); the plan does it
+//! exactly once per `(params, CompressionState)` snapshot:
+//!
+//! * per-conv weights are pre-quantized under the config's mask/set and
+//!   packed into the blocked panel layout the GEMM kernel consumes
+//!   ([`super::kernels::BlockedWeights`]);
+//! * the op list is lowered to [`Step`]s carrying their input shapes, so
+//!   the executor does no shape inference at run time;
+//! * maximum per-image buffer sizes are computed so executor scratch is
+//!   allocated once per worker and reused across the whole batch loop.
+//!
+//! Lowering checks the same structural invariants the scalar forward
+//! asserts (shape chaining, save/add balance), failing fast at compile
+//! time instead of mid-batch.
+
+use super::infer::QuantConfig;
+use super::kernels::BlockedWeights;
+use super::spec::{ConvOp, FcOp, ModelSpec, Op, INPUT_C, INPUT_H, INPUT_W};
+use crate::quant;
+
+/// Tensor shape per image at a step boundary (NHWC, or flattened with
+/// `h = w = 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub flat: bool,
+}
+
+impl Shape {
+    pub(crate) fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// Pre-lowered conv weights (one of the two execution modes).
+pub(crate) enum ConvWeights {
+    /// Quantized: K×N codes (capture/reference layout), the blocked
+    /// panel packing for the GEMM kernel, and the weight scale.
+    Quant {
+        wq: Vec<i8>,
+        wb: BlockedWeights,
+        s_w: f32,
+    },
+    /// Float (calibration): raw OIHW tensor for the direct-conv kernel.
+    Float(Vec<f32>),
+}
+
+pub(crate) struct ConvStep {
+    pub op: ConvOp,
+    pub weights: ConvWeights,
+    pub bias: Vec<f32>,
+}
+
+pub(crate) enum FcWeights {
+    Quant { wq: Vec<i8>, s_w: f32 },
+    Float(Vec<f32>),
+}
+
+pub(crate) struct FcStep {
+    pub op: FcOp,
+    pub weights: FcWeights,
+    pub bias: Vec<f32>,
+}
+
+pub(crate) enum StepKind {
+    Conv(Box<ConvStep>),
+    MaxPool2,
+    Gap,
+    Flatten,
+    Save,
+    AddSaved {
+        relu: bool,
+        proj: Option<Box<ConvStep>>,
+    },
+    Fc(Box<FcStep>),
+}
+
+pub(crate) struct Step {
+    pub kind: StepKind,
+    /// Shape of the tensor *entering* this step, per image.
+    pub shape: Shape,
+}
+
+/// Executable plan: lowered steps plus scratch-sizing metadata.
+pub struct Plan {
+    pub quant_on: bool,
+    pub act_scales: Vec<f32>,
+    pub n_q: usize,
+    /// Logit width (the final flattened dimension).
+    pub n_classes: usize,
+    pub(crate) steps: Vec<Step>,
+    /// Largest per-image f32 tensor any step produces or consumes.
+    pub(crate) max_tensor: usize,
+    /// Largest per-image im2col code matrix.
+    pub(crate) max_cols: usize,
+    /// Largest per-image conv accumulator tile.
+    pub(crate) max_acc: usize,
+    /// Largest per-image tensor that gets quantized to codes.
+    pub(crate) max_qin: usize,
+    /// Deepest save/add nesting.
+    pub(crate) save_depth: usize,
+}
+
+fn lower_conv(cv: &ConvOp, params: &[Vec<f32>], qc: &QuantConfig) -> ConvStep {
+    let wt = &params[cv.w];
+    let bias = params[cv.b].clone();
+    let weights = if qc.quant_on {
+        let mask = qc.masks[cv.conv_idx].as_deref();
+        let set = qc.wsets[cv.conv_idx].as_ref();
+        let (w_oihw, s_w) = quant::quantize_restricted(wt, mask, set);
+        // OIHW codes -> K×N ((ky, kx, ci) rows, cout columns), matching
+        // the scalar reference and the capture layout.
+        let kk = cv.k * cv.k * cv.cin;
+        let nn = cv.cout;
+        let mut wq = vec![0i8; kk * nn];
+        for o in 0..cv.cout {
+            for ci in 0..cv.cin {
+                for ky in 0..cv.k {
+                    for kx in 0..cv.k {
+                        let src = ((o * cv.cin + ci) * cv.k + ky) * cv.k + kx;
+                        let row = (ky * cv.k + kx) * cv.cin + ci;
+                        wq[row * nn + o] = w_oihw[src];
+                    }
+                }
+            }
+        }
+        let wb = BlockedWeights::pack(&wq, kk, nn);
+        ConvWeights::Quant { wq, wb, s_w }
+    } else {
+        ConvWeights::Float(wt.clone())
+    };
+    ConvStep {
+        op: cv.clone(),
+        weights,
+        bias,
+    }
+}
+
+fn lower_fc(fc: &FcOp, params: &[Vec<f32>], qc: &QuantConfig) -> FcStep {
+    let wt = &params[fc.w];
+    let bias = params[fc.b].clone();
+    let weights = if qc.quant_on {
+        let (wq, s_w) = quant::quantize_restricted(wt, None, None);
+        FcWeights::Quant { wq, s_w }
+    } else {
+        FcWeights::Float(wt.clone())
+    };
+    FcStep {
+        op: fc.clone(),
+        weights,
+        bias,
+    }
+}
+
+/// Track a conv through shape lowering: validate the input shape,
+/// update scratch maxima, return the output shape.
+fn conv_shape(
+    cv: &ConvOp,
+    sh: Shape,
+    max_cols: &mut usize,
+    max_acc: &mut usize,
+    max_qin: &mut usize,
+) -> Shape {
+    assert!(!sh.flat, "{}: conv expects NHWC input", cv.name);
+    assert_eq!(sh.c, cv.cin, "{}: cin mismatch", cv.name);
+    assert_eq!((sh.h, sh.w), (cv.hin, cv.win), "{}: spatial mismatch", cv.name);
+    let m_img = cv.hout * cv.wout;
+    let kk = cv.k * cv.k * cv.cin;
+    *max_cols = (*max_cols).max(m_img * kk);
+    *max_acc = (*max_acc).max(m_img * cv.cout);
+    *max_qin = (*max_qin).max(sh.numel());
+    Shape {
+        h: cv.hout,
+        w: cv.wout,
+        c: cv.cout,
+        flat: false,
+    }
+}
+
+impl Plan {
+    /// Lower `spec` against a parameter snapshot and quantization
+    /// config.  All weight quantization/packing happens here, once.
+    pub fn compile(spec: &ModelSpec, params: &[Vec<f32>], qc: &QuantConfig) -> Plan {
+        assert_eq!(qc.act_scales.len(), spec.n_q);
+        assert_eq!(qc.masks.len(), spec.n_conv);
+        assert_eq!(qc.wsets.len(), spec.n_conv);
+        let mut steps = Vec::with_capacity(spec.ops.len());
+        let mut sh = Shape {
+            h: INPUT_H,
+            w: INPUT_W,
+            c: INPUT_C,
+            flat: false,
+        };
+        let mut saved: Vec<Shape> = Vec::new();
+        let mut max_tensor = sh.numel();
+        let mut max_cols = 0usize;
+        let mut max_acc = 0usize;
+        let mut max_qin = 0usize;
+        let mut save_depth = 0usize;
+        for op in &spec.ops {
+            let in_shape = sh;
+            let kind = match op {
+                Op::Conv(cv) => {
+                    sh = conv_shape(cv, sh, &mut max_cols, &mut max_acc, &mut max_qin);
+                    StepKind::Conv(Box::new(lower_conv(cv, params, qc)))
+                }
+                Op::MaxPool2 => {
+                    assert!(!sh.flat, "maxpool expects NHWC input");
+                    // Fail fast here instead of mid-batch: the 2×2/stride-2
+                    // kernel (like the scalar reference) assumes even dims.
+                    assert!(
+                        sh.h % 2 == 0 && sh.w % 2 == 0,
+                        "maxpool2 requires even dims, got {}x{}",
+                        sh.h,
+                        sh.w
+                    );
+                    sh = Shape {
+                        h: sh.h / 2,
+                        w: sh.w / 2,
+                        c: sh.c,
+                        flat: false,
+                    };
+                    StepKind::MaxPool2
+                }
+                Op::Gap => {
+                    assert!(!sh.flat, "gap expects NHWC input");
+                    sh = Shape {
+                        h: 1,
+                        w: 1,
+                        c: sh.c,
+                        flat: true,
+                    };
+                    StepKind::Gap
+                }
+                Op::Flatten => {
+                    sh = Shape {
+                        h: 1,
+                        w: 1,
+                        c: sh.numel(),
+                        flat: true,
+                    };
+                    StepKind::Flatten
+                }
+                Op::Save => {
+                    saved.push(sh);
+                    save_depth = save_depth.max(saved.len());
+                    StepKind::Save
+                }
+                Op::AddSaved { relu, proj } => {
+                    let skip = saved.pop().expect("unbalanced save/add");
+                    let proj_step = proj.as_ref().map(|p| {
+                        let after = conv_shape(p, skip, &mut max_cols, &mut max_acc, &mut max_qin);
+                        assert_eq!(after.numel(), sh.numel(), "{}: skip shape mismatch", p.name);
+                        max_tensor = max_tensor.max(after.numel());
+                        Box::new(lower_conv(p, params, qc))
+                    });
+                    if proj_step.is_none() {
+                        assert_eq!(skip.numel(), sh.numel(), "skip shape mismatch");
+                    }
+                    StepKind::AddSaved {
+                        relu: *relu,
+                        proj: proj_step,
+                    }
+                }
+                Op::Fc(fc) => {
+                    assert!(sh.flat, "{}: fc expects flattened input", fc.name);
+                    assert_eq!(sh.c, fc.din, "{}: din mismatch", fc.name);
+                    sh = Shape {
+                        h: 1,
+                        w: 1,
+                        c: fc.dout,
+                        flat: true,
+                    };
+                    StepKind::Fc(Box::new(lower_fc(fc, params, qc)))
+                }
+            };
+            max_tensor = max_tensor.max(sh.numel());
+            steps.push(Step {
+                kind,
+                shape: in_shape,
+            });
+        }
+        assert!(saved.is_empty(), "unbalanced save/add");
+        Plan {
+            quant_on: qc.quant_on,
+            act_scales: qc.act_scales.clone(),
+            n_q: spec.n_q,
+            n_classes: sh.numel(),
+            steps,
+            max_tensor,
+            max_cols,
+            max_acc,
+            max_qin,
+            save_depth,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::tests_support::tiny_spec;
+    use super::*;
+    use crate::model::Params;
+
+    #[test]
+    fn compiles_tiny_spec_shapes() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 1);
+        let plan = Plan::compile(&spec, &p.tensors, &QuantConfig::float(&spec));
+        assert_eq!(plan.steps.len(), spec.ops.len());
+        assert_eq!(plan.n_classes, 4);
+        assert_eq!(plan.save_depth, 1);
+        assert!(!plan.quant_on);
+        // conv0: 32*32 rows × 27 cols is the largest im2col.
+        assert_eq!(plan.max_cols, 32 * 32 * 27);
+        assert!(plan.max_tensor >= 32 * 32 * 4);
+    }
+
+    #[test]
+    fn quant_plan_prepacks_weights() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 2);
+        let qc = QuantConfig::quantized(&spec, vec![0.01; spec.n_q]);
+        let plan = Plan::compile(&spec, &p.tensors, &qc);
+        assert!(plan.quant_on);
+        let StepKind::Conv(cs) = &plan.steps[0].kind else {
+            panic!("step 0 must be a conv");
+        };
+        let ConvWeights::Quant { wq, wb, s_w } = &cs.weights else {
+            panic!("quant plan must prequantize");
+        };
+        assert_eq!(wq.len(), 27 * 4);
+        assert_eq!((wb.k, wb.n), (27, 4));
+        assert!(*s_w > 0.0);
+    }
+}

@@ -1,0 +1,376 @@
+//! Kernel layer of the int8 inference engine: cache-blocked
+//! i32-accumulating GEMM, im2col, requantization and the float/pool/fc
+//! kernels the executor composes.
+//!
+//! Every kernel is **bit-compatible** with the scalar reference in
+//! [`super::infer`]: the quantized path accumulates exact i32 (so any
+//! blocking order yields identical sums) and the float kernels walk the
+//! reduction in the same element order as the reference loops, so the
+//! f32 rounding sequence is identical.  `rust/tests/engine_parallel.rs`
+//! pins this bit-for-bit.
+
+use super::spec::ConvOp;
+use crate::quant;
+
+/// Column-panel width of the blocked weight layout (one GEMM tile of
+/// output columns).
+pub const NB: usize = 64;
+/// Rows of X per GEMM macro-block.
+pub const MB: usize = 32;
+/// K-panel depth per GEMM macro-block.
+pub const KB: usize = 256;
+
+/// Pre-quantized conv weights packed into column panels: `ceil(n/NB)`
+/// panels, each `k`×`NB` row-major with tail columns zero-padded, so the
+/// GEMM inner loop reads one contiguous stripe per (row, panel).
+#[derive(Clone)]
+pub struct BlockedWeights {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<i8>,
+}
+
+impl BlockedWeights {
+    /// Pack a K×N row-major code matrix into column panels.
+    pub fn pack(w_kxn: &[i8], k: usize, n: usize) -> Self {
+        assert_eq!(w_kxn.len(), k * n);
+        let panels = n.div_ceil(NB);
+        let mut data = vec![0i8; panels * k * NB];
+        for p in 0..panels {
+            let j0 = p * NB;
+            let width = NB.min(n - j0);
+            for r in 0..k {
+                let dst = p * k * NB + r * NB;
+                data[dst..dst + width].copy_from_slice(&w_kxn[r * n + j0..r * n + j0 + width]);
+            }
+        }
+        Self { k, n, data }
+    }
+
+    fn panel(&self, p: usize) -> &[i8] {
+        &self.data[p * self.k * NB..(p + 1) * self.k * NB]
+    }
+}
+
+/// `acc(m×n) += X(m×k) · W(k×n)` with exact i32 accumulation, blocked
+/// over (column panel, M, K).  Zero activations are skipped (post-ReLU
+/// code streams are sparse).  Caller zeroes `acc`.
+pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+    let (k, n) = (w.k, w.n);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(acc.len(), m * n);
+    let panels = n.div_ceil(NB);
+    for p in 0..panels {
+        let j0 = p * NB;
+        let width = NB.min(n - j0);
+        let panel = w.panel(p);
+        for i0 in (0..m).step_by(MB) {
+            let ih = MB.min(m - i0);
+            for k0 in (0..k).step_by(KB) {
+                let kh = KB.min(k - k0);
+                for i in i0..i0 + ih {
+                    let xrow = &x[i * k + k0..i * k + k0 + kh];
+                    let arow = &mut acc[i * n + j0..i * n + j0 + width];
+                    for (dk, &xv) in xrow.iter().enumerate() {
+                        if xv == 0 {
+                            continue;
+                        }
+                        let xi = xv as i32;
+                        let wrow = &panel[(k0 + dk) * NB..(k0 + dk) * NB + width];
+                        for (a, &wv) in arow.iter_mut().zip(wrow) {
+                            *a += xi * wv as i32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Quantize a float tensor to int8 codes into a reused buffer.
+pub fn quantize_into(src: &[f32], s: f32, dst: &mut Vec<i8>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| quant::quantize(v, s) as i8));
+}
+
+/// im2col of an NHWC code tensor into a reused buffer; (ky, kx, c) patch
+/// column order, matching the scalar reference and `ref.im2col` on the
+/// JAX side.  Out-of-bounds taps stay zero (the buffer is zero-filled).
+pub fn im2col_i8(
+    t: &[i8],
+    n_imgs: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    cv: &ConvOp,
+    out: &mut Vec<i8>,
+) {
+    let (ho, wo, k, s, p) = (cv.hout, cv.wout, cv.k, cv.stride, cv.pad as isize);
+    let m = n_imgs * ho * wo;
+    let kk = k * k * c;
+    out.clear();
+    out.resize(m * kk, 0);
+    for b in 0..n_imgs {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (b * ho + oy) * wo + ox;
+                let base = row * kk;
+                for ky in 0..k {
+                    let iy = (oy * s) as isize + ky as isize - p;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s) as isize + kx as isize - p;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let col0 = (ky * k + kx) * c;
+                        let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                        out[base + col0..base + col0 + c].copy_from_slice(&t[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Requantize an i32 accumulator tile: `out = acc·ss + bias`, optional
+/// ReLU.  `ss` must be the pre-multiplied `s_act · s_w` so the f32
+/// expression matches the scalar reference exactly.
+pub fn requant_bias_relu(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut Vec<f32>) {
+    let n = bias.len();
+    debug_assert_eq!(acc.len() % n, 0);
+    out.clear();
+    out.reserve(acc.len());
+    for arow in acc.chunks_exact(n) {
+        for (a, b) in arow.iter().zip(bias) {
+            let v = *a as f32 * ss + *b;
+            out.push(if relu { v.max(0.0) } else { v });
+        }
+    }
+}
+
+/// Float direct convolution (calibration path), bit-identical in
+/// accumulation order to the scalar reference: (oy, ox) outer, then
+/// (ky, kx, ci) taps with zero-skip, bias added last, ReLU applied by
+/// the caller over the whole tensor.  `w_oihw` is the raw OIHW tensor.
+pub fn conv_f32_direct(
+    cv: &ConvOp,
+    input: &[f32],
+    n_imgs: usize,
+    w_oihw: &[f32],
+    bias: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let (h, w, c) = (cv.hin, cv.win, cv.cin);
+    debug_assert_eq!(input.len(), n_imgs * h * w * c);
+    let nn = cv.cout;
+    let m = n_imgs * cv.hout * cv.wout;
+    out.clear();
+    out.resize(m * nn, 0.0);
+    let (k, s, p) = (cv.k, cv.stride, cv.pad as isize);
+    for b in 0..n_imgs {
+        for oy in 0..cv.hout {
+            for ox in 0..cv.wout {
+                let row = (b * cv.hout + oy) * cv.wout + ox;
+                let orow = &mut out[row * nn..(row + 1) * nn];
+                for ky in 0..k {
+                    let iy = (oy * s) as isize + ky as isize - p;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s) as isize + kx as isize - p;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                        for ci in 0..c {
+                            let xv = input[src + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            for (o, ov) in orow.iter_mut().enumerate() {
+                                *ov += xv * w_oihw[((o * c + ci) * k + ky) * k + kx];
+                            }
+                        }
+                    }
+                }
+                for (ov, bv) in orow.iter_mut().zip(bias) {
+                    *ov += bv;
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 max-pool (stride 2), scalar-reference scan order.
+pub fn maxpool2(input: &[f32], n_imgs: usize, h: usize, w: usize, c: usize, out: &mut Vec<f32>) {
+    let (ho, wo) = (h / 2, w / 2);
+    out.clear();
+    out.resize(n_imgs * ho * wo * c, f32::NEG_INFINITY);
+    for b in 0..n_imgs {
+        for y in 0..h {
+            for xx in 0..w {
+                let src = &input[((b * h + y) * w + xx) * c..][..c];
+                let dst_idx = ((b * ho + y / 2) * wo + xx / 2) * c;
+                for (ch, &sv) in src.iter().enumerate() {
+                    let d = &mut out[dst_idx + ch];
+                    if sv > *d {
+                        *d = sv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Global average pool, scalar-reference accumulation order.
+pub fn gap(input: &[f32], n_imgs: usize, h: usize, w: usize, c: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(n_imgs * c, 0.0);
+    for b in 0..n_imgs {
+        for y in 0..h {
+            for xx in 0..w {
+                let src = &input[((b * h + y) * w + xx) * c..][..c];
+                for (ch, &sv) in src.iter().enumerate() {
+                    out[b * c + ch] += sv;
+                }
+            }
+        }
+    }
+    let inv = 1.0 / (h * w) as f32;
+    out.iter_mut().for_each(|v| *v *= inv);
+}
+
+/// Float fully-connected layer, scalar-reference dot order.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_f32(
+    input: &[f32],
+    n_imgs: usize,
+    din: usize,
+    dout: usize,
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(n_imgs * dout);
+    for b in 0..n_imgs {
+        let xrow = &input[b * din..(b + 1) * din];
+        for o in 0..dout {
+            let wrow = &w[o * din..(o + 1) * din];
+            let mut acc = 0.0f32;
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                acc += xv * wv;
+            }
+            let v = acc + bias[o];
+            out.push(if relu { v.max(0.0) } else { v });
+        }
+    }
+}
+
+/// Quantized fully-connected layer: int8 codes, exact i32 dot, then the
+/// scalar reference's requant expression.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_i8(
+    xq: &[i8],
+    n_imgs: usize,
+    din: usize,
+    dout: usize,
+    wq: &[i8],
+    ss: f32,
+    bias: &[f32],
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(n_imgs * dout);
+    for b in 0..n_imgs {
+        let xrow = &xq[b * din..(b + 1) * din];
+        for o in 0..dout {
+            let wrow = &wq[o * din..(o + 1) * din];
+            let mut acc = 0i32;
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                acc += *xv as i32 * *wv as i32;
+            }
+            let v = ss * acc as f32 + bias[o];
+            out.push(if relu { v.max(0.0) } else { v });
+        }
+    }
+}
+
+/// Max |v| of a tensor (activation-scale calibration support).
+pub fn abs_max(t: &[f32]) -> f32 {
+    t.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(len: usize, seed: u64) -> Vec<i8> {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        (0..len)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    0
+                } else {
+                    rng.code() as i8
+                }
+            })
+            .collect()
+    }
+
+    /// Blocked GEMM equals the naive triple loop exactly, across shapes
+    /// that exercise partial panels / partial M and K blocks.
+    #[test]
+    fn gemm_matches_naive() {
+        for (si, &(m, k, n)) in [(3usize, 5usize, 2usize), (33, 70, 64), (65, 257, 67), (1, 1, 1)]
+            .iter()
+            .enumerate()
+        {
+            let x = codes(m * k, si as u64 + 1);
+            let w = codes(k * n, si as u64 + 100);
+            let wb = BlockedWeights::pack(&w, k, n);
+            let mut acc = vec![0i32; m * n];
+            gemm_i8_blocked(&x, &wb, m, &mut acc);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0i32;
+                    for r in 0..k {
+                        want += x[i * k + r] as i32 * w[r * n + j] as i32;
+                    }
+                    assert_eq!(acc[i * n + j], want, "({m},{k},{n}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_roundtrips_tail_panel() {
+        let (k, n) = (3usize, NB + 5);
+        let w = codes(k * n, 9);
+        let wb = BlockedWeights::pack(&w, k, n);
+        // Read back through the panel accessor.
+        for r in 0..k {
+            for j in 0..n {
+                let p = j / NB;
+                assert_eq!(wb.panel(p)[r * NB + j % NB], w[r * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn requant_expression() {
+        let acc = vec![3i32, -2, 0, 7];
+        let bias = vec![0.5f32, -0.25];
+        let mut out = Vec::new();
+        requant_bias_relu(&acc, 0.125, &bias, false, &mut out);
+        assert_eq!(out, vec![3.0 * 0.125 + 0.5, -2.0 * 0.125 - 0.25, 0.5, 7.0 * 0.125 - 0.25]);
+        requant_bias_relu(&acc, 0.125, &bias, true, &mut out);
+        assert!(out.iter().all(|&v| v >= 0.0));
+    }
+}

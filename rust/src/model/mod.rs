@@ -1,16 +1,30 @@
 //! Network specs (parsed from the AOT `manifest.json` — single source of
 //! truth shared with the JAX side) and the int8 mirror inference engine.
 //!
-//! The engine reproduces the QAT forward of `python/compile/model.py`
-//! with integer arithmetic: activations and weights quantize to int8
-//! codes, convolutions run as im2col × integer matmul, accumulation is
-//! exact i32.  Its captures (im2col code matrices per conv layer) feed
-//! the systolic-array simulator and the per-layer statistics of §3.1.2.
+//! The engine is layered (see `rust/README.md` §Inference engine):
+//!
+//! * [`ir`] — lowers a [`ModelSpec`] + parameter snapshot +
+//!   [`QuantConfig`] into an executable [`ir::Plan`] with pre-quantized
+//!   blocked i8 weight tiles and preallocated-buffer sizing;
+//! * [`kernels`] — cache-blocked i32-accumulating GEMM/conv kernels,
+//!   im2col, requantization, pools and fc;
+//! * [`engine`] — the batch-parallel executor ([`ParallelEngine`]) with
+//!   streaming operand-tile delivery through [`CaptureSink`];
+//! * [`infer`] — the original scalar engine, retained as the bit-exact
+//!   test reference the executor is pinned against.
+//!
+//! Captures (im2col code matrices per conv layer) feed the systolic
+//! array simulator and the per-layer statistics of §3.1.2; accumulation
+//! is exact i32 everywhere, so results are thread-count independent.
 
+pub mod engine;
 pub mod infer;
+pub mod ir;
+pub mod kernels;
 pub mod params;
 pub mod spec;
 
+pub use engine::{CaptureBuffer, CaptureSink, ConvHead, NullSink, ParallelEngine};
 pub use infer::{ConvCapture, Engine, QuantConfig};
 pub use params::Params;
 pub use spec::{ConvOp, EntryMeta, FcOp, ModelSpec, Op, ParamKind, ParamSpec};

@@ -8,6 +8,15 @@
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
+/// Fixed network input dims (NHWC) — the synthetic-CIFAR workload every
+/// manifest targets.  Single source of truth for the engines' input
+/// slicing and the IR's shape chain.
+pub const INPUT_H: usize = 32;
+pub const INPUT_W: usize = 32;
+pub const INPUT_C: usize = 3;
+/// Elements of one input image.
+pub const INPUT_ELEMS: usize = INPUT_H * INPUT_W * INPUT_C;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ParamKind {
     ConvW,

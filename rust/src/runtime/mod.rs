@@ -354,6 +354,34 @@ impl ModelRuntime {
         Ok(self.act_scales.clone())
     }
 
+    /// Native mirror of [`Self::calibrate`]: the same data recipe
+    /// (train split, `batch_calib`-sized batches from offset 0) through
+    /// the compiled float engine
+    /// ([`crate::model::ParallelEngine::calibrate`]) instead of the AOT
+    /// `calib` graph — one forward scratch per worker reused across the
+    /// whole batch loop, no PJRT required.  Stores and returns the
+    /// scales, exactly like the AOT path.
+    pub fn calibrate_native(&mut self, n_batches: usize, threads: usize) -> Vec<f32> {
+        let bs = self.spec.batch_calib;
+        let qc = crate::model::QuantConfig::float(&self.spec);
+        let eng = crate::model::ParallelEngine::new(&self.spec, &self.params, &qc, threads);
+        let batches: Vec<Vec<f32>> = (0..n_batches)
+            .map(|b| {
+                data::batch(
+                    self.data_seed,
+                    Split::Train,
+                    (b * bs) as u64,
+                    bs,
+                    self.spec.n_classes as u64,
+                )
+                .0
+            })
+            .collect();
+        let refs: Vec<&[f32]> = batches.iter().map(Vec::as_slice).collect();
+        self.act_scales = eng.calibrate(&refs, bs);
+        self.act_scales.clone()
+    }
+
     /// Persist current params next to the artifacts (checkpointing).
     pub fn save_params(&self, tag: &str) -> Result<PathBuf> {
         let path = self.dir.join(format!("params.{tag}.bin"));

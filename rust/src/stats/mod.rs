@@ -1,13 +1,26 @@
 //! Per-layer activation & partial-sum statistics (paper §3.1.2).
 //!
-//! Built from the int8 engine's [`ConvCapture`]s: the im2col code matrix
-//! X (M×K) *is* the set of operand streams the weight-stationary array
-//! sees — column k of X is exactly the activation sequence entering PE
-//! row `k mod 64`, and the within-tile prefix sums over rows are the
-//! partial-sum chains.  Layer-specific histograms of both feed the
-//! per-weight MAC characterization in [`crate::energy`].
+//! Built from the int8 engine's conv operand streams: the im2col code
+//! matrix X (M×K) *is* the set of operand streams the weight-stationary
+//! array sees — column k of X is exactly the activation sequence
+//! entering PE row `k mod 64`, and the within-tile prefix sums over rows
+//! are the partial-sum chains.  Layer-specific histograms of both feed
+//! the per-weight MAC characterization in [`crate::energy`].
+//!
+//! Collection is **streaming**: a [`SamplePlan`] is drawn up-front
+//! (which im2col columns and which (k-tile, output-column) pairs are
+//! traced), and a [`StatsBuilder`] buffers only those sampled columns as
+//! X row blocks arrive — a strict subset of the M×K matrix once
+//! `K ≥ 192` (where `col_stride = K/96 ≥ 2`); smaller layers sample
+//! every column, so the bound bites exactly where im2col matrices are
+//! large.  [`StatsSink`]
+//! adapts this to the executor's
+//! [`CaptureSink`](crate::model::CaptureSink) stream; [`collect`] is the
+//! whole-capture convenience wrapper.  Results are invariant to how the
+//! rows are blocked (property-tested below) and hence to the executor's
+//! thread count.
 
-use crate::model::ConvCapture;
+use crate::model::{CaptureSink, ConvCapture, ConvHead};
 use crate::transitions::{ActTransHist, PsumGroupHist};
 use crate::util::rng::Xoshiro256;
 
@@ -33,85 +46,221 @@ const PSUM_SAMPLES: usize = 6;
 /// Within each sampled pair, psum streams are recorded at these PE rows.
 const PSUM_ROWS: [usize; 4] = [8, 24, 40, 56];
 
-/// Collect layer statistics from a capture.
-pub fn collect(cap: &ConvCapture, rng: &mut Xoshiro256) -> LayerStats {
-    let mut act = ActTransHist::new();
-    // Activation transitions: every im2col column is a PE operand stream.
-    // For large layers, sample columns to bound cost.
-    let col_stride = (cap.k / 96).max(1);
-    let mut col = 0;
-    let mut stream = Vec::with_capacity(cap.m);
-    while col < cap.k {
-        stream.clear();
-        for m in 0..cap.m {
-            stream.push(cap.x_codes[m * cap.k + col]);
-        }
-        act.record_stream(&stream);
-        col += col_stride;
-    }
+/// Deterministic per-layer sampling plan, drawn before any stream data
+/// is seen (all draws depend only on the layer dims and the shared
+/// profiling rng, so streaming and whole-capture collection consume the
+/// rng identically).
+#[derive(Clone, Debug)]
+pub struct SamplePlan {
+    /// Every `col_stride`-th im2col column feeds the activation
+    /// transition histogram.
+    pub col_stride: usize,
+    /// Sampled (k-tile, output-column) pairs for psum chains.
+    pub psum: Vec<(usize, usize)>,
+}
 
-    // Partial-sum streams: sample (k-tile, out-column) pairs, sweep the
-    // 64 PE rows maintaining per-m accumulators, record at PSUM_ROWS.
-    let mut psum = PsumGroupHist::new();
-    let k_tiles = cap.k.div_ceil(TILE);
-    let mut acc = vec![0i32; cap.m];
-    for _ in 0..PSUM_SAMPLES {
-        let kt = rng.below(k_tiles as u64) as usize;
-        let c = rng.below(cap.n as u64) as usize;
-        let k0 = kt * TILE;
-        let kh = (cap.k - k0).min(TILE);
-        acc.iter_mut().for_each(|v| *v = 0);
-        for r in 0..kh {
-            if PSUM_ROWS.contains(&r) {
-                psum.record_stream(&acc, rng);
-            }
-            let w = cap.w_codes[(k0 + r) * cap.n + c] as i32;
-            if w != 0 {
-                for m in 0..cap.m {
-                    let a = cap.x_codes[m * cap.k + (k0 + r)] as i32;
-                    // 22-bit wrap matches the hardware accumulator.
-                    acc[m] = crate::mac::unit::mac_ref(a, w, acc[m]);
-                }
-            }
-        }
-        // Top-of-column stream too (what the next tile pass inherits).
-        psum.record_stream(&acc, rng);
-    }
-
-    let mut weight_usage = [0u64; 256];
-    for &w in &cap.w_codes {
-        weight_usage[(w as i32 + 128) as usize] += 1;
-    }
-
-    LayerStats {
-        conv_idx: cap.conv_idx,
-        act,
-        psum,
-        weight_usage,
-        m: cap.m,
-        k: cap.k,
-        n: cap.n,
+impl SamplePlan {
+    pub fn draw(k: usize, n: usize, rng: &mut Xoshiro256) -> Self {
+        let col_stride = (k / 96).max(1);
+        let k_tiles = k.div_ceil(TILE);
+        let psum = (0..PSUM_SAMPLES)
+            .map(|_| {
+                (
+                    rng.below(k_tiles as u64) as usize,
+                    rng.below(n as u64) as usize,
+                )
+            })
+            .collect();
+        Self { col_stride, psum }
     }
 }
 
-/// Merge statistics from several captures of the same layer (multiple
-/// calibration batches).
-pub fn merge(mut stats: Vec<LayerStats>) -> LayerStats {
-    assert!(!stats.is_empty());
-    let mut base = stats.remove(0);
-    for s in stats {
-        assert_eq!(s.conv_idx, base.conv_idx);
-        for i in 0..256 * 256 {
-            base.act.counts[i] += s.act.counts[i];
+/// Streaming statistics accumulator for one conv layer: buffers only the
+/// plan's sampled columns as X row blocks arrive.
+pub struct StatsBuilder {
+    conv_idx: usize,
+    k: usize,
+    n: usize,
+    m_seen: usize,
+    plan: SamplePlan,
+    /// Sampled activation columns (one per plan column, growing by
+    /// `rows` codes per block).
+    act_cols: Vec<Vec<i8>>,
+    /// Per psum sample: the X tile slice, row-major `m_seen`×`kh`.
+    psum_x: Vec<Vec<i8>>,
+    /// Per psum sample: the weight codes down the sampled column.
+    psum_w: Vec<Vec<i8>>,
+    weight_usage: [u64; 256],
+}
+
+impl StatsBuilder {
+    pub fn new(conv_idx: usize, k: usize, n: usize, w_codes: &[i8], plan: SamplePlan) -> Self {
+        assert_eq!(w_codes.len(), k * n);
+        let mut weight_usage = [0u64; 256];
+        for &w in w_codes {
+            weight_usage[(w as i32 + 128) as usize] += 1;
         }
-        base.act.total += s.act.total;
-        for i in 0..base.psum.counts.len() {
-            base.psum.counts[i] += s.psum.counts[i];
+        let act_cols = (0..k).step_by(plan.col_stride).map(|_| Vec::new()).collect();
+        let psum_w = plan
+            .psum
+            .iter()
+            .map(|&(kt, c)| {
+                let k0 = kt * TILE;
+                let kh = (k - k0).min(TILE);
+                (0..kh).map(|r| w_codes[(k0 + r) * n + c]).collect()
+            })
+            .collect();
+        Self {
+            conv_idx,
+            k,
+            n,
+            m_seen: 0,
+            act_cols,
+            psum_x: vec![Vec::new(); PSUM_SAMPLES],
+            psum_w,
+            plan,
+            weight_usage,
         }
-        base.psum.total += s.psum.total;
-        // weight usage identical across batches (same weights) — keep base.
     }
-    base
+
+    /// Feed a block of X rows (`rows`×`k`, row-major).
+    pub fn push_block(&mut self, x_codes: &[i8], rows: usize) {
+        let k = self.k;
+        assert_eq!(x_codes.len(), rows * k);
+        for (slot, col) in self.act_cols.iter_mut().zip((0..k).step_by(self.plan.col_stride)) {
+            slot.extend((0..rows).map(|r| x_codes[r * k + col]));
+        }
+        for (slot, &(kt, _c)) in self.psum_x.iter_mut().zip(&self.plan.psum) {
+            let k0 = kt * TILE;
+            let kh = (k - k0).min(TILE);
+            for r in 0..rows {
+                slot.extend_from_slice(&x_codes[r * k + k0..r * k + k0 + kh]);
+            }
+        }
+        self.m_seen += rows;
+    }
+
+    /// Finalize into [`LayerStats`].  The recording order (activation
+    /// columns in plan order, then psum samples in plan order) matches
+    /// [`collect`] exactly, so blocked streaming is bit-identical to
+    /// whole-capture collection.
+    pub fn finish(&mut self, rng: &mut Xoshiro256) -> LayerStats {
+        let mut act = ActTransHist::new();
+        for col in &self.act_cols {
+            act.record_stream(col);
+        }
+
+        let mut psum = PsumGroupHist::new();
+        let m = self.m_seen;
+        let mut acc = vec![0i32; m];
+        for (tile, wcol) in self.psum_x.iter().zip(&self.psum_w) {
+            let kh = wcol.len();
+            acc.iter_mut().for_each(|v| *v = 0);
+            for (r, &w) in wcol.iter().enumerate() {
+                if PSUM_ROWS.contains(&r) {
+                    psum.record_stream(&acc, rng);
+                }
+                let w = w as i32;
+                if w != 0 {
+                    for (mi, a) in acc.iter_mut().enumerate() {
+                        let x = tile[mi * kh + r] as i32;
+                        // 22-bit wrap matches the hardware accumulator.
+                        *a = crate::mac::unit::mac_ref(x, w, *a);
+                    }
+                }
+            }
+            // Top-of-column stream too (what the next tile pass inherits).
+            psum.record_stream(&acc, rng);
+        }
+
+        LayerStats {
+            conv_idx: self.conv_idx,
+            act,
+            psum,
+            weight_usage: self.weight_usage,
+            m,
+            k: self.k,
+            n: self.n,
+        }
+    }
+}
+
+/// Collect layer statistics from a whole capture (draws the sample plan
+/// from `rng`, then streams the capture as a single block).
+pub fn collect(cap: &ConvCapture, rng: &mut Xoshiro256) -> LayerStats {
+    let plan = SamplePlan::draw(cap.k, cap.n, rng);
+    let mut b = StatsBuilder::new(cap.conv_idx, cap.k, cap.n, &cap.w_codes, plan);
+    b.push_block(&cap.x_codes, cap.m);
+    b.finish(rng)
+}
+
+/// [`CaptureSink`] adapter: one [`StatsBuilder`] per conv, sample plans
+/// drawn from a single profiling rng in conv execution order (the order
+/// `begin_conv` arrives), stats finalized in the same order on
+/// `finish()` and then sorted by `conv_idx`.  Expects one forward pass
+/// per sink (each conv announced once).
+pub struct StatsSink {
+    rng: Xoshiro256,
+    builders: Vec<StatsBuilder>,
+    pos_of: Vec<Option<usize>>,
+    stats: Vec<LayerStats>,
+}
+
+impl StatsSink {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            builders: Vec::new(),
+            pos_of: Vec::new(),
+            stats: Vec::new(),
+        }
+    }
+
+    /// Finalized per-layer stats, ascending `conv_idx` (empty until the
+    /// forward's `finish()` ran).
+    pub fn into_stats(self) -> Vec<LayerStats> {
+        self.stats
+    }
+}
+
+impl CaptureSink for StatsSink {
+    fn begin_conv(&mut self, head: &ConvHead<'_>) {
+        if self.pos_of.len() <= head.conv_idx {
+            self.pos_of.resize(head.conv_idx + 1, None);
+        }
+        assert!(
+            self.pos_of[head.conv_idx].is_none(),
+            "conv{} announced twice (one forward per StatsSink)",
+            head.conv_idx
+        );
+        let plan = SamplePlan::draw(head.k, head.n, &mut self.rng);
+        self.pos_of[head.conv_idx] = Some(self.builders.len());
+        self.builders.push(StatsBuilder::new(
+            head.conv_idx,
+            head.k,
+            head.n,
+            head.w_codes,
+            plan,
+        ));
+    }
+
+    fn x_block(&mut self, conv_idx: usize, rows: usize, x_codes: &[i8]) {
+        let pos = self
+            .pos_of
+            .get(conv_idx)
+            .copied()
+            .flatten()
+            .expect("x_block before begin_conv");
+        self.builders[pos].push_block(x_codes, rows);
+    }
+
+    fn finish(&mut self) {
+        let mut builders = std::mem::take(&mut self.builders);
+        for b in builders.iter_mut() {
+            self.stats.push(b.finish(&mut self.rng));
+        }
+        self.stats.sort_by_key(|s| s.conv_idx);
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +281,16 @@ mod tests {
             s_act: 0.01,
             s_w: 0.005,
         }
+    }
+
+    fn assert_stats_eq(a: &LayerStats, b: &LayerStats) {
+        assert_eq!(a.conv_idx, b.conv_idx);
+        assert_eq!((a.m, a.k, a.n), (b.m, b.k, b.n));
+        assert_eq!(a.act.counts, b.act.counts);
+        assert_eq!(a.act.total, b.act.total);
+        assert_eq!(a.psum.counts, b.psum.counts);
+        assert_eq!(a.psum.total, b.psum.total);
+        assert_eq!(a.weight_usage, b.weight_usage);
     }
 
     #[test]
@@ -155,14 +314,52 @@ mod tests {
         assert!(zf > 0.2 && zf < 0.5, "zero fraction {zf}");
     }
 
+    /// Streaming the same rows in arbitrary block partitions is
+    /// bit-identical to whole-capture collection — the property that
+    /// makes the executor's per-image tile stream equivalent to the
+    /// scalar engine's monolithic capture.
     #[test]
-    fn merge_accumulates() {
-        let cap = fake_capture(50, 64, 4, 5);
-        let mut rng = Xoshiro256::new(6);
-        let a = collect(&cap, &mut rng);
-        let b = collect(&cap, &mut rng);
-        let at = a.act.total;
-        let m = merge(vec![a, b]);
-        assert_eq!(m.act.total, at * 2);
+    fn blocked_streaming_equals_whole_capture() {
+        let cap = fake_capture(150, 130, 7, 7);
+        let whole = collect(&cap, &mut Xoshiro256::new(77));
+
+        for cuts in [vec![150usize], vec![1, 149], vec![37, 53, 60], vec![64, 64, 22]] {
+            let mut rng = Xoshiro256::new(77);
+            let plan = SamplePlan::draw(cap.k, cap.n, &mut rng);
+            let mut b = StatsBuilder::new(cap.conv_idx, cap.k, cap.n, &cap.w_codes, plan);
+            let mut r0 = 0usize;
+            for rows in cuts {
+                b.push_block(&cap.x_codes[r0 * cap.k..(r0 + rows) * cap.k], rows);
+                r0 += rows;
+            }
+            assert_eq!(r0, cap.m);
+            let st = b.finish(&mut rng);
+            assert_stats_eq(&whole, &st);
+        }
+    }
+
+    /// The sink path (plan drawn in `begin_conv`, blocks via `x_block`,
+    /// finalize in `finish`) equals `collect` with the same seed.
+    #[test]
+    fn sink_equals_collect() {
+        let cap = fake_capture(90, 100, 5, 9);
+        let whole = collect(&cap, &mut Xoshiro256::new(41));
+
+        let mut sink = StatsSink::new(41);
+        sink.begin_conv(&ConvHead {
+            conv_idx: cap.conv_idx,
+            m_total: cap.m,
+            k: cap.k,
+            n: cap.n,
+            w_codes: &cap.w_codes,
+            s_act: cap.s_act,
+            s_w: cap.s_w,
+        });
+        sink.x_block(cap.conv_idx, 40, &cap.x_codes[..40 * cap.k]);
+        sink.x_block(cap.conv_idx, 50, &cap.x_codes[40 * cap.k..]);
+        sink.finish();
+        let stats = sink.into_stats();
+        assert_eq!(stats.len(), 1);
+        assert_stats_eq(&whole, &stats[0]);
     }
 }

@@ -25,7 +25,7 @@ pub mod power;
 use crate::gates::{CapModel, TraceSim};
 use crate::mac::unit::mac_ref;
 pub use maclib::MacLib;
-pub use power::{network_power_exact, ExactLayerPower, ExactNetworkPower, TilePowerEngine};
+pub use power::{network_power_exact, ExactLayerPower, ExactNetworkPower, PowerSink, TilePowerEngine};
 
 /// Systolic array dimension.
 pub const TILE: usize = 64;

@@ -42,11 +42,12 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
 use super::{passes_of, MacLib, Pass};
+use crate::energy::validate::StreamMeta;
 use crate::energy::NetworkEnergy;
 use crate::gates::{transpose64, CapModel, EvalSchedule, Netlist, PowerCtx, TraceSim};
 use crate::mac::unit::mac_ref;
 use crate::mac::{ACC_BITS, ACT_BITS};
-use crate::model::ConvCapture;
+use crate::model::{CaptureSink, ConvCapture, ConvHead};
 use crate::util::threadpool::parallel_for_with;
 
 /// One deduplicated unit of work: the (X-block, weight-column) stream of
@@ -385,6 +386,111 @@ pub fn network_power_exact(
     ExactNetworkPower { layers }
 }
 
+/// [`CaptureSink`] adapter for the exact engine: every X row block (one
+/// batch chunk of one conv layer) is tiled and simulated **on
+/// arrival**, so exact network power is computed without ever
+/// materializing a layer's full im2col matrix — the streaming
+/// counterpart of [`network_power_exact`] over buffered captures.
+///
+/// Per-block tiling means m-blocks never span chunk boundaries, so
+/// cross-chunk stream dedup is traded for bounded memory (weight-column
+/// dedup across n-tiles — the dominant saving — still applies within
+/// every block).  `mac_steps` equals the buffered path exactly (Σ mh is
+/// partition-invariant); energies are exact for the chunked tile
+/// schedule and, like the engine itself, bit-identical for any thread
+/// count because blocks arrive in deterministic order.
+pub struct PowerSink<'l> {
+    engine: TilePowerEngine<'l>,
+    threads: usize,
+    heads: Vec<StreamMeta>,
+    layers: Vec<ExactLayerPower>,
+}
+
+impl<'l> PowerSink<'l> {
+    /// `lib` must be pre-specialized for every weight code the forward
+    /// will stream ([`MacLib::specialize_all`]).
+    pub fn new(lib: &'l MacLib, cap: &CapModel, threads: usize) -> Self {
+        Self {
+            engine: TilePowerEngine::new(lib, cap),
+            threads,
+            heads: Vec::new(),
+            layers: Vec::new(),
+        }
+    }
+
+    /// Per-conv operand metadata (dims + weight codes) — what the model
+    /// side of an exact-vs-model validation needs, without activations.
+    pub fn stream_meta(&self) -> &[StreamMeta] {
+        &self.heads
+    }
+
+    /// Accumulated exact power, ascending `conv_idx` (call after the
+    /// forward's `finish()`).
+    pub fn into_power(self) -> ExactNetworkPower {
+        self.into_parts().1
+    }
+
+    /// Both halves of a validation — the per-conv stream metadata (model
+    /// side) and the exact power — without cloning the weight codes.
+    pub fn into_parts(self) -> (Vec<StreamMeta>, ExactNetworkPower) {
+        (
+            self.heads,
+            ExactNetworkPower {
+                layers: self.layers,
+            },
+        )
+    }
+}
+
+impl CaptureSink for PowerSink<'_> {
+    fn begin_conv(&mut self, head: &ConvHead<'_>) {
+        assert!(
+            !self.heads.iter().any(|h| h.conv_idx == head.conv_idx),
+            "conv{} announced twice (one forward per PowerSink)",
+            head.conv_idx
+        );
+        self.heads.push(StreamMeta {
+            conv_idx: head.conv_idx,
+            m: head.m_total,
+            k: head.k,
+            n: head.n,
+            w_codes: head.w_codes.to_vec(),
+        });
+        self.layers.push(ExactLayerPower {
+            conv_idx: head.conv_idx,
+            energy_j: 0.0,
+            mac_steps: 0,
+            columns_total: 0,
+            columns_unique: 0,
+        });
+    }
+
+    fn x_block(&mut self, conv_idx: usize, rows: usize, x_codes: &[i8]) {
+        let head = self
+            .heads
+            .iter()
+            .find(|h| h.conv_idx == conv_idx)
+            .expect("x_block before begin_conv");
+        let (e, steps, total, unique) =
+            self.engine
+                .matmul_power(x_codes, &head.w_codes, rows, head.k, head.n, self.threads);
+        let l = self
+            .layers
+            .iter_mut()
+            .find(|l| l.conv_idx == conv_idx)
+            .expect("layer entry");
+        l.energy_j += e;
+        l.mac_steps += steps;
+        l.columns_total += total;
+        l.columns_unique += unique;
+    }
+
+    fn finish(&mut self) {
+        self.layers.sort_by_key(|l| l.conv_idx);
+        self.heads.sort_by_key(|h| h.conv_idx);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -498,6 +604,49 @@ mod tests {
             (e - e_ref).abs() <= e_ref * 1e-12,
             "cross-m dedup drifted: {e} vs {e_ref}"
         );
+    }
+
+    /// The streaming sink (per-block tiling) equals the engine run on
+    /// each block separately, and is thread-count invariant.
+    #[test]
+    fn power_sink_streams_blocks_thread_invariant() {
+        let (k, n) = (20usize, 9);
+        let w = small_codes(k * n, 30);
+        let blocks = [small_codes(40 * k, 31), small_codes(25 * k, 32)];
+        let mut lib = MacLib::new();
+        lib.specialize_for(&w, 2);
+        let cm = CapModel::default();
+        let run = |threads: usize| {
+            let mut sink = PowerSink::new(&lib, &cm, threads);
+            sink.begin_conv(&ConvHead {
+                conv_idx: 0,
+                m_total: 65,
+                k,
+                n,
+                w_codes: &w,
+                s_act: 0.01,
+                s_w: 0.01,
+            });
+            sink.x_block(0, 40, &blocks[0]);
+            sink.x_block(0, 25, &blocks[1]);
+            sink.finish();
+            assert_eq!(sink.stream_meta().len(), 1);
+            assert_eq!(sink.stream_meta()[0].m, 65);
+            sink.into_power()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.layers.len(), 1);
+        assert_eq!(
+            a.layers[0].energy_j.to_bits(),
+            b.layers[0].energy_j.to_bits()
+        );
+        assert_eq!(a.layers[0].mac_steps, b.layers[0].mac_steps);
+        let engine = TilePowerEngine::new(&lib, &cm);
+        let (e0, s0, ..) = engine.matmul_power(&blocks[0], &w, 40, k, n, 2);
+        let (e1, s1, ..) = engine.matmul_power(&blocks[1], &w, 25, k, n, 2);
+        assert_eq!(a.layers[0].mac_steps, s0 + s1);
+        assert_eq!(a.layers[0].energy_j.to_bits(), (e0 + e1).to_bits());
     }
 
     #[test]

@@ -72,6 +72,15 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// The conventional `--threads N` plumb-through: 0 or absent means
+    /// `default` (callers pass the pool's autodetected width).
+    pub fn threads_or(&self, default: usize) -> usize {
+        match self.usize_or("threads", 0) {
+            0 => default,
+            n => n,
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -118,5 +127,15 @@ mod tests {
     fn unknown_flags_detected() {
         let a = Args::parse(sv(&["--weird"]), &[]);
         assert_eq!(a.unknown_flags(&["fast"]), vec!["weird"]);
+    }
+
+    #[test]
+    fn threads_plumb_through() {
+        let a = Args::parse(sv(&["--threads", "6"]), &["threads"]);
+        assert_eq!(a.threads_or(2), 6);
+        let b = Args::parse(sv(&[]), &["threads"]);
+        assert_eq!(b.threads_or(2), 2);
+        let c = Args::parse(sv(&["--threads=0"]), &["threads"]);
+        assert_eq!(c.threads_or(3), 3);
     }
 }

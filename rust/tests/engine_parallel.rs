@@ -1,0 +1,199 @@
+//! The blocked parallel executor vs the retained scalar reference:
+//! bit-identical logits, activation maxima and captures across
+//! quantized / float / masked / weight-set configs, conv edge cases
+//! (stride 2 with odd input, pad 0, 1×1 and even kernels, cout not a
+//! multiple of the GEMM block) and thread counts — plus thread-count
+//! invariance of the streaming stats sink.
+
+use wsel::model::{CaptureBuffer, Engine, ModelSpec, ParallelEngine, Params, QuantConfig};
+use wsel::quant::{magnitude_mask, WeightSet};
+use wsel::stats::StatsSink;
+
+/// Edge-case conv tower: stride-2/pad-1, 1×1/pad-0, even kernel
+/// producing an odd feature map, then stride-2/pad-0 on that odd input;
+/// every cout is far from the 64-wide GEMM panel.
+const EDGE_MANIFEST: &str = r#"{
+  "model": "edges", "n_classes": 4, "input": [32, 32, 3],
+  "ops": [
+    {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+     "q_idx": 0, "cin": 3, "cout": 5, "k": 3, "stride": 2, "pad": 1,
+     "relu": true, "hin": 32, "win": 32, "hout": 16, "wout": 16},
+    {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+     "q_idx": 1, "cin": 5, "cout": 7, "k": 1, "stride": 1, "pad": 0,
+     "relu": false, "hin": 16, "win": 16, "hout": 16, "wout": 16},
+    {"op": "conv", "name": "conv2", "w": 4, "b": 5, "conv_idx": 2,
+     "q_idx": 2, "cin": 7, "cout": 6, "k": 2, "stride": 1, "pad": 0,
+     "relu": true, "hin": 16, "win": 16, "hout": 15, "wout": 15},
+    {"op": "conv", "name": "conv3", "w": 6, "b": 7, "conv_idx": 3,
+     "q_idx": 3, "cin": 6, "cout": 9, "k": 3, "stride": 2, "pad": 0,
+     "relu": true, "hin": 15, "win": 15, "hout": 7, "wout": 7},
+    {"op": "flatten"},
+    {"op": "fc", "name": "fc0", "w": 8, "b": 9, "q_idx": 4,
+     "din": 441, "dout": 4, "relu": false}
+  ],
+  "params": [
+    {"name": "conv0.w", "shape": [5, 3, 3, 3], "kind": "conv_w"},
+    {"name": "conv0.b", "shape": [5], "kind": "bias"},
+    {"name": "conv1.w", "shape": [7, 5, 1, 1], "kind": "conv_w"},
+    {"name": "conv1.b", "shape": [7], "kind": "bias"},
+    {"name": "conv2.w", "shape": [6, 7, 2, 2], "kind": "conv_w"},
+    {"name": "conv2.b", "shape": [6], "kind": "bias"},
+    {"name": "conv3.w", "shape": [9, 6, 3, 3], "kind": "conv_w"},
+    {"name": "conv3.b", "shape": [9], "kind": "bias"},
+    {"name": "fc0.w", "shape": [4, 441], "kind": "fc_w"},
+    {"name": "fc0.b", "shape": [4], "kind": "bias"}
+  ],
+  "n_conv": 4, "n_q": 5, "kset": 32, "qmax": 127, "seed": 1,
+  "set_sentinel": 1e9, "momentum": 0.9,
+  "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+  "pallas_eval": false
+}"#;
+
+/// Residual block with a 1×1 projection conv on the skip path (the
+/// executor's `AddSaved { proj }` branch, including its capture).
+const RESIDUAL_MANIFEST: &str = r#"{
+  "model": "residual", "n_classes": 4, "input": [32, 32, 3],
+  "ops": [
+    {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+     "q_idx": 0, "cin": 3, "cout": 8, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 32, "win": 32, "hout": 32, "wout": 32},
+    {"op": "save"},
+    {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+     "q_idx": 1, "cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1,
+     "relu": false, "hin": 32, "win": 32, "hout": 32, "wout": 32},
+    {"op": "add_saved", "relu": true,
+     "proj": {"op": "conv", "name": "proj0", "w": 4, "b": 5, "conv_idx": 2,
+              "q_idx": 2, "cin": 8, "cout": 8, "k": 1, "stride": 1, "pad": 0,
+              "relu": false, "hin": 32, "win": 32, "hout": 32, "wout": 32}},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc0", "w": 6, "b": 7, "q_idx": 3,
+     "din": 8, "dout": 4, "relu": false}
+  ],
+  "params": [
+    {"name": "conv0.w", "shape": [8, 3, 3, 3], "kind": "conv_w"},
+    {"name": "conv0.b", "shape": [8], "kind": "bias"},
+    {"name": "conv1.w", "shape": [8, 8, 3, 3], "kind": "conv_w"},
+    {"name": "conv1.b", "shape": [8], "kind": "bias"},
+    {"name": "proj0.w", "shape": [8, 8, 1, 1], "kind": "conv_w"},
+    {"name": "proj0.b", "shape": [8], "kind": "bias"},
+    {"name": "fc0.w", "shape": [4, 8], "kind": "fc_w"},
+    {"name": "fc0.b", "shape": [4], "kind": "bias"}
+  ],
+  "n_conv": 3, "n_q": 4, "kset": 32, "qmax": 127, "seed": 1,
+  "set_sentinel": 1e9, "momentum": 0.9,
+  "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+  "pallas_eval": false
+}"#;
+
+fn input(batch: usize, seed: u64) -> Vec<f32> {
+    let mut rng = wsel::util::rng::Xoshiro256::new(seed);
+    (0..batch * 32 * 32 * 3)
+        .map(|_| rng.range_f32(-1.0, 1.0))
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Scalar reference vs executor over every config family × thread
+/// count; captures compared field-for-field when quantized.
+fn check_all_configs(manifest: &str, seed: u64) {
+    let spec = ModelSpec::from_manifest_str(manifest).expect("manifest");
+    let p = Params::random(&spec, seed);
+    let scalar = Engine::new(&spec);
+    let batch = 3usize;
+    let x = input(batch, seed ^ 0xA5A5);
+    let scales = scalar.calibrate(&p.tensors, &[&x], batch);
+
+    let mut configs: Vec<(&str, QuantConfig)> = vec![
+        ("float", QuantConfig::float(&spec)),
+        ("quant", QuantConfig::quantized(&spec, scales.clone())),
+    ];
+    let convs = spec.convs();
+    let mut masked = QuantConfig::quantized(&spec, scales.clone());
+    masked.masks[0] = Some(magnitude_mask(&p.tensors[convs[0].w], 0.5));
+    configs.push(("masked", masked));
+    let mut wset = QuantConfig::quantized(&spec, scales.clone());
+    wset.wsets[1] = Some(WeightSet::new(vec![-64, -16, 0, 16, 64]));
+    configs.push(("wset", wset));
+    let mut both = QuantConfig::quantized(&spec, scales.clone());
+    both.masks[1] = Some(magnitude_mask(&p.tensors[convs[1].w], 0.7));
+    both.wsets[0] = Some(WeightSet::new(vec![-96, -32, -8, 0, 8, 32, 96]));
+    configs.push(("masked+wset", both));
+
+    for (name, qc) in &configs {
+        let capture = qc.quant_on;
+        let want = scalar.forward(&p.tensors, &x, batch, qc, capture);
+        for threads in [1usize, 2, 5] {
+            let eng = ParallelEngine::new(&spec, &p.tensors, qc, threads);
+            let mut buf = CaptureBuffer::new();
+            let got = eng.forward(&x, batch, &mut buf);
+            assert_eq!(
+                bits(&want.logits),
+                bits(&got.logits),
+                "{name}: logits diverge at {threads} threads"
+            );
+            assert_eq!(
+                bits(&want.act_max),
+                bits(&got.act_max),
+                "{name}: act_max diverges at {threads} threads"
+            );
+            if capture {
+                let caps = buf.into_captures();
+                assert_eq!(caps.len(), want.captures.len(), "{name}: capture count");
+                for (a, b) in want.captures.iter().zip(&caps) {
+                    assert_eq!(a.conv_idx, b.conv_idx, "{name}");
+                    assert_eq!((a.m, a.k, a.n), (b.m, b.k, b.n), "{name} conv{}", a.conv_idx);
+                    assert_eq!(a.x_codes, b.x_codes, "{name} conv{} x", a.conv_idx);
+                    assert_eq!(a.w_codes, b.w_codes, "{name} conv{} w", a.conv_idx);
+                    assert_eq!(a.s_act.to_bits(), b.s_act.to_bits(), "{name}");
+                    assert_eq!(a.s_w.to_bits(), b.s_w.to_bits(), "{name}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn edge_case_convs_bit_identical() {
+    check_all_configs(EDGE_MANIFEST, 1);
+}
+
+#[test]
+fn residual_projection_bit_identical() {
+    check_all_configs(RESIDUAL_MANIFEST, 2);
+}
+
+/// Streaming stats through the executor are thread-count invariant
+/// (blocks arrive in deterministic order regardless of the pool).
+#[test]
+fn stats_sink_thread_invariant() {
+    let spec = ModelSpec::from_manifest_str(EDGE_MANIFEST).expect("manifest");
+    let p = Params::random(&spec, 5);
+    let batch = 2usize;
+    let x = input(batch, 55);
+    let scales = Engine::new(&spec).calibrate(&p.tensors, &[&x], batch);
+    let qc = QuantConfig::quantized(&spec, scales);
+
+    let run = |threads: usize| {
+        let eng = ParallelEngine::new(&spec, &p.tensors, &qc, threads);
+        let mut sink = StatsSink::new(99);
+        eng.forward(&x, batch, &mut sink);
+        sink.into_stats()
+    };
+    let a = run(1);
+    let b = run(5);
+    assert_eq!(a.len(), spec.n_conv);
+    assert_eq!(a.len(), b.len());
+    for (sa, sb) in a.iter().zip(&b) {
+        assert_eq!(sa.conv_idx, sb.conv_idx);
+        assert_eq!((sa.m, sa.k, sa.n), (sb.m, sb.k, sb.n));
+        assert_eq!(sa.act.counts, sb.act.counts);
+        assert_eq!(sa.act.total, sb.act.total);
+        assert_eq!(sa.psum.counts, sb.psum.counts);
+        assert_eq!(sa.psum.total, sb.psum.total);
+        assert_eq!(sa.weight_usage, sb.weight_usage);
+        assert!(sa.act.total > 0);
+    }
+}

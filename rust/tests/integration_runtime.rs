@@ -55,6 +55,23 @@ fn runtime_agrees_with_mirror_engine() {
         .expect("train");
     rt.calibrate(2).expect("calibrate");
 
+    // The PJRT-free native calibration (same data recipe through the
+    // compiled float engine) must track the AOT `calib` graph closely —
+    // both are float forwards over the same batches, differing only in
+    // accumulation order.
+    let aot_scales = rt.act_scales.clone();
+    let native_scales = rt.calibrate_native(2, 2);
+    assert_eq!(aot_scales.len(), native_scales.len());
+    for (q, (a, n)) in aot_scales.iter().zip(&native_scales).enumerate() {
+        assert!(
+            (a - n).abs() <= 0.1 * a.abs().max(1e-6),
+            "quant point {q}: aot scale {a} vs native {n}"
+        );
+    }
+    // Restore the AOT scales so the logits cross-check below sees the
+    // exact state the HLO graphs were calibrated with.
+    rt.act_scales = aot_scales;
+
     let bs = rt.spec.batch_logits;
     let (xs, _ys) = data::batch(rt.data_seed, Split::Val, 0, bs, 10);
     let hlo_logits = rt.logits(&state, true, &xs).expect("logits");
@@ -78,12 +95,14 @@ fn runtime_agrees_with_mirror_engine() {
                 "row {row}: hlo {a} vs mirror {b} (scale {scale})"
             );
         }
-        let am_h = h
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
+        // Lowest-index tie-break, matching `Forward::argmax`'s documented
+        // contract (max_by would pick the *last* of exactly-equal maxima).
+        let mut am_h = 0;
+        for (i, v) in h.iter().enumerate().skip(1) {
+            if *v > h[am_h] {
+                am_h = i;
+            }
+        }
         assert_eq!(am_h, fwd.argmax(row), "argmax mismatch on row {row}");
     }
 }

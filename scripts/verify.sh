@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (see ROADMAP.md):
-#   cargo build --release && cargo test -q, plus clippy when available.
+#   cargo build --release && cargo test -q, plus fmt/clippy stages.
 #
 # Usage: scripts/verify.sh [--quick]
-#   --quick  additionally run the exact-vs-model validation smoke check
-#            (release mode: the gate-level tile-power engine vs the
-#            statistical energy model on a synthetic capture)
-# Env:   WSEL_BLESS=1 scripts/verify.sh   # re-bless golden snapshots
+#   --quick  skip clippy, and additionally run the exact-vs-model
+#            validation smoke check (release mode: the gate-level
+#            tile-power engine vs the statistical energy model on a
+#            synthetic capture)
+# Env:   WSEL_BLESS=1 scripts/verify.sh       # re-bless golden snapshots
+#        WSEL_STRICT_FMT=1 scripts/verify.sh  # make fmt drift fatal
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,16 +26,30 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    if ! cargo fmt --all -- --check; then
+        if [ "${WSEL_STRICT_FMT:-0}" = "1" ]; then
+            echo "fmt drift (WSEL_STRICT_FMT=1): failing" >&2
+            exit 1
+        fi
+        echo "fmt drift detected (advisory; set WSEL_STRICT_FMT=1 to gate)"
+    fi
+else
+    echo "rustfmt not installed; skipping (soft-fail)"
+fi
+
 if [ "$QUICK" -eq 1 ]; then
     echo "== exact-vs-model validation smoke (--quick) =="
     cargo test --release -q --test exact_power quick_exact_vs_model
-fi
-
-echo "== cargo clippy (soft-fail if unavailable) =="
-if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings
+    echo "== cargo clippy skipped (--quick) =="
 else
-    echo "clippy not installed; skipping (soft-fail)"
+    echo "== cargo clippy -D warnings (soft-fail if unavailable) =="
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "clippy not installed; skipping (soft-fail)"
+    fi
 fi
 
 echo "verify: OK"
