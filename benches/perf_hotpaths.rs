@@ -11,14 +11,20 @@
 //!   * the [`TransitionCostCache`] first-order table vs a full
 //!     re-characterization,
 //!   * int8 mirror-engine forward,
+//!   * native train-step and evaluate throughput, serial vs
+//!     batch-parallel (the PR-4 accuracy-oracle hot path; asserts the
+//!     ≥2× win at 4+ threads and bit-identical trained params),
 //!   * selection loop (greedy elimination, proxy mode),
 //!   * PJRT eval-graph execution latency.
 //!
+//! Speedup assertions are skipped when fewer than 4 hardware threads
+//! are available, when `WSEL_THREADS` caps the pool below 4, or when
+//! `WSEL_PERF_ASSERT=0` (low-core CI runners).
 //! Before/after numbers for the optimization pass are recorded in
 //! EXPERIMENTS.md §Perf.
 
 use std::sync::Arc;
-use wsel::bench::{bench, black_box, scenarios};
+use wsel::bench::{bench, black_box, perf_asserts_enabled, scenarios};
 use wsel::energy::cache::{EnergyEvaluator, EvalLayer, TransitionCostCache};
 use wsel::energy::{LayerEnergy, NetworkEnergy, WeightEnergyTable};
 use wsel::gates::{CapModel, TraceSim};
@@ -66,7 +72,7 @@ const FWD_BENCH_MANIFEST: &str = r#"{
   ],
   "n_conv": 3, "n_q": 4, "kset": 32, "qmax": 127, "seed": 1,
   "set_sentinel": 1e9, "momentum": 0.9,
-  "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+  "batches": {"train": 16, "eval": 32, "logits": 4, "calib": 8},
   "pallas_eval": false
 }"#;
 
@@ -235,14 +241,15 @@ fn main() {
         (e_eng.to_bits(), s_eng),
         "engine must be bit-identical to the sequential reference"
     );
-    // Acceptance gate: >= 2x tile-power throughput at 4+ threads.
-    if threads >= 4 {
+    // Acceptance gate: >= 2x tile-power throughput at 4+ threads
+    // (skipped on low-core runners / WSEL_PERF_ASSERT=0).
+    if perf_asserts_enabled() {
         assert!(
             tile_speedup >= 2.0,
             "tile power engine must be >= 2x at {threads} threads (got {tile_speedup:.2}x)"
         );
     } else {
-        println!("      (tile speedup assertion skipped: only {threads} thread(s) available)");
+        println!("      (tile speedup assertion skipped: <4 cores or WSEL_PERF_ASSERT=0)");
     }
 
     // ---- EnergyEvaluator: memoized+parallel vs direct ---------------------
@@ -279,10 +286,14 @@ fn main() {
     m_cached_par.report_throughput(36.0, "state-evals");
     let speedup = m_direct.median_ns as f64 / m_cached_par.median_ns.max(1) as f64;
     println!("      -> evaluator cached+parallel speedup vs direct: {speedup:.1}x");
-    assert!(
-        speedup >= 2.0,
-        "memoized evaluator must be >= 2x the direct path (got {speedup:.2}x)"
-    );
+    if perf_asserts_enabled() {
+        assert!(
+            speedup >= 2.0,
+            "memoized evaluator must be >= 2x the direct path (got {speedup:.2}x)"
+        );
+    } else {
+        println!("      (evaluator speedup assertion skipped: <4 cores or WSEL_PERF_ASSERT=0)");
+    }
 
     // ---- table3 layer-wise schedule evaluation: before/after --------------
     // The §4.3 sweep at table3's (ratio, K) menu over the synthetic
@@ -329,13 +340,13 @@ fn main() {
     println!("      -> table3 schedule evaluation speedup: {sched_speedup:.1}x");
     // Acceptance gate: >= 2x at 4+ threads.  (Cold cache every
     // iteration, so the win is structural, not warm-cache residue.)
-    if threads >= 4 {
+    if perf_asserts_enabled() {
         assert!(
             sched_speedup >= 2.0,
             "schedule evaluation must be >= 2x at {threads} threads (got {sched_speedup:.2}x)"
         );
     } else {
-        println!("      (speedup assertion skipped: only {threads} thread(s) available)");
+        println!("      (speedup assertion skipped: <4 cores or WSEL_PERF_ASSERT=0)");
     }
     // Both hosts must agree on the chosen compression plan exactly.
     {
@@ -433,13 +444,112 @@ fn main() {
             "parallel executor must be bit-identical to the scalar reference"
         );
         // Acceptance gate: >= 2x forward throughput at 4+ threads.
-        if threads >= 4 {
+        if perf_asserts_enabled() {
             assert!(
                 fwd_speedup >= 2.0,
                 "parallel forward must be >= 2x at {threads} threads (got {fwd_speedup:.2}x)"
             );
         } else {
-            println!("      (forward speedup assertion skipped: only {threads} thread(s) available)");
+            println!("      (forward speedup assertion skipped: <4 cores or WSEL_PERF_ASSERT=0)");
+        }
+    }
+
+    // ---- native train/eval backend: serial vs batch-parallel --------------
+    // The PR-4 deliverable: the accuracy oracle and the QAT train step
+    // through runtime::native::NativeBackend.  Before: one worker
+    // (the serial per-batch cost every schedule candidate used to pay).
+    // After: data-parallel across the batch with deterministic
+    // image-order gradient reduction.  Must be bit-identical AND >= 2x
+    // at 4+ threads.
+    {
+        use wsel::runtime::LrSchedule;
+        let spec = wsel::model::ModelSpec::from_manifest_str(FWD_BENCH_MANIFEST)
+            .expect("bench manifest");
+        let p0 = wsel::model::Params::random(&spec, 5);
+        let dense = CompressionState::dense(spec.n_conv);
+        let lr = LrSchedule {
+            base: 0.002,
+            decay_at: 1.0,
+        };
+        let ckpt_dir = std::env::temp_dir().join("wsel_perf_native");
+        let mk_rt = |t: usize| {
+            let mut rt = wsel::runtime::ModelRuntime::from_spec_native(
+                spec.clone(),
+                p0.tensors.clone(),
+                ckpt_dir.clone(),
+            );
+            rt.threads = t;
+            rt.act_scales = vec![0.02; spec.n_q];
+            rt
+        };
+        let steps = 2usize;
+        let bs_train = spec.batch_train;
+        let mut rt1 = mk_rt(1);
+        let m_t1 = bench("perf/native_train_steps_t1", 1, 5, || {
+            black_box(rt1.train_steps(&dense, true, lr, steps).expect("train"));
+        });
+        m_t1.report_throughput((steps * bs_train) as f64, "image-steps");
+        let mut rtn = mk_rt(threads);
+        let m_tn = bench(&format!("perf/native_train_steps_t{threads}"), 1, 5, || {
+            black_box(rtn.train_steps(&dense, true, lr, steps).expect("train"));
+        });
+        m_tn.report_throughput((steps * bs_train) as f64, "image-steps");
+        let train_speedup = m_t1.median_ns as f64 / m_tn.median_ns.max(1) as f64;
+        println!("      -> native train-step speedup vs serial: {train_speedup:.1}x");
+
+        // Bit-identity: fresh runtimes, same step count, any thread
+        // count -> bitwise-equal parameters and momentum effects.
+        {
+            let mut a = mk_rt(1);
+            let mut b = mk_rt(threads.max(2));
+            let la = a.train_steps(&dense, true, lr, 3).expect("train a");
+            let lb = b.train_steps(&dense, true, lr, 3).expect("train b");
+            assert_eq!(la.to_bits(), lb.to_bits(), "train loss must be bit-identical");
+            for (ta, tb) in a.params.iter().zip(&b.params) {
+                assert_eq!(
+                    ta.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    tb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "trained params must be bit-identical across thread counts"
+                );
+            }
+        }
+
+        // Evaluate throughput (the oracle's unit of cost, now native).
+        let bs_eval = spec.batch_eval;
+        let mut e1 = mk_rt(1);
+        let m_e1 = bench("perf/native_evaluate_t1", 1, 5, || {
+            black_box(
+                e1.evaluate(&dense, true, wsel::data::Split::Val, 1)
+                    .expect("eval"),
+            );
+        });
+        m_e1.report_throughput(bs_eval as f64, "images");
+        let mut en = mk_rt(threads);
+        let m_en = bench(&format!("perf/native_evaluate_t{threads}"), 1, 5, || {
+            black_box(
+                en.evaluate(&dense, true, wsel::data::Split::Val, 1)
+                    .expect("eval"),
+            );
+        });
+        m_en.report_throughput(bs_eval as f64, "images");
+        let eval_speedup = m_e1.median_ns as f64 / m_en.median_ns.max(1) as f64;
+        println!("      -> native evaluate speedup vs serial: {eval_speedup:.1}x");
+
+        // Acceptance gate: >= 2x train and eval throughput at 4+
+        // threads (skipped on low-core runners / WSEL_PERF_ASSERT=0).
+        if perf_asserts_enabled() {
+            assert!(
+                train_speedup >= 2.0,
+                "native train step must be >= 2x at {threads} threads (got {train_speedup:.2}x)"
+            );
+            assert!(
+                eval_speedup >= 2.0,
+                "native evaluate must be >= 2x at {threads} threads (got {eval_speedup:.2}x)"
+            );
+        } else {
+            println!(
+                "      (native train/eval speedup assertions skipped: <4 cores or WSEL_PERF_ASSERT=0)"
+            );
         }
     }
 

@@ -8,8 +8,10 @@
 //!     cargo run --release --example compress_lenet -- [--steps N] [--quick]
 //!
 //! Proves the full stack composes: L1 Pallas kernel numerics (validated
-//! in the artifacts), L2 AOT train/eval graphs executing through PJRT,
-//! L3 coordinator with gate-level energy substrates.
+//! in the artifacts), L2 train/eval graphs — AOT-PJRT when artifacts
+//! exist, the native batch-parallel backend otherwise, so the whole
+//! Table-1 flow runs offline — L3 coordinator with gate-level energy
+//! substrates.
 
 use anyhow::Result;
 use wsel::coordinator::{Pipeline, PipelineParams};
@@ -35,6 +37,7 @@ fn main() -> Result<()> {
 
     // ---- Ours: full pipeline -------------------------------------------
     let mut p = Pipeline::new(artifacts, "lenet5", pp.clone())?;
+    println!("backend: {}", p.rt.backend_name());
     let acc0 = p.train_baseline()?;
     p.profile()?;
     let trained = p.checkpoint();

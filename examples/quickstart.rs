@@ -1,11 +1,15 @@
-//! Quickstart: load the AOT artifacts, evaluate a model, estimate the
-//! energy of its first conv layer on the 64×64 systolic array.
+//! Quickstart: train + evaluate a model, estimate the energy of its
+//! first conv layer on the 64×64 systolic array.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! This touches each layer of the stack once: PJRT runtime (L3 ⇄ L2/L1
-//! artifacts), the int8 mirror engine, the gate-level MAC model and the
-//! tile-level energy composition.
+//! Runs fully offline: with AOT artifacts present (`make artifacts`)
+//! the training drivers go through PJRT; without them the pure-Rust
+//! [`wsel::runtime::native::NativeBackend`] takes over, so the
+//! quickstart works in a fresh checkout.  Either way this touches each
+//! layer of the stack once: the training/eval runtime, the int8 mirror
+//! engine, the gate-level MAC model and the tile-level energy
+//! composition.
 
 use anyhow::Result;
 use wsel::coordinator::{Pipeline, PipelineParams};
@@ -14,13 +18,11 @@ use wsel::selection::CompressionState;
 
 fn main() -> Result<()> {
     let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("lenet5/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
 
-    // 1. Load LeNet-5 and give it a short training run (quick preset).
+    // 1. Load LeNet-5 (AOT artifacts when built, native otherwise) and
+    //    give it a short training run (quick preset).
     let mut p = Pipeline::new(artifacts, "lenet5", PipelineParams::quick())?;
+    println!("backend: {}", p.rt.backend_name());
     let acc0 = p.train_baseline()?;
     println!("quantized baseline accuracy: {acc0:.3}");
 

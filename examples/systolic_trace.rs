@@ -13,13 +13,12 @@ use wsel::model::{CaptureBuffer, ParallelEngine, QuantConfig};
 use wsel::systolic::{self, MacLib};
 
 fn main() -> Result<()> {
+    // Native backend takes over when no artifacts are built, so this
+    // walkthrough runs offline too.
     let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("lenet5/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
     let threads = wsel::util::threadpool::default_threads();
     let mut p = Pipeline::new(artifacts, "lenet5", PipelineParams::quick())?;
+    println!("backend: {}", p.rt.backend_name());
     p.train_baseline()?;
 
     // Capture real operand streams for conv1 (the 16×5×5 layer) via the

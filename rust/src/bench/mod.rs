@@ -77,6 +77,26 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Whether the ≥2× speedup assertions in `benches/perf_hotpaths.rs`
+/// should be enforced: requires ≥ 4 hardware threads
+/// (`std::thread::available_parallelism`) **and** a worker pool of ≥ 4
+/// (`default_threads()`, which honors the `WSEL_THREADS` override the
+/// benches actually run with), and can be force-disabled with
+/// `WSEL_PERF_ASSERT=0` (low-core CI runners would otherwise flake —
+/// the benches still run and report, they just don't gate).
+pub fn perf_asserts_enabled() -> bool {
+    if std::env::var("WSEL_PERF_ASSERT")
+        .map(|v| v == "0")
+        .unwrap_or(false)
+    {
+        return false;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    hw.min(crate::util::threadpool::default_threads()) >= 4
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

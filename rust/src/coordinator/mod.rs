@@ -1,11 +1,14 @@
 //! End-to-end compression pipeline (the L3 coordinator).
 //!
-//! Owns the PJRT runtime, the int8 mirror engine, the gate-level energy
-//! substrate and the compression algorithms, and drives the paper's full
-//! flow: QAT training → calibration → per-layer statistics → per-weight
-//! energy characterization → energy-prioritized layer-wise compression →
-//! reporting.  It implements [`LayerModeler`] + [`AccuracyOracle`] so the
-//! §4 algorithms run against the real system.
+//! Owns the training/eval runtime (AOT-PJRT or the native
+//! batch-parallel backend, selected by `PipelineParams::backend`), the
+//! int8 mirror engine, the gate-level energy substrate and the
+//! compression algorithms, and drives the paper's full flow: QAT
+//! training → calibration → per-layer statistics → per-weight energy
+//! characterization → energy-prioritized layer-wise compression →
+//! reporting.  It implements [`LayerModeler`] + [`AccuracyOracle`] so
+//! the §4 algorithms run against the real system — offline and
+//! multi-threaded on the native backend.
 
 use crate::data::Split;
 use crate::energy::cache::{EnergyEvaluator, EvalLayer};
@@ -13,7 +16,7 @@ use crate::energy::{characterize_layer_shared, LayerEnergy, NetworkEnergy, Weigh
 use crate::gates::CapModel;
 use crate::model::{CaptureSink, ParallelEngine, QuantConfig};
 use crate::quant;
-use crate::runtime::{LrSchedule, ModelRuntime};
+use crate::runtime::{BackendChoice, LrSchedule, ModelRuntime};
 use crate::schedule::{energy_prioritized, ScheduleParams, ScheduleResult};
 use crate::selection::{AccuracyOracle, CompressionState};
 use crate::stats::{LayerStats, StatsSink};
@@ -41,6 +44,13 @@ pub struct PipelineParams {
     pub stats_images: usize,
     pub threads: usize,
     pub seed: u64,
+    /// Dataset seed shared by every driver (train/eval/calib batches);
+    /// `--data-seed` on the CLI.  Historically hard-coded to 7 inside
+    /// the runtime.
+    pub data_seed: u64,
+    /// Which training/eval backend to run (AOT-PJRT, native, or pick
+    /// automatically); `--backend` on the CLI.
+    pub backend: BackendChoice,
 }
 
 impl Default for PipelineParams {
@@ -55,6 +65,8 @@ impl Default for PipelineParams {
             stats_images: 8,
             threads: crate::util::threadpool::default_threads(),
             seed: 20250710,
+            data_seed: ModelRuntime::DEFAULT_DATA_SEED,
+            backend: BackendChoice::Auto,
         }
     }
 }
@@ -99,8 +111,19 @@ pub struct Pipeline {
 
 impl Pipeline {
     pub fn new(artifacts_dir: &std::path::Path, model: &str, pp: PipelineParams) -> Result<Self> {
-        let rt = ModelRuntime::load(artifacts_dir, model)?;
-        Ok(Self {
+        let rt = ModelRuntime::auto(artifacts_dir, model, pp.backend)?;
+        crate::info!("{model}: {} backend", rt.backend_name());
+        Ok(Self::from_runtime(rt, pp))
+    }
+
+    /// Assemble a pipeline around an already-constructed runtime (tests
+    /// and synthetic workloads use this with
+    /// [`ModelRuntime::from_spec_native`]).  Applies the pipeline's
+    /// `data_seed` and `threads` to the runtime.
+    pub fn from_runtime(mut rt: ModelRuntime, pp: PipelineParams) -> Self {
+        rt.data_seed = pp.data_seed;
+        rt.threads = pp.threads;
+        Self {
             rt,
             pp,
             cap_model: CapModel::default(),
@@ -113,7 +136,7 @@ impl Pipeline {
             ft_steps_total: 0,
             params_epoch: 0,
             eval_cache: RefCell::new(None),
-        })
+        }
     }
 
     /// Invalidate the memoized energy evaluator.  Called internally

@@ -32,12 +32,14 @@ subcommands:
 
 common options:
   --artifacts <dir>   artifact directory (default: artifacts)
-  --seed <u64>        dataset / sampling seed (default 7)
+  --backend <b>       auto | aot | native (default auto: AOT when
+                      artifacts exist, else the pure-Rust backend)
+  --data-seed <u64>   dataset seed (default 7; --seed is an alias)
   --threads <n>       worker threads for parallel engines (default: autodetect)
   --quick             small preset (smoke-scale)
 models: lenet5 | resnet20 | resnet50lite";
 
-fn params_from(args: &Args) -> PipelineParams {
+fn params_from(args: &Args) -> Result<PipelineParams> {
     let mut pp = if args.flag("quick") {
         PipelineParams::quick()
     } else {
@@ -51,7 +53,11 @@ fn params_from(args: &Args) -> PipelineParams {
     };
     pp.val_batches = args.usize_or("val-batches", pp.val_batches);
     pp.threads = args.threads_or(pp.threads);
-    pp
+    // `--seed` stays as an alias for the dataset seed; `--data-seed`
+    // wins when both are given.
+    pp.data_seed = args.u64_or("data-seed", args.u64_or("seed", pp.data_seed));
+    pp.backend = wsel::runtime::BackendChoice::parse(args.opt_or("backend", "auto"))?;
+    Ok(pp)
 }
 
 fn pipeline(args: &Args) -> Result<Pipeline> {
@@ -59,15 +65,18 @@ fn pipeline(args: &Args) -> Result<Pipeline> {
     let model = args
         .opt("model")
         .ok_or_else(|| anyhow::anyhow!("--model required\n{USAGE}"))?;
-    let mut p = Pipeline::new(&dir, model, params_from(args))?;
-    p.rt.data_seed = args.u64_or("seed", 7);
-    Ok(p)
+    Pipeline::new(&dir, model, params_from(args)?)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let mut p = pipeline(args)?;
     let acc = p.train_baseline()?;
-    println!("model={} quantized-acc0={:.4}", p.rt.spec.name, acc);
+    println!(
+        "model={} backend={} quantized-acc0={:.4}",
+        p.rt.spec.name,
+        p.rt.backend_name(),
+        acc
+    );
     Ok(())
 }
 
@@ -265,7 +274,9 @@ fn main() -> Result<()> {
         &[
             "model",
             "artifacts",
+            "backend",
             "seed",
+            "data-seed",
             "threads",
             "float-steps",
             "qat-steps",

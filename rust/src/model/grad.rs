@@ -1,0 +1,961 @@
+//! Reverse-mode training engine: the native mirror of the AOT `train`
+//! HLO graph.
+//!
+//! Forward semantics match `python/compile/model.py` exactly:
+//!
+//! * weights are **always** fake-quantized (mask → per-tensor scale →
+//!   int8 round/clip → optional candidate-set projection → dequantize),
+//!   even when `quant_on` is false — that is what `_quant_weight` does
+//!   in the JAX graph;
+//! * activations are fake-quantized per quant point only when
+//!   `quant_on` is set;
+//! * convolutions and fc layers compute in f32 over the fake-quant
+//!   values (the training path uses XLA's float convolution, not the
+//!   int8 mirror), so this engine reproduces the AOT training numerics
+//!   up to float summation order.
+//!
+//! Backward applies the straight-through estimator: every fake-quant
+//! (weights and activations) has identity gradient, with the pruning
+//! mask as the only weight-gradient filter (`w_eff = w ⊙ mask` is the
+//! sole differentiable path through `_quant_weight`).  ReLU kinks use
+//! the `x > 0` convention (JAX's `relu` JVP), max-pool routes to the
+//! first maximum in forward scan order, and the loss is the batch-mean
+//! softmax cross-entropy.
+//!
+//! Parallelism: images are independent, so [`GradEngine::batch_grad`]
+//! fans them out over [`crate::util::threadpool`] and reduces per-image
+//! gradients **in ascending image order** on the caller's thread —
+//! results are bit-identical at any thread count (pinned in
+//! `rust/tests/native_backend.rs`).  Finite-difference checks for every
+//! backward kernel live in this module's tests (with weight fake-quant
+//! disabled, since a rounding staircase has no meaningful FD slope —
+//! the `fake_quant_weights: false` switch exists for exactly that).
+
+use super::infer::QuantConfig;
+use super::kernels;
+use super::spec::{ConvOp, ModelSpec, Op, INPUT_C, INPUT_ELEMS, INPUT_H, INPUT_W};
+use crate::quant;
+use crate::util::threadpool::parallel_for_with;
+
+/// Fake-quantize one value at scale `s` (symmetric int8, JAX
+/// `fake_quant_ref` semantics: non-positive scale maps everything to 0).
+#[inline]
+fn fq(v: f32, s: f32) -> f32 {
+    if s > 0.0 {
+        quant::dequantize(quant::quantize(v, s), s)
+    } else {
+        0.0
+    }
+}
+
+/// Per-image tensor shape at a step boundary.
+#[derive(Clone, Copy, Debug)]
+struct Sh {
+    h: usize,
+    w: usize,
+    c: usize,
+    flat: bool,
+}
+
+impl Sh {
+    fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// Pre-lowered conv weights for one training step: fake-quant values in
+/// the K×N im2col layout plus the OIHW pruning mask (the STE gradient
+/// filter).
+struct ConvW {
+    /// kk×nn fake-quant weight *values* (codes·scale), row-major.
+    wkn: Vec<f32>,
+    /// OIHW 0/1 mask; empty = dense.
+    mask: Vec<f32>,
+}
+
+/// Fake-quant fc weights (dout×din values, no mask).
+struct FcW {
+    wvals: Vec<f32>,
+}
+
+/// Per-image tape entry: the step's output plus (when activations are
+/// quantized) the fake-quant input values the matmul actually consumed.
+#[derive(Default)]
+struct TapeEntry {
+    out: Vec<f32>,
+    qin: Vec<f32>,
+    proj_out: Vec<f32>,
+    proj_qin: Vec<f32>,
+}
+
+/// Reused per-image scratch (one per worker).
+#[derive(Default)]
+struct GradScratch {
+    cols: Vec<f32>,
+    dcols: Vec<f32>,
+    dwkn: Vec<f32>,
+    qbuf: Vec<f32>,
+}
+
+/// One image's backward product.
+struct ImgGrad {
+    loss: f32,
+    grads: Vec<Vec<f32>>,
+}
+
+/// The compiled training engine: spec + one fake-quant weight snapshot.
+/// Rebuild per step (weight quantization tracks the float shadow
+/// weights, exactly like the AOT graph recomputes it every step).
+pub struct GradEngine<'s> {
+    spec: &'s ModelSpec,
+    quant_on: bool,
+    act_scales: Vec<f32>,
+    convs: Vec<ConvW>,
+    fcs: Vec<FcW>,
+    /// Input shape of each op.
+    shapes: Vec<Sh>,
+    /// For each `AddSaved` op index, the matching `Save` op index.
+    pairs: Vec<usize>,
+}
+
+impl<'s> GradEngine<'s> {
+    /// Lower `params` under `qc`.  `fake_quant_weights` is true on every
+    /// production path; tests disable it so the loss is differentiable
+    /// and finite differences can validate the backward kernels.
+    pub fn new(
+        spec: &'s ModelSpec,
+        params: &[Vec<f32>],
+        qc: &QuantConfig,
+        fake_quant_weights: bool,
+    ) -> Self {
+        assert_eq!(qc.act_scales.len(), spec.n_q);
+        assert_eq!(qc.masks.len(), spec.n_conv);
+        assert_eq!(qc.wsets.len(), spec.n_conv);
+        // Conv weights in conv_idx order.
+        let convs = spec
+            .convs()
+            .iter()
+            .map(|cv| {
+                let wt = &params[cv.w];
+                let mask = qc.masks[cv.conv_idx].clone().unwrap_or_default();
+                let m_opt = if mask.is_empty() {
+                    None
+                } else {
+                    Some(mask.as_slice())
+                };
+                let w_oihw: Vec<f32> = if fake_quant_weights {
+                    let (codes, s) =
+                        quant::quantize_restricted(wt, m_opt, qc.wsets[cv.conv_idx].as_ref());
+                    codes.iter().map(|&c| c as f32 * s).collect()
+                } else {
+                    match m_opt {
+                        Some(m) => wt.iter().zip(m).map(|(&v, &mv)| v * mv).collect(),
+                        None => wt.clone(),
+                    }
+                };
+                // OIHW -> K×N ((ky, kx, ci) rows, cout columns).
+                let kk = cv.k * cv.k * cv.cin;
+                let nn = cv.cout;
+                let mut wkn = vec![0.0f32; kk * nn];
+                for o in 0..cv.cout {
+                    for ci in 0..cv.cin {
+                        for ky in 0..cv.k {
+                            for kx in 0..cv.k {
+                                let src = ((o * cv.cin + ci) * cv.k + ky) * cv.k + kx;
+                                let row = (ky * cv.k + kx) * cv.cin + ci;
+                                wkn[row * nn + o] = w_oihw[src];
+                            }
+                        }
+                    }
+                }
+                ConvW { wkn, mask }
+            })
+            .collect();
+        let fcs = spec
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Fc(fc) => {
+                    let wt = &params[fc.w];
+                    let wvals = if fake_quant_weights {
+                        let (codes, s) = quant::quantize_restricted(wt, None, None);
+                        codes.iter().map(|&c| c as f32 * s).collect()
+                    } else {
+                        wt.clone()
+                    };
+                    Some(FcW { wvals })
+                }
+                _ => None,
+            })
+            .collect();
+        let (shapes, pairs) = Self::lower_shapes(spec);
+        Self {
+            spec,
+            quant_on: qc.quant_on,
+            act_scales: qc.act_scales.clone(),
+            convs,
+            fcs,
+            shapes,
+            pairs,
+        }
+    }
+
+    /// Input shape of every op plus the Save index matching each
+    /// AddSaved (mirrors the IR lowering's structural checks).
+    fn lower_shapes(spec: &ModelSpec) -> (Vec<Sh>, Vec<usize>) {
+        let mut sh = Sh {
+            h: INPUT_H,
+            w: INPUT_W,
+            c: INPUT_C,
+            flat: false,
+        };
+        let mut shapes = Vec::with_capacity(spec.ops.len());
+        let mut pairs = vec![usize::MAX; spec.ops.len()];
+        let mut saved: Vec<(usize, Sh)> = Vec::new();
+        for (i, op) in spec.ops.iter().enumerate() {
+            shapes.push(sh);
+            match op {
+                Op::Conv(cv) => {
+                    assert_eq!((sh.h, sh.w, sh.c), (cv.hin, cv.win, cv.cin));
+                    sh = Sh {
+                        h: cv.hout,
+                        w: cv.wout,
+                        c: cv.cout,
+                        flat: false,
+                    };
+                }
+                Op::MaxPool2 => {
+                    assert!(sh.h % 2 == 0 && sh.w % 2 == 0, "maxpool2 needs even dims");
+                    sh.h /= 2;
+                    sh.w /= 2;
+                }
+                Op::Gap => {
+                    sh = Sh {
+                        h: 1,
+                        w: 1,
+                        c: sh.c,
+                        flat: true,
+                    };
+                }
+                Op::Flatten => {
+                    sh = Sh {
+                        h: 1,
+                        w: 1,
+                        c: sh.numel(),
+                        flat: true,
+                    };
+                }
+                Op::Save => saved.push((i, sh)),
+                Op::AddSaved { proj, .. } => {
+                    let (j, ssh) = saved.pop().expect("unbalanced save/add");
+                    pairs[i] = j;
+                    if let Some(p) = proj {
+                        assert_eq!((ssh.h, ssh.w, ssh.c), (p.hin, p.win, p.cin));
+                        assert_eq!((p.hout, p.wout, p.cout), (sh.h, sh.w, sh.c));
+                    } else {
+                        assert_eq!(ssh.numel(), sh.numel(), "skip shape mismatch");
+                    }
+                }
+                Op::Fc(fc) => {
+                    assert!(sh.flat, "fc expects flattened input");
+                    assert_eq!(sh.c, fc.din);
+                    sh = Sh {
+                        h: 1,
+                        w: 1,
+                        c: fc.dout,
+                        flat: true,
+                    };
+                }
+            }
+        }
+        assert!(saved.is_empty(), "unbalanced save/add");
+        (shapes, pairs)
+    }
+
+    /// Fake-quantize `src` at quant point `q_idx` into `dst`; returns
+    /// whether quantization was applied (false ⇒ caller uses `src`).
+    fn quant_act(&self, src: &[f32], q_idx: usize, dst: &mut Vec<f32>) -> bool {
+        if !self.quant_on {
+            return false;
+        }
+        let s = self.act_scales[q_idx];
+        dst.clear();
+        dst.extend(src.iter().map(|&v| fq(v, s)));
+        true
+    }
+
+    /// Conv forward over one image: fake-quant input (when quantizing),
+    /// im2col, f32 GEMM, bias, ReLU.  Returns (output, stored quantized
+    /// input — empty when the raw input was used or `keep_qin` is off;
+    /// tape-less forwards keep the buffer in the scratch for reuse).
+    fn conv_fwd(
+        &self,
+        cv: &ConvOp,
+        input: &[f32],
+        params: &[Vec<f32>],
+        scratch: &mut GradScratch,
+        keep_qin: bool,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let cw = &self.convs[cv.conv_idx];
+        let used_q = self.quant_act(input, cv.q_idx, &mut scratch.qbuf);
+        let x_used: &[f32] = if used_q { &scratch.qbuf } else { input };
+        kernels::im2col_f32(x_used, 1, cv.hin, cv.win, cv.cin, cv, &mut scratch.cols);
+        let m = cv.hout * cv.wout;
+        let kk = cv.k * cv.k * cv.cin;
+        let nn = cv.cout;
+        let mut out = vec![0.0f32; m * nn];
+        kernels::gemm_f32(&scratch.cols, &cw.wkn, m, kk, nn, &mut out);
+        let bias = &params[cv.b];
+        for row in out.chunks_exact_mut(nn) {
+            for (v, &bv) in row.iter_mut().zip(bias) {
+                *v += bv;
+            }
+        }
+        if cv.relu {
+            out.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+        let qin = if used_q && keep_qin {
+            std::mem::take(&mut scratch.qbuf)
+        } else {
+            Vec::new()
+        };
+        (out, qin)
+    }
+
+    /// Conv backward over one image.  `dy` is the gradient at the conv
+    /// *output* (post-ReLU); `input`/`qin` are the tensors the forward
+    /// consumed; accumulates into `gw`/`gb` (param-shaped) and returns
+    /// the input gradient (STE: activation fake-quant is identity).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_bwd(
+        &self,
+        cv: &ConvOp,
+        input: &[f32],
+        qin: &[f32],
+        out: &[f32],
+        mut dy: Vec<f32>,
+        gw: &mut [f32],
+        gb: &mut [f32],
+        scratch: &mut GradScratch,
+    ) -> Vec<f32> {
+        let cw = &self.convs[cv.conv_idx];
+        let m = cv.hout * cv.wout;
+        let kk = cv.k * cv.k * cv.cin;
+        let nn = cv.cout;
+        if cv.relu {
+            for (d, &o) in dy.iter_mut().zip(out) {
+                if o <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+        }
+        // Bias gradient: column sums of dY.
+        for row in dy.chunks_exact(nn) {
+            for (g, &d) in gb.iter_mut().zip(row) {
+                *g += d;
+            }
+        }
+        // Weight gradient: dWkn = colsᵀ·dY, remapped to OIHW under the
+        // pruning mask (the STE path through w_eff = w ⊙ mask).
+        let x_used: &[f32] = if qin.is_empty() { input } else { qin };
+        kernels::im2col_f32(x_used, 1, cv.hin, cv.win, cv.cin, cv, &mut scratch.cols);
+        scratch.dwkn.clear();
+        scratch.dwkn.resize(kk * nn, 0.0);
+        kernels::gemm_f32_xt_y(&scratch.cols, &dy, m, kk, nn, &mut scratch.dwkn);
+        let dense = cw.mask.is_empty();
+        for o in 0..cv.cout {
+            for ci in 0..cv.cin {
+                for ky in 0..cv.k {
+                    for kx in 0..cv.k {
+                        let dst = ((o * cv.cin + ci) * cv.k + ky) * cv.k + kx;
+                        let row = (ky * cv.k + kx) * cv.cin + ci;
+                        let g = scratch.dwkn[row * nn + o];
+                        gw[dst] += if dense { g } else { g * cw.mask[dst] };
+                    }
+                }
+            }
+        }
+        // Input gradient: dCols = dY·Wᵀ, scattered back by col2im.
+        scratch.dcols.clear();
+        scratch.dcols.resize(m * kk, 0.0);
+        kernels::gemm_f32_y_wt(&dy, &cw.wkn, m, kk, nn, &mut scratch.dcols);
+        let mut dx = vec![0.0f32; cv.hin * cv.win * cv.cin];
+        kernels::col2im_f32_add(&scratch.dcols, 1, cv.hin, cv.win, cv.cin, cv, &mut dx);
+        dx
+    }
+
+    /// Forward one image, recording the tape when `tape` is given.
+    /// Returns the logits.
+    fn forward_image(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        scratch: &mut GradScratch,
+        mut tape: Option<&mut Vec<TapeEntry>>,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), INPUT_ELEMS);
+        let mut cur: Vec<f32> = x.to_vec();
+        let mut saved: Vec<Vec<f32>> = Vec::new();
+        let mut fc_pos = 0usize;
+        for (i, op) in self.spec.ops.iter().enumerate() {
+            let sh = self.shapes[i];
+            let mut entry = TapeEntry::default();
+            match op {
+                Op::Conv(cv) => {
+                    let (out, qin) = self.conv_fwd(cv, &cur, params, scratch, tape.is_some());
+                    entry.qin = qin;
+                    cur = out;
+                }
+                Op::MaxPool2 => {
+                    let mut out = Vec::new();
+                    kernels::maxpool2(&cur, 1, sh.h, sh.w, sh.c, &mut out);
+                    cur = out;
+                }
+                Op::Gap => {
+                    let mut out = Vec::new();
+                    kernels::gap(&cur, 1, sh.h, sh.w, sh.c, &mut out);
+                    cur = out;
+                }
+                Op::Flatten => {}
+                Op::Save => saved.push(cur.clone()),
+                Op::AddSaved { relu, proj } => {
+                    let skip = saved.pop().expect("unbalanced save/add");
+                    let skip = if let Some(p) = proj {
+                        let (out, qin) = self.conv_fwd(p, &skip, params, scratch, tape.is_some());
+                        if tape.is_some() {
+                            entry.proj_qin = qin;
+                            entry.proj_out = out.clone();
+                        }
+                        out
+                    } else {
+                        skip
+                    };
+                    for (a, &b) in cur.iter_mut().zip(&skip) {
+                        *a += b;
+                    }
+                    if *relu {
+                        cur.iter_mut().for_each(|v| *v = v.max(0.0));
+                    }
+                }
+                Op::Fc(fc) => {
+                    let used_q = self.quant_act(&cur, fc.q_idx, &mut scratch.qbuf);
+                    let x_used: &[f32] = if used_q { &scratch.qbuf } else { &cur };
+                    let fw = &self.fcs[fc_pos];
+                    let bias = &params[fc.b];
+                    let mut out = vec![0.0f32; fc.dout];
+                    for (o, ov) in out.iter_mut().enumerate() {
+                        let wrow = &fw.wvals[o * fc.din..(o + 1) * fc.din];
+                        let mut acc = 0.0f32;
+                        for (xv, wv) in x_used.iter().zip(wrow) {
+                            acc += xv * wv;
+                        }
+                        *ov = acc + bias[o];
+                        if fc.relu {
+                            *ov = ov.max(0.0);
+                        }
+                    }
+                    if used_q && tape.is_some() {
+                        entry.qin = std::mem::take(&mut scratch.qbuf);
+                    }
+                    fc_pos += 1;
+                    cur = out;
+                }
+            }
+            if let Some(t) = tape.as_mut() {
+                entry.out = cur.clone();
+                t.push(entry);
+            }
+        }
+        cur
+    }
+
+    /// Softmax cross-entropy of one image: (nll, dlogits).
+    fn xent(logits: &[f32], label: i32) -> (f32, Vec<f32>) {
+        let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let sum: f32 = logits.iter().map(|&v| (v - max).exp()).sum();
+        let lse = max + sum.ln();
+        let y = label as usize;
+        assert!(y < logits.len(), "label {label} out of range");
+        let loss = lse - logits[y];
+        let mut d: Vec<f32> = logits.iter().map(|&v| (v - lse).exp()).collect();
+        d[y] -= 1.0;
+        (loss, d)
+    }
+
+    /// Forward + backward for one image; returns the per-image NLL and
+    /// param-shaped gradients of that NLL (unscaled — the caller
+    /// divides the fixed-order sum by the batch size).
+    fn image_grad(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        label: i32,
+        scratch: &mut GradScratch,
+    ) -> ImgGrad {
+        let mut tape: Vec<TapeEntry> = Vec::with_capacity(self.spec.ops.len());
+        let logits = self.forward_image(params, x, scratch, Some(&mut tape));
+        let (loss, dlogits) = Self::xent(&logits, label);
+        let mut grads: Vec<Vec<f32>> = self
+            .spec
+            .params
+            .iter()
+            .map(|p| vec![0.0f32; p.numel()])
+            .collect();
+        let mut dcur = dlogits;
+        // Pending skip gradients keyed by Save op index.
+        let mut pending: Vec<Option<Vec<f32>>> = vec![None; self.spec.ops.len()];
+        let mut fc_pos = self.fcs.len();
+        for (i, op) in self.spec.ops.iter().enumerate().rev() {
+            let sh = self.shapes[i];
+            let input: &[f32] = if i == 0 { x } else { &tape[i - 1].out };
+            match op {
+                Op::Conv(cv) => {
+                    let (gw, gb) = split_two(&mut grads, cv.w, cv.b);
+                    dcur = self.conv_bwd(
+                        cv,
+                        input,
+                        &tape[i].qin,
+                        &tape[i].out,
+                        dcur,
+                        gw,
+                        gb,
+                        scratch,
+                    );
+                }
+                Op::MaxPool2 => {
+                    let (h, w, c) = (sh.h, sh.w, sh.c);
+                    let (ho, wo) = (h / 2, w / 2);
+                    let out = &tape[i].out;
+                    let mut dx = vec![0.0f32; h * w * c];
+                    for oy in 0..ho {
+                        for ox in 0..wo {
+                            for ch in 0..c {
+                                let ov = out[(oy * wo + ox) * c + ch];
+                                let d = dcur[(oy * wo + ox) * c + ch];
+                                if d == 0.0 {
+                                    continue;
+                                }
+                                // First maximum in forward scan order
+                                // (y-major) receives the gradient.
+                                'route: for dy_ in 0..2 {
+                                    for dx_ in 0..2 {
+                                        let iy = oy * 2 + dy_;
+                                        let ix = ox * 2 + dx_;
+                                        if input[(iy * w + ix) * c + ch] == ov {
+                                            dx[(iy * w + ix) * c + ch] += d;
+                                            break 'route;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    dcur = dx;
+                }
+                Op::Gap => {
+                    let (h, w, c) = (sh.h, sh.w, sh.c);
+                    let inv = 1.0 / (h * w) as f32;
+                    let mut dx = vec![0.0f32; h * w * c];
+                    for pix in 0..h * w {
+                        for ch in 0..c {
+                            dx[pix * c + ch] = dcur[ch] * inv;
+                        }
+                    }
+                    dcur = dx;
+                }
+                Op::Flatten => {}
+                Op::Save => {
+                    if let Some(dskip) = pending[i].take() {
+                        for (a, b) in dcur.iter_mut().zip(dskip) {
+                            *a += b;
+                        }
+                    }
+                }
+                Op::AddSaved { relu, proj } => {
+                    if *relu {
+                        for (d, &o) in dcur.iter_mut().zip(&tape[i].out) {
+                            if o <= 0.0 {
+                                *d = 0.0;
+                            }
+                        }
+                    }
+                    let save_idx = self.pairs[i];
+                    let dskip = if let Some(p) = proj {
+                        let saved_in: &[f32] = &tape[save_idx].out;
+                        let (gw, gb) = split_two(&mut grads, p.w, p.b);
+                        self.conv_bwd(
+                            p,
+                            saved_in,
+                            &tape[i].proj_qin,
+                            &tape[i].proj_out,
+                            dcur.clone(),
+                            gw,
+                            gb,
+                            scratch,
+                        )
+                    } else {
+                        dcur.clone()
+                    };
+                    pending[save_idx] = Some(dskip);
+                    // dcur continues unchanged to the main branch.
+                }
+                Op::Fc(fc) => {
+                    fc_pos -= 1;
+                    if fc.relu {
+                        for (d, &o) in dcur.iter_mut().zip(&tape[i].out) {
+                            if o <= 0.0 {
+                                *d = 0.0;
+                            }
+                        }
+                    }
+                    let x_used: &[f32] = if tape[i].qin.is_empty() {
+                        input
+                    } else {
+                        &tape[i].qin
+                    };
+                    let fw = &self.fcs[fc_pos];
+                    let (gw, gb) = split_two(&mut grads, fc.w, fc.b);
+                    let mut dx = vec![0.0f32; fc.din];
+                    for (o, &d) in dcur.iter().enumerate() {
+                        gb[o] += d;
+                        if d == 0.0 {
+                            continue;
+                        }
+                        let grow = &mut gw[o * fc.din..(o + 1) * fc.din];
+                        let wrow = &fw.wvals[o * fc.din..(o + 1) * fc.din];
+                        for j in 0..fc.din {
+                            grow[j] += d * x_used[j];
+                            dx[j] += d * wrow[j];
+                        }
+                    }
+                    dcur = dx;
+                }
+            }
+        }
+        ImgGrad { loss, grads }
+    }
+
+    /// Logits for a batch (NHWC f32 input), data-parallel across images;
+    /// bit-identical for any `threads`.
+    pub fn forward_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        batch: usize,
+        threads: usize,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), batch * INPUT_ELEMS);
+        let ncls = self.spec.n_classes;
+        let outs = parallel_for_with(
+            batch,
+            threads,
+            || (GradScratch::default(), Vec::new()),
+            |state: &mut (GradScratch, Vec<(usize, Vec<f32>)>), i| {
+                let (scratch, outs) = state;
+                let xi = &x[i * INPUT_ELEMS..(i + 1) * INPUT_ELEMS];
+                outs.push((i, self.forward_image(params, xi, scratch, None)));
+            },
+        );
+        let mut logits = vec![0.0f32; batch * ncls];
+        for (_s, imgs) in outs {
+            for (i, l) in imgs {
+                logits[i * ncls..(i + 1) * ncls].copy_from_slice(&l);
+            }
+        }
+        logits
+    }
+
+    /// Mean loss and mean-loss gradients over a batch.  Per-image
+    /// gradients are computed in parallel, then reduced in ascending
+    /// image order and scaled by 1/batch, so the result is bit-identical
+    /// at any thread count.
+    pub fn batch_grad(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        threads: usize,
+    ) -> (f32, Vec<Vec<f32>>) {
+        let batch = y.len();
+        assert_eq!(x.len(), batch * INPUT_ELEMS);
+        let mut total: Vec<Vec<f32>> = self
+            .spec
+            .params
+            .iter()
+            .map(|p| vec![0.0f32; p.numel()])
+            .collect();
+        let mut loss_sum = 0.0f32;
+        // Waves bound the resident per-image gradient memory to
+        // O(threads · |params|) instead of O(batch · |params|).
+        let wave = threads.max(1) * 4;
+        let mut img0 = 0usize;
+        while img0 < batch {
+            let count = wave.min(batch - img0);
+            let outs = parallel_for_with(
+                count,
+                threads,
+                || (GradScratch::default(), Vec::new()),
+                |state: &mut (GradScratch, Vec<(usize, ImgGrad)>), i| {
+                    let (scratch, outs) = state;
+                    let idx = img0 + i;
+                    let xi = &x[idx * INPUT_ELEMS..(idx + 1) * INPUT_ELEMS];
+                    outs.push((i, self.image_grad(params, xi, y[idx], scratch)));
+                },
+            );
+            let mut flat: Vec<(usize, ImgGrad)> =
+                outs.into_iter().flat_map(|(_s, v)| v).collect();
+            flat.sort_by_key(|(i, _)| *i);
+            for (_i, ig) in flat {
+                loss_sum += ig.loss;
+                for (t, g) in total.iter_mut().zip(&ig.grads) {
+                    for (a, &b) in t.iter_mut().zip(g) {
+                        *a += b;
+                    }
+                }
+            }
+            img0 += count;
+        }
+        let inv = 1.0 / batch as f32;
+        for t in &mut total {
+            t.iter_mut().for_each(|v| *v *= inv);
+        }
+        (loss_sum * inv, total)
+    }
+}
+
+/// Two disjoint mutable tensor borrows out of the gradient list.
+fn split_two(grads: &mut [Vec<f32>], a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = grads.split_at_mut(b);
+        (lo[a].as_mut_slice(), hi[0].as_mut_slice())
+    } else {
+        let (lo, hi) = grads.split_at_mut(a);
+        (hi[0].as_mut_slice(), lo[b].as_mut_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::tests_support::tiny_spec;
+    use super::*;
+    use crate::model::{ModelSpec, Params, QuantConfig};
+
+    fn input(batch: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        (0..batch * INPUT_ELEMS)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect()
+    }
+
+    /// Loss of a batch under float-mode weights (no fake-quant anywhere)
+    /// — the differentiable function the FD checks probe.
+    fn loss_of(spec: &ModelSpec, params: &[Vec<f32>], x: &[f32], y: &[i32]) -> f64 {
+        let qc = QuantConfig::float(spec);
+        let eng = GradEngine::new(spec, params, &qc, false);
+        let mut scratch = GradScratch::default();
+        let mut sum = 0.0f64;
+        for (i, &yi) in y.iter().enumerate() {
+            let logits =
+                eng.forward_image(params, &x[i * INPUT_ELEMS..(i + 1) * INPUT_ELEMS], &mut scratch, None);
+            let (l, _) = GradEngine::xent(&logits, yi);
+            sum += l as f64;
+        }
+        sum / y.len() as f64
+    }
+
+    /// Central-difference gradient check on sampled parameter entries of
+    /// the full differentiable network (conv, pool, residual add, gap,
+    /// fc, cross-entropy — every backward kernel on the path).
+    fn fd_check(spec: &ModelSpec, seed: u64) {
+        let p = Params::random(spec, seed);
+        let x = input(2, seed + 1);
+        let y = vec![1i32, 3];
+        let qc = QuantConfig::float(spec);
+        let eng = GradEngine::new(spec, &p.tensors, &qc, false);
+        let (_, grads) = eng.batch_grad(&p.tensors, &x, &y, 2);
+        let mut rng = crate::util::rng::Xoshiro256::new(seed + 2);
+        let eps = 1e-3f32;
+        let mut checked = 0usize;
+        for (ti, t) in p.tensors.iter().enumerate() {
+            for _ in 0..8.min(t.len()) {
+                let j = rng.below(t.len() as u64) as usize;
+                let mut pp = p.tensors.clone();
+                pp[ti][j] = t[j] + eps;
+                let lp = loss_of(spec, &pp, &x, &y);
+                pp[ti][j] = t[j] - eps;
+                let lm = loss_of(spec, &pp, &x, &y);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grads[ti][j];
+                let tol = 0.05 * fd.abs().max(an.abs()) + 2e-3;
+                assert!(
+                    (fd - an).abs() <= tol,
+                    "param {ti}[{j}]: fd {fd} vs analytic {an} (seed {seed})"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 20);
+    }
+
+    #[test]
+    fn finite_difference_full_net() {
+        // tiny_spec: conv+relu, maxpool, save/add (no proj), gap, fc.
+        fd_check(&tiny_spec(), 41);
+    }
+
+    /// Residual projection conv on the skip path (the resnet downsample
+    /// shape) — covers conv_bwd through AddSaved{proj}.
+    const PROJ_MANIFEST: &str = r#"{
+      "model": "projtest", "n_classes": 4, "input": [32, 32, 3],
+      "ops": [
+        {"op": "save"},
+        {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+         "q_idx": 0, "cin": 3, "cout": 4, "k": 3, "stride": 2, "pad": 1,
+         "relu": true, "hin": 32, "win": 32, "hout": 16, "wout": 16},
+        {"op": "add_saved", "relu": true,
+         "proj": {"op": "conv", "name": "conv1", "w": 2, "b": 3,
+          "conv_idx": 1, "q_idx": 1, "cin": 3, "cout": 4, "k": 1,
+          "stride": 2, "pad": 0, "relu": false,
+          "hin": 32, "win": 32, "hout": 16, "wout": 16}},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc0", "w": 4, "b": 5, "q_idx": 2,
+         "din": 4, "dout": 4, "relu": false}
+      ],
+      "params": [
+        {"name": "conv0.w", "shape": [4, 3, 3, 3], "kind": "conv_w"},
+        {"name": "conv0.b", "shape": [4], "kind": "bias"},
+        {"name": "conv1.w", "shape": [4, 3, 1, 1], "kind": "conv_w"},
+        {"name": "conv1.b", "shape": [4], "kind": "bias"},
+        {"name": "fc0.w", "shape": [4, 4], "kind": "fc_w"},
+        {"name": "fc0.b", "shape": [4], "kind": "bias"}
+      ],
+      "n_conv": 2, "n_q": 3, "kset": 32, "qmax": 127, "seed": 1,
+      "set_sentinel": 1e9, "momentum": 0.9,
+      "batches": {"train": 4, "eval": 4, "logits": 2, "calib": 4},
+      "pallas_eval": false, "entries": {}
+    }"#;
+
+    #[test]
+    fn finite_difference_projection_skip() {
+        let spec = ModelSpec::from_manifest_str(PROJ_MANIFEST).unwrap();
+        fd_check(&spec, 57);
+    }
+
+    #[test]
+    fn softmax_xent_gradient() {
+        let logits = vec![0.3f32, -1.2, 2.0, 0.0];
+        let (loss, d) = GradEngine::xent(&logits, 2);
+        // Probabilities sum to 1 ⇒ gradient sums to 0.
+        let s: f32 = d.iter().sum();
+        assert!(s.abs() < 1e-5);
+        assert!(loss > 0.0);
+        // FD on each logit.
+        let eps = 1e-3f32;
+        for j in 0..4 {
+            let mut lp = logits.clone();
+            lp[j] += eps;
+            let (a, _) = GradEngine::xent(&lp, 2);
+            lp[j] -= 2.0 * eps;
+            let (b, _) = GradEngine::xent(&lp, 2);
+            let fd = (a - b) / (2.0 * eps);
+            assert!((fd - d[j]).abs() < 1e-3, "logit {j}: {fd} vs {}", d[j]);
+        }
+    }
+
+    #[test]
+    fn pruned_weights_get_zero_gradient() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 5);
+        let x = input(2, 6);
+        let y = vec![0i32, 2];
+        let mut qc = QuantConfig::quantized(&spec, vec![0.02; spec.n_q]);
+        let mask = crate::quant::magnitude_mask(&p.tensors[0], 0.5);
+        qc.masks[0] = Some(mask.clone());
+        let eng = GradEngine::new(&spec, &p.tensors, &qc, true);
+        let (_, grads) = eng.batch_grad(&p.tensors, &x, &y, 1);
+        for (g, m) in grads[0].iter().zip(&mask) {
+            if *m == 0.0 {
+                assert_eq!(*g, 0.0, "masked weight received gradient");
+            }
+        }
+        // Unmasked weights do receive gradient somewhere.
+        assert!(grads[0].iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn batch_grad_bit_identical_across_threads() {
+        for manifest in [None, Some(PROJ_MANIFEST)] {
+            let spec = match manifest {
+                None => tiny_spec(),
+                Some(m) => ModelSpec::from_manifest_str(m).unwrap(),
+            };
+            let p = Params::random(&spec, 7);
+            let x = input(5, 8);
+            let y = vec![0i32, 1, 2, 3, 0];
+            let mut qc = QuantConfig::quantized(&spec, vec![0.02; spec.n_q]);
+            qc.masks[0] = Some(crate::quant::magnitude_mask(&p.tensors[0], 0.3));
+            qc.wsets[1] = Some(crate::quant::WeightSet::new(vec![-64, -16, 0, 16, 64]));
+            let eng = GradEngine::new(&spec, &p.tensors, &qc, true);
+            let (l1, g1) = eng.batch_grad(&p.tensors, &x, &y, 1);
+            for threads in [2usize, 5] {
+                let (lt, gt) = eng.batch_grad(&p.tensors, &x, &y, threads);
+                assert_eq!(l1.to_bits(), lt.to_bits(), "threads={threads}");
+                for (a, b) in g1.iter().zip(&gt) {
+                    assert_eq!(
+                        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_across_threads() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 9);
+        let x = input(4, 10);
+        let qc = QuantConfig::quantized(&spec, vec![0.02; spec.n_q]);
+        let eng = GradEngine::new(&spec, &p.tensors, &qc, true);
+        let l1 = eng.forward_batch(&p.tensors, &x, 4, 1);
+        for threads in [2usize, 5] {
+            let lt = eng.forward_batch(&p.tensors, &x, 4, threads);
+            assert_eq!(
+                l1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                lt.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn training_descends_on_tiny_net() {
+        // A few SGD steps on one fixed batch must reduce the loss — the
+        // end-to-end sanity check that forward and backward agree.
+        let spec = tiny_spec();
+        let mut p = Params::random(&spec, 11).tensors;
+        let x = input(4, 12);
+        let y = vec![0i32, 1, 2, 3];
+        let qc = QuantConfig::float(&spec);
+        let first = {
+            let eng = GradEngine::new(&spec, &p, &qc, true);
+            eng.batch_grad(&p, &x, &y, 2).0
+        };
+        let mut last = first;
+        for _ in 0..40 {
+            let eng = GradEngine::new(&spec, &p, &qc, true);
+            let (l, g) = eng.batch_grad(&p, &x, &y, 2);
+            last = l;
+            for (t, gt) in p.iter_mut().zip(&g) {
+                for (v, &gv) in t.iter_mut().zip(gt) {
+                    *v -= 0.1 * gv;
+                }
+            }
+        }
+        assert!(
+            last < first * 0.95,
+            "loss did not descend: {first} -> {last}"
+        );
+    }
+}

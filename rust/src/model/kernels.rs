@@ -307,6 +307,160 @@ pub fn abs_max(t: &[f32]) -> f32 {
     t.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
 }
 
+// ---------------------------------------------------------------------------
+// f32 GEMM / im2col primitives for the training engine
+// (`super::grad`): fixed reduction orders so per-image results are
+// deterministic regardless of thread count.
+// ---------------------------------------------------------------------------
+
+/// im2col of an NHWC f32 tensor into a reused buffer; (ky, kx, c) patch
+/// column order, matching [`im2col_i8`].  Out-of-bounds taps stay zero.
+pub fn im2col_f32(
+    t: &[f32],
+    n_imgs: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    cv: &ConvOp,
+    out: &mut Vec<f32>,
+) {
+    let (ho, wo, k, s, p) = (cv.hout, cv.wout, cv.k, cv.stride, cv.pad as isize);
+    let m = n_imgs * ho * wo;
+    let kk = k * k * c;
+    out.clear();
+    out.resize(m * kk, 0.0);
+    for b in 0..n_imgs {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (b * ho + oy) * wo + ox;
+                let base = row * kk;
+                for ky in 0..k {
+                    let iy = (oy * s) as isize + ky as isize - p;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s) as isize + kx as isize - p;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let col0 = (ky * k + kx) * c;
+                        let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                        out[base + col0..base + col0 + c].copy_from_slice(&t[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Transpose of [`im2col_f32`]: scatter-add patch-matrix values back to
+/// the NHWC tensor (`dx += col2im(cols)`).  Overlapping patches sum,
+/// which is exactly the conv input-gradient composition.  Caller zeroes
+/// `dx`.
+pub fn col2im_f32_add(
+    cols: &[f32],
+    n_imgs: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    cv: &ConvOp,
+    dx: &mut [f32],
+) {
+    let (ho, wo, k, s, p) = (cv.hout, cv.wout, cv.k, cv.stride, cv.pad as isize);
+    let kk = k * k * c;
+    debug_assert_eq!(cols.len(), n_imgs * ho * wo * kk);
+    debug_assert_eq!(dx.len(), n_imgs * h * w * c);
+    for b in 0..n_imgs {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (b * ho + oy) * wo + ox;
+                let base = row * kk;
+                for ky in 0..k {
+                    let iy = (oy * s) as isize + ky as isize - p;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s) as isize + kx as isize - p;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let col0 = (ky * k + kx) * c;
+                        let dst = ((b * h + iy as usize) * w + ix as usize) * c;
+                        for ci in 0..c {
+                            dx[dst + ci] += cols[base + col0 + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `acc(m×n) += X(m×k) · W(k×n)` in f32 with zero-skip on X (post-ReLU
+/// activations are sparse).  Reduction walks k in ascending order per
+/// row, so the rounding sequence is fixed.
+pub fn gemm_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(acc.len(), m * n);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let arow = &mut acc[i * n..(i + 1) * n];
+        for (r, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[r * n..(r + 1) * n];
+            for (a, &wv) in arow.iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+    }
+}
+
+/// `acc(k×n) += Xᵀ(k×m) · Y(m×n)` — the weight-gradient contraction
+/// `dW = colsᵀ · dY` with X in m×k row-major.
+pub fn gemm_f32_xt_y(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(acc.len(), k * n);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let yrow = &y[i * n..(i + 1) * n];
+        for (r, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let arow = &mut acc[r * n..(r + 1) * n];
+            for (a, &yv) in arow.iter_mut().zip(yrow) {
+                *a += xv * yv;
+            }
+        }
+    }
+}
+
+/// `acc(m×k) += Y(m×n) · Wᵀ(n×k)` with W in k×n row-major — the conv
+/// input-gradient contraction `dCols = dY · Wᵀ`.
+pub fn gemm_f32_y_wt(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(acc.len(), m * k);
+    for i in 0..m {
+        let yrow = &y[i * n..(i + 1) * n];
+        let arow = &mut acc[i * k..(i + 1) * k];
+        for (r, a) in arow.iter_mut().enumerate() {
+            let wrow = &w[r * n..(r + 1) * n];
+            let mut s = 0.0f32;
+            for (yv, wv) in yrow.iter().zip(wrow) {
+                s += yv * wv;
+            }
+            *a += s;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,6 +515,130 @@ mod tests {
                 assert_eq!(wb.panel(p)[r * NB + j % NB], w[r * n + j]);
             }
         }
+    }
+
+    fn vals(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        (0..len)
+            .map(|_| {
+                if rng.below(4) == 0 {
+                    0.0
+                } else {
+                    rng.range_f32(-1.0, 1.0)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gemm_f32_matches_naive() {
+        for (si, &(m, k, n)) in [(3usize, 5usize, 2usize), (17, 9, 13), (1, 1, 1)]
+            .iter()
+            .enumerate()
+        {
+            let x = vals(m * k, si as u64 + 1);
+            let w = vals(k * n, si as u64 + 50);
+            let mut acc = vec![0.0f32; m * n];
+            gemm_f32(&x, &w, m, k, n, &mut acc);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k).map(|r| x[i * k + r] * w[r * n + j]).sum();
+                    assert!((acc[i * n + j] - want).abs() < 1e-5, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_transposed_contractions() {
+        let (m, k, n) = (7usize, 5usize, 4usize);
+        let x = vals(m * k, 3);
+        let y = vals(m * n, 4);
+        // dW = Xᵀ·Y.
+        let mut dw = vec![0.0f32; k * n];
+        gemm_f32_xt_y(&x, &y, m, k, n, &mut dw);
+        for r in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| x[i * k + r] * y[i * n + j]).sum();
+                assert!((dw[r * n + j] - want).abs() < 1e-5);
+            }
+        }
+        // dX = Y·Wᵀ.
+        let w = vals(k * n, 5);
+        let mut dx = vec![0.0f32; m * k];
+        gemm_f32_y_wt(&y, &w, m, k, n, &mut dx);
+        for i in 0..m {
+            for r in 0..k {
+                let want: f32 = (0..n).map(|j| y[i * n + j] * w[r * n + j]).sum();
+                assert!((dx[i * k + r] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_f32_matches_i8_layout() {
+        // Integer-valued floats so both paths are exact.
+        let cv = ConvOp {
+            name: "c".into(),
+            w: 0,
+            b: 1,
+            conv_idx: 0,
+            q_idx: 0,
+            cin: 2,
+            cout: 3,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            relu: false,
+            hin: 5,
+            win: 5,
+            hout: 3,
+            wout: 3,
+        };
+        let ci8 = codes(2 * 5 * 5 * 2, 7);
+        let cf: Vec<f32> = ci8.iter().map(|&v| v as f32).collect();
+        let mut oi = Vec::new();
+        let mut of = Vec::new();
+        im2col_i8(&ci8, 2, 5, 5, 2, &cv, &mut oi);
+        im2col_f32(&cf, 2, 5, 5, 2, &cv, &mut of);
+        assert_eq!(oi.len(), of.len());
+        for (a, b) in oi.iter().zip(&of) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn col2im_is_im2col_transpose() {
+        // <im2col(x), g> == <x, col2im(g)> for random x, g — the adjoint
+        // identity the conv backward relies on.
+        let cv = ConvOp {
+            name: "c".into(),
+            w: 0,
+            b: 1,
+            conv_idx: 0,
+            q_idx: 0,
+            cin: 3,
+            cout: 2,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            relu: false,
+            hin: 4,
+            win: 4,
+            hout: 4,
+            wout: 4,
+        };
+        let x = vals(4 * 4 * 3, 8);
+        let m = cv.hout * cv.wout;
+        let kk = cv.k * cv.k * cv.cin;
+        let g = vals(m * kk, 9);
+        let mut cols = Vec::new();
+        im2col_f32(&x, 1, 4, 4, 3, &cv, &mut cols);
+        let lhs: f64 = cols.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let mut back = vec![0.0f32; x.len()];
+        col2im_f32_add(&g, 1, 4, 4, 3, &cv, &mut back);
+        let rhs: f64 = x.iter().zip(&back).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
     }
 
     #[test]

@@ -11,13 +11,17 @@
 //! * [`engine`] — the batch-parallel executor ([`ParallelEngine`]) with
 //!   streaming operand-tile delivery through [`CaptureSink`];
 //! * [`infer`] — the original scalar engine, retained as the bit-exact
-//!   test reference the executor is pinned against.
+//!   test reference the executor is pinned against;
+//! * [`grad`] — the reverse-mode training engine (fake-quant forward +
+//!   STE backward, batch-parallel with deterministic reduction) backing
+//!   [`crate::runtime::native::NativeBackend`].
 //!
 //! Captures (im2col code matrices per conv layer) feed the systolic
 //! array simulator and the per-layer statistics of §3.1.2; accumulation
 //! is exact i32 everywhere, so results are thread-count independent.
 
 pub mod engine;
+pub mod grad;
 pub mod infer;
 pub mod ir;
 pub mod kernels;
@@ -25,6 +29,7 @@ pub mod params;
 pub mod spec;
 
 pub use engine::{CaptureBuffer, CaptureSink, ConvHead, NullSink, ParallelEngine};
+pub use grad::GradEngine;
 pub use infer::{ConvCapture, Engine, QuantConfig};
 pub use params::Params;
 pub use spec::{ConvOp, EntryMeta, FcOp, ModelSpec, Op, ParamKind, ParamSpec};

@@ -53,6 +53,62 @@ impl Params {
         Ok(())
     }
 
+    /// Training initialization for the native backend, mirroring
+    /// `python/compile/model.py::init_params`: He-normal weights, zero
+    /// biases, and fixup-lite 0.2× scaling of the final conv in each
+    /// residual branch (the quantized mirror has no batch norm, so deep
+    /// nets need tamed residual branches to train).  The PRNG differs
+    /// from JAX's, so the draws are not bit-equal to `params.bin` — the
+    /// distribution and structure are.
+    pub fn init_train(spec: &ModelSpec, seed: u64) -> Params {
+        use super::spec::Op;
+        use crate::util::rng::Xoshiro256;
+        // Weight tensors of the conv immediately preceding each
+        // residual add (same backward scan as the Python side).
+        let mut last_before_add = std::collections::HashSet::new();
+        for (i, op) in spec.ops.iter().enumerate() {
+            if matches!(op, Op::AddSaved { .. }) {
+                for j in (0..i).rev() {
+                    if let Op::Conv(c) = &spec.ops[j] {
+                        last_before_add.insert(c.w);
+                        break;
+                    }
+                }
+            }
+        }
+        let mut rng = Xoshiro256::new(seed);
+        let tensors = spec
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let (fan_in, is_bias) = match p.kind {
+                    super::spec::ParamKind::ConvW => {
+                        (p.shape[1] * p.shape[2] * p.shape[3], false)
+                    }
+                    super::spec::ParamKind::FcW => (p.shape[1], false),
+                    super::spec::ParamKind::Bias => (1, true),
+                };
+                if is_bias {
+                    return vec![0.0f32; p.numel()];
+                }
+                let mut scale = (2.0 / fan_in as f32).sqrt();
+                if last_before_add.contains(&i) {
+                    scale *= 0.2;
+                }
+                (0..p.numel())
+                    .map(|_| {
+                        // Unit-variance normal approximation: sum of 12
+                        // U(-0.5, 0.5) draws (Irwin–Hall).
+                        let u: f32 = (0..12).map(|_| rng.range_f32(-0.5, 0.5)).sum();
+                        scale * u
+                    })
+                    .collect()
+            })
+            .collect();
+        Params { tensors }
+    }
+
     /// Deterministic random params for tests (He-like scaling).
     pub fn random(spec: &ModelSpec, seed: u64) -> Params {
         use crate::util::rng::Xoshiro256;
@@ -100,6 +156,42 @@ mod tests {
         let path = dir.join("p.bin");
         p.save(&spec, &path).unwrap();
         let q = Params::load(&spec, &path).unwrap();
+        assert_eq!(p.tensors, q.tensors);
+    }
+
+    #[test]
+    fn init_train_structure() {
+        let spec = super::super::spec::ModelSpec::builtin("resnet20").unwrap();
+        let p = Params::init_train(&spec, 3);
+        assert_eq!(p.tensors.len(), spec.params.len());
+        let mut damped = 0usize;
+        for (t, ps) in p.tensors.iter().zip(&spec.params) {
+            assert_eq!(t.len(), ps.numel());
+            match ps.kind {
+                super::super::spec::ParamKind::Bias => {
+                    assert!(t.iter().all(|&v| v == 0.0));
+                }
+                super::super::spec::ParamKind::ConvW => {
+                    let fan_in: usize = ps.shape[1] * ps.shape[2] * ps.shape[3];
+                    let std =
+                        (t.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / t.len() as f64)
+                            .sqrt();
+                    let he = (2.0 / fan_in as f64).sqrt();
+                    // Either full He scale or the 0.2× fixup-lite branch.
+                    if std < 0.5 * he {
+                        damped += 1;
+                        assert!((std - 0.2 * he).abs() < 0.1 * he, "{}: std {std}", ps.name);
+                    } else {
+                        assert!((std - he).abs() < 0.35 * he, "{}: std {std}", ps.name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // One damped conv per residual block.
+        assert_eq!(damped, 9);
+        // Deterministic.
+        let q = Params::init_train(&spec, 3);
         assert_eq!(p.tensors, q.tensors);
     }
 

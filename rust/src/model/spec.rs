@@ -113,6 +113,10 @@ pub struct ModelSpec {
     pub n_q: usize,
     pub kset: usize,
     pub seed: u64,
+    /// SGD momentum coefficient baked into the AOT `train` graph; the
+    /// native backend reads it from here so both backends train with
+    /// the same recipe.
+    pub momentum: f32,
     pub batch_train: usize,
     pub batch_eval: usize,
     pub batch_logits: usize,
@@ -212,6 +216,7 @@ impl ModelSpec {
             n_q: j.req_usize("n_q"),
             kset: j.req_usize("kset"),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            momentum: j.get("momentum").and_then(Json::as_f64).unwrap_or(0.9) as f32,
             batch_train: batches.req_usize("train"),
             batch_eval: batches.req_usize("eval"),
             batch_logits: batches.req_usize("logits"),
@@ -309,6 +314,243 @@ impl ModelSpec {
     pub fn conv_label(&self, conv_idx: usize) -> String {
         format!("conv{conv_idx}")
     }
+
+    /// Built-in model specs — the same three architectures
+    /// `python/compile/model.py` lowers (LeNet-5, ResNet-20,
+    /// ResNet-50-lite), constructed natively so the training/eval
+    /// backend runs with **no artifacts at all**.  Shapes, indices and
+    /// batch sizes match the AOT manifests exactly (batch sizes are the
+    /// ones `aot.py` lowers: train 64, eval 128, logits 8, calib 64).
+    pub fn builtin(name: &str) -> Result<ModelSpec> {
+        let spec = match name {
+            "lenet5" => {
+                let mut b = BuiltinBuilder::new("lenet5", 10);
+                b.conv(6, 5, 1, 2, true).maxpool2();
+                b.conv(16, 5, 1, 0, true).maxpool2();
+                b.flatten();
+                b.fc(120, true).fc(84, true).fc(10, false);
+                b.done()
+            }
+            "resnet20" => {
+                let mut b = BuiltinBuilder::new("resnet20", 10);
+                b.conv(16, 3, 1, 1, true);
+                for (cout, stride0) in [(16usize, 1usize), (32, 2), (64, 2)] {
+                    for blk in 0..3 {
+                        b.basic_block(cout, if blk == 0 { stride0 } else { 1 });
+                    }
+                }
+                b.gap().fc(10, false);
+                b.done()
+            }
+            "resnet50lite" => {
+                let mut b = BuiltinBuilder::new("resnet50lite", 100);
+                b.conv(16, 3, 1, 1, true);
+                for (width, stride0) in [(16usize, 1usize), (32, 2), (64, 2)] {
+                    for blk in 0..3 {
+                        b.bottleneck(width, if blk == 0 { stride0 } else { 1 });
+                    }
+                }
+                b.gap().fc(100, false);
+                b.done()
+            }
+            other => bail!("no built-in spec for `{other}` (lenet5 | resnet20 | resnet50lite)"),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Builder mirroring `python/compile/model.py::SpecBuilder`: tracks the
+/// activation shape and allocates parameter / conv / quant-point
+/// indices in traversal order.
+struct BuiltinBuilder {
+    name: String,
+    n_classes: usize,
+    ops: Vec<Op>,
+    params: Vec<ParamSpec>,
+    h: usize,
+    w: usize,
+    c: usize,
+    flat: Option<usize>,
+    n_conv: usize,
+    n_q: usize,
+    saved: Vec<(usize, usize, usize)>,
+}
+
+impl BuiltinBuilder {
+    fn new(name: &str, n_classes: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            n_classes,
+            ops: Vec::new(),
+            params: Vec::new(),
+            h: INPUT_H,
+            w: INPUT_W,
+            c: INPUT_C,
+            flat: None,
+            n_conv: 0,
+            n_q: 0,
+            saved: Vec::new(),
+        }
+    }
+
+    fn param(&mut self, name: String, shape: Vec<usize>, kind: ParamKind) -> usize {
+        self.params.push(ParamSpec { name, shape, kind });
+        self.params.len() - 1
+    }
+
+    fn make_conv(
+        &mut self,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+        hin: usize,
+        win: usize,
+        cin: usize,
+    ) -> ConvOp {
+        let name = format!("conv{}", self.n_conv);
+        let w = self.param(format!("{name}.w"), vec![cout, cin, k, k], ParamKind::ConvW);
+        let b = self.param(format!("{name}.b"), vec![cout], ParamKind::Bias);
+        let hout = (hin + 2 * pad - k) / stride + 1;
+        let wout = (win + 2 * pad - k) / stride + 1;
+        let op = ConvOp {
+            name,
+            w,
+            b,
+            conv_idx: self.n_conv,
+            q_idx: self.n_q,
+            cin,
+            cout,
+            k,
+            stride,
+            pad,
+            relu,
+            hin,
+            win,
+            hout,
+            wout,
+        };
+        self.n_conv += 1;
+        self.n_q += 1;
+        op
+    }
+
+    fn conv(&mut self, cout: usize, k: usize, stride: usize, pad: usize, relu: bool) -> &mut Self {
+        let (h, w, c) = (self.h, self.w, self.c);
+        let op = self.make_conv(cout, k, stride, pad, relu, h, w, c);
+        self.h = op.hout;
+        self.w = op.wout;
+        self.c = op.cout;
+        self.ops.push(Op::Conv(op));
+        self
+    }
+
+    fn maxpool2(&mut self) -> &mut Self {
+        self.ops.push(Op::MaxPool2);
+        self.h /= 2;
+        self.w /= 2;
+        self
+    }
+
+    fn gap(&mut self) -> &mut Self {
+        self.ops.push(Op::Gap);
+        self.flat = Some(self.c);
+        self
+    }
+
+    fn flatten(&mut self) -> &mut Self {
+        self.ops.push(Op::Flatten);
+        self.flat = Some(self.h * self.w * self.c);
+        self
+    }
+
+    fn fc(&mut self, out: usize, relu: bool) -> &mut Self {
+        let din = self.flat.expect("fc before flatten/gap");
+        let idx = self
+            .ops
+            .iter()
+            .filter(|o| matches!(o, Op::Fc(_)))
+            .count();
+        let name = format!("fc{idx}");
+        let w = self.param(format!("{name}.w"), vec![out, din], ParamKind::FcW);
+        let b = self.param(format!("{name}.b"), vec![out], ParamKind::Bias);
+        self.ops.push(Op::Fc(FcOp {
+            name,
+            w,
+            b,
+            q_idx: self.n_q,
+            din,
+            dout: out,
+            relu,
+        }));
+        self.n_q += 1;
+        self.flat = Some(out);
+        self
+    }
+
+    fn save(&mut self) -> &mut Self {
+        self.ops.push(Op::Save);
+        self.saved.push((self.h, self.w, self.c));
+        self
+    }
+
+    /// Residual add; `proj_stride > 0` inserts a 1×1 projection conv on
+    /// the skip path (its own conv/quant indices).
+    fn add_saved(&mut self, relu: bool, proj_stride: usize) -> &mut Self {
+        let (sh, sw, sc) = self.saved.pop().expect("unbalanced save/add");
+        let proj = if proj_stride > 0 {
+            let mut op = self.make_conv(self.c, 1, proj_stride, 0, false, sh, sw, sc);
+            op.hout = self.h;
+            op.wout = self.w;
+            assert_eq!((op.hin + 2 * op.pad - op.k) / op.stride + 1, self.h);
+            Some(op)
+        } else {
+            assert_eq!((sh, sw, sc), (self.h, self.w, self.c));
+            None
+        };
+        self.ops.push(Op::AddSaved { relu, proj });
+        self
+    }
+
+    fn basic_block(&mut self, cout: usize, stride: usize) {
+        let proj = stride != 1 || self.c != cout;
+        self.save();
+        self.conv(cout, 3, stride, 1, true);
+        self.conv(cout, 3, 1, 1, false);
+        self.add_saved(true, if proj { stride } else { 0 });
+    }
+
+    fn bottleneck(&mut self, width: usize, stride: usize) {
+        let cout = width * 4;
+        let proj = stride != 1 || self.c != cout;
+        self.save();
+        self.conv(width, 1, 1, 0, true);
+        self.conv(width, 3, stride, 1, true);
+        self.conv(cout, 1, 1, 0, false);
+        self.add_saved(true, if proj { stride } else { 0 });
+    }
+
+    fn done(self) -> ModelSpec {
+        ModelSpec {
+            name: self.name,
+            n_classes: self.n_classes,
+            ops: self.ops,
+            params: self.params,
+            n_conv: self.n_conv,
+            n_q: self.n_q,
+            kset: crate::quant::KSET,
+            seed: 20250710,
+            momentum: 0.9,
+            batch_train: 64,
+            batch_eval: 128,
+            batch_logits: 8,
+            batch_calib: 64,
+            pallas_eval: false,
+            entries: Vec::new(),
+        }
+    }
 }
 
 /// Test support: a miniature spec exercising every op kind (shared by
@@ -377,6 +619,39 @@ pub(crate) mod tests {
             r#""shape": [4, 3, 3, 2]"#,
         );
         assert!(ModelSpec::from_manifest_str(&broken).is_err());
+    }
+
+    #[test]
+    fn builtin_specs_validate() {
+        let lenet = ModelSpec::builtin("lenet5").unwrap();
+        assert_eq!(lenet.n_conv, 2);
+        assert_eq!(lenet.n_q, 5);
+        assert_eq!(lenet.n_classes, 10);
+        assert_eq!(lenet.batch_train, 64);
+        // fc0 input: 32 →(k5,p2) 32 →pool 16 →(k5,p0) 12 →pool 6, so 16
+        // channels over 6×6.
+        let fc0 = lenet
+            .ops
+            .iter()
+            .find_map(|o| match o {
+                Op::Fc(f) if f.name == "fc0" => Some(f),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(fc0.din, 16 * 6 * 6);
+
+        let r20 = ModelSpec::builtin("resnet20").unwrap();
+        // 1 stem + 18 block convs + 2 downsample projections.
+        assert_eq!(r20.n_conv, 21);
+        assert_eq!(r20.n_q, 22);
+        assert_eq!(r20.convs().len(), 21);
+
+        let r50 = ModelSpec::builtin("resnet50lite").unwrap();
+        // 1 stem + 27 bottleneck convs + 3 projections.
+        assert_eq!(r50.n_conv, 31);
+        assert_eq!(r50.n_classes, 100);
+
+        assert!(ModelSpec::builtin("vgg").is_err());
     }
 
     #[test]

@@ -1,10 +1,25 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and drives
-//! training / evaluation / calibration from the Rust hot path.
+//! Training/eval runtime: a [`ModelRuntime`] facade over pluggable
+//! [`Backend`]s.
 //!
-//! Python never runs here — the artifacts under `artifacts/<model>/` are
-//! compiled once by `PjRtClient` and then executed with concrete inputs.
-//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax ≥ 0.5
-//! serialized protos — see DESIGN.md / aot.py).
+//! Two backends implement the same four drivers (`train_steps`,
+//! `evaluate`, `logits`, `calibrate`):
+//!
+//! * [`AotBackend`] — loads the AOT HLO-text artifacts produced by
+//!   `python/compile/aot.py` and executes them through PJRT (Python
+//!   never runs here; interchange is HLO *text* — xla_extension 0.5.1
+//!   rejects jax ≥ 0.5 serialized protos, see DESIGN.md / aot.py).
+//! * [`native::NativeBackend`] — the pure-Rust mirror: reverse-mode
+//!   QAT training ([`crate::model::GradEngine`]) and the int8 inference
+//!   engine ([`crate::model::ParallelEngine`]), data-parallel across
+//!   the batch and bit-identical at any thread count.  Needs no
+//!   artifacts, which makes the full train → profile → compress flow
+//!   run offline — and turns the accuracy oracle (the dominant cost of
+//!   the §4.3 schedule) into a multi-threaded hot path.
+//!
+//! [`ModelRuntime::auto`] picks AOT when artifacts exist and the PJRT
+//! client comes up, native otherwise; [`BackendChoice`] forces either.
+
+pub mod native;
 
 use crate::data::{self, Split};
 use crate::model::{ModelSpec, Params};
@@ -32,51 +47,210 @@ impl Default for LrSchedule {
     }
 }
 
-/// A loaded model: spec + compiled executables + resident parameters.
-pub struct ModelRuntime {
-    pub spec: ModelSpec,
+/// Which backend a runtime should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// AOT-PJRT when artifacts exist and the client comes up, else
+    /// native.
+    #[default]
+    Auto,
+    /// Require the AOT artifacts (error when absent).
+    Aot,
+    /// Pure-Rust backend, no artifacts touched.
+    Native,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "aot" | "pjrt" => Ok(Self::Aot),
+            "native" => Ok(Self::Native),
+            other => bail!("unknown backend `{other}` (auto | aot | native)"),
+        }
+    }
+}
+
+/// The mutable runtime state a [`Backend`] operates on — the facade
+/// owns it, so backends stay swappable without moving parameters.
+pub struct RtCtx<'a> {
+    pub spec: &'a ModelSpec,
+    pub params: &'a mut Vec<Vec<f32>>,
+    pub mom: &'a mut Vec<Vec<f32>>,
+    pub act_scales: &'a mut Vec<f32>,
+    pub data_seed: u64,
+    pub steps_done: &'a mut u64,
+    pub threads: usize,
+}
+
+/// A training/evaluation engine.  All four drivers share the exact data
+/// recipe (seed, split, batch offsets), so backends are interchangeable
+/// mid-pipeline.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Run ONE SGD+momentum step at `step_lr`: fetch the train batch at
+    /// the `steps_done · batch_train` cursor, update params/momentum,
+    /// advance the cursor, return the batch loss.  The surrounding loop
+    /// (lr decay schedule, divergence bail-out, loss window) lives in
+    /// [`ModelRuntime::train_steps`], so every backend shares one
+    /// training recipe by construction.
+    fn train_step(
+        &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        step_lr: f32,
+    ) -> Result<f32>;
+
+    /// Fraction correct over `n_batches` of `split` (batch =
+    /// `spec.batch_eval`).
+    fn evaluate(
+        &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        split: Split,
+        n_batches: usize,
+    ) -> Result<f64>;
+
+    /// Logits for a raw `spec.batch_logits`-sized input batch.
+    fn logits(
+        &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        x: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Calibrate activation scales over `n_batches` of train data;
+    /// stores them in the ctx and returns them.
+    fn calibrate(&mut self, ctx: RtCtx<'_>, n_batches: usize) -> Result<Vec<f32>>;
+}
+
+// -- shared input lowering ---------------------------------------------------
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+fn lit_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Per-conv optional magnitude masks (`None` = dense) from the
+/// *current* params under `state`, indexed by `conv_idx` — the single
+/// mask recipe shared by the AOT literal path ([`masks_for`]) and the
+/// native backend's `QuantConfig`, so the backends cannot drift apart.
+/// (Pruned weights receive no gradient, so per-step recomputation is
+/// stable across fine-tune steps.)
+pub fn mask_options(
+    spec: &ModelSpec,
+    params: &[Vec<f32>],
+    state: &CompressionState,
+) -> Vec<Option<Vec<f32>>> {
+    let mut masks = vec![None; spec.n_conv];
+    for c in spec.convs() {
+        let ratio = state.layers[c.conv_idx].prune_ratio;
+        if ratio > 0.0 {
+            masks[c.conv_idx] = Some(magnitude_mask(&params[c.w], ratio));
+        }
+    }
+    masks
+}
+
+/// [`mask_options`] densified for the AOT graphs' literal inputs
+/// (dense layers become explicit all-ones tensors), in `conv_idx`
+/// order.
+pub fn masks_for(
+    spec: &ModelSpec,
+    params: &[Vec<f32>],
+    state: &CompressionState,
+) -> Vec<Vec<f32>> {
+    mask_options(spec, params, state)
+        .into_iter()
+        .zip(spec.convs())
+        .map(|(m, c)| m.unwrap_or_else(|| vec![1.0f32; params[c.w].len()]))
+        .collect()
+}
+
+/// The PJRT-free calibration recipe shared by
+/// [`ModelRuntime::calibrate_native`] and the native backend: the same
+/// data recipe as the AOT `calib` graph (train split,
+/// `batch_calib`-sized batches from offset 0) through the compiled
+/// float engine, one forward scratch per worker reused across the
+/// whole batch loop.  Returns the per-quant-point scales.
+pub fn calibrate_scales(
+    spec: &ModelSpec,
+    params: &[Vec<f32>],
+    data_seed: u64,
+    n_batches: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let bs = spec.batch_calib;
+    let qc = crate::model::QuantConfig::float(spec);
+    let eng = crate::model::ParallelEngine::new(spec, params, &qc, threads);
+    let batches: Vec<Vec<f32>> = (0..n_batches)
+        .map(|b| {
+            data::batch(
+                data_seed,
+                Split::Train,
+                (b * bs) as u64,
+                bs,
+                spec.n_classes as u64,
+            )
+            .0
+        })
+        .collect();
+    let refs: Vec<&[f32]> = batches.iter().map(Vec::as_slice).collect();
+    eng.calibrate(&refs, bs)
+}
+
+fn wset_tables(spec: &ModelSpec, state: &CompressionState) -> (Vec<[f32; KSET]>, Vec<f32>) {
+    let mut tables = Vec::with_capacity(spec.n_conv);
+    let mut on = Vec::with_capacity(spec.n_conv);
+    for l in &state.layers {
+        match &l.wset {
+            Some(s) => {
+                tables.push(s.padded_table());
+                on.push(1.0f32);
+            }
+            None => {
+                tables.push([SET_SENTINEL; KSET]);
+                on.push(0.0f32);
+            }
+        }
+    }
+    (tables, on)
+}
+
+// -- the AOT-PJRT backend ----------------------------------------------------
+
+/// Executes the AOT-compiled HLO graphs through PJRT.  Executables
+/// compile lazily on first use.
+pub struct AotBackend {
     client: PjRtClient,
     exes: HashMap<String, PjRtLoadedExecutable>,
     dir: PathBuf,
-    /// Float shadow parameters (updated by train steps).
-    pub params: Vec<Vec<f32>>,
-    /// Momentum buffers.
-    mom: Vec<Vec<f32>>,
-    /// Per-quant-point activation scales (0 until calibrated).
-    pub act_scales: Vec<f32>,
-    /// Dataset seed (shared with data generation everywhere).
-    pub data_seed: u64,
-    /// Executed-step counter (drives the train-data cursor).
-    pub steps_done: u64,
 }
 
-impl ModelRuntime {
-    /// Load manifest + initial params and connect the PJRT CPU client.
-    /// Executables compile lazily on first use.
-    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
-        let dir = artifacts_dir.join(model);
-        let spec = ModelSpec::from_manifest_file(&dir.join("manifest.json"))?;
-        let params = Params::load(&spec, &dir.join("params.bin"))?;
+impl AotBackend {
+    /// Connect the PJRT CPU client for the artifacts in `dir` (the
+    /// per-model directory holding `manifest.json` + `*.hlo.txt`).
+    pub fn new(dir: PathBuf) -> Result<Self> {
         let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mom = spec.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
-        let n_q = spec.n_q;
         Ok(Self {
-            spec,
             client,
             exes: HashMap::new(),
             dir,
-            params: params.tensors,
-            mom,
-            act_scales: vec![0.0; n_q],
-            data_seed: 7,
-            steps_done: 0,
         })
     }
 
-    fn exe(&mut self, entry: &str) -> Result<&PjRtLoadedExecutable> {
+    fn exe(&mut self, spec: &ModelSpec, entry: &str) -> Result<&PjRtLoadedExecutable> {
         if !self.exes.contains_key(entry) {
-            let meta = self
-                .spec
+            let meta = spec
                 .entries
                 .iter()
                 .find(|(n, _)| n == entry)
@@ -90,199 +264,135 @@ impl ModelRuntime {
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compile {entry}: {e:?}"))?;
-            crate::info!(
-                "compiled {}/{} ({} inputs)",
-                self.spec.name,
-                entry,
-                meta.n_inputs
-            );
+            crate::info!("compiled {}/{} ({} inputs)", spec.name, entry, meta.n_inputs);
             self.exes.insert(entry.to_string(), exe);
         }
         Ok(self.exes.get(entry).unwrap())
     }
 
-    // -- literal helpers ----------------------------------------------------
-
-    fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
-        Literal::vec1(data)
-            .reshape(dims)
-            .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
-    }
-
-    fn lit_scalar(v: f32) -> Literal {
-        Literal::scalar(v)
-    }
-
-    /// Materialize per-conv masks from the *current* params under
-    /// `state` (pruned weights receive no gradient, so recomputation is
-    /// stable across fine-tune steps).
-    pub fn masks_for(&self, state: &CompressionState) -> Vec<Vec<f32>> {
-        let convs = self.spec.convs();
-        convs
-            .iter()
-            .map(|c| {
-                let ratio = state.layers[c.conv_idx].prune_ratio;
-                if ratio <= 0.0 {
-                    vec![1.0f32; self.params[c.w].len()]
-                } else {
-                    magnitude_mask(&self.params[c.w], ratio)
-                }
-            })
-            .collect()
-    }
-
-    fn wset_tables(&self, state: &CompressionState) -> (Vec<[f32; KSET]>, Vec<f32>) {
-        let mut tables = Vec::with_capacity(self.spec.n_conv);
-        let mut on = Vec::with_capacity(self.spec.n_conv);
-        for l in &state.layers {
-            match &l.wset {
-                Some(s) => {
-                    tables.push(s.padded_table());
-                    on.push(1.0f32);
-                }
-                None => {
-                    tables.push([SET_SENTINEL; KSET]);
-                    on.push(0.0f32);
-                }
-            }
-        }
-        (tables, on)
-    }
-
     /// Common input prefix for eval/logits: params, masks, wsets,
     /// wset_on, act_scales, quant_on.
-    fn common_inputs(
-        &self,
-        state: &CompressionState,
-        quant_on: bool,
-    ) -> Result<Vec<Literal>> {
+    fn common_inputs(ctx: &RtCtx<'_>, state: &CompressionState, quant_on: bool) -> Result<Vec<Literal>> {
+        let spec = ctx.spec;
         let mut ins = Vec::new();
-        for (t, p) in self.params.iter().zip(&self.spec.params) {
+        for (t, p) in ctx.params.iter().zip(&spec.params) {
             let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-            ins.push(Self::lit_f32(t, &dims)?);
+            ins.push(lit_f32(t, &dims)?);
         }
-        let masks = self.masks_for(state);
-        for (m, c) in masks.iter().zip(self.spec.convs()) {
-            let p = &self.spec.params[c.w];
+        let masks = masks_for(spec, ctx.params.as_slice(), state);
+        for (m, c) in masks.iter().zip(spec.convs()) {
+            let p = &spec.params[c.w];
             let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-            ins.push(Self::lit_f32(m, &dims)?);
+            ins.push(lit_f32(m, &dims)?);
         }
-        let (tables, on) = self.wset_tables(state);
+        let (tables, on) = wset_tables(spec, state);
         for t in &tables {
-            ins.push(Self::lit_f32(t, &[KSET as i64])?);
+            ins.push(lit_f32(t, &[KSET as i64])?);
         }
-        ins.push(Self::lit_f32(&on, &[self.spec.n_conv as i64])?);
-        ins.push(Self::lit_f32(&self.act_scales, &[self.spec.n_q as i64])?);
-        ins.push(Self::lit_scalar(if quant_on { 1.0 } else { 0.0 }));
+        ins.push(lit_f32(&on, &[spec.n_conv as i64])?);
+        ins.push(lit_f32(ctx.act_scales.as_slice(), &[spec.n_q as i64])?);
+        ins.push(lit_scalar(if quant_on { 1.0 } else { 0.0 }));
         Ok(ins)
     }
 
-    fn batch_literals(&self, split: Split, start: u64, size: usize) -> Result<(Literal, Literal)> {
-        let (xs, ys) = data::batch(self.data_seed, split, start, size, self.spec.n_classes as u64);
-        let x = Self::lit_f32(&xs, &[size as i64, 32, 32, 3])?;
+    fn batch_literals(
+        ctx: &RtCtx<'_>,
+        split: Split,
+        start: u64,
+        size: usize,
+    ) -> Result<(Literal, Literal)> {
+        let (xs, ys) = data::batch(ctx.data_seed, split, start, size, ctx.spec.n_classes as u64);
+        let x = lit_f32(&xs, &[size as i64, 32, 32, 3])?;
         let y = Literal::vec1(&ys);
         Ok((x, y))
     }
+}
 
-    // -- drivers -------------------------------------------------------------
-
-    /// Run `steps` SGD+momentum steps.  Returns the mean loss of the
-    /// final 10 steps.
-    pub fn train_steps(
-        &mut self,
-        state: &CompressionState,
-        quant_on: bool,
-        lr: LrSchedule,
-        steps: usize,
-    ) -> Result<f32> {
-        let bs = self.spec.batch_train;
-        let n_p = self.spec.params.len();
-        let mut recent = Vec::new();
-        for s in 0..steps {
-            let step_lr = if (s as f32) < lr.decay_at * steps as f32 {
-                lr.base
-            } else {
-                lr.base / 5.0
-            };
-            let cursor = self.steps_done * bs as u64;
-            let (x, y) = self.batch_literals(Split::Train, cursor, bs)?;
-
-            let mut ins: Vec<Literal> = Vec::new();
-            for (t, p) in self.params.iter().zip(&self.spec.params) {
-                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                ins.push(Self::lit_f32(t, &dims)?);
-            }
-            for (t, p) in self.mom.iter().zip(&self.spec.params) {
-                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                ins.push(Self::lit_f32(t, &dims)?);
-            }
-            let masks = self.masks_for(state);
-            for (m, c) in masks.iter().zip(self.spec.convs()) {
-                let p = &self.spec.params[c.w];
-                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                ins.push(Self::lit_f32(m, &dims)?);
-            }
-            let (tables, on) = self.wset_tables(state);
-            for t in &tables {
-                ins.push(Self::lit_f32(t, &[KSET as i64])?);
-            }
-            ins.push(Self::lit_f32(&on, &[self.spec.n_conv as i64])?);
-            ins.push(Self::lit_f32(&self.act_scales, &[self.spec.n_q as i64])?);
-            ins.push(Self::lit_scalar(if quant_on { 1.0 } else { 0.0 }));
-            ins.push(Self::lit_scalar(step_lr));
-            ins.push(x);
-            ins.push(y);
-
-            let exe = self.exe("train")?;
-            let result = exe
-                .execute::<Literal>(&ins)
-                .map_err(|e| anyhow!("train exec: {e:?}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("train sync: {e:?}"))?;
-            let outs = result.to_tuple().map_err(|e| anyhow!("train tuple: {e:?}"))?;
-            if outs.len() != 2 * n_p + 1 {
-                bail!("train output arity {} != {}", outs.len(), 2 * n_p + 1);
-            }
-            for (i, o) in outs.iter().enumerate().take(n_p) {
-                self.params[i] = o.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            }
-            for i in 0..n_p {
-                self.mom[i] = outs[n_p + i]
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("{e:?}"))?;
-            }
-            let loss: f32 = outs[2 * n_p]
-                .get_first_element()
-                .map_err(|e| anyhow!("{e:?}"))?;
-            if !loss.is_finite() {
-                bail!("training diverged at step {s} (loss = {loss})");
-            }
-            recent.push(loss);
-            if recent.len() > 10 {
-                recent.remove(0);
-            }
-            self.steps_done += 1;
-        }
-        Ok(recent.iter().sum::<f32>() / recent.len().max(1) as f32)
+impl Backend for AotBackend {
+    fn name(&self) -> &'static str {
+        "aot-pjrt"
     }
 
-    /// Accuracy over `n_batches` of the given split (batch = spec eval
-    /// batch).  Returns fraction correct.
-    pub fn evaluate(
+    fn train_step(
         &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        step_lr: f32,
+    ) -> Result<f32> {
+        let spec = ctx.spec;
+        let bs = spec.batch_train;
+        let n_p = spec.params.len();
+        let cursor = *ctx.steps_done * bs as u64;
+        let (x, y) = Self::batch_literals(&ctx, Split::Train, cursor, bs)?;
+
+        let mut ins: Vec<Literal> = Vec::new();
+        for (t, p) in ctx.params.iter().zip(&spec.params) {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            ins.push(lit_f32(t, &dims)?);
+        }
+        for (t, p) in ctx.mom.iter().zip(&spec.params) {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            ins.push(lit_f32(t, &dims)?);
+        }
+        let masks = masks_for(spec, ctx.params.as_slice(), state);
+        for (m, c) in masks.iter().zip(spec.convs()) {
+            let p = &spec.params[c.w];
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            ins.push(lit_f32(m, &dims)?);
+        }
+        let (tables, on) = wset_tables(spec, state);
+        for t in &tables {
+            ins.push(lit_f32(t, &[KSET as i64])?);
+        }
+        ins.push(lit_f32(&on, &[spec.n_conv as i64])?);
+        ins.push(lit_f32(ctx.act_scales.as_slice(), &[spec.n_q as i64])?);
+        ins.push(lit_scalar(if quant_on { 1.0 } else { 0.0 }));
+        ins.push(lit_scalar(step_lr));
+        ins.push(x);
+        ins.push(y);
+
+        let exe = self.exe(spec, "train")?;
+        let result = exe
+            .execute::<Literal>(&ins)
+            .map_err(|e| anyhow!("train exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train sync: {e:?}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("train tuple: {e:?}"))?;
+        if outs.len() != 2 * n_p + 1 {
+            bail!("train output arity {} != {}", outs.len(), 2 * n_p + 1);
+        }
+        for (i, o) in outs.iter().enumerate().take(n_p) {
+            ctx.params[i] = o.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        }
+        for i in 0..n_p {
+            ctx.mom[i] = outs[n_p + i]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?;
+        }
+        let loss: f32 = outs[2 * n_p]
+            .get_first_element()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        *ctx.steps_done += 1;
+        Ok(loss)
+    }
+
+    fn evaluate(
+        &mut self,
+        ctx: RtCtx<'_>,
         state: &CompressionState,
         quant_on: bool,
         split: Split,
         n_batches: usize,
     ) -> Result<f64> {
-        let bs = self.spec.batch_eval;
+        let bs = ctx.spec.batch_eval;
         let mut correct = 0.0f64;
         for b in 0..n_batches {
-            let mut ins = self.common_inputs(state, quant_on)?;
-            let (x, y) = self.batch_literals(split, (b * bs) as u64, bs)?;
+            let mut ins = Self::common_inputs(&ctx, state, quant_on)?;
+            let (x, y) = Self::batch_literals(&ctx, split, (b * bs) as u64, bs)?;
             ins.push(x);
             ins.push(y);
-            let exe = self.exe("eval")?;
+            let exe = self.exe(ctx.spec, "eval")?;
             let result = exe
                 .execute::<Literal>(&ins)
                 .map_err(|e| anyhow!("eval exec: {e:?}"))?[0][0]
@@ -297,18 +407,18 @@ impl ModelRuntime {
         Ok(correct / (n_batches * bs) as f64)
     }
 
-    /// Logits for a raw input batch (must match `batch_logits`).
-    pub fn logits(
+    fn logits(
         &mut self,
+        ctx: RtCtx<'_>,
         state: &CompressionState,
         quant_on: bool,
         x: &[f32],
     ) -> Result<Vec<f32>> {
-        let bs = self.spec.batch_logits;
+        let bs = ctx.spec.batch_logits;
         assert_eq!(x.len(), bs * 32 * 32 * 3);
-        let mut ins = self.common_inputs(state, quant_on)?;
-        ins.push(Self::lit_f32(x, &[bs as i64, 32, 32, 3])?);
-        let exe = self.exe("logits")?;
+        let mut ins = Self::common_inputs(&ctx, state, quant_on)?;
+        ins.push(lit_f32(x, &[bs as i64, 32, 32, 3])?);
+        let exe = self.exe(ctx.spec, "logits")?;
         let result = exe
             .execute::<Literal>(&ins)
             .map_err(|e| anyhow!("logits exec: {e:?}"))?[0][0]
@@ -320,20 +430,19 @@ impl ModelRuntime {
         out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
     }
 
-    /// Calibrate activation scales over `n_batches` of train data using
-    /// the AOT `calib` graph; stores and returns the scales.
-    pub fn calibrate(&mut self, n_batches: usize) -> Result<Vec<f32>> {
-        let bs = self.spec.batch_calib;
-        let mut maxes = vec![0.0f32; self.spec.n_q];
+    fn calibrate(&mut self, ctx: RtCtx<'_>, n_batches: usize) -> Result<Vec<f32>> {
+        let spec = ctx.spec;
+        let bs = spec.batch_calib;
+        let mut maxes = vec![0.0f32; spec.n_q];
         for b in 0..n_batches {
             let mut ins: Vec<Literal> = Vec::new();
-            for (t, p) in self.params.iter().zip(&self.spec.params) {
+            for (t, p) in ctx.params.iter().zip(&spec.params) {
                 let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                ins.push(Self::lit_f32(t, &dims)?);
+                ins.push(lit_f32(t, &dims)?);
             }
-            let (x, _y) = self.batch_literals(Split::Train, (b * bs) as u64, bs)?;
+            let (x, _y) = Self::batch_literals(&ctx, Split::Train, (b * bs) as u64, bs)?;
             ins.push(x);
-            let exe = self.exe("calib")?;
+            let exe = self.exe(spec, "calib")?;
             let result = exe
                 .execute::<Literal>(&ins)
                 .map_err(|e| anyhow!("calib exec: {e:?}"))?[0][0]
@@ -347,43 +456,235 @@ impl ModelRuntime {
                 *m = m.max(*x);
             }
         }
-        self.act_scales = maxes
+        *ctx.act_scales = maxes
             .iter()
             .map(|&m| (m / crate::quant::QMAX as f32).max(1e-9))
             .collect();
-        Ok(self.act_scales.clone())
+        Ok(ctx.act_scales.clone())
+    }
+}
+
+// -- the facade --------------------------------------------------------------
+
+/// A loaded model: spec + resident parameters + the backend executing
+/// the training/eval drivers.
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    dir: PathBuf,
+    /// Float shadow parameters (updated by train steps).
+    pub params: Vec<Vec<f32>>,
+    /// Momentum buffers.
+    mom: Vec<Vec<f32>>,
+    /// Per-quant-point activation scales (0 until calibrated).
+    pub act_scales: Vec<f32>,
+    /// Dataset seed (shared with data generation everywhere); plumbed
+    /// from `PipelineParams::data_seed` / `--data-seed`.
+    pub data_seed: u64,
+    /// Executed-step counter (drives the train-data cursor).
+    pub steps_done: u64,
+    /// Worker threads for the native engines.
+    pub threads: usize,
+    backend: Box<dyn Backend>,
+}
+
+impl ModelRuntime {
+    /// Default dataset seed (the historical hard-coded value, now a
+    /// named constant overridable via `PipelineParams::data_seed`).
+    pub const DEFAULT_DATA_SEED: u64 = 7;
+
+    fn assemble(
+        spec: ModelSpec,
+        params: Vec<Vec<f32>>,
+        dir: PathBuf,
+        backend: Box<dyn Backend>,
+    ) -> Self {
+        let mom = spec.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
+        let n_q = spec.n_q;
+        Self {
+            spec,
+            dir,
+            params,
+            mom,
+            act_scales: vec![0.0; n_q],
+            data_seed: Self::DEFAULT_DATA_SEED,
+            steps_done: 0,
+            threads: crate::util::threadpool::default_threads(),
+            backend,
+        }
     }
 
-    /// Native mirror of [`Self::calibrate`]: the same data recipe
-    /// (train split, `batch_calib`-sized batches from offset 0) through
-    /// the compiled float engine
-    /// ([`crate::model::ParallelEngine::calibrate`]) instead of the AOT
-    /// `calib` graph — one forward scratch per worker reused across the
-    /// whole batch loop, no PJRT required.  Stores and returns the
-    /// scales, exactly like the AOT path.
+    /// Load manifest + initial params and connect the PJRT CPU client
+    /// (the AOT backend).  Executables compile lazily on first use.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(model);
+        let spec = ModelSpec::from_manifest_file(&dir.join("manifest.json"))?;
+        let params = Params::load(&spec, &dir.join("params.bin"))?;
+        let backend = Box::new(AotBackend::new(dir.clone())?);
+        Ok(Self::assemble(spec, params.tensors, dir, backend))
+    }
+
+    /// Pure-Rust runtime, no PJRT: the manifest + `params.bin` are used
+    /// when present (so native runs continue AOT state); otherwise the
+    /// built-in spec ([`ModelSpec::builtin`]) with fresh training init.
+    pub fn native(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(model);
+        let manifest = dir.join("manifest.json");
+        let (spec, params) = if manifest.exists() {
+            let spec = ModelSpec::from_manifest_file(&manifest)?;
+            let pbin = dir.join("params.bin");
+            let params = if pbin.exists() {
+                Params::load(&spec, &pbin)?.tensors
+            } else {
+                Params::init_train(&spec, spec.seed).tensors
+            };
+            (spec, params)
+        } else {
+            let spec = ModelSpec::builtin(model)
+                .with_context(|| format!("no artifacts at {} and no built-in spec", dir.display()))?;
+            let params = Params::init_train(&spec, spec.seed).tensors;
+            (spec, params)
+        };
+        Ok(Self::assemble(
+            spec,
+            params,
+            dir,
+            Box::new(native::NativeBackend::default()),
+        ))
+    }
+
+    /// Construct a native runtime from an explicit spec (tests, benches
+    /// and synthetic workloads).  `dir` is only used for checkpoints.
+    pub fn from_spec_native(spec: ModelSpec, params: Vec<Vec<f32>>, dir: PathBuf) -> Self {
+        assert_eq!(params.len(), spec.params.len());
+        Self::assemble(spec, params, dir, Box::new(native::NativeBackend::default()))
+    }
+
+    /// Backend selection: AOT when artifacts exist and PJRT comes up
+    /// (unless forced), native otherwise.
+    pub fn auto(artifacts_dir: &Path, model: &str, choice: BackendChoice) -> Result<Self> {
+        match choice {
+            BackendChoice::Aot => Self::load(artifacts_dir, model),
+            BackendChoice::Native => Self::native(artifacts_dir, model),
+            BackendChoice::Auto => {
+                let manifest = artifacts_dir.join(model).join("manifest.json");
+                if manifest.exists() {
+                    match Self::load(artifacts_dir, model) {
+                        Ok(rt) => return Ok(rt),
+                        Err(e) => {
+                            crate::info!(
+                                "{model}: AOT backend unavailable ({e}); falling back to native"
+                            );
+                        }
+                    }
+                }
+                Self::native(artifacts_dir, model)
+            }
+        }
+    }
+
+    /// Name of the active backend (`aot-pjrt` | `native`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn ctx(&mut self) -> (&mut dyn Backend, RtCtx<'_>) {
+        (
+            self.backend.as_mut(),
+            RtCtx {
+                spec: &self.spec,
+                params: &mut self.params,
+                mom: &mut self.mom,
+                act_scales: &mut self.act_scales,
+                data_seed: self.data_seed,
+                steps_done: &mut self.steps_done,
+                threads: self.threads,
+            },
+        )
+    }
+
+    /// Materialize per-conv masks from the current params under `state`.
+    pub fn masks_for(&self, state: &CompressionState) -> Vec<Vec<f32>> {
+        masks_for(&self.spec, &self.params, state)
+    }
+
+    // -- drivers (dispatch to the backend) ----------------------------------
+
+    /// Run `steps` SGD+momentum steps.  Returns the mean loss of the
+    /// final 10 steps.  The lr decay schedule, divergence bail-out and
+    /// loss window live here — backends only provide the per-step
+    /// compute — so the training recipe is identical across backends by
+    /// construction.
+    pub fn train_steps(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        lr: LrSchedule,
+        steps: usize,
+    ) -> Result<f32> {
+        let mut recent = Vec::new();
+        for s in 0..steps {
+            let step_lr = if (s as f32) < lr.decay_at * steps as f32 {
+                lr.base
+            } else {
+                lr.base / 5.0
+            };
+            let (backend, ctx) = self.ctx();
+            let loss = backend.train_step(ctx, state, quant_on, step_lr)?;
+            if !loss.is_finite() {
+                bail!("training diverged at step {s} (loss = {loss})");
+            }
+            recent.push(loss);
+            if recent.len() > 10 {
+                recent.remove(0);
+            }
+        }
+        Ok(recent.iter().sum::<f32>() / recent.len().max(1) as f32)
+    }
+
+    /// Accuracy over `n_batches` of the given split (batch = spec eval
+    /// batch).  Returns fraction correct.
+    pub fn evaluate(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        split: Split,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let (backend, ctx) = self.ctx();
+        backend.evaluate(ctx, state, quant_on, split, n_batches)
+    }
+
+    /// Logits for a raw input batch (must match `batch_logits`).
+    pub fn logits(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (backend, ctx) = self.ctx();
+        backend.logits(ctx, state, quant_on, x)
+    }
+
+    /// Calibrate activation scales over `n_batches` of train data;
+    /// stores and returns the scales.
+    pub fn calibrate(&mut self, n_batches: usize) -> Result<Vec<f32>> {
+        let (backend, ctx) = self.ctx();
+        backend.calibrate(ctx, n_batches)
+    }
+
+    /// Native mirror of the AOT calib recipe ([`calibrate_scales`]),
+    /// regardless of the active backend — no PJRT required.  Stores and
+    /// returns the scales.
     pub fn calibrate_native(&mut self, n_batches: usize, threads: usize) -> Vec<f32> {
-        let bs = self.spec.batch_calib;
-        let qc = crate::model::QuantConfig::float(&self.spec);
-        let eng = crate::model::ParallelEngine::new(&self.spec, &self.params, &qc, threads);
-        let batches: Vec<Vec<f32>> = (0..n_batches)
-            .map(|b| {
-                data::batch(
-                    self.data_seed,
-                    Split::Train,
-                    (b * bs) as u64,
-                    bs,
-                    self.spec.n_classes as u64,
-                )
-                .0
-            })
-            .collect();
-        let refs: Vec<&[f32]> = batches.iter().map(Vec::as_slice).collect();
-        self.act_scales = eng.calibrate(&refs, bs);
+        self.act_scales =
+            calibrate_scales(&self.spec, &self.params, self.data_seed, n_batches, threads);
         self.act_scales.clone()
     }
 
     /// Persist current params next to the artifacts (checkpointing).
     pub fn save_params(&self, tag: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
         let path = self.dir.join(format!("params.{tag}.bin"));
         let p = Params {
             tensors: self.params.clone(),
@@ -415,8 +716,8 @@ pub fn run_tile_kernel(artifacts_dir: &Path, x: &[f32], w: &[f32]) -> Result<Vec
     let exe = client
         .compile(&XlaComputation::from_proto(&proto))
         .map_err(|e| anyhow!("tile compile: {e:?}"))?;
-    let xl = ModelRuntime::lit_f32(x, &[128, 192])?;
-    let wl = ModelRuntime::lit_f32(w, &[192, 128])?;
+    let xl = lit_f32(x, &[128, 192])?;
+    let wl = lit_f32(w, &[192, 128])?;
     let result = exe
         .execute::<Literal>(&[xl, wl])
         .map_err(|e| anyhow!("tile exec: {e:?}"))?[0][0]

@@ -1,0 +1,221 @@
+//! The native training/evaluation backend: pure Rust, no artifacts, no
+//! PJRT — and batch-parallel, which makes the §4.3 schedule's accuracy
+//! oracle (the dominant end-to-end cost) a multi-threaded hot path
+//! instead of a serial stub.
+//!
+//! Driver semantics mirror the AOT graphs:
+//!
+//! * `train_step` — one SGD+momentum QAT step through
+//!   [`crate::model::GradEngine`] (fake-quant forward, STE backward):
+//!   per-step mask recomputation from the float shadow weights and the
+//!   train-data cursor at `steps_done · batch_train` — the surrounding
+//!   loop (lr decay, divergence bail-out, loss window) lives in the
+//!   facade, shared with the AOT backend by construction.  Per-image
+//!   gradients reduce in fixed image order, so parameters are
+//!   **bit-identical at any thread count** (pinned in
+//!   `rust/tests/native_backend.rs`).
+//! * `evaluate` / `logits` — the int8 mirror engine
+//!   ([`crate::model::ParallelEngine`], exact i32 accumulation, pinned
+//!   against the AOT `logits` graph) when `quant_on`; the fake-quant
+//!   float forward of the grad engine otherwise (matching the AOT
+//!   eval graph, whose weights are always fake-quantized).
+//! * `calibrate` — the PJRT-free mirror of the AOT calib recipe (same
+//!   data recipe through the compiled float engine, max-merged per
+//!   worker), exactly [`super::ModelRuntime::calibrate_native`].
+
+use super::{Backend, RtCtx};
+use crate::data::{self, Split};
+use crate::model::infer::Forward;
+use crate::model::{GradEngine, ModelSpec, ParallelEngine, QuantConfig};
+use crate::selection::CompressionState;
+use anyhow::Result;
+
+/// The pure-Rust backend.  Stateless: all runtime state lives in the
+/// facade and arrives through [`RtCtx`].
+#[derive(Default)]
+pub struct NativeBackend;
+
+/// Quantization config for the current params under `state`: the
+/// shared per-conv mask recipe ([`super::mask_options`] — one source of
+/// truth with the AOT literal path) and the state's restricted weight
+/// sets.  `quant_on` gates activation quantization only — weights are
+/// always fake-quantized by the engines this feeds.
+fn qc_for(
+    spec: &ModelSpec,
+    params: &[Vec<f32>],
+    act_scales: &[f32],
+    state: &CompressionState,
+    quant_on: bool,
+) -> QuantConfig {
+    let mut wsets = vec![None; spec.n_conv];
+    for c in spec.convs() {
+        wsets[c.conv_idx] = state.layers[c.conv_idx].wset.clone();
+    }
+    QuantConfig {
+        act_scales: act_scales.to_vec(),
+        quant_on,
+        masks: super::mask_options(spec, params, state),
+        wsets,
+    }
+}
+
+/// Wrap raw logits in a [`Forward`] so accuracy counting reuses the
+/// documented lowest-index-tie-break `Forward::argmax` instead of a
+/// second copy of the rule.
+fn as_forward(logits: Vec<f32>, batch: usize) -> Forward {
+    Forward {
+        logits,
+        batch,
+        act_max: Vec::new(),
+        captures: Vec::new(),
+    }
+}
+
+/// Correct predictions of one forward batch.
+fn count_correct(fwd: &Forward, y: &[i32]) -> usize {
+    y.iter()
+        .enumerate()
+        .filter(|(i, &yi)| fwd.argmax(*i) == yi as usize)
+        .count()
+}
+
+impl NativeBackend {
+    /// Logits for a batch under `state`: int8 mirror when `quant_on`,
+    /// fake-quant float forward otherwise.
+    fn batch_logits(
+        ctx: &RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        x: &[f32],
+        batch: usize,
+    ) -> Vec<f32> {
+        let qc = qc_for(
+            ctx.spec,
+            ctx.params.as_slice(),
+            ctx.act_scales.as_slice(),
+            state,
+            quant_on,
+        );
+        if quant_on {
+            let eng = ParallelEngine::new(ctx.spec, ctx.params.as_slice(), &qc, ctx.threads);
+            eng.forward_plain(x, batch).logits
+        } else {
+            let eng = GradEngine::new(ctx.spec, ctx.params.as_slice(), &qc, true);
+            eng.forward_batch(ctx.params.as_slice(), x, batch, ctx.threads)
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn train_step(
+        &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        step_lr: f32,
+    ) -> Result<f32> {
+        let spec = ctx.spec;
+        let bs = spec.batch_train;
+        let cursor = *ctx.steps_done * bs as u64;
+        let (x, y) = data::batch(
+            ctx.data_seed,
+            Split::Train,
+            cursor,
+            bs,
+            spec.n_classes as u64,
+        );
+        // Masks and weight quantization track the current float shadow
+        // weights — rebuild the engine every step, exactly like the AOT
+        // graph recomputes them inside the step.
+        let (loss, grads) = {
+            let qc = qc_for(
+                spec,
+                ctx.params.as_slice(),
+                ctx.act_scales.as_slice(),
+                state,
+                quant_on,
+            );
+            let eng = GradEngine::new(spec, ctx.params.as_slice(), &qc, true);
+            eng.batch_grad(ctx.params.as_slice(), &x, &y, ctx.threads)
+        };
+        // Momentum comes from the spec (the same value the AOT graph
+        // was lowered with), not a native-side constant.
+        let momentum = spec.momentum;
+        for (i, g) in grads.iter().enumerate() {
+            let mom = &mut ctx.mom[i];
+            let pt = &mut ctx.params[i];
+            for ((m, p), &gv) in mom.iter_mut().zip(pt.iter_mut()).zip(g.iter()) {
+                *m = momentum * *m + gv;
+                *p -= step_lr * *m;
+            }
+        }
+        *ctx.steps_done += 1;
+        Ok(loss)
+    }
+
+    fn evaluate(
+        &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        split: Split,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let spec = ctx.spec;
+        let bs = spec.batch_eval;
+        let ncls = spec.n_classes as u64;
+        // Params and state are frozen across the whole loop: build the
+        // quant config (mask sort) and compile the engine once, not per
+        // batch — this is the oracle hot path.
+        let qc = qc_for(
+            spec,
+            ctx.params.as_slice(),
+            ctx.act_scales.as_slice(),
+            state,
+            quant_on,
+        );
+        let mut correct = 0usize;
+        if quant_on {
+            let eng = ParallelEngine::new(spec, ctx.params.as_slice(), &qc, ctx.threads);
+            for b in 0..n_batches {
+                let (x, y) = data::batch(ctx.data_seed, split, (b * bs) as u64, bs, ncls);
+                correct += count_correct(&eng.forward_plain(&x, bs), &y);
+            }
+        } else {
+            let eng = GradEngine::new(spec, ctx.params.as_slice(), &qc, true);
+            for b in 0..n_batches {
+                let (x, y) = data::batch(ctx.data_seed, split, (b * bs) as u64, bs, ncls);
+                let logits = eng.forward_batch(ctx.params.as_slice(), &x, bs, ctx.threads);
+                correct += count_correct(&as_forward(logits, bs), &y);
+            }
+        }
+        Ok(correct as f64 / (n_batches * bs) as f64)
+    }
+
+    fn logits(
+        &mut self,
+        ctx: RtCtx<'_>,
+        state: &CompressionState,
+        quant_on: bool,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let bs = ctx.spec.batch_logits;
+        assert_eq!(x.len(), bs * 32 * 32 * 3);
+        Ok(Self::batch_logits(&ctx, state, quant_on, x, bs))
+    }
+
+    fn calibrate(&mut self, ctx: RtCtx<'_>, n_batches: usize) -> Result<Vec<f32>> {
+        *ctx.act_scales = super::calibrate_scales(
+            ctx.spec,
+            ctx.params.as_slice(),
+            ctx.data_seed,
+            n_batches,
+            ctx.threads,
+        );
+        Ok(ctx.act_scales.clone())
+    }
+}

@@ -45,18 +45,25 @@ pub fn check(name: &str, actual: &Json) {
 /// artifacts): the first run in a fresh artifact build bootstraps the
 /// baseline, every later run pins against it.
 pub fn check_or_init(name: &str, actual: &Json) {
+    check_or_init_with_rtol(name, actual, DEFAULT_RTOL)
+}
+
+/// [`check_or_init`] with an explicit relative tolerance — for
+/// snapshots of values that route through `libm` (`exp`/`ln` in a
+/// training loss), whose last-ulp behavior may differ across hosts.
+pub fn check_or_init_with_rtol(name: &str, actual: &Json, rtol: f64) {
     let path = golden_dir().join(format!("{name}.json"));
     if !blessing() && !path.exists() {
         std::fs::create_dir_all(golden_dir()).expect("create golden dir");
         std::fs::write(&path, format!("{actual}\n")).expect("write golden");
         eprintln!(
-            "BOOTSTRAPPED golden {} (first run against these artifacts); \
+            "BOOTSTRAPPED golden {} (first run in this environment); \
              subsequent runs will pin against it",
             path.display()
         );
         return;
     }
-    check(name, actual)
+    check_with_rtol(name, actual, rtol)
 }
 
 /// [`check`] with an explicit relative tolerance (0.0 = exact).
