@@ -454,6 +454,141 @@ fn main() {
         }
     }
 
+    // ---- block-sparse forward: structural skip vs dense -------------------
+    // Block-structured pruning (whole SB-aligned k-row blocks zeroed
+    // across all output columns) on the same synthetic stack: the
+    // pack-time occupancy index lets the GEMM skip empty SB×SB weight
+    // blocks structurally, so forward wall-clock finally scales with
+    // prune ratio.  Swept at {0, 50, 75, 87.5}% nominal block sparsity;
+    // bit-identity vs the scalar reference is asserted at every level,
+    // and the >= 1.5x gate applies wherever the measured block-empty
+    // fraction reaches 70% (4+ threads only).  The sweep is recorded as
+    // BENCH_sparse_forward.json at the repo root.
+    {
+        use wsel::model::kernels::SB;
+        use wsel::util::json::Json;
+        let spec = wsel::model::ModelSpec::from_manifest_str(FWD_BENCH_MANIFEST)
+            .expect("bench manifest");
+        let p = wsel::model::Params::random(&spec, 7);
+        let scalar = wsel::model::Engine::new(&spec);
+        let mut rng = Xoshiro256::new(13);
+        let batch = 8usize;
+        let xs: Vec<f32> = (0..batch * 32 * 32 * 3)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        // Drop `num` of every `den` SB-aligned k-row blocks of a conv's
+        // K×N matrix (rows are (ky, kx, ci) taps, zeroed for all cout).
+        let mask_for = |cv: &wsel::model::ConvOp, num: usize, den: usize| -> Vec<f32> {
+            let kk = cv.k * cv.k * cv.cin;
+            let mut mask = vec![1.0f32; cv.cout * cv.cin * cv.k * cv.k];
+            for r in 0..kk {
+                if (r / SB) % den >= num {
+                    continue; // kept block
+                }
+                let ci = r % cv.cin;
+                let pos = r / cv.cin;
+                let kx = pos % cv.k;
+                let ky = pos / cv.k;
+                for o in 0..cv.cout {
+                    mask[((o * cv.cin + ci) * cv.k + ky) * cv.k + kx] = 0.0;
+                }
+            }
+            mask
+        };
+        let mut dense_median = 0u128;
+        let mut levels: Vec<(String, f64, u64, u64, u128, f64)> = Vec::new();
+        let mut last_report: Vec<wsel::model::ConvSkip> = Vec::new();
+        for &(label, num, den) in
+            &[("0", 0usize, 8usize), ("50", 4, 8), ("75", 6, 8), ("87.5", 7, 8)]
+        {
+            let mut qc = wsel::model::QuantConfig::quantized(&spec, vec![0.02; spec.n_q]);
+            for cv in spec.convs() {
+                qc.masks[cv.conv_idx] = Some(mask_for(cv, num, den));
+            }
+            let eng = wsel::model::ParallelEngine::new(&spec, &p.tensors, &qc, threads);
+            // Structural skip must never change a bit of the output.
+            let want = scalar.forward(&p.tensors, &xs, batch, &qc, false);
+            let got = eng.forward_plain(&xs, batch);
+            assert_eq!(
+                want.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "sparse forward must stay bit-identical at {label}% block sparsity"
+            );
+            let rep = eng.sparsity_report(batch);
+            let blocks: u64 = rep.iter().map(|r| r.sparsity.blocks_total).sum();
+            let empty: u64 = rep.iter().map(|r| r.sparsity.blocks_empty).sum();
+            let empty_frac = empty as f64 / blocks.max(1) as f64;
+            let m_l = bench(
+                &format!("perf/forward_sparse_{label}pct_t{threads}_b8"),
+                1,
+                5,
+                || {
+                    black_box(eng.forward_plain(&xs, batch));
+                },
+            );
+            m_l.report_throughput(batch as f64, "images");
+            if num == 0 {
+                dense_median = m_l.median_ns;
+            }
+            let sp = dense_median as f64 / m_l.median_ns.max(1) as f64;
+            println!(
+                "      -> {empty}/{blocks} blocks empty ({:.1}%), speedup vs dense {sp:.2}x",
+                empty_frac * 100.0
+            );
+            if perf_asserts_enabled() && empty_frac >= 0.70 {
+                assert!(
+                    sp >= 1.5,
+                    "block-sparse forward must be >= 1.5x dense at {:.1}% block \
+                     sparsity on {threads} threads (got {sp:.2}x)",
+                    empty_frac * 100.0
+                );
+            }
+            levels.push((label.to_string(), empty_frac, empty, blocks, m_l.median_ns, sp));
+            last_report = rep;
+        }
+        if !perf_asserts_enabled() {
+            println!("      (sparse speedup assertions skipped: <4 cores or WSEL_PERF_ASSERT=0)");
+        }
+        // Per-conv skip accounting at the deepest sweep level.
+        let tbl: Vec<(usize, u64, u64, u64, u64)> = last_report
+            .iter()
+            .map(|r| {
+                (
+                    r.conv_idx,
+                    r.sparsity.blocks_total,
+                    r.sparsity.blocks_empty,
+                    r.macs_skipped,
+                    r.macs_dense,
+                )
+            })
+            .collect();
+        println!("{}", wsel::report::sparsity_table(&tbl).render());
+        let json = Json::obj(vec![
+            ("bench", Json::str("sparse_forward_sweep")),
+            ("threads", Json::num(threads as f64)),
+            ("batch", Json::num(batch as f64)),
+            (
+                "levels",
+                Json::arr(levels.iter().map(|(label, frac, empty, blocks, ns, sp)| {
+                    Json::obj(vec![
+                        ("nominal_pct", Json::str(label)),
+                        ("empty_fraction", Json::num(*frac)),
+                        ("blocks_empty", Json::num(*empty as f64)),
+                        ("blocks_total", Json::num(*blocks as f64)),
+                        ("median_ns", Json::num(*ns as f64)),
+                        ("speedup_vs_dense", Json::num(*sp)),
+                    ])
+                })),
+            ),
+        ]);
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("BENCH_sparse_forward.json");
+        match std::fs::write(&path, format!("{json}\n")) {
+            Ok(()) => println!("      wrote {}", path.display()),
+            Err(e) => eprintln!("      could not write {}: {e}", path.display()),
+        }
+    }
+
     // ---- native train/eval backend: serial vs batch-parallel --------------
     // The PR-4 deliverable: the accuracy oracle and the QAT train step
     // through runtime::native::NativeBackend.  Before: one worker

@@ -22,7 +22,10 @@ use crate::systolic::{n_tiles, CYCLES_PER_PASS, TILE};
 /// clock-gate columns/rows that carry no data (TPU-style); only a stub
 /// of the clock tree keeps toggling.  Pruned (w = 0) positions inside
 /// the layer are NOT gated — partial sums still chain through them — so
-/// they pay the full `E(0)` like the paper's zero-weight MACs.
+/// they pay the full `E(0)` like the paper's zero-weight MACs, *unless*
+/// they sit in an all-zero SB×SB block the executor skips structurally:
+/// those never enter the array and are clock-gated like padding (see
+/// [`LayerEnergy::energy_of_usage_gated`]).
 pub const GATED_IDLE_FRACTION: f64 = 0.15;
 
 /// Energy accounting for one conv layer.
@@ -76,6 +79,35 @@ impl LayerEnergy {
             usage[(c as i32 + 128) as usize] += 1;
         }
         self.energy_of_usage(&usage)
+    }
+
+    /// Gated-MAC variant of [`Self::energy_of_usage`]: `gated_zeros`
+    /// zero-code positions sit inside all-zero SB×SB blocks the executor
+    /// skips structurally, so they are clock-gated like tile padding
+    /// (`e_idle · GATED_IDLE_FRACTION`) instead of paying the dense
+    /// `E(0)` switching cost.  `gated_zeros` is clamped to the
+    /// zero-code count; `gated_zeros == 0` is bit-identical to
+    /// [`Self::energy_of_usage`] (the gated positions simply move from
+    /// the occupied sum into the existing padding pool).
+    pub fn energy_of_usage_gated(&self, usage: &[u64; 256], gated_zeros: u64) -> f64 {
+        let gated = gated_zeros.min(usage[128]);
+        let mut u = *usage;
+        u[128] -= gated;
+        // The removed zeros fall out of `occupied`, so energy_of_usage's
+        // padding term picks them up at the gated idle rate — exactly
+        // the association the golden-pinned dense expression uses.
+        self.energy_of_usage(&u)
+    }
+
+    /// Gated-MAC variant of [`Self::energy_of_codes`]; see
+    /// [`Self::energy_of_usage_gated`].
+    pub fn energy_of_codes_gated(&self, w_codes: &[i8], gated_zeros: u64) -> f64 {
+        assert_eq!(w_codes.len(), self.k * self.n);
+        let mut usage = [0u64; 256];
+        for &c in w_codes {
+            usage[(c as i32 + 128) as usize] += 1;
+        }
+        self.energy_of_usage_gated(&usage, gated_zeros)
     }
 
     /// Average tile power (W) implied by the model — the paper's
@@ -198,6 +230,35 @@ mod tests {
         let expect = (32.0 * 32.0) * le.table.energy(0) * cycles
             + (4096.0 - 1024.0) * le.table.e_idle * GATED_IDLE_FRACTION * cycles;
         assert!((e - expect).abs() / expect < 1e-12);
+    }
+
+    /// Gated accounting: zero gated positions is bit-identical to the
+    /// dense model; gating zeros strictly cheapens the layer by exactly
+    /// `E(0) − e_idle·GATED_IDLE_FRACTION` per position-cycle; the count
+    /// clamps to the zero-code population.
+    #[test]
+    fn gated_zeros_join_idle_pool() {
+        let le = layer(64, 32, 32);
+        let mut codes = vec![7i8; 32 * 32];
+        for c in codes.iter_mut().take(200) {
+            *c = 0;
+        }
+        let dense = le.energy_of_codes(&codes);
+        assert_eq!(
+            dense.to_bits(),
+            le.energy_of_codes_gated(&codes, 0).to_bits(),
+            "gated=0 must be bit-identical to the dense model"
+        );
+        let gated = le.energy_of_codes_gated(&codes, 150);
+        let cycles = le.resident_cycles() as f64;
+        let per_pos = le.table.energy(0) - le.table.e_idle * GATED_IDLE_FRACTION;
+        let expect = dense - 150.0 * per_pos * cycles;
+        assert!((gated - expect).abs() / expect < 1e-12);
+        assert!(gated < dense);
+        // Clamp: can't gate more zeros than exist.
+        let all = le.energy_of_codes_gated(&codes, 10_000);
+        let clamped = le.energy_of_codes_gated(&codes, 200);
+        assert_eq!(all.to_bits(), clamped.to_bits());
     }
 
     #[test]

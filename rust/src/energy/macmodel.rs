@@ -28,6 +28,15 @@ impl WeightEnergyTable {
     pub fn energy(&self, code: i8) -> f64 {
         self.e_per_cycle[(code as i32 + 128) as usize]
     }
+
+    /// Energy/cycle of a clock-gated PE position — tile padding or a
+    /// weight inside a structurally-skipped all-zero SB×SB block.  Only
+    /// a stub of the clock tree toggles, so this sits well below even
+    /// the `w = 0` switching cost.
+    #[inline]
+    pub fn e_gated(&self) -> f64 {
+        self.e_idle * super::layer::GATED_IDLE_FRACTION
+    }
 }
 
 /// Drive one specialized MAC with an (activation, psum) step trace and
@@ -212,6 +221,9 @@ mod tests {
         // w = 0 cheapest-or-near-cheapest; much cheaper than w = -127.
         assert!(t.energy(0) < t.energy(-127) * 0.8);
         assert!(t.e_idle <= t.energy(0) + 1e-18);
+        // A clock-gated (structurally-skipped) position is cheaper still.
+        assert!(t.e_gated() < t.e_idle);
+        assert!(t.e_gated() > 0.0);
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct LayerValidation {
     /// Model-mode prediction (J) on the same streams (same M, K, N and
     /// weight codes as each capture).
     pub model_j: f64,
+    /// Model prediction (J) with the executor's structural skip
+    /// accounted: zero weights inside all-zero SB×SB blocks are
+    /// clock-gated instead of paying dense `E(0)` switching (see
+    /// [`LayerEnergy::energy_of_codes_gated`]).  Equals `model_j` when
+    /// the layer has no empty blocks.
+    pub model_gated_j: f64,
 }
 
 impl LayerValidation {
@@ -32,6 +38,16 @@ impl LayerValidation {
             self.model_j / self.exact_j
         } else {
             f64::INFINITY
+        }
+    }
+
+    /// Fractional energy saving the gated-MAC skip buys this layer
+    /// (`1 − model_gated_j / model_j`; 0 for empty layers).
+    pub fn gated_saving(&self) -> f64 {
+        if self.model_j > 0.0 {
+            1.0 - self.model_gated_j / self.model_j
+        } else {
+            0.0
         }
     }
 }
@@ -69,6 +85,7 @@ impl ValidationReport {
                     ("conv_idx", Json::num(l.conv_idx as f64)),
                     ("exact_j", Json::num(l.exact_j)),
                     ("model_j", Json::num(l.model_j)),
+                    ("model_gated_j", Json::num(l.model_gated_j)),
                 ])
             })),
         )])
@@ -115,13 +132,21 @@ pub fn validate_streams(
             table: tables[meta.conv_idx].clone(),
         };
         let e = le.energy_of_codes(&meta.w_codes);
+        // Gated prediction: whatever the executor skips structurally
+        // (all-zero SB×SB blocks of this stream's weight matrix) is
+        // clock-gated instead of paying dense E(0).
+        let skipped = crate::model::kernels::block_sparsity_of(&meta.w_codes, meta.k, meta.n)
+            .elems_skipped;
+        let e_gated = le.energy_of_codes_gated(&meta.w_codes, skipped);
         if let Some(pos) = layers.iter().position(|l| l.conv_idx == meta.conv_idx) {
             layers[pos].model_j += e;
+            layers[pos].model_gated_j += e_gated;
         } else {
             layers.push(LayerValidation {
                 conv_idx: meta.conv_idx,
                 exact_j: 0.0,
                 model_j: e,
+                model_gated_j: e_gated,
             });
         }
     }
@@ -207,7 +232,45 @@ mod tests {
         assert_eq!(rep.layers[0].exact_j, 1e-12);
         assert!(rep.layers[0].ratio() > 0.0);
         assert!(rep.ratio_spread() >= 1.0);
+        // All weights nonzero: nothing to skip, gated model == dense.
+        for l in &rep.layers {
+            assert_eq!(l.model_gated_j.to_bits(), l.model_j.to_bits());
+            assert_eq!(l.gated_saving(), 0.0);
+        }
         let js = format!("{}", rep.to_json());
         assert!(js.contains("exact_j"));
+        assert!(js.contains("model_gated_j"));
+    }
+
+    /// A layer whose weights contain whole all-zero SB×SB blocks shows a
+    /// gated-MAC energy delta in the validation report.
+    #[test]
+    fn gated_model_reflects_empty_blocks() {
+        use crate::model::kernels::SB;
+        let (k, n) = (2 * SB, SB);
+        let mut w = vec![3i8; k * n];
+        // Zero the second 8-row block entirely: one empty SB×SB block.
+        for r in SB..k {
+            for j in 0..n {
+                w[r * n + j] = 0;
+            }
+        }
+        let metas = vec![StreamMeta {
+            conv_idx: 0,
+            m: 4,
+            k,
+            n,
+            w_codes: w,
+        }];
+        let exact = ExactNetworkPower { layers: vec![] };
+        let rep = validate_streams(&metas, &[table()], &exact);
+        let l = &rep.layers[0];
+        assert!(
+            l.model_gated_j < l.model_j,
+            "structural skip must cheapen the model: {} vs {}",
+            l.model_gated_j,
+            l.model_j
+        );
+        assert!(l.gated_saving() > 0.0 && l.gated_saving() < 1.0);
     }
 }

@@ -42,6 +42,11 @@ pub trait CaptureSink {
     }
     /// A conv's operand-pair metadata + pre-quantized weight panel.
     fn begin_conv(&mut self, head: &ConvHead<'_>);
+    /// Pack-time block sparsity of the conv announced by the preceding
+    /// [`begin_conv`](Self::begin_conv) call: which share of its SB×SB
+    /// weight blocks the GEMM skips structurally.  Defaulted so sinks
+    /// that don't track skip counts need no change.
+    fn conv_sparsity(&mut self, _conv_idx: usize, _s: &kernels::BlockSparsity) {}
     /// One block of im2col rows (`rows`×`k`, row-major) of conv
     /// `conv_idx`'s X matrix.
     fn x_block(&mut self, conv_idx: usize, rows: usize, x_codes: &[i8]);
@@ -315,6 +320,19 @@ fn run_image(plan: &Plan, x: &[f32], scratch: &mut Scratch, capture: bool) -> Im
     }
 }
 
+/// Per-conv structural-skip summary for one `batch`-image forward:
+/// the pack-time block sparsity plus the MAC counts it translates to.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvSkip {
+    pub conv_idx: usize,
+    pub sparsity: kernels::BlockSparsity,
+    /// MACs the structural skip removes (`m` im2col rows ×
+    /// `elems_skipped` weight positions).
+    pub macs_skipped: u64,
+    /// Dense MAC count (`m · k · n`) of the same forward.
+    pub macs_dense: u64,
+}
+
 /// The parallel inference engine: a compiled [`Plan`] plus a worker
 /// budget.
 pub struct ParallelEngine {
@@ -333,7 +351,7 @@ impl ParallelEngine {
     }
 
     fn announce(&self, cs: &ConvStep, batch: usize, sink: &mut dyn CaptureSink) {
-        if let ConvWeights::Quant { wq, s_w, .. } = &cs.weights {
+        if let ConvWeights::Quant { wq, wb, s_w } = &cs.weights {
             let cv = &cs.op;
             let (m, kk, nn) = cv.matmul_dims(batch);
             sink.begin_conv(&ConvHead {
@@ -345,6 +363,7 @@ impl ParallelEngine {
                 s_act: self.plan.act_scales[cv.q_idx],
                 s_w: *s_w,
             });
+            sink.conv_sparsity(cv.conv_idx, &wb.sparsity());
         }
     }
 
@@ -424,6 +443,33 @@ impl ParallelEngine {
     /// Forward without captures.
     pub fn forward_plain(&self, x: &[f32], batch: usize) -> Forward {
         self.forward(x, batch, &mut NullSink)
+    }
+
+    /// Structural-skip summary per quantized conv for a `batch`-image
+    /// forward, in conv-index order.  Empty on float plans.
+    pub fn sparsity_report(&self, batch: usize) -> Vec<ConvSkip> {
+        let mut out: Vec<ConvSkip> = Vec::new();
+        let mut push = |cs: &ConvStep| {
+            if let ConvWeights::Quant { wb, .. } = &cs.weights {
+                let (m, kk, nn) = cs.op.matmul_dims(batch);
+                let s = wb.sparsity();
+                out.push(ConvSkip {
+                    conv_idx: cs.op.conv_idx,
+                    sparsity: s,
+                    macs_skipped: m as u64 * s.elems_skipped,
+                    macs_dense: (m * kk * nn) as u64,
+                });
+            }
+        };
+        for step in &self.plan.steps {
+            match &step.kind {
+                StepKind::Conv(cs) => push(cs),
+                StepKind::AddSaved { proj: Some(cs), .. } => push(cs),
+                _ => {}
+            }
+        }
+        out.sort_by_key(|c| c.conv_idx);
+        out
     }
 
     /// Calibrate activation scales over float batches: one forward
@@ -527,6 +573,47 @@ mod tests {
             assert_eq!(a.s_act.to_bits(), b.s_act.to_bits());
             assert_eq!(a.s_w.to_bits(), b.s_w.to_bits());
         }
+    }
+
+    /// The executor announces pack-time block sparsity alongside each
+    /// conv head, and `sparsity_report` agrees with what sinks saw.
+    #[test]
+    fn sparsity_reaches_sinks_and_report() {
+        struct SpySink {
+            seen: Vec<(usize, kernels::BlockSparsity)>,
+        }
+        impl CaptureSink for SpySink {
+            fn wants_tiles(&self) -> bool {
+                true
+            }
+            fn begin_conv(&mut self, _head: &ConvHead<'_>) {}
+            fn conv_sparsity(&mut self, conv_idx: usize, s: &kernels::BlockSparsity) {
+                self.seen.push((conv_idx, *s));
+            }
+            fn x_block(&mut self, _conv_idx: usize, _rows: usize, _x: &[i8]) {}
+            fn finish(&mut self) {}
+        }
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 21);
+        let x = input(2, 22);
+        let scales = Engine::new(&spec).calibrate(&p.tensors, &[&x], 2);
+        let qc = QuantConfig::quantized(&spec, scales);
+        let eng = ParallelEngine::new(&spec, &p.tensors, &qc, 2);
+        let mut sink = SpySink { seen: Vec::new() };
+        eng.forward(&x, 2, &mut sink);
+        let report = eng.sparsity_report(2);
+        assert_eq!(sink.seen.len(), report.len());
+        assert_eq!(report.len(), spec.n_conv);
+        let mut seen = sink.seen;
+        seen.sort_by_key(|&(i, _)| i);
+        for ((i, s), r) in seen.iter().zip(&report) {
+            assert_eq!(*i, r.conv_idx);
+            assert_eq!(*s, r.sparsity);
+            assert!(r.macs_skipped <= r.macs_dense);
+        }
+        // Float plans pack no panels, so there is nothing to skip.
+        let feng = ParallelEngine::new(&spec, &p.tensors, &QuantConfig::float(&spec), 2);
+        assert!(feng.sparsity_report(2).is_empty());
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! time instead of mid-batch.
 
 use super::infer::QuantConfig;
-use super::kernels::BlockedWeights;
+use super::kernels::{BlockSparsity, BlockedWeights};
 use super::spec::{ConvOp, FcOp, ModelSpec, Op, INPUT_C, INPUT_H, INPUT_W};
 use crate::quant;
 
@@ -301,6 +301,27 @@ impl Plan {
             save_depth,
         }
     }
+
+    /// Pack-time block sparsity of every quantized conv, as
+    /// `(conv_idx, summary)` sorted by conv index.  Empty on float
+    /// plans (no packed panels exist).
+    pub fn conv_sparsity(&self) -> Vec<(usize, BlockSparsity)> {
+        let mut out: Vec<(usize, BlockSparsity)> = Vec::new();
+        let mut push = |cs: &ConvStep| {
+            if let ConvWeights::Quant { wb, .. } = &cs.weights {
+                out.push((cs.op.conv_idx, wb.sparsity()));
+            }
+        };
+        for step in &self.steps {
+            match &step.kind {
+                StepKind::Conv(cs) => push(cs),
+                StepKind::AddSaved { proj: Some(cs), .. } => push(cs),
+                _ => {}
+            }
+        }
+        out.sort_by_key(|&(idx, _)| idx);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -339,5 +360,24 @@ mod tests {
         assert_eq!(wq.len(), 27 * 4);
         assert_eq!((wb.k, wb.n), (27, 4));
         assert!(*s_w > 0.0);
+    }
+
+    /// `conv_sparsity` covers every quantized conv (including residual
+    /// projections) in conv-index order, and is empty on float plans.
+    #[test]
+    fn plan_reports_block_sparsity() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 3);
+        let fplan = Plan::compile(&spec, &p.tensors, &QuantConfig::float(&spec));
+        assert!(fplan.conv_sparsity().is_empty());
+        let qc = QuantConfig::quantized(&spec, vec![0.01; spec.n_q]);
+        let plan = Plan::compile(&spec, &p.tensors, &qc);
+        let sp = plan.conv_sparsity();
+        assert_eq!(sp.len(), spec.n_conv);
+        for (i, (idx, s)) in sp.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert!(s.blocks_total > 0);
+            assert!(s.blocks_empty <= s.blocks_total);
+        }
     }
 }

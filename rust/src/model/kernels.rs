@@ -19,15 +19,91 @@ pub const NB: usize = 64;
 pub const MB: usize = 32;
 /// K-panel depth per GEMM macro-block.
 pub const KB: usize = 256;
+/// Side of the block-sparse occupancy grid: SB×SB weight blocks (8-wide
+/// column sub-blocks × 8 k-rows, BSR-style).  NB and KB are multiples of
+/// SB, so panel sub-blocks align with the global 8×8 grid over K×N.
+pub const SB: usize = 8;
+
+/// Block-sparsity summary of a packed weight matrix, counted over the
+/// real K×N extent only (panel padding excluded).  `elems_skipped` is
+/// the number of real weight positions inside all-zero SB×SB blocks —
+/// the per-output-row MAC count the structural skip removes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockSparsity {
+    pub blocks_total: u64,
+    pub blocks_empty: u64,
+    pub elems_skipped: u64,
+}
+
+impl BlockSparsity {
+    /// Fraction of SB×SB blocks that are entirely zero.
+    pub fn empty_fraction(&self) -> f64 {
+        if self.blocks_total == 0 {
+            0.0
+        } else {
+            self.blocks_empty as f64 / self.blocks_total as f64
+        }
+    }
+}
+
+/// Per-panel SB×SB occupancy masks plus the real-extent sparsity
+/// summary.  Masks are panel-major: `occ[p * kblocks + kb]` bit `b` set
+/// iff the block covering columns `p*NB + b*SB ..` and k-rows
+/// `kb*SB ..` has any nonzero code.  Padding bits stay 0.
+fn occupancy_of(w_kxn: &[i8], k: usize, n: usize) -> (Vec<u8>, BlockSparsity) {
+    let panels = n.div_ceil(NB);
+    let kblocks = k.div_ceil(SB);
+    let mut occ = vec![0u8; panels * kblocks];
+    let mut s = BlockSparsity::default();
+    for p in 0..panels {
+        let j0 = p * NB;
+        let width = NB.min(n - j0);
+        let nsb = width.div_ceil(SB);
+        for kb in 0..kblocks {
+            let r0 = kb * SB;
+            let rend = k.min(r0 + SB);
+            let mut mask = 0u8;
+            for b in 0..nsb {
+                let c0 = j0 + b * SB;
+                let cend = n.min(c0 + SB);
+                let occupied = (r0..rend)
+                    .any(|r| w_kxn[r * n + c0..r * n + cend].iter().any(|&v| v != 0));
+                s.blocks_total += 1;
+                if occupied {
+                    mask |= 1 << b;
+                } else {
+                    s.blocks_empty += 1;
+                    s.elems_skipped += ((rend - r0) * (cend - c0)) as u64;
+                }
+            }
+            occ[p * kblocks + kb] = mask;
+        }
+    }
+    (occ, s)
+}
+
+/// Block-sparsity summary of a raw K×N code matrix on the global SB×SB
+/// grid (same grid the packed panels use, since `NB % SB == 0`).
+pub fn block_sparsity_of(w_kxn: &[i8], k: usize, n: usize) -> BlockSparsity {
+    assert_eq!(w_kxn.len(), k * n);
+    occupancy_of(w_kxn, k, n).1
+}
 
 /// Pre-quantized conv weights packed into column panels: `ceil(n/NB)`
 /// panels, each `k`×`NB` row-major with tail columns zero-padded, so the
-/// GEMM inner loop reads one contiguous stripe per (row, panel).
+/// GEMM inner loop reads one contiguous stripe per (row, panel).  Pack
+/// time also records a per-panel SB×SB block occupancy index so the
+/// GEMM can skip all-zero weight blocks structurally.
 #[derive(Clone)]
 pub struct BlockedWeights {
     pub k: usize,
     pub n: usize,
     data: Vec<i8>,
+    /// Panel-major occupancy masks, `panels * kblocks` entries.
+    occ: Vec<u8>,
+    /// `k.div_ceil(SB)` — rows of the occupancy grid.
+    kblocks: usize,
+    sparsity: BlockSparsity,
 }
 
 impl BlockedWeights {
@@ -44,17 +120,32 @@ impl BlockedWeights {
                 data[dst..dst + width].copy_from_slice(&w_kxn[r * n + j0..r * n + j0 + width]);
             }
         }
-        Self { k, n, data }
+        let (occ, sparsity) = occupancy_of(w_kxn, k, n);
+        let kblocks = k.div_ceil(SB);
+        Self { k, n, data, occ, kblocks, sparsity }
     }
 
     fn panel(&self, p: usize) -> &[i8] {
         &self.data[p * self.k * NB..(p + 1) * self.k * NB]
     }
+
+    fn panel_occ(&self, p: usize) -> &[u8] {
+        &self.occ[p * self.kblocks..(p + 1) * self.kblocks]
+    }
+
+    /// Real-extent block-sparsity summary recorded at pack time.
+    pub fn sparsity(&self) -> BlockSparsity {
+        self.sparsity
+    }
 }
 
 /// `acc(m×n) += X(m×k) · W(k×n)` with exact i32 accumulation, blocked
 /// over (column panel, M, K).  Zero activations are skipped (post-ReLU
-/// code streams are sparse).  Caller zeroes `acc`.
+/// code streams are sparse), and all-zero SB×SB weight blocks are
+/// skipped *structurally* via the pack-time occupancy index — no
+/// per-element zero tests on the weight side.  Skipped blocks contribute
+/// exactly zero to the i32 sums, so the result is bit-identical to the
+/// dense walk.  Caller zeroes `acc`.
 pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
     let (k, n) = (w.k, w.n);
     debug_assert_eq!(x.len(), m * k);
@@ -64,6 +155,9 @@ pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) 
         let j0 = p * NB;
         let width = NB.min(n - j0);
         let panel = w.panel(p);
+        let occ = w.panel_occ(p);
+        let nsb = width.div_ceil(SB);
+        let full: u8 = if nsb == 8 { 0xFF } else { (1u8 << nsb) - 1 };
         for i0 in (0..m).step_by(MB) {
             let ih = MB.min(m - i0);
             for k0 in (0..k).step_by(KB) {
@@ -71,15 +165,55 @@ pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) 
                 for i in i0..i0 + ih {
                     let xrow = &x[i * k + k0..i * k + k0 + kh];
                     let arow = &mut acc[i * n + j0..i * n + j0 + width];
-                    for (dk, &xv) in xrow.iter().enumerate() {
-                        if xv == 0 {
+                    // KB is a multiple of SB, so k0 is SB-aligned and
+                    // this walk visits whole occupancy rows.
+                    let mut r = 0usize;
+                    while r < kh {
+                        let kb = (k0 + r) / SB;
+                        let rend = kh.min((kb + 1) * SB - k0);
+                        let mask = occ[kb];
+                        if mask == 0 {
+                            r = rend;
                             continue;
                         }
-                        let xi = xv as i32;
-                        let wrow = &panel[(k0 + dk) * NB..(k0 + dk) * NB + width];
-                        for (a, &wv) in arow.iter_mut().zip(wrow) {
-                            *a += xi * wv as i32;
+                        if mask == full {
+                            // Fully-occupied row of blocks: the original
+                            // contiguous dense inner loop.
+                            for dk in r..rend {
+                                let xv = xrow[dk];
+                                if xv == 0 {
+                                    continue;
+                                }
+                                let xi = xv as i32;
+                                let wrow = &panel[(k0 + dk) * NB..(k0 + dk) * NB + width];
+                                for (a, &wv) in arow.iter_mut().zip(wrow) {
+                                    *a += xi * wv as i32;
+                                }
+                            }
+                        } else {
+                            // Partial row: visit only occupied sub-blocks.
+                            for dk in r..rend {
+                                let xv = xrow[dk];
+                                if xv == 0 {
+                                    continue;
+                                }
+                                let xi = xv as i32;
+                                let wrow = &panel[(k0 + dk) * NB..(k0 + dk) * NB + width];
+                                let mut mbits = mask;
+                                while mbits != 0 {
+                                    let b = mbits.trailing_zeros() as usize;
+                                    mbits &= mbits - 1;
+                                    let c0 = b * SB;
+                                    let cend = width.min(c0 + SB);
+                                    for (a, &wv) in
+                                        arow[c0..cend].iter_mut().zip(&wrow[c0..cend])
+                                    {
+                                        *a += xi * wv as i32;
+                                    }
+                                }
+                            }
                         }
+                        r = rend;
                     }
                 }
             }
@@ -501,6 +635,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Zero out whole SB×SB blocks (block-structured pruning) and check
+    /// the structural-skip GEMM still equals the naive triple loop, and
+    /// that pack-time occupancy actually reports the empty blocks.
+    #[test]
+    fn gemm_block_sparse_matches_naive() {
+        for (si, &(m, k, n)) in [(3usize, 5usize, 2usize), (33, 70, 64), (65, 257, 67), (9, 16, 8)]
+            .iter()
+            .enumerate()
+        {
+            let x = codes(m * k, si as u64 + 11);
+            let mut w = codes(k * n, si as u64 + 200);
+            // Kill every other block on the SB×SB grid (checkerboard),
+            // so masks exercise empty, partial and (where the grid is
+            // 1 wide) full rows.
+            for kb in 0..k.div_ceil(SB) {
+                for jb in 0..n.div_ceil(SB) {
+                    if (kb + jb) % 2 == 0 {
+                        for r in kb * SB..k.min((kb + 1) * SB) {
+                            for j in jb * SB..n.min((jb + 1) * SB) {
+                                w[r * n + j] = 0;
+                            }
+                        }
+                    }
+                }
+            }
+            let wb = BlockedWeights::pack(&w, k, n);
+            let s = wb.sparsity();
+            assert_eq!(s.blocks_total, (k.div_ceil(SB) * n.div_ceil(SB)) as u64);
+            assert!(s.blocks_empty > 0, "({m},{k},{n}): no empty blocks seen");
+            let mut acc = vec![0i32; m * n];
+            gemm_i8_blocked(&x, &wb, m, &mut acc);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0i32;
+                    for r in 0..k {
+                        want += x[i * k + r] as i32 * w[r * n + j] as i32;
+                    }
+                    assert_eq!(acc[i * n + j], want, "({m},{k},{n}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    /// Occupancy accounting on a hand-built matrix: exactly one nonzero
+    /// block, real-extent element counts for the skipped remainder.
+    #[test]
+    fn block_sparsity_counts_real_extent() {
+        // 10×12 → grid 2×2 k-blocks × ... : k.div_ceil(8)=2, n.div_ceil(8)=2.
+        let (k, n) = (10usize, 12usize);
+        let mut w = vec![0i8; k * n];
+        w[0] = 5; // block (kb=0, jb=0) occupied
+        let s = block_sparsity_of(&w, k, n);
+        assert_eq!(s.blocks_total, 4);
+        assert_eq!(s.blocks_empty, 3);
+        // (kb0,jb1): 8 rows × 4 cols; (kb1,jb0): 2 × 8; (kb1,jb1): 2 × 4.
+        assert_eq!(s.elems_skipped, 8 * 4 + 2 * 8 + 2 * 4);
+        assert!((s.empty_fraction() - 0.75).abs() < 1e-12);
+        // Fully dense matrix: nothing skipped.
+        let d = block_sparsity_of(&vec![1i8; k * n], k, n);
+        assert_eq!(d.blocks_empty, 0);
+        assert_eq!(d.elems_skipped, 0);
+        // Fully zero matrix: everything skipped, real extent only.
+        let z = block_sparsity_of(&vec![0i8; k * n], k, n);
+        assert_eq!(z.blocks_empty, z.blocks_total);
+        assert_eq!(z.elems_skipped, (k * n) as u64);
     }
 
     #[test]

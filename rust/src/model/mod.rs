@@ -28,8 +28,9 @@ pub mod kernels;
 pub mod params;
 pub mod spec;
 
-pub use engine::{CaptureBuffer, CaptureSink, ConvHead, NullSink, ParallelEngine};
+pub use engine::{CaptureBuffer, CaptureSink, ConvHead, ConvSkip, NullSink, ParallelEngine};
 pub use grad::GradEngine;
+pub use kernels::{block_sparsity_of, BlockSparsity};
 pub use infer::{ConvCapture, Engine, QuantConfig};
 pub use params::Params;
 pub use spec::{ConvOp, EntryMeta, FcOp, ModelSpec, Op, ParamKind, ParamSpec};

@@ -80,6 +80,31 @@ pub fn pct(x: f64) -> String {
     format!("{:.1}%", x * 100.0)
 }
 
+/// Per-layer structural-skip summary table for block-sparse execution:
+/// rows of `(conv_idx, blocks_total, blocks_empty, macs_skipped,
+/// macs_dense)`.  Takes plain numbers so any layer (engine reports,
+/// benches, the CLI) can feed it without coupling `report` to the model
+/// types.
+pub fn sparsity_table(rows: &[(usize, u64, u64, u64, u64)]) -> Table {
+    let mut t = Table::new(
+        "Block-sparse structural skip",
+        &["conv", "blocks", "empty", "empty%", "MACs skipped", "MAC%"],
+    );
+    for &(ci, total, empty, skipped, dense) in rows {
+        let ef = if total > 0 { empty as f64 / total as f64 } else { 0.0 };
+        let mf = if dense > 0 { skipped as f64 / dense as f64 } else { 0.0 };
+        t.row(&[
+            format!("conv{ci}"),
+            total.to_string(),
+            empty.to_string(),
+            pct(ef),
+            skipped.to_string(),
+            pct(mf),
+        ]);
+    }
+    t
+}
+
 /// An ASCII bar chart (figures in terminal form).
 pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
     assert_eq!(labels.len(), values.len());
@@ -143,6 +168,17 @@ mod tests {
     #[test]
     fn pct_format() {
         assert_eq!(pct(0.586), "58.6%");
+    }
+
+    #[test]
+    fn sparsity_table_fractions() {
+        let t = sparsity_table(&[(0, 8, 2, 128, 1024), (1, 4, 0, 0, 512)]);
+        let s = t.render();
+        assert!(s.contains("conv0"));
+        assert!(s.contains("25.0%"));
+        assert!(s.contains("12.5%"));
+        assert!(s.contains("conv1"));
+        assert!(s.contains("0.0%"));
     }
 
     #[test]

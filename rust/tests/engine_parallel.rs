@@ -5,7 +5,8 @@
 //! multiple of the GEMM block) and thread counts — plus thread-count
 //! invariance of the streaming stats sink.
 
-use wsel::model::{CaptureBuffer, Engine, ModelSpec, ParallelEngine, Params, QuantConfig};
+use wsel::model::kernels::SB;
+use wsel::model::{CaptureBuffer, ConvOp, Engine, ModelSpec, ParallelEngine, Params, QuantConfig};
 use wsel::quant::{magnitude_mask, WeightSet};
 use wsel::stats::StatsSink;
 
@@ -158,6 +159,104 @@ fn check_all_configs(manifest: &str, seed: u64) {
 #[test]
 fn edge_case_convs_bit_identical() {
     check_all_configs(EDGE_MANIFEST, 1);
+}
+
+/// Block-sparse forward vs the dense scalar reference across magnitude
+/// prune ratios {0, 0.5, 0.9} × thread counts {1, 2, 5} on both the
+/// edge-shape and residual manifests: logits, act maxima and captures
+/// must stay bit-identical with the structural skip active.
+#[test]
+fn prune_ratio_sweep_bit_identical() {
+    for (mi, manifest) in [EDGE_MANIFEST, RESIDUAL_MANIFEST].iter().enumerate() {
+        let spec = ModelSpec::from_manifest_str(manifest).expect("manifest");
+        let p = Params::random(&spec, 7 + mi as u64);
+        let scalar = Engine::new(&spec);
+        let batch = 2usize;
+        let x = input(batch, 77 + mi as u64);
+        let scales = scalar.calibrate(&p.tensors, &[&x], batch);
+        for ratio in [0.0f64, 0.5, 0.9] {
+            let mut qc = QuantConfig::quantized(&spec, scales.clone());
+            for cv in spec.convs() {
+                qc.masks[cv.conv_idx] = Some(magnitude_mask(&p.tensors[cv.w], ratio));
+            }
+            let want = scalar.forward(&p.tensors, &x, batch, &qc, true);
+            for threads in [1usize, 2, 5] {
+                let eng = ParallelEngine::new(&spec, &p.tensors, &qc, threads);
+                let mut buf = CaptureBuffer::new();
+                let got = eng.forward(&x, batch, &mut buf);
+                assert_eq!(
+                    bits(&want.logits),
+                    bits(&got.logits),
+                    "ratio={ratio} threads={threads}: logits diverge"
+                );
+                assert_eq!(
+                    bits(&want.act_max),
+                    bits(&got.act_max),
+                    "ratio={ratio} threads={threads}: act_max diverges"
+                );
+                let caps = buf.into_captures();
+                assert_eq!(caps.len(), want.captures.len(), "ratio={ratio}");
+                for (a, b) in want.captures.iter().zip(&caps) {
+                    assert_eq!(a.x_codes, b.x_codes, "ratio={ratio} conv{}", a.conv_idx);
+                    assert_eq!(a.w_codes, b.w_codes, "ratio={ratio} conv{}", a.conv_idx);
+                }
+            }
+        }
+    }
+}
+
+/// Mask that zeroes every other SB-aligned k-row block of a conv's K×N
+/// code matrix (K rows are (ky, kx, ci) taps, zeroed across all cout
+/// columns) — block-structured pruning the executor skips structurally.
+fn block_row_mask(cv: &ConvOp) -> Vec<f32> {
+    let kk = cv.k * cv.k * cv.cin;
+    let mut mask = vec![1.0f32; cv.cout * cv.cin * cv.k * cv.k];
+    for r in 0..kk {
+        if (r / SB) % 2 == 1 {
+            continue; // keep odd blocks
+        }
+        let ci = r % cv.cin;
+        let pos = r / cv.cin;
+        let kx = pos % cv.k;
+        let ky = pos / cv.k;
+        for o in 0..cv.cout {
+            mask[((o * cv.cin + ci) * cv.k + ky) * cv.k + kx] = 0.0;
+        }
+    }
+    mask
+}
+
+/// Block-structured masks actually produce empty SB×SB blocks (unlike
+/// unstructured magnitude pruning), the engine's sparsity report counts
+/// the skipped MACs, and the forward stays bit-identical to the dense
+/// scalar reference at every thread count.
+#[test]
+fn block_structured_masks_skip_and_match() {
+    let spec = ModelSpec::from_manifest_str(EDGE_MANIFEST).expect("manifest");
+    let p = Params::random(&spec, 9);
+    let scalar = Engine::new(&spec);
+    let batch = 2usize;
+    let x = input(batch, 99);
+    let scales = scalar.calibrate(&p.tensors, &[&x], batch);
+    let mut qc = QuantConfig::quantized(&spec, scales);
+    for cv in spec.convs() {
+        qc.masks[cv.conv_idx] = Some(block_row_mask(cv));
+    }
+    let want = scalar.forward(&p.tensors, &x, batch, &qc, false);
+    for threads in [1usize, 2, 5] {
+        let eng = ParallelEngine::new(&spec, &p.tensors, &qc, threads);
+        let got = eng.forward_plain(&x, batch);
+        assert_eq!(bits(&want.logits), bits(&got.logits), "threads={threads}");
+        let report = eng.sparsity_report(batch);
+        assert_eq!(report.len(), spec.n_conv);
+        let empty: u64 = report.iter().map(|r| r.sparsity.blocks_empty).sum();
+        assert!(empty > 0, "block-structured masks must yield empty blocks");
+        let skipped: u64 = report.iter().map(|r| r.macs_skipped).sum();
+        assert!(skipped > 0, "skipped MACs must be counted");
+        for r in &report {
+            assert!(r.macs_skipped <= r.macs_dense, "conv{}", r.conv_idx);
+        }
+    }
 }
 
 #[test]

@@ -6,7 +6,14 @@
 #   --quick  skip clippy, and additionally run the exact-vs-model
 #            validation smoke check (release mode: the gate-level
 #            tile-power engine vs the statistical energy model on a
-#            synthetic capture)
+#            synthetic capture) plus the block-sparse engine property
+#            tests (release mode: prune-ratio/thread sweep vs the
+#            scalar reference)
+#
+# Both modes end with a golden-drift gate: if `cargo test` bootstrapped
+# or rewrote anything under rust/tests/golden/, verification fails so a
+# never-committed golden pin can't silently pass CI.  (WSEL_BLESS=1
+# skips the gate — blessing rewrites goldens on purpose.)
 # Env:   WSEL_BLESS=1 scripts/verify.sh       # re-bless golden snapshots
 #        WSEL_STRICT_FMT=1 scripts/verify.sh  # make fmt drift fatal
 set -euo pipefail
@@ -42,6 +49,8 @@ fi
 if [ "$QUICK" -eq 1 ]; then
     echo "== exact-vs-model validation smoke (--quick) =="
     cargo test --release -q --test exact_power quick_exact_vs_model
+    echo "== block-sparse engine property tests (--quick) =="
+    cargo test --release -q --test engine_parallel
     echo "== cargo clippy skipped (--quick) =="
 else
     echo "== cargo clippy -D warnings (soft-fail if unavailable) =="
@@ -50,6 +59,20 @@ else
     else
         echo "clippy not installed; skipping (soft-fail)"
     fi
+fi
+
+echo "== golden drift gate =="
+if [ "${WSEL_BLESS:-0}" = "1" ]; then
+    echo "WSEL_BLESS=1: golden drift gate skipped (re-blessing)"
+else
+    DRIFT="$(git status --porcelain -- rust/tests/golden)"
+    if [ -n "$DRIFT" ]; then
+        echo "golden files drifted or were bootstrapped but never committed:" >&2
+        echo "$DRIFT" >&2
+        echo "commit the new/updated goldens (or investigate the regression)" >&2
+        exit 1
+    fi
+    echo "golden files clean"
 fi
 
 echo "verify: OK"
