@@ -583,7 +583,9 @@ fn main() {
         ]);
         let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
             .join("BENCH_sparse_forward.json");
-        match std::fs::write(&path, format!("{json}\n")) {
+        // Checksummed + atomic: a bench killed mid-write can't leave a
+        // torn JSON behind, and a bit-rotted file is rejected on load.
+        match wsel::util::artifact::write_json_atomic(&path, &json) {
             Ok(()) => println!("      wrote {}", path.display()),
             Err(e) => eprintln!("      could not write {}: {e}", path.display()),
         }

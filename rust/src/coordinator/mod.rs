@@ -16,8 +16,11 @@ use crate::energy::{characterize_layer_shared, LayerEnergy, NetworkEnergy, Weigh
 use crate::gates::CapModel;
 use crate::model::{CaptureSink, ParallelEngine, QuantConfig};
 use crate::quant;
-use crate::runtime::{BackendChoice, LrSchedule, ModelRuntime};
-use crate::schedule::{energy_prioritized, ScheduleParams, ScheduleResult};
+use crate::runtime::{BackendChoice, LrSchedule, ModelRuntime, ResumeOpts};
+use crate::schedule::{
+    energy_prioritized, energy_prioritized_resumable, ScheduleParams, ScheduleResult,
+    SearchJournal,
+};
 use crate::selection::{AccuracyOracle, CompressionState};
 use crate::stats::{LayerStats, StatsSink};
 use crate::systolic::MacLib;
@@ -51,6 +54,11 @@ pub struct PipelineParams {
     /// Which training/eval backend to run (AOT-PJRT, native, or pick
     /// automatically); `--backend` on the CLI.
     pub backend: BackendChoice,
+    /// Checkpoint training every N steps (0 = off) and resume
+    /// interrupted phases from the last checkpoint; also arms the
+    /// bounded divergence rollback (see
+    /// [`crate::runtime::ResumeOpts`]).  `--ckpt-every` on the CLI.
+    pub ckpt_every: usize,
 }
 
 impl Default for PipelineParams {
@@ -67,6 +75,7 @@ impl Default for PipelineParams {
             seed: 20250710,
             data_seed: ModelRuntime::DEFAULT_DATA_SEED,
             backend: BackendChoice::Auto,
+            ckpt_every: 0,
         }
     }
 }
@@ -146,6 +155,25 @@ impl Pipeline {
         self.params_epoch += 1;
     }
 
+    /// Run one training phase, with checkpoint/resume + divergence
+    /// rollback when `ckpt_every` is armed (the plain historical loop
+    /// otherwise — bit for bit).
+    fn train_phase(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        lr: LrSchedule,
+        steps: usize,
+        tag: &str,
+    ) -> Result<f32> {
+        if self.pp.ckpt_every == 0 {
+            return self.rt.train_steps(state, quant_on, lr, steps);
+        }
+        let opts = ResumeOpts::every(self.pp.ckpt_every, tag);
+        let prog = self.rt.train_steps_resumable(state, quant_on, lr, steps, &opts)?;
+        Ok(prog.loss)
+    }
+
     /// Phase 1+2: float pre-training, activation calibration, QAT.
     /// Stores the quantized baseline accuracy `acc0`.
     pub fn train_baseline(&mut self) -> Result<f64> {
@@ -155,25 +183,39 @@ impl Pipeline {
             crate::info!("{}: loaded cached trained params", self.rt.spec.name);
             self.rt.calibrate(self.pp.calib_batches)?;
         } else {
-            crate::info!(
-                "{}: float pre-training {} steps",
-                self.rt.spec.name,
-                self.pp.float_steps
-            );
-            let loss = self
-                .rt
-                .train_steps(&dense, false, self.pp.lr, self.pp.float_steps)?;
-            crate::info!("float loss {loss:.4}; calibrating");
-            self.rt.calibrate(self.pp.calib_batches)?;
+            // Phase-boundary snapshot: a kill during QAT must not repay
+            // the (much longer) float phase, whose periodic checkpoint
+            // is deleted when the phase completes.
+            let float_done = format!("float-done-{tag}");
+            if self.pp.ckpt_every > 0 && self.rt.load_state_snapshot(&float_done)? {
+                crate::info!(
+                    "{}: resumed at QAT phase (float phase + calibration restored)",
+                    self.rt.spec.name
+                );
+            } else {
+                crate::info!(
+                    "{}: float pre-training {} steps",
+                    self.rt.spec.name,
+                    self.pp.float_steps
+                );
+                let float_tag = format!("float-{tag}");
+                let loss =
+                    self.train_phase(&dense, false, self.pp.lr, self.pp.float_steps, &float_tag)?;
+                crate::info!("float loss {loss:.4}; calibrating");
+                self.rt.calibrate(self.pp.calib_batches)?;
+                if self.pp.ckpt_every > 0 {
+                    self.rt.save_state_snapshot(&float_done)?;
+                }
+            }
             let qat_lr = LrSchedule {
                 base: self.pp.lr.base / 2.0,
                 decay_at: 0.5,
             };
-            let loss = self
-                .rt
-                .train_steps(&dense, true, qat_lr, self.pp.qat_steps)?;
+            let qat_tag = format!("qat-{tag}");
+            let loss = self.train_phase(&dense, true, qat_lr, self.pp.qat_steps, &qat_tag)?;
             crate::info!("qat loss {loss:.4}");
             self.rt.save_params(&tag)?;
+            let _ = std::fs::remove_file(self.rt.checkpoint_path(&float_done));
         }
         self.touch_params();
         self.acc0 = self
@@ -192,13 +234,16 @@ impl Pipeline {
         &self,
         images: usize,
         sink: &mut dyn CaptureSink,
-    ) -> crate::model::infer::Forward {
+    ) -> Result<crate::model::infer::Forward> {
         let spec = &self.rt.spec;
         let qc = QuantConfig::quantized(spec, self.rt.act_scales.clone());
         let eng = ParallelEngine::new(spec, &self.rt.params, &qc, self.pp.threads);
         let (xs, _ys) =
             crate::data::batch(self.rt.data_seed, Split::Train, 0, images, spec.n_classes as u64);
-        eng.forward(&xs, images, sink)
+        // Worker panics surface as a structured PoisonedBatch error
+        // (poisoned image indices named) instead of aborting the
+        // pipeline.
+        Ok(eng.try_forward(&xs, images, sink)?)
     }
 
     /// Phase 3: per-layer statistics + per-weight energy tables + base
@@ -210,7 +255,7 @@ impl Pipeline {
         let bs = self.pp.stats_images;
         crate::info!("{}: capturing operand streams ({} images)", spec.name, bs);
         let mut sink = StatsSink::new(self.pp.seed);
-        self.capture_streams(bs, &mut sink);
+        self.capture_streams(bs, &mut sink)?;
         self.stats = sink.into_stats();
         assert_eq!(self.stats.len(), spec.n_conv, "conv layer missing capture");
 
@@ -262,7 +307,8 @@ impl Pipeline {
         self.maclib.specialize_all(self.pp.threads);
         let mut sink =
             crate::systolic::PowerSink::new(&self.maclib, &self.cap_model, self.pp.threads);
-        self.capture_streams(images, &mut sink);
+        self.capture_streams(images, &mut sink)
+            .expect("capture streams");
         let (metas, exact) = sink.into_parts();
         crate::energy::validate_streams(&metas, &self.tables, &exact)
     }
@@ -376,6 +422,26 @@ impl Pipeline {
         Ok(energy_prioritized(self, n_conv, &sp))
     }
 
+    /// [`Self::compress`] with a persistent per-candidate journal at
+    /// `journal_path`: an interrupted search resumes from the exact
+    /// candidate it died on (oracle params restored from the runtime's
+    /// state snapshots).  `--resume` on the CLI.
+    pub fn compress_resumable(
+        &mut self,
+        mut sp: ScheduleParams,
+        journal_path: &std::path::Path,
+    ) -> Result<ScheduleResult> {
+        assert!(!self.tables.is_empty(), "profile() before compress()");
+        sp.acc0 = self.acc0;
+        if sp.greedy.threads == 0 {
+            sp.greedy.threads = self.pp.threads;
+        }
+        let n_conv = self.rt.spec.n_conv;
+        let mut journal = SearchJournal::new(journal_path.to_path_buf(), "schedule-search");
+        let res = energy_prioritized_resumable(self, n_conv, &sp, &mut journal)?;
+        Ok(res.expect("no trial budget set: search runs to completion"))
+    }
+
     /// Evaluate an arbitrary state: fine-tune then accuracy + energy
     /// saving vs the profiled baseline (for baseline methods).
     pub fn evaluate_state(
@@ -452,5 +518,33 @@ impl AccuracyOracle for Pipeline {
 
     fn eval_count(&self) -> usize {
         self.eval_count
+    }
+
+    /// Back the resumable schedule search's oracle persistence with the
+    /// runtime's checksummed state snapshots (params + momentum +
+    /// act_scales + data cursor).
+    fn save_search_state(&mut self, tag: &str) -> bool {
+        match self.rt.save_state_snapshot(tag) {
+            Ok(()) => true,
+            Err(e) => {
+                crate::warnlog!("oracle snapshot `{tag}` failed: {e}");
+                false
+            }
+        }
+    }
+
+    fn load_search_state(&mut self, tag: &str) -> bool {
+        match self.rt.load_state_snapshot(tag) {
+            Ok(found) => {
+                if found {
+                    self.touch_params();
+                }
+                found
+            }
+            Err(e) => {
+                crate::warnlog!("oracle snapshot `{tag}` rejected: {e}");
+                false
+            }
+        }
     }
 }

@@ -1,0 +1,413 @@
+//! Deterministic fault injection: single-event-upset (SEU) bit flips in
+//! quantized weight codes, and the resilience campaign that sweeps them.
+//!
+//! The SEU model flips individual bits of the stored int8 weight codes
+//! of one conv layer *after* plan compilation — exactly what a particle
+//! strike on an on-chip weight buffer does to an inference accelerator.
+//! Injection is deterministic from a seed (distinct `(byte, bit)`
+//! targets drawn from a seeded PRNG), so every campaign row is exactly
+//! reproducible.
+//!
+//! [`resilience_campaign`] sweeps flip counts × conv layers over model
+//! variants (dense vs compressed weight-set states) and reports, per
+//! cell, the accuracy and modeled-energy deltas against the clean run —
+//! the data behind the EXPERIMENTS.md resilience table.  Dense and
+//! compressed variants share the same (post-compression) parameters, so
+//! the comparison isolates the *representation*: whether restricting
+//! weights to a small set changes how much damage a flipped bit does.
+
+use crate::data::Split;
+use crate::model::ir::{ConvWeights, Plan, StepKind};
+use crate::model::kernels::BlockedWeights;
+use crate::model::{ParallelEngine, QuantConfig};
+use crate::selection::CompressionState;
+use crate::util::json::Json;
+use crate::util::rng::{mix2, Xoshiro256};
+
+/// One injected bit flip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlipRecord {
+    pub conv_idx: usize,
+    /// Byte position in the layer's K×N code matrix.
+    pub pos: usize,
+    /// Flipped bit (0 = LSB).
+    pub bit: u8,
+    pub before: i8,
+    pub after: i8,
+}
+
+fn conv_steps(plan: &Plan) -> impl Iterator<Item = &crate::model::ir::ConvStep> {
+    plan.steps.iter().filter_map(|step| match &step.kind {
+        StepKind::Conv(cs) => Some(&**cs),
+        StepKind::AddSaved { proj: Some(cs), .. } => Some(&**cs),
+        _ => None,
+    })
+}
+
+/// Conv indices of a plan that carry quantized (injectable) weights,
+/// ascending.
+pub fn injectable_convs(plan: &Plan) -> Vec<usize> {
+    let mut out: Vec<usize> = conv_steps(plan)
+        .filter(|cs| matches!(cs.weights, ConvWeights::Quant { .. }))
+        .map(|cs| cs.op.conv_idx)
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Copy of a layer's K×N weight codes (None when not quantized).
+pub fn conv_codes(plan: &Plan, conv_idx: usize) -> Option<Vec<i8>> {
+    conv_steps(plan)
+        .find(|cs| cs.op.conv_idx == conv_idx)
+        .and_then(|cs| match &cs.weights {
+            ConvWeights::Quant { wq, .. } => Some(wq.clone()),
+            ConvWeights::Float(_) => None,
+        })
+}
+
+/// Flip `n_flips` distinct bits of `conv_idx`'s quantized weight codes
+/// (SEU model), deterministically from `seed`, and repack the blocked
+/// GEMM panels so the executed kernel sees the faulted weights.
+/// Returns the flips applied — empty when the layer is absent or not
+/// quantized.  `n_flips` is clamped to the layer's bit capacity.
+pub fn inject_bit_flips(
+    plan: &mut Plan,
+    conv_idx: usize,
+    n_flips: usize,
+    seed: u64,
+) -> Vec<FlipRecord> {
+    let cs = plan.steps.iter_mut().find_map(|step| {
+        let cs = match &mut step.kind {
+            StepKind::Conv(cs) => cs,
+            StepKind::AddSaved { proj: Some(cs), .. } => cs,
+            _ => return None,
+        };
+        (cs.op.conv_idx == conv_idx).then_some(cs)
+    });
+    let Some(cs) = cs else {
+        return Vec::new();
+    };
+    let kk = cs.op.k * cs.op.k * cs.op.cin;
+    let nn = cs.op.cout;
+    let ConvWeights::Quant { wq, wb, .. } = &mut cs.weights else {
+        return Vec::new();
+    };
+    let n_bits = wq.len() * 8;
+    let n_flips = n_flips.min(n_bits);
+    let mut rng = Xoshiro256::new(mix2(seed, conv_idx as u64));
+    let mut chosen: Vec<usize> = Vec::with_capacity(n_flips);
+    let mut records = Vec::with_capacity(n_flips);
+    while records.len() < n_flips {
+        let target = rng.below(n_bits as u64) as usize;
+        if chosen.contains(&target) {
+            continue;
+        }
+        chosen.push(target);
+        let (pos, bit) = (target / 8, (target % 8) as u8);
+        let before = wq[pos];
+        let after = (before as u8 ^ (1u8 << bit)) as i8;
+        wq[pos] = after;
+        records.push(FlipRecord {
+            conv_idx,
+            pos,
+            bit,
+            before,
+            after,
+        });
+    }
+    // The GEMM kernel reads the blocked panels, not `wq` — repack so
+    // the fault is actually executed (and structural skip bookkeeping
+    // stays consistent with the faulted codes).
+    *wb = BlockedWeights::pack(wq, kk, nn);
+    records
+}
+
+/// Campaign knobs.
+#[derive(Clone, Debug)]
+pub struct CampaignCfg {
+    /// Base seed; every (variant, layer, flip-count, trial) cell derives
+    /// its own injection seed from it.
+    pub seed: u64,
+    /// Flip counts to sweep per layer.
+    pub flip_counts: Vec<usize>,
+    /// Validation batches per accuracy measurement.
+    pub val_batches: usize,
+    /// Independent injections averaged per cell.
+    pub trials: usize,
+}
+
+impl Default for CampaignCfg {
+    fn default() -> Self {
+        Self {
+            seed: 0xF117,
+            flip_counts: vec![1, 2, 4, 8],
+            val_batches: 2,
+            trials: 3,
+        }
+    }
+}
+
+/// One campaign cell: a (variant, layer, flip-count) aggregated over
+/// `trials` independent injections.
+#[derive(Clone, Debug)]
+pub struct CampaignRow {
+    pub variant: String,
+    pub conv_idx: usize,
+    pub n_flips: usize,
+    pub acc_clean: f64,
+    pub acc_mean: f64,
+    pub acc_worst: f64,
+    /// Modeled network energy per image, clean (J).
+    pub energy_clean: f64,
+    /// Mean modeled network energy per image under injection (J).
+    pub energy_mean: f64,
+}
+
+/// Campaign output: rows in (variant, layer, flip-count) sweep order.
+#[derive(Clone, Debug, Default)]
+pub struct ResilienceReport {
+    pub rows: Vec<CampaignRow>,
+}
+
+impl ResilienceReport {
+    pub fn table(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            "SEU bit-flip resilience (accuracy / modeled energy vs clean)",
+            &[
+                "variant", "conv", "flips", "acc clean", "acc mean", "acc worst", "E clean (J/img)",
+                "dE mean %",
+            ],
+        );
+        for r in &self.rows {
+            let de = if r.energy_clean > 0.0 {
+                100.0 * (r.energy_mean - r.energy_clean) / r.energy_clean
+            } else {
+                0.0
+            };
+            t.row(&[
+                r.variant.clone(),
+                r.conv_idx.to_string(),
+                r.n_flips.to_string(),
+                format!("{:.4}", r.acc_clean),
+                format!("{:.4}", r.acc_mean),
+                format!("{:.4}", r.acc_worst),
+                format!("{:.3e}", r.energy_clean),
+                format!("{de:+.3}"),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::arr(self.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("variant", Json::str(&r.variant)),
+                    ("conv_idx", Json::num(r.conv_idx as f64)),
+                    ("n_flips", Json::num(r.n_flips as f64)),
+                    ("acc_clean", Json::num(r.acc_clean)),
+                    ("acc_mean", Json::num(r.acc_mean)),
+                    ("acc_worst", Json::num(r.acc_worst)),
+                    ("energy_clean", Json::num(r.energy_clean)),
+                    ("energy_mean", Json::num(r.energy_mean)),
+                ])
+            })),
+        )])
+    }
+}
+
+fn accuracy_of(
+    eng: &ParallelEngine,
+    batches: &[(Vec<f32>, Vec<i32>)],
+) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (x, y) in batches {
+        let fwd = eng.forward_plain(x, y.len());
+        correct += y
+            .iter()
+            .enumerate()
+            .filter(|(i, &yi)| fwd.argmax(*i) == yi as usize)
+            .count();
+        total += y.len();
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+/// Modeled per-image network energy of a plan from its *executed* codes
+/// (mask + set restriction + any injected faults included).
+fn plan_energy(p: &crate::coordinator::Pipeline, plan: &Plan) -> f64 {
+    injectable_convs(plan)
+        .into_iter()
+        .map(|ci| {
+            let codes = conv_codes(plan, ci).expect("quantized conv");
+            p.layer_energy_model(ci).energy_of_codes(&codes)
+        })
+        .sum()
+}
+
+/// Sweep `cfg.flip_counts` × injectable conv layers over the given
+/// model variants, measuring validation accuracy and modeled energy
+/// under injection.  Requires a profiled pipeline (energy tables).
+/// Every cell is deterministic from `cfg.seed`.
+pub fn resilience_campaign(
+    p: &crate::coordinator::Pipeline,
+    variants: &[(&str, &CompressionState)],
+    cfg: &CampaignCfg,
+) -> ResilienceReport {
+    let spec = &p.rt.spec;
+    let bs = spec.batch_eval;
+    let ncls = spec.n_classes as u64;
+    let batches: Vec<(Vec<f32>, Vec<i32>)> = (0..cfg.val_batches.max(1))
+        .map(|b| crate::data::batch(p.rt.data_seed, Split::Val, (b * bs) as u64, bs, ncls))
+        .collect();
+    let mut report = ResilienceReport::default();
+    for &(name, state) in variants {
+        let qc = QuantConfig {
+            act_scales: p.rt.act_scales.clone(),
+            quant_on: true,
+            masks: crate::runtime::mask_options(spec, &p.rt.params, state),
+            wsets: state.layers.iter().map(|l| l.wset.clone()).collect(),
+        };
+        let clean = ParallelEngine::new(spec, &p.rt.params, &qc, p.pp.threads);
+        let acc_clean = accuracy_of(&clean, &batches);
+        let energy_clean = plan_energy(p, &clean.plan);
+        for conv_idx in injectable_convs(&clean.plan) {
+            for &n_flips in &cfg.flip_counts {
+                let mut accs = Vec::with_capacity(cfg.trials);
+                let mut energies = Vec::with_capacity(cfg.trials);
+                for trial in 0..cfg.trials.max(1) {
+                    let mut eng = ParallelEngine::new(spec, &p.rt.params, &qc, p.pp.threads);
+                    let cell = mix2(
+                        cfg.seed,
+                        mix2(conv_idx as u64, ((n_flips as u64) << 16) | trial as u64),
+                    );
+                    inject_bit_flips(&mut eng.plan, conv_idx, n_flips, cell);
+                    accs.push(accuracy_of(&eng, &batches));
+                    energies.push(plan_energy(p, &eng.plan));
+                }
+                let acc_mean = accs.iter().sum::<f64>() / accs.len() as f64;
+                let acc_worst = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let energy_mean = energies.iter().sum::<f64>() / energies.len() as f64;
+                report.rows.push(CampaignRow {
+                    variant: name.to_string(),
+                    conv_idx,
+                    n_flips,
+                    acc_clean,
+                    acc_mean,
+                    acc_worst,
+                    energy_clean,
+                    energy_mean,
+                });
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::tests_support::tiny_spec;
+    use crate::model::Params;
+
+    fn engine(seed: u64) -> ParallelEngine {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, seed);
+        let qc = QuantConfig::quantized(&spec, vec![0.05; spec.n_q]);
+        ParallelEngine::new(&spec, &p.tensors, &qc, 2)
+    }
+
+    fn logits_bits(eng: &ParallelEngine, x: &[f32], batch: usize) -> Vec<u32> {
+        eng.forward_plain(x, batch)
+            .logits
+            .iter()
+            .map(|v| v.to_bits())
+            .collect()
+    }
+
+    fn val_input(batch: usize) -> Vec<f32> {
+        crate::data::batch(7, Split::Val, 0, batch, 10).0
+    }
+
+    #[test]
+    fn injection_is_deterministic_from_seed() {
+        let x = val_input(2);
+        let mut a = engine(3);
+        let mut b = engine(3);
+        let ci = injectable_convs(&a.plan)[0];
+        let fa = inject_bit_flips(&mut a.plan, ci, 4, 0xF117);
+        let fb = inject_bit_flips(&mut b.plan, ci, 4, 0xF117);
+        assert_eq!(fa, fb);
+        assert_eq!(logits_bits(&a, &x, 2), logits_bits(&b, &x, 2));
+    }
+
+    #[test]
+    fn records_reconstruct_the_faulted_codes_exactly() {
+        let mut eng = engine(5);
+        let ci = injectable_convs(&eng.plan)[0];
+        let before = conv_codes(&eng.plan, ci).unwrap();
+        let flips = inject_bit_flips(&mut eng.plan, ci, 8, 42);
+        assert_eq!(flips.len(), 8);
+        // Distinct (pos, bit) targets.
+        let mut targets: Vec<(usize, u8)> = flips.iter().map(|f| (f.pos, f.bit)).collect();
+        targets.sort_unstable();
+        targets.dedup();
+        assert_eq!(targets.len(), 8);
+        // Replaying the records over the clean codes reproduces the
+        // faulted codes; each record flips exactly its named bit.
+        let mut replay = before.clone();
+        for f in &flips {
+            assert_eq!((f.before as u8) ^ (f.after as u8), 1u8 << f.bit);
+            replay[f.pos] = (replay[f.pos] as u8 ^ (1u8 << f.bit)) as i8;
+        }
+        assert_eq!(replay, conv_codes(&eng.plan, ci).unwrap());
+    }
+
+    #[test]
+    fn zero_flips_is_bit_identical() {
+        let x = val_input(2);
+        let clean = engine(9);
+        let mut faulted = engine(9);
+        let ci = injectable_convs(&faulted.plan)[0];
+        let flips = inject_bit_flips(&mut faulted.plan, ci, 0, 1);
+        assert!(flips.is_empty());
+        assert_eq!(logits_bits(&clean, &x, 2), logits_bits(&faulted, &x, 2));
+    }
+
+    #[test]
+    fn repack_keeps_blocked_panels_consistent_with_codes() {
+        let mut eng = engine(11);
+        let ci = injectable_convs(&eng.plan)[0];
+        inject_bit_flips(&mut eng.plan, ci, 16, 77);
+        // conv_sparsity reads the repacked panels; their occupancy must
+        // match what packing the faulted reference codes yields.
+        let codes = conv_codes(&eng.plan, ci).unwrap();
+        let cs = conv_steps(&eng.plan)
+            .find(|cs| cs.op.conv_idx == ci)
+            .unwrap();
+        let (kk, nn) = (cs.op.k * cs.op.k * cs.op.cin, cs.op.cout);
+        let want = crate::model::kernels::block_sparsity_of(&codes, kk, nn);
+        let got = eng
+            .plan
+            .conv_sparsity()
+            .into_iter()
+            .find(|(i, _)| *i == ci)
+            .unwrap()
+            .1;
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn missing_or_float_layers_yield_no_flips() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 13);
+        let qc = QuantConfig::float(&spec);
+        let mut float_eng = ParallelEngine::new(&spec, &p.tensors, &qc, 1);
+        assert!(injectable_convs(&float_eng.plan).is_empty());
+        assert!(inject_bit_flips(&mut float_eng.plan, 0, 3, 1).is_empty());
+        let mut quant_eng = engine(13);
+        assert!(inject_bit_flips(&mut quant_eng.plan, 999, 3, 1).is_empty());
+    }
+}

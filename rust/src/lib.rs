@@ -36,6 +36,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod energy;
+pub mod faults;
 pub mod gates;
 pub mod mac;
 pub mod model;

@@ -25,9 +25,13 @@ wsel <subcommand> [options]
 subcommands:
   train      --model <m> [--float-steps N] [--qat-steps N] [--lr F]
   profile    --model <m> [--quick]
-  compress   --model <m> [--delta F] [--max-layers N] [--ft-steps N] [--quick]
+  compress   --model <m> [--delta F] [--max-layers N] [--ft-steps N]
+             [--resume] [--quick]
   baseline   --model <m> --method powerpruning|naive16|naive20 [--quick]
   eval       --model <m>
+  faults     --model <m> [--flips 1,2,4,8] [--fault-seed S]
+             [--fault-trials N] [--resume] [--quick]
+             (SEU bit-flip resilience campaign, dense vs compressed)
   repro      --table 1|2|3|4 | --fig 1|2|3|4   (see benches/ for scaled runs)
 
 common options:
@@ -36,6 +40,11 @@ common options:
                       artifacts exist, else the pure-Rust backend)
   --data-seed <u64>   dataset seed (default 7; --seed is an alias)
   --threads <n>       worker threads for parallel engines (default: autodetect)
+  --ckpt-every <n>    checkpoint training every n steps (0 = off); an
+                      interrupted run re-invoked with the same flags
+                      resumes from the last checkpoint bit-identically
+  --resume            resume an interrupted schedule search from the
+                      journal in the artifact dir (compress / faults)
   --quick             small preset (smoke-scale)
 models: lenet5 | resnet20 | resnet50lite";
 
@@ -52,6 +61,7 @@ fn params_from(args: &Args) -> Result<PipelineParams> {
         decay_at: 0.75,
     };
     pp.val_batches = args.usize_or("val-batches", pp.val_batches);
+    pp.ckpt_every = args.usize_or("ckpt-every", pp.ckpt_every);
     pp.threads = args.threads_or(pp.threads);
     // `--seed` stays as an alias for the dataset seed; `--data-seed`
     // wins when both are given.
@@ -122,12 +132,27 @@ fn compress_params(args: &Args, acc_quick: bool) -> ScheduleParams {
     sp
 }
 
+/// Run the schedule search — journaled (resumable across process death)
+/// when `--resume` is given, plain otherwise.
+fn run_search(
+    p: &mut Pipeline,
+    args: &Args,
+    sp: ScheduleParams,
+) -> Result<wsel::schedule::ScheduleResult> {
+    if args.flag("resume") {
+        let journal = p.rt.dir().join("schedule.journal.json");
+        p.compress_resumable(sp, &journal)
+    } else {
+        p.compress(sp)
+    }
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let mut p = pipeline(args)?;
     p.train_baseline()?;
     p.profile()?;
     let sp = compress_params(args, args.flag("quick"));
-    let res = p.compress(sp)?;
+    let res = run_search(&mut p, args, sp)?;
     let base = p.base_energy.clone().unwrap();
     let now = p.compute_network_energy(&res.state);
     let saving = base.saving_vs(&now);
@@ -241,6 +266,45 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_faults(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    p.train_baseline()?;
+    p.profile()?;
+    let sp = compress_params(args, args.flag("quick"));
+    let res = run_search(&mut p, args, sp)?;
+    let flip_counts: Vec<usize> = args
+        .opt_or("flips", "1,2,4,8")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--flips expects a comma-separated list of integers, got `{s}`"))
+        })
+        .collect::<Result<_>>()?;
+    let cfg = wsel::faults::CampaignCfg {
+        seed: args.u64_or("fault-seed", 0xF117),
+        flip_counts,
+        val_batches: args.usize_or("val-batches", 2),
+        trials: args.usize_or("fault-trials", 3),
+    };
+    let dense = CompressionState::dense(p.rt.spec.n_conv);
+    let report = wsel::faults::resilience_campaign(
+        &p,
+        &[("dense", &dense), ("compressed", &res.state)],
+        &cfg,
+    );
+    println!("{}", report.table().render());
+    let out = p.rt.dir().join("BENCH_resilience.json");
+    wsel::util::artifact::write_json_atomic(&out, &report.to_json())?;
+    println!(
+        "seed={:#x} trials={} -> {}",
+        cfg.seed,
+        cfg.trials,
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
     // Full-scale repro paths delegate to the same code the benches use,
     // at full parameters.  See benches/ for the scaled variants.
@@ -288,6 +352,10 @@ fn main() -> Result<()> {
             "method",
             "table",
             "fig",
+            "ckpt-every",
+            "flips",
+            "fault-seed",
+            "fault-trials",
         ],
     );
     let sub = args.positional.first().map(String::as_str).unwrap_or("");
@@ -297,6 +365,7 @@ fn main() -> Result<()> {
         "compress" => cmd_compress(&args),
         "baseline" => cmd_baseline(&args),
         "eval" => cmd_eval(&args),
+        "faults" => cmd_faults(&args),
         "repro" => cmd_repro(&args),
         "version" => {
             println!("wsel {}", wsel::version());

@@ -23,7 +23,7 @@ use super::infer::{ConvCapture, Forward, QuantConfig};
 use super::ir::{ConvStep, ConvWeights, FcStep, FcWeights, Plan, StepKind};
 use super::kernels;
 use super::spec::{ModelSpec, INPUT_ELEMS as IMG_ELEMS};
-use crate::util::threadpool::parallel_for_with;
+use crate::util::threadpool::{try_parallel_for_with, PoisonedBatch};
 
 /// Streaming consumer of conv operand tiles.
 ///
@@ -376,6 +376,20 @@ impl ParallelEngine {
     /// is always empty (use [`CaptureBuffer`] to materialize classic
     /// captures).
     pub fn forward(&self, x: &[f32], batch: usize, sink: &mut dyn CaptureSink) -> Forward {
+        self.try_forward(x, batch, sink)
+            .unwrap_or_else(|e| panic!("forward: {e}"))
+    }
+
+    /// [`Self::forward`] with worker-panic isolation: a panic inside any
+    /// per-image worker is caught and reported as a structured
+    /// [`PoisonedBatch`] naming the poisoned image indices, instead of
+    /// aborting the process.
+    pub fn try_forward(
+        &self,
+        x: &[f32],
+        batch: usize,
+        sink: &mut dyn CaptureSink,
+    ) -> Result<Forward, PoisonedBatch> {
         assert_eq!(x.len(), batch * IMG_ELEMS);
         let plan = &self.plan;
         let capturing = plan.quant_on && sink.wants_tiles();
@@ -407,7 +421,7 @@ impl ParallelEngine {
         let mut img0 = 0usize;
         while img0 < batch {
             let count = wave.min(batch - img0);
-            let worker_outs = parallel_for_with(
+            let worker_outs = try_parallel_for_with(
                 count,
                 self.threads,
                 || (Scratch::new(plan), Vec::new()),
@@ -416,7 +430,7 @@ impl ParallelEngine {
                     let x_img = &x[(img0 + i) * IMG_ELEMS..(img0 + i + 1) * IMG_ELEMS];
                     outs.push((i, run_image(plan, x_img, scratch, capturing)));
                 },
-            );
+            )?;
             let mut flat: Vec<(usize, ImgOut)> =
                 worker_outs.into_iter().flat_map(|(_s, outs)| outs).collect();
             flat.sort_by_key(|(i, _)| *i);
@@ -432,17 +446,22 @@ impl ParallelEngine {
             img0 += count;
         }
         sink.finish();
-        Forward {
+        Ok(Forward {
             logits,
             batch,
             act_max,
             captures: Vec::new(),
-        }
+        })
     }
 
     /// Forward without captures.
     pub fn forward_plain(&self, x: &[f32], batch: usize) -> Forward {
         self.forward(x, batch, &mut NullSink)
+    }
+
+    /// [`Self::forward_plain`] with worker-panic isolation.
+    pub fn try_forward_plain(&self, x: &[f32], batch: usize) -> Result<Forward, PoisonedBatch> {
+        self.try_forward(x, batch, &mut NullSink)
     }
 
     /// Structural-skip summary per quantized conv for a `batch`-image
@@ -478,13 +497,24 @@ impl ParallelEngine {
     /// result is bit-identical to the scalar reference at any thread
     /// count.  Requires a float plan.
     pub fn calibrate(&self, xs: &[&[f32]], batch: usize) -> Vec<f32> {
+        self.try_calibrate(xs, batch)
+            .unwrap_or_else(|e| panic!("calibrate: {e}"))
+    }
+
+    /// [`Self::calibrate`] with worker-panic isolation (see
+    /// [`Self::try_forward`]).
+    pub fn try_calibrate(
+        &self,
+        xs: &[&[f32]],
+        batch: usize,
+    ) -> Result<Vec<f32>, PoisonedBatch> {
         let plan = &self.plan;
         assert!(!plan.quant_on, "calibration runs the float plan");
         for x in xs {
             assert_eq!(x.len(), batch * IMG_ELEMS);
         }
         let total = xs.len() * batch;
-        let states = parallel_for_with(
+        let states = try_parallel_for_with(
             total,
             self.threads,
             || (Scratch::new(plan), vec![0.0f32; plan.n_q]),
@@ -497,17 +527,17 @@ impl ParallelEngine {
                     *m = m.max(v);
                 }
             },
-        );
+        )?;
         let mut maxes = vec![0.0f32; plan.n_q];
         for (_scratch, wm) in &states {
             for (m, &v) in maxes.iter_mut().zip(wm) {
                 *m = m.max(v);
             }
         }
-        maxes
+        Ok(maxes
             .iter()
             .map(|&m| (m / crate::quant::QMAX as f32).max(1e-9))
-            .collect()
+            .collect())
     }
 }
 

@@ -12,9 +12,13 @@ pub struct Params {
 }
 
 impl Params {
-    /// Load `params.bin` (concatenated f32 LE in param order).
+    /// Load `params.bin` (concatenated f32 LE in param order).  Blobs
+    /// saved by [`Params::save`] carry the checksummed artifact header
+    /// (corruption fails here with path + reason); headerless blobs
+    /// written by `aot.py` load as legacy payloads.
     pub fn load(spec: &ModelSpec, path: &Path) -> Result<Params> {
-        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let bytes = crate::util::artifact::load(path)
+            .with_context(|| format!("loading params {}", path.display()))?;
         let expect = spec.n_param_elems() * 4;
         if bytes.len() != expect {
             bail!(
@@ -40,7 +44,7 @@ impl Params {
     }
 
     /// Save back to the same blob format (checkpoints of trained /
-    /// compressed models).
+    /// compressed models), atomically and under a checksummed header.
     pub fn save(&self, spec: &ModelSpec, path: &Path) -> Result<()> {
         let mut bytes = Vec::with_capacity(spec.n_param_elems() * 4);
         for (t, p) in self.tensors.iter().zip(&spec.params) {
@@ -49,7 +53,8 @@ impl Params {
                 bytes.extend_from_slice(&v.to_le_bytes());
             }
         }
-        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
+        crate::util::artifact::write_atomic(path, &bytes)
+            .with_context(|| format!("writing params {}", path.display()))?;
         Ok(())
     }
 
@@ -203,5 +208,22 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, [0u8; 12]).unwrap();
         assert!(Params::load(&spec, &path).is_err());
+    }
+
+    #[test]
+    fn load_rejects_bit_flipped_blob() {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, 5);
+        let dir = std::env::temp_dir().join("wsel_params_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bin");
+        p.save(&spec, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:?}", Params::load(&spec, &path).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("c.bin"), "{err}");
     }
 }

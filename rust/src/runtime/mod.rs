@@ -47,6 +47,77 @@ impl Default for LrSchedule {
     }
 }
 
+/// Checkpoint/resume policy for [`ModelRuntime::train_steps_resumable`].
+#[derive(Clone, Debug)]
+pub struct ResumeOpts {
+    /// Save a checkpoint every `every` executed steps.  `0` disables
+    /// checkpointing, resume, and rollback entirely — the historical
+    /// [`ModelRuntime::train_steps`] behavior, bit for bit.
+    pub every: usize,
+    /// Checkpoint tag; the file is `ckpt.<tag>.bin` in the runtime dir.
+    pub tag: String,
+    /// Max divergence rollbacks before the run gives up and errors.
+    pub max_rollbacks: u32,
+    /// Learning-rate multiplier applied on each divergence rollback.
+    pub backoff: f32,
+    /// Execute at most this many steps in THIS invocation, then return
+    /// with `completed = false` **without saving** — modeling a hard
+    /// kill: resume recovers from the last periodic checkpoint and
+    /// recomputes the tail, which is what makes kill-and-resume
+    /// bit-identical to an uninterrupted run.
+    pub max_steps_this_run: Option<usize>,
+}
+
+impl ResumeOpts {
+    /// Checkpoint every `every` steps under `tag`, with the default
+    /// divergence policy (3 rollbacks, lr × 0.5 per rollback).
+    pub fn every(every: usize, tag: &str) -> Self {
+        Self {
+            every,
+            tag: tag.to_string(),
+            max_rollbacks: 3,
+            backoff: 0.5,
+            max_steps_this_run: None,
+        }
+    }
+
+    fn disabled() -> Self {
+        Self {
+            every: 0,
+            tag: String::new(),
+            max_rollbacks: 0,
+            backoff: 1.0,
+            max_steps_this_run: None,
+        }
+    }
+}
+
+/// Outcome of a [`ModelRuntime::train_steps_resumable`] invocation.
+#[derive(Clone, Debug)]
+pub struct TrainProgress {
+    /// Whether the full step schedule has completed.
+    pub completed: bool,
+    /// Mean loss over the final (up to) 10 steps executed this
+    /// invocation.
+    pub loss: f32,
+    /// Steps executed in this invocation (resumed steps not counted).
+    pub steps_run: usize,
+    /// Schedule position reached (`== steps` when completed).
+    pub at_step: usize,
+    /// Divergence rollbacks performed so far across the whole run.
+    pub rollbacks: u32,
+    /// True when a checkpoint was found and adopted at entry.
+    pub resumed: bool,
+}
+
+/// State adopted from a checkpoint (the f32 payload goes straight into
+/// the runtime; this carries the loop-control fields).
+struct CkptMeta {
+    steps_into_run: usize,
+    lr_scale: f32,
+    rollbacks: u32,
+}
+
 /// Which backend a runtime should use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum BackendChoice {
@@ -559,6 +630,23 @@ impl ModelRuntime {
         Self::assemble(spec, params, dir, Box::new(native::NativeBackend::default()))
     }
 
+    /// Assemble a runtime around an explicit backend (scripted backends
+    /// in tests; future backends plug in without a facade fork).
+    pub fn with_backend(
+        spec: ModelSpec,
+        params: Vec<Vec<f32>>,
+        dir: PathBuf,
+        backend: Box<dyn Backend>,
+    ) -> Self {
+        assert_eq!(params.len(), spec.params.len());
+        Self::assemble(spec, params, dir, backend)
+    }
+
+    /// Directory holding this runtime's artifacts and checkpoints.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
     /// Backend selection: AOT when artifacts exist and PJRT comes up
     /// (unless forced), native otherwise.
     pub fn auto(artifacts_dir: &Path, model: &str, choice: BackendChoice) -> Result<Self> {
@@ -621,24 +709,311 @@ impl ModelRuntime {
         lr: LrSchedule,
         steps: usize,
     ) -> Result<f32> {
-        let mut recent = Vec::new();
-        for s in 0..steps {
-            let step_lr = if (s as f32) < lr.decay_at * steps as f32 {
+        let p = self.train_steps_resumable(state, quant_on, lr, steps, &ResumeOpts::disabled())?;
+        Ok(p.loss)
+    }
+
+    /// [`Self::train_steps`] with checkpoint/resume and bounded
+    /// divergence rollback:
+    ///
+    /// * every `opts.every` steps the full mutable training state
+    ///   (params, momentum, activation scales, data-cursor step counter)
+    ///   is checkpointed atomically to `ckpt.<tag>.bin`;
+    /// * at entry, an existing checkpoint for the same (model, total
+    ///   steps, data seed) is adopted, so a killed run resumes where the
+    ///   last checkpoint left it — and, because a step is a pure
+    ///   function of (params, momentum, scales, data cursor), the
+    ///   resumed run's final params are **bit-identical** to an
+    ///   uninterrupted run at any thread count (there is no live RNG in
+    ///   the train loop: data sampling is random-access from
+    ///   `data_seed` + cursor, and masks are recomputed from the float
+    ///   shadow weights each step — the checkpoint *is* the full state);
+    /// * a non-finite loss rolls back to the last checkpoint with the
+    ///   learning rate scaled by `opts.backoff`, at most
+    ///   `opts.max_rollbacks` times, instead of bailing immediately.
+    ///
+    /// The checkpoint file is deleted on completion.  A corrupt
+    /// checkpoint is a hard error naming the file and reason — never
+    /// silently ignored.  With `opts.every == 0` this is exactly the
+    /// historical `train_steps` loop.
+    pub fn train_steps_resumable(
+        &mut self,
+        state: &CompressionState,
+        quant_on: bool,
+        lr: LrSchedule,
+        steps: usize,
+        opts: &ResumeOpts,
+    ) -> Result<TrainProgress> {
+        let mut s = 0usize;
+        let mut lr_scale = 1.0f32;
+        let mut rollbacks = 0u32;
+        let mut resumed = false;
+        if opts.every > 0 {
+            if let Some(meta) = self.try_adopt_checkpoint(&opts.tag, steps)? {
+                s = meta.steps_into_run;
+                lr_scale = meta.lr_scale;
+                rollbacks = meta.rollbacks;
+                resumed = true;
+                crate::info!(
+                    "{}: resumed checkpoint `{}` at step {s}/{steps} ({rollbacks} rollbacks so far)",
+                    self.spec.name,
+                    opts.tag
+                );
+            } else {
+                // Initial checkpoint: a rollback target exists even for
+                // divergences before the first periodic save.
+                self.save_checkpoint(&opts.tag, steps, 0, lr_scale, rollbacks)?;
+            }
+        }
+        let mut recent: Vec<f32> = Vec::new();
+        let mut steps_run = 0usize;
+        while s < steps {
+            if let Some(limit) = opts.max_steps_this_run {
+                if steps_run >= limit {
+                    // Hard-kill model: return WITHOUT saving; resume
+                    // recomputes from the last periodic checkpoint.
+                    return Ok(TrainProgress {
+                        completed: false,
+                        loss: recent.iter().sum::<f32>() / recent.len().max(1) as f32,
+                        steps_run,
+                        at_step: s,
+                        rollbacks,
+                        resumed,
+                    });
+                }
+            }
+            let base = if (s as f32) < lr.decay_at * steps as f32 {
                 lr.base
             } else {
                 lr.base / 5.0
             };
+            // lr_scale is exactly 1.0 until a rollback fires, and
+            // `x * 1.0` is bit-exact, so the plain train_steps path is
+            // unchanged bit for bit.
+            let step_lr = base * lr_scale;
             let (backend, ctx) = self.ctx();
             let loss = backend.train_step(ctx, state, quant_on, step_lr)?;
+            steps_run += 1;
             if !loss.is_finite() {
+                if opts.every > 0 && rollbacks < opts.max_rollbacks {
+                    rollbacks += 1;
+                    lr_scale *= opts.backoff;
+                    let meta = self.try_adopt_checkpoint(&opts.tag, steps)?.ok_or_else(|| {
+                        anyhow!(
+                            "divergence rollback: checkpoint `{}` disappeared from {}",
+                            opts.tag,
+                            self.dir.display()
+                        )
+                    })?;
+                    s = meta.steps_into_run;
+                    recent.clear();
+                    crate::info!(
+                        "{}: diverged (loss = {loss}); rolled back to step {s} with lr scale \
+                         {lr_scale:.3e} (rollback {rollbacks}/{})",
+                        self.spec.name,
+                        opts.max_rollbacks
+                    );
+                    // Persist the reduced lr so a kill right after the
+                    // rollback resumes with the same policy.
+                    self.save_checkpoint(&opts.tag, steps, s, lr_scale, rollbacks)?;
+                    continue;
+                }
+                if opts.every > 0 {
+                    bail!(
+                        "training diverged at step {s} (loss = {loss}) after {rollbacks} \
+                         rollback(s); giving up"
+                    );
+                }
                 bail!("training diverged at step {s} (loss = {loss})");
             }
             recent.push(loss);
             if recent.len() > 10 {
                 recent.remove(0);
             }
+            s += 1;
+            if opts.every > 0 && s < steps && s % opts.every == 0 {
+                self.save_checkpoint(&opts.tag, steps, s, lr_scale, rollbacks)?;
+            }
         }
-        Ok(recent.iter().sum::<f32>() / recent.len().max(1) as f32)
+        if opts.every > 0 {
+            let _ = std::fs::remove_file(self.checkpoint_path(&opts.tag));
+        }
+        Ok(TrainProgress {
+            completed: true,
+            loss: recent.iter().sum::<f32>() / recent.len().max(1) as f32,
+            steps_run,
+            at_step: s,
+            rollbacks,
+            resumed,
+        })
+    }
+
+    // -- training checkpoints ------------------------------------------------
+
+    /// Path of the training checkpoint for `tag`.
+    pub fn checkpoint_path(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("ckpt.{tag}.bin"))
+    }
+
+    /// Serialize the full mutable training state under `tag`:
+    /// `u32 meta_len · meta JSON · act_scales · params · momentum` (all
+    /// f32 little-endian, wrapped in a checksummed artifact so partial
+    /// writes and bit-rot are detected at load).
+    fn save_checkpoint(
+        &self,
+        tag: &str,
+        run_total: usize,
+        steps_into_run: usize,
+        lr_scale: f32,
+        rollbacks: u32,
+    ) -> Result<()> {
+        use crate::util::json::Json;
+        let elems = self.spec.n_param_elems();
+        let meta = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("model", Json::str(&self.spec.name)),
+            ("run_total", Json::num(run_total as f64)),
+            ("steps_into_run", Json::num(steps_into_run as f64)),
+            // u64 counters as strings: JSON f64 would lose >2^53.
+            ("steps_done", Json::str(&self.steps_done.to_string())),
+            ("data_seed", Json::str(&self.data_seed.to_string())),
+            ("lr_scale_bits", Json::num(lr_scale.to_bits() as f64)),
+            ("rollbacks", Json::num(rollbacks as f64)),
+            ("elems", Json::num(elems as f64)),
+            ("n_q", Json::num(self.spec.n_q as f64)),
+        ])
+        .to_string();
+        let meta_b = meta.as_bytes();
+        let mut payload =
+            Vec::with_capacity(4 + meta_b.len() + 4 * (self.spec.n_q + 2 * elems));
+        payload.extend_from_slice(&(meta_b.len() as u32).to_le_bytes());
+        payload.extend_from_slice(meta_b);
+        for &v in &self.act_scales {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for t in &self.params {
+            for &v in t {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for t in &self.mom {
+            for &v in t {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        crate::util::artifact::write_atomic(&self.checkpoint_path(tag), &payload)
+            .with_context(|| format!("saving checkpoint `{tag}`"))
+    }
+
+    /// Adopt the checkpoint for `tag` if one exists and belongs to this
+    /// run (same model, total step count, data seed, param layout):
+    /// restores params/momentum/scales/step-counter bit-exactly and
+    /// returns its loop-control meta.  `Ok(None)` when absent or for a
+    /// different run; `Err` (with path + reason) when the file exists
+    /// but is corrupt — a bad checkpoint is never silently consumed.
+    fn try_adopt_checkpoint(&mut self, tag: &str, run_total: usize) -> Result<Option<CkptMeta>> {
+        use crate::util::json::Json;
+        let path = self.checkpoint_path(tag);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let payload = crate::util::artifact::load(&path)?;
+        let fail = |why: String| anyhow!("checkpoint {}: {why}", path.display());
+        if payload.len() < 4 {
+            return Err(fail("truncated (no meta length)".into()));
+        }
+        let meta_len =
+            u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+        if payload.len() < 4 + meta_len {
+            return Err(fail(format!(
+                "truncated meta block ({} bytes present, {meta_len} declared)",
+                payload.len() - 4
+            )));
+        }
+        let meta_str = std::str::from_utf8(&payload[4..4 + meta_len])
+            .map_err(|_| fail("meta is not UTF-8".into()))?;
+        let meta =
+            Json::parse(meta_str).map_err(|e| fail(format!("meta does not parse: {e}")))?;
+        let model = meta.get("model").and_then(Json::as_str).unwrap_or("");
+        let elems_meta = meta.get("elems").and_then(Json::as_usize).unwrap_or(0);
+        let run_total_meta = meta
+            .get("run_total")
+            .and_then(Json::as_usize)
+            .unwrap_or(usize::MAX);
+        let seed_meta = meta
+            .get("data_seed")
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<u64>().ok());
+        let elems = self.spec.n_param_elems();
+        if model != self.spec.name
+            || run_total_meta != run_total
+            || elems_meta != elems
+            || seed_meta != Some(self.data_seed)
+        {
+            crate::info!(
+                "checkpoint {} belongs to a different run (model/steps/seed mismatch); ignoring",
+                path.display()
+            );
+            return Ok(None);
+        }
+        let n_q = self.spec.n_q;
+        let want = 4 + meta_len + 4 * (n_q + 2 * elems);
+        if payload.len() != want {
+            return Err(fail(format!(
+                "payload is {} bytes, expected {want} ({elems} param elems × 2 + {n_q} scales)",
+                payload.len()
+            )));
+        }
+        let mut off = 4 + meta_len;
+        let mut read_f32s = |n: usize| -> Vec<f32> {
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &payload[off + i * 4..off + i * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            v
+        };
+        let scales = read_f32s(n_q);
+        let tensor_sizes: Vec<usize> = self.spec.params.iter().map(|p| p.numel()).collect();
+        let params: Vec<Vec<f32>> = tensor_sizes.iter().map(|&n| read_f32s(n)).collect();
+        let mom: Vec<Vec<f32>> = tensor_sizes.iter().map(|&n| read_f32s(n)).collect();
+        let steps_done = meta
+            .get("steps_done")
+            .and_then(Json::as_str)
+            .and_then(|v| v.parse::<u64>().ok())
+            .ok_or_else(|| fail("missing steps_done".into()))?;
+        let steps_into_run = meta
+            .get("steps_into_run")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| fail("missing steps_into_run".into()))?;
+        let lr_scale = f32::from_bits(
+            meta.get("lr_scale_bits")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0f32.to_bits() as f64) as u32,
+        );
+        let rollbacks = meta.get("rollbacks").and_then(Json::as_usize).unwrap_or(0) as u32;
+        self.act_scales = scales;
+        self.params = params;
+        self.mom = mom;
+        self.steps_done = steps_done;
+        Ok(Some(CkptMeta {
+            steps_into_run,
+            lr_scale,
+            rollbacks,
+        }))
+    }
+
+    /// Snapshot the full mutable training state under `tag` — the
+    /// schedule journal's oracle-state persistence hook.
+    pub fn save_state_snapshot(&self, tag: &str) -> Result<()> {
+        self.save_checkpoint(tag, 0, 0, 1.0, 0)
+    }
+
+    /// Restore a [`Self::save_state_snapshot`].  `Ok(false)` when no
+    /// snapshot exists for `tag`; `Err` when one exists but is corrupt.
+    pub fn load_state_snapshot(&mut self, tag: &str) -> Result<bool> {
+        Ok(self.try_adopt_checkpoint(tag, 0)?.is_some())
     }
 
     /// Accuracy over `n_batches` of the given split (batch = spec eval

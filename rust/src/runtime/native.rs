@@ -88,7 +88,7 @@ impl NativeBackend {
         quant_on: bool,
         x: &[f32],
         batch: usize,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>> {
         let qc = qc_for(
             ctx.spec,
             ctx.params.as_slice(),
@@ -98,10 +98,13 @@ impl NativeBackend {
         );
         if quant_on {
             let eng = ParallelEngine::new(ctx.spec, ctx.params.as_slice(), &qc, ctx.threads);
-            eng.forward_plain(x, batch).logits
+            // A worker panic surfaces as a structured PoisonedBatch
+            // error (naming the poisoned image indices) instead of
+            // tearing the process down mid-pipeline.
+            Ok(eng.try_forward_plain(x, batch)?.logits)
         } else {
             let eng = GradEngine::new(ctx.spec, ctx.params.as_slice(), &qc, true);
-            eng.forward_batch(ctx.params.as_slice(), x, batch, ctx.threads)
+            Ok(eng.forward_batch(ctx.params.as_slice(), x, batch, ctx.threads))
         }
     }
 }
@@ -183,7 +186,7 @@ impl Backend for NativeBackend {
             let eng = ParallelEngine::new(spec, ctx.params.as_slice(), &qc, ctx.threads);
             for b in 0..n_batches {
                 let (x, y) = data::batch(ctx.data_seed, split, (b * bs) as u64, bs, ncls);
-                correct += count_correct(&eng.forward_plain(&x, bs), &y);
+                correct += count_correct(&eng.try_forward_plain(&x, bs)?, &y);
             }
         } else {
             let eng = GradEngine::new(spec, ctx.params.as_slice(), &qc, true);
@@ -205,7 +208,7 @@ impl Backend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let bs = ctx.spec.batch_logits;
         assert_eq!(x.len(), bs * 32 * 32 * 3);
-        Ok(Self::batch_logits(&ctx, state, quant_on, x, bs))
+        Self::batch_logits(&ctx, state, quant_on, x, bs)
     }
 
     fn calibrate(&mut self, ctx: RtCtx<'_>, n_batches: usize) -> Result<Vec<f32>> {

@@ -1,0 +1,320 @@
+//! Persistent per-candidate journal for the §4.3 schedule search.
+//!
+//! Every candidate `(prune ratio, K)` trial of
+//! [`super::energy_prioritized_resumable`] is appended here and the
+//! journal is rewritten atomically (checksummed artifact), so a search
+//! killed mid-way resumes from the exact candidate it died on instead of
+//! repaying every fine-tune step before it.  The journal records:
+//!
+//! * the **frozen processing order** (conv_idx, energy-before, share per
+//!   layer) captured at the original start — params drift during
+//!   fine-tuning, so re-deriving the order on resume could diverge from
+//!   the interrupted run;
+//! * one [`TrialRecord`] per evaluated candidate (accepted or not, with
+//!   the restricted set's codes, so accepted layers rebuild exactly);
+//! * the completed [`LayerOutcome`] rows, replayed verbatim on resume.
+//!
+//! Oracle state (the fine-tuned params behind the accuracy numbers) is
+//! persisted through [`crate::selection::AccuracyOracle`]'s
+//! `save_search_state`/`load_search_state` hooks, keyed by the journal's
+//! `tag` — the coordinator pipeline backs them with runtime state
+//! snapshots.
+
+use super::LayerOutcome;
+use crate::util::artifact;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One evaluated schedule candidate.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    /// Position in the frozen energy-descending processing order.
+    pub order_pos: usize,
+    pub conv_idx: usize,
+    /// Index into the layer's (ratio × K) candidate menu.
+    pub cand_idx: usize,
+    pub prune_ratio: f64,
+    pub k_target: usize,
+    pub accepted: bool,
+    /// Global accuracy measured for this trial.
+    pub accuracy: f64,
+    /// Codes of the trial's restricted weight set.
+    pub wset: Vec<i32>,
+}
+
+/// On-disk journal of a resumable schedule search.
+pub struct SearchJournal {
+    path: PathBuf,
+    /// Tag under which the oracle snapshots its state (see module docs).
+    pub tag: String,
+    /// Max candidate trials to run in THIS invocation (`None` =
+    /// unlimited).  Exhausting it makes the search return `None` with
+    /// the journal positioned to resume — the kill model of the
+    /// resume tests, and a bounded-work knob for long searches.
+    pub budget: Option<usize>,
+    /// Frozen processing order: `(conv_idx, energy_before, share)`.
+    pub order: Vec<(usize, f64, f64)>,
+    pub trials: Vec<TrialRecord>,
+    /// Outcome rows of layers completed in earlier invocations.
+    pub outcomes: Vec<LayerOutcome>,
+    meta_key: String,
+}
+
+impl SearchJournal {
+    pub fn new(path: PathBuf, tag: &str) -> Self {
+        Self {
+            path,
+            tag: tag.to_string(),
+            budget: None,
+            order: Vec::new(),
+            trials: Vec::new(),
+            outcomes: Vec::new(),
+            meta_key: String::new(),
+        }
+    }
+
+    /// Limit this invocation to `budget` candidate trials.
+    pub fn with_budget(mut self, budget: usize) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Begin a fresh search: record the meta key + frozen order, drop
+    /// any stale trial state.
+    pub(crate) fn start(&mut self, meta_key: &str, order: Vec<(usize, f64, f64)>) {
+        self.meta_key = meta_key.to_string();
+        self.order = order;
+        self.trials.clear();
+        self.outcomes.clear();
+    }
+
+    /// Load an existing journal if it matches `meta_key` (same search
+    /// parameters).  `Ok(false)` when absent or for different
+    /// parameters; `Err` (path + reason) when the file is corrupt or
+    /// structurally invalid — never silently consumed.
+    pub(crate) fn try_load(&mut self, meta_key: &str) -> Result<bool> {
+        self.meta_key = meta_key.to_string();
+        if !self.path.exists() {
+            return Ok(false);
+        }
+        let json = artifact::load_json(&self.path)
+            .with_context(|| format!("schedule journal {}", self.path.display()))?;
+        if json.get("meta").and_then(Json::as_str) != Some(meta_key) {
+            crate::info!(
+                "schedule journal {}: different search parameters; starting fresh",
+                self.path.display()
+            );
+            return Ok(false);
+        }
+        let what = format!("schedule journal {}", self.path.display());
+        let bad = |field: &str| anyhow!("{what}: missing or malformed `{field}`");
+
+        let order = json.get("order").and_then(Json::as_arr).ok_or_else(|| bad("order"))?;
+        self.order = order
+            .iter()
+            .map(|row| {
+                let r = row.as_arr().filter(|r| r.len() == 3).ok_or_else(|| bad("order row"))?;
+                Ok((
+                    r[0].as_usize().ok_or_else(|| bad("order conv_idx"))?,
+                    r[1].as_f64().ok_or_else(|| bad("order energy"))?,
+                    r[2].as_f64().ok_or_else(|| bad("order share"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let trials = json.get("trials").and_then(Json::as_arr).ok_or_else(|| bad("trials"))?;
+        self.trials = trials
+            .iter()
+            .map(|t| {
+                let codes = t
+                    .get("wset")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad("trial wset"))?
+                    .iter()
+                    .map(|c| c.as_f64().map(|v| v as i32).ok_or_else(|| bad("trial wset code")))
+                    .collect::<Result<Vec<i32>>>()?;
+                Ok(TrialRecord {
+                    order_pos: t.get("order_pos").and_then(Json::as_usize).ok_or_else(|| bad("trial order_pos"))?,
+                    conv_idx: t.get("conv_idx").and_then(Json::as_usize).ok_or_else(|| bad("trial conv_idx"))?,
+                    cand_idx: t.get("cand_idx").and_then(Json::as_usize).ok_or_else(|| bad("trial cand_idx"))?,
+                    prune_ratio: t.get("prune_ratio").and_then(Json::as_f64).ok_or_else(|| bad("trial prune_ratio"))?,
+                    k_target: t.get("k_target").and_then(Json::as_usize).ok_or_else(|| bad("trial k_target"))?,
+                    accepted: t.get("accepted").and_then(Json::as_bool).ok_or_else(|| bad("trial accepted"))?,
+                    accuracy: t.get("accuracy").and_then(Json::as_f64).ok_or_else(|| bad("trial accuracy"))?,
+                    wset: codes,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let outcomes =
+            json.get("outcomes").and_then(Json::as_arr).ok_or_else(|| bad("outcomes"))?;
+        self.outcomes = outcomes
+            .iter()
+            .map(|oc| {
+                let accepted = match oc.get("accepted") {
+                    Some(Json::Null) | None => None,
+                    Some(c) => Some(super::Config {
+                        prune_ratio: c.get("prune_ratio").and_then(Json::as_f64).ok_or_else(|| bad("outcome prune_ratio"))?,
+                        k_target: c.get("k_target").and_then(Json::as_usize).ok_or_else(|| bad("outcome k_target"))?,
+                    }),
+                };
+                Ok(LayerOutcome {
+                    conv_idx: oc.get("conv_idx").and_then(Json::as_usize).ok_or_else(|| bad("outcome conv_idx"))?,
+                    share: oc.get("share").and_then(Json::as_f64).ok_or_else(|| bad("outcome share"))?,
+                    accepted,
+                    energy_before: oc.get("energy_before").and_then(Json::as_f64).ok_or_else(|| bad("outcome energy_before"))?,
+                    energy_after: oc.get("energy_after").and_then(Json::as_f64).ok_or_else(|| bad("outcome energy_after"))?,
+                    accuracy_after: oc.get("accuracy_after").and_then(Json::as_f64).ok_or_else(|| bad("outcome accuracy_after"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(true)
+    }
+
+    /// Atomically rewrite the journal file.
+    pub(crate) fn save(&self) -> Result<()> {
+        artifact::write_json_atomic(&self.path, &self.to_json())
+            .with_context(|| format!("writing schedule journal {}", self.path.display()))
+    }
+
+    /// The search completed: the journal is no longer needed.
+    pub(crate) fn finish(&self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+
+    fn to_json(&self) -> Json {
+        let order = Json::arr(self.order.iter().map(|&(ci, e, s)| {
+            Json::arr(vec![Json::num(ci as f64), Json::num(e), Json::num(s)])
+        }));
+        let trials = Json::arr(self.trials.iter().map(|t| {
+            Json::obj(vec![
+                ("order_pos", Json::num(t.order_pos as f64)),
+                ("conv_idx", Json::num(t.conv_idx as f64)),
+                ("cand_idx", Json::num(t.cand_idx as f64)),
+                ("prune_ratio", Json::num(t.prune_ratio)),
+                ("k_target", Json::num(t.k_target as f64)),
+                ("accepted", Json::Bool(t.accepted)),
+                ("accuracy", Json::num(t.accuracy)),
+                ("wset", Json::arr(t.wset.iter().map(|&c| Json::num(c as f64)))),
+            ])
+        }));
+        let outcomes = Json::arr(self.outcomes.iter().map(|oc| {
+            Json::obj(vec![
+                ("conv_idx", Json::num(oc.conv_idx as f64)),
+                ("share", Json::num(oc.share)),
+                (
+                    "accepted",
+                    match oc.accepted {
+                        Some(c) => Json::obj(vec![
+                            ("prune_ratio", Json::num(c.prune_ratio)),
+                            ("k_target", Json::num(c.k_target as f64)),
+                        ]),
+                        None => Json::Null,
+                    },
+                ),
+                ("energy_before", Json::num(oc.energy_before)),
+                ("energy_after", Json::num(oc.energy_after)),
+                ("accuracy_after", Json::num(oc.accuracy_after)),
+            ])
+        }));
+        Json::obj(vec![
+            ("meta", Json::str(&self.meta_key)),
+            ("order", order),
+            ("trials", trials),
+            ("outcomes", outcomes),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("wsel_journal_{tag}_{}.json", std::process::id()))
+    }
+
+    fn sample() -> SearchJournal {
+        let mut j = SearchJournal::new(tmp("roundtrip"), "t");
+        j.start("key1", vec![(0, 2.0e-9, 0.6), (2, 1.0e-9, 0.4)]);
+        j.trials.push(TrialRecord {
+            order_pos: 0,
+            conv_idx: 0,
+            cand_idx: 1,
+            prune_ratio: 0.5,
+            k_target: 24,
+            accepted: true,
+            accuracy: 0.94321,
+            wset: vec![-96, -32, 0, 32, 96],
+        });
+        j.outcomes.push(LayerOutcome {
+            conv_idx: 0,
+            share: 0.6,
+            accepted: Some(super::super::Config {
+                prune_ratio: 0.5,
+                k_target: 24,
+            }),
+            energy_before: 2.0e-9,
+            energy_after: 1.5e-9,
+            accuracy_after: 0.94321,
+        });
+        j
+    }
+
+    #[test]
+    fn roundtrips_exactly() {
+        let j = sample();
+        j.save().unwrap();
+        let mut k = SearchJournal::new(j.path().to_path_buf(), "t");
+        assert!(k.try_load("key1").unwrap());
+        assert_eq!(k.order, j.order);
+        assert_eq!(k.trials.len(), 1);
+        let (a, b) = (&k.trials[0], &j.trials[0]);
+        assert_eq!((a.order_pos, a.conv_idx, a.cand_idx), (0, 0, 1));
+        assert_eq!(a.wset, b.wset);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(k.outcomes.len(), 1);
+        assert_eq!(
+            k.outcomes[0].energy_after.to_bits(),
+            j.outcomes[0].energy_after.to_bits()
+        );
+        j.finish();
+        assert!(!j.path().exists());
+    }
+
+    #[test]
+    fn meta_mismatch_starts_fresh() {
+        let j = sample();
+        let path = tmp("meta");
+        let mut j2 = SearchJournal::new(path.clone(), "t");
+        j2.start("key1", j.order.clone());
+        j2.save().unwrap();
+        let mut k = SearchJournal::new(path.clone(), "t");
+        assert!(!k.try_load("other-key").unwrap());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_journal_is_rejected_with_path() {
+        let j = sample();
+        let path = tmp("corrupt");
+        let mut j2 = SearchJournal::new(path.clone(), "t");
+        j2.start("key1", j.order.clone());
+        j2.trials = j.trials.clone();
+        j2.save().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut k = SearchJournal::new(path.clone(), "t");
+        let err = format!("{:?}", k.try_load("key1").unwrap_err());
+        assert!(err.contains("checksum mismatch") || err.contains("parse"), "{err}");
+        assert!(err.contains(&path.display().to_string()), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

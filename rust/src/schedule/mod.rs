@@ -15,7 +15,11 @@ use crate::selection::{
     LayerConfig,
 };
 use crate::util::threadpool::parallel_map;
+use anyhow::{anyhow, Result};
 use std::sync::Arc;
+
+pub mod journal;
+pub use journal::{SearchJournal, TrialRecord};
 
 /// A candidate per-layer configuration of the §4.3 sweep.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -200,22 +204,170 @@ pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
     n_conv: usize,
     sp: &ScheduleParams,
 ) -> ScheduleResult {
+    run_schedule(host, n_conv, sp, None)
+        .expect("journal-free schedule search is infallible")
+        .expect("journal-free schedule search has no trial budget")
+}
+
+/// [`energy_prioritized`] with a persistent per-candidate journal:
+/// every trial is recorded (atomically, under a checksummed header)
+/// before the next begins, so a search killed mid-way resumes from the
+/// exact candidate it died on instead of repaying every fine-tune step
+/// before it.  Returns `Ok(None)` when the journal's per-invocation
+/// trial budget is exhausted — call again with a journal at the same
+/// path to continue.
+///
+/// With fine-tuning enabled the oracle's state is snapshotted (via
+/// [`AccuracyOracle::save_search_state`]) after each trial; the journal
+/// and the snapshot are written in sequence, so a kill landing between
+/// the two writes costs the resumed run at most one trial's fine-tune
+/// drift — every completed write boundary resumes exactly.
+pub fn energy_prioritized_resumable<H: LayerModeler + AccuracyOracle>(
+    host: &mut H,
+    n_conv: usize,
+    sp: &ScheduleParams,
+    journal: &mut SearchJournal,
+) -> Result<Option<ScheduleResult>> {
+    run_schedule(host, n_conv, sp, Some(journal))
+}
+
+fn run_schedule<H: LayerModeler + AccuracyOracle>(
+    host: &mut H,
+    n_conv: usize,
+    sp: &ScheduleParams,
+    mut journal: Option<&mut SearchJournal>,
+) -> Result<Option<ScheduleResult>> {
+    // Key identifying the search parameters — a journal written under
+    // different parameters must not be resumed.
+    let meta_key = format!(
+        "v1;n_conv={n_conv};ratios={:?};ks={:?};ft={};delta={};acc0={};maxl={:?};min_share={}",
+        sp.prune_ratios,
+        sp.k_targets,
+        sp.fine_tune_steps,
+        sp.delta,
+        sp.acc0,
+        sp.max_layers,
+        sp.min_share
+    );
     let mut state = CompressionState::dense(n_conv);
-    let base = host.network_energy(&state);
-    let shares = base.shares();
-    let mut order = base.descending();
-    if let Some(maxl) = sp.max_layers {
-        order.truncate(maxl);
+    let mut outcomes: Vec<LayerOutcome> = Vec::new();
+    // (order position, candidate index) to resume at; None = fresh.
+    let mut resume_at: Option<(usize, usize)> = None;
+    // Frozen processing order: (conv_idx, energy_before, share).
+    let mut order_rows: Vec<(usize, f64, f64)> = Vec::new();
+
+    if let Some(j) = journal.as_deref_mut() {
+        if j.try_load(&meta_key)? {
+            // With fine-tuning, the journal's accuracy numbers are only
+            // meaningful if the oracle restores the fine-tuned state
+            // that produced them.
+            let oracle_ok = sp.fine_tune_steps == 0 || host.load_search_state(&j.tag);
+            if oracle_ok {
+                order_rows = j.order.clone();
+                outcomes = j.outcomes.clone();
+                for t in &j.trials {
+                    if t.accepted {
+                        state.layers[t.conv_idx] = LayerConfig {
+                            prune_ratio: t.prune_ratio,
+                            wset: Some(WeightSet::new(t.wset.clone())),
+                        };
+                    }
+                }
+                let n_cands = sp.prune_ratios.len() * sp.k_targets.len();
+                if let Some(t) = j.trials.last() {
+                    let layer_done = t.accepted || t.cand_idx + 1 >= n_cands;
+                    if layer_done && !outcomes.iter().any(|oc| oc.conv_idx == t.conv_idx) {
+                        // Kill landed between the trial write and the
+                        // outcome write: reconstruct the row from the
+                        // recorded trial + rebuilt state.
+                        let (_, e_before, share) =
+                            *order_rows.get(t.order_pos).ok_or_else(|| {
+                                anyhow!(
+                                    "schedule journal {}: trial references order position {} out of range",
+                                    j.path().display(),
+                                    t.order_pos
+                                )
+                            })?;
+                        let after = host.network_energy(&state);
+                        let e_after = after
+                            .layers
+                            .iter()
+                            .find(|(i, _)| *i == t.conv_idx)
+                            .map(|(_, e)| *e)
+                            .unwrap_or(e_before);
+                        outcomes.push(LayerOutcome {
+                            conv_idx: t.conv_idx,
+                            share,
+                            accepted: t.accepted.then(|| Config {
+                                prune_ratio: t.prune_ratio,
+                                k_target: t.k_target,
+                            }),
+                            energy_before: e_before,
+                            energy_after: e_after,
+                            accuracy_after: if t.accepted { t.accuracy } else { 0.0 },
+                        });
+                        j.outcomes = outcomes.clone();
+                        j.save()?;
+                    }
+                }
+                resume_at = Some(match j.trials.last() {
+                    Some(t) if t.accepted || t.cand_idx + 1 >= n_cands => (t.order_pos + 1, 0),
+                    Some(t) => (t.order_pos, t.cand_idx + 1),
+                    None => (0, 0),
+                });
+                let (p, c) = resume_at.unwrap();
+                crate::info!(
+                    "schedule: resuming journal {} at layer position {p}, candidate {c} ({} recorded trials)",
+                    j.path().display(),
+                    j.trials.len()
+                );
+            } else {
+                crate::info!(
+                    "schedule journal {}: no oracle snapshot for tag `{}`; restarting search",
+                    j.path().display(),
+                    j.tag
+                );
+            }
+        }
     }
 
-    let mut outcomes = Vec::new();
-    for (conv_idx, e_before) in order {
-        let share = shares
-            .iter()
-            .find(|(i, _)| *i == conv_idx)
-            .map(|(_, s)| *s)
-            .unwrap_or(0.0);
-        if share < sp.min_share {
+    if resume_at.is_none() {
+        // Fresh start: derive and FREEZE the processing order.  Params
+        // drift during fine-tuning, so re-deriving the order on resume
+        // could disagree with the interrupted run.
+        let base = host.network_energy(&state);
+        let shares = base.shares();
+        let mut order = base.descending();
+        if let Some(maxl) = sp.max_layers {
+            order.truncate(maxl);
+        }
+        order_rows = order
+            .into_iter()
+            .map(|(conv_idx, e)| {
+                let share = shares
+                    .iter()
+                    .find(|(i, _)| *i == conv_idx)
+                    .map(|(_, s)| *s)
+                    .unwrap_or(0.0);
+                (conv_idx, e, share)
+            })
+            .collect();
+        if let Some(j) = journal.as_deref_mut() {
+            j.start(&meta_key, order_rows.clone());
+            j.save()?;
+            if sp.fine_tune_steps > 0 && !host.save_search_state(&j.tag) {
+                crate::info!(
+                    "schedule journal: oracle cannot snapshot state; an interrupted \
+                     fine-tuning search will restart from scratch on resume"
+                );
+            }
+        }
+    }
+
+    let (start_pos, start_cand) = resume_at.unwrap_or((0, 0));
+    let mut budget = journal.as_deref().and_then(|j| j.budget);
+    for (pos, &(conv_idx, e_before, share)) in order_rows.iter().enumerate() {
+        if pos < start_pos || share < sp.min_share {
             continue;
         }
         let le = host.layer_energy(conv_idx);
@@ -244,7 +396,14 @@ pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
         let oracle_free = sp.fine_tune_steps == 0 && !sp.greedy.check_every_removal;
         let evaluator = if oracle_free { host.evaluator() } else { None };
         let mut precomputed: Vec<Option<WeightSet>> = vec![None; candidates.len()];
-        for (ci_cand, &cfg) in candidates.iter().enumerate() {
+        let first_cand = if pos == start_pos { start_cand } else { 0 };
+        for ci_cand in first_cand..candidates.len() {
+            let cfg = candidates[ci_cand];
+            if budget == Some(0) {
+                // This invocation's trial budget is exhausted; the
+                // journal already points at exactly this candidate.
+                return Ok(None);
+            }
             let mut trial = state.clone();
             trial.layers[conv_idx] = LayerConfig {
                 prune_ratio: cfg.prune_ratio,
@@ -306,14 +465,39 @@ pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
                     set
                 }
             };
+            let set_codes = journal.is_some().then(|| set.codes().to_vec());
             trial.layers[conv_idx].wset = Some(set);
             // Short fine-tune then global accuracy check (§4.3 step 3).
             host.fine_tune(&trial, sp.fine_tune_steps);
             let acc = host.accuracy(&trial);
-            if acc >= sp.acc0 - sp.delta {
+            let ok = acc >= sp.acc0 - sp.delta;
+            if ok {
                 state = trial;
                 accepted = Some(cfg);
                 acc_after = acc;
+            }
+            if let Some(j) = journal.as_deref_mut() {
+                j.trials.push(TrialRecord {
+                    order_pos: pos,
+                    conv_idx,
+                    cand_idx: ci_cand,
+                    prune_ratio: cfg.prune_ratio,
+                    k_target: cfg.k_target,
+                    accepted: ok,
+                    accuracy: acc,
+                    wset: set_codes.unwrap_or_default(),
+                });
+                j.save()?;
+                // Snapshot the oracle right after its state moved, so a
+                // resume replays this trial's effects exactly.
+                if sp.fine_tune_steps > 0 {
+                    host.save_search_state(&j.tag);
+                }
+            }
+            if let Some(b) = budget.as_mut() {
+                *b -= 1;
+            }
+            if ok {
                 break;
             }
         }
@@ -324,21 +508,29 @@ pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
             .find(|(i, _)| *i == conv_idx)
             .map(|(_, e)| *e)
             .unwrap_or(e_before);
-        outcomes.push(LayerOutcome {
+        let oc = LayerOutcome {
             conv_idx,
             share,
             accepted,
             energy_before: e_before,
             energy_after: e_after,
             accuracy_after: acc_after,
-        });
+        };
+        if let Some(j) = journal.as_deref_mut() {
+            j.outcomes.push(oc.clone());
+            j.save()?;
+        }
+        outcomes.push(oc);
     }
     let final_accuracy = host.accuracy(&state);
-    ScheduleResult {
+    if let Some(j) = journal.as_deref_mut() {
+        j.finish();
+    }
+    Ok(Some(ScheduleResult {
         state,
         outcomes,
         final_accuracy,
-    }
+    }))
 }
 
 /// Table 3 baseline: one (ratio, K) configuration applied uniformly to
@@ -422,9 +614,20 @@ mod tests {
 
     /// Combined host: 3 layers with energy shares ~60/30/10 %, and an
     /// accuracy response that drops with aggressiveness but recovers a
-    /// little with fine-tuning.
+    /// little with fine-tuning.  `snapshot` stands in for the on-disk
+    /// oracle state the coordinator persists for resumable searches.
     struct FakeHost {
         tuned: f64,
+        snapshot: Option<f64>,
+    }
+
+    impl FakeHost {
+        fn new() -> Self {
+            FakeHost {
+                tuned: 0.0,
+                snapshot: None,
+            }
+        }
     }
 
     impl LayerModeler for FakeHost {
@@ -479,11 +682,24 @@ mod tests {
         fn fine_tune(&mut self, _: &CompressionState, steps: usize) {
             self.tuned = (self.tuned + 1e-4 * steps as f64).min(0.01);
         }
+        fn save_search_state(&mut self, _tag: &str) -> bool {
+            self.snapshot = Some(self.tuned);
+            true
+        }
+        fn load_search_state(&mut self, _tag: &str) -> bool {
+            match self.snapshot {
+                Some(t) => {
+                    self.tuned = t;
+                    true
+                }
+                None => false,
+            }
+        }
     }
 
     #[test]
     fn processes_high_energy_layers_first_and_compresses() {
-        let mut host = FakeHost { tuned: 0.0 };
+        let mut host = FakeHost::new();
         let sp = ScheduleParams {
             acc0: 0.95,
             delta: 0.05,
@@ -502,7 +718,7 @@ mod tests {
 
     #[test]
     fn tight_budget_yields_conservative_configs() {
-        let mut host = FakeHost { tuned: 0.0 };
+        let mut host = FakeHost::new();
         let sp = ScheduleParams {
             acc0: 0.96,
             delta: 0.012, // very tight
@@ -518,8 +734,45 @@ mod tests {
     }
 
     #[test]
+    fn journaled_search_resumes_where_it_died() {
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.05,
+            fine_tune_steps: 10,
+            ..Default::default()
+        };
+        // Uninterrupted reference run.
+        let mut ref_host = FakeHost::new();
+        let want = energy_prioritized(&mut ref_host, 3, &sp);
+
+        let path = std::env::temp_dir()
+            .join(format!("wsel_sched_journal_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // Same search with a 2-trial budget: the third layer's trial
+        // never runs — the "kill" model of a mid-search death.
+        let mut h1 = FakeHost::new();
+        let mut j1 = SearchJournal::new(path.clone(), "t").with_budget(2);
+        let out = energy_prioritized_resumable(&mut h1, 3, &sp, &mut j1).unwrap();
+        assert!(out.is_none(), "2-trial budget must exhaust before completion");
+        assert!(path.exists(), "journal survives the aborted invocation");
+
+        // "Process death": fresh host; only the journal file and the
+        // (simulated on-disk) oracle snapshot survive.
+        let mut h2 = FakeHost {
+            tuned: 0.0,
+            snapshot: h1.snapshot,
+        };
+        let mut j2 = SearchJournal::new(path.clone(), "t");
+        let got = energy_prioritized_resumable(&mut h2, 3, &sp, &mut j2)
+            .unwrap()
+            .expect("resumed search runs to completion");
+        assert_eq!(got.to_json().to_string(), want.to_json().to_string());
+        assert!(!path.exists(), "journal is deleted on completion");
+    }
+
+    #[test]
     fn global_uniform_applies_same_config() {
-        let mut host = FakeHost { tuned: 0.0 };
+        let mut host = FakeHost::new();
         let res = global_uniform(
             &mut host,
             3,

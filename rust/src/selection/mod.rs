@@ -51,4 +51,18 @@ pub trait AccuracyOracle {
     fn eval_count(&self) -> usize {
         0
     }
+
+    /// Persist the oracle's mutable state (fine-tuned params) under
+    /// `tag`, for resumable schedule searches.  Returns `false` when the
+    /// oracle cannot snapshot (the default) — the search then restarts
+    /// from scratch after an interruption instead of resuming.
+    fn save_search_state(&mut self, _tag: &str) -> bool {
+        false
+    }
+
+    /// Restore state saved by [`Self::save_search_state`].  Returns
+    /// `false` when no snapshot exists under `tag`.
+    fn load_search_state(&mut self, _tag: &str) -> bool {
+        false
+    }
 }

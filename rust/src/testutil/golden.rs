@@ -15,7 +15,14 @@
 //! A missing golden file fails the check (that is the harness's whole
 //! point: numbers cannot drift — or appear — silently); the failure
 //! message says how to bless.
+//!
+//! Snapshots are written through [`crate::util::artifact`] (atomic
+//! rename + checksummed header), so a kill mid-bless cannot leave a
+//! half-written golden, and bit-rot in a blessed file is detected at
+//! read time with a pinpointed error.  Goldens committed before the
+//! artifact layer existed are headerless and load as legacy payloads.
 
+use crate::util::artifact;
 use crate::util::json::Json;
 use std::path::PathBuf;
 
@@ -54,8 +61,7 @@ pub fn check_or_init(name: &str, actual: &Json) {
 pub fn check_or_init_with_rtol(name: &str, actual: &Json, rtol: f64) {
     let path = golden_dir().join(format!("{name}.json"));
     if !blessing() && !path.exists() {
-        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
-        std::fs::write(&path, format!("{actual}\n")).expect("write golden");
+        artifact::write_json_atomic(&path, actual).expect("write golden");
         eprintln!(
             "BOOTSTRAPPED golden {} (first run in this environment); \
              subsequent runs will pin against it",
@@ -70,16 +76,23 @@ pub fn check_or_init_with_rtol(name: &str, actual: &Json, rtol: f64) {
 pub fn check_with_rtol(name: &str, actual: &Json, rtol: f64) {
     let path = golden_dir().join(format!("{name}.json"));
     if blessing() {
-        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
-        std::fs::write(&path, format!("{actual}\n")).expect("write golden");
+        artifact::write_json_atomic(&path, actual).expect("write golden");
         eprintln!("BLESSED {}", path.display());
         return;
     }
-    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+    if !path.exists() {
         panic!(
-            "golden snapshot {} missing ({e}); run with WSEL_BLESS=1 to create it",
+            "golden snapshot {} missing; run with WSEL_BLESS=1 to create it",
             path.display()
-        )
+        );
+    }
+    // artifact::load verifies the checksummed header on blessed files
+    // (corruption fails here with path + reason) and passes committed
+    // pre-artifact goldens through as legacy payloads.
+    let payload = artifact::load(&path)
+        .unwrap_or_else(|e| panic!("golden snapshot rejected: {e:?}"));
+    let text = String::from_utf8(payload).unwrap_or_else(|_| {
+        panic!("golden snapshot {} is not UTF-8", path.display())
     });
     let want = Json::parse(text.trim()).unwrap_or_else(|e| {
         panic!("golden snapshot {} unparsable: {e}", path.display())

@@ -1,0 +1,225 @@
+//! Checksummed, atomically-written on-disk artifacts.
+//!
+//! Every file this crate persists (golden snapshots, params/checkpoint
+//! blobs, `BENCH_*.json` emissions, schedule journals) goes through this
+//! module: writes land in a temp file and `rename` into place so a kill
+//! mid-write can never leave a half-written artifact under the final
+//! name, and every payload is prefixed with a one-line versioned header
+//! carrying its CRC-32 and length so truncation and bit-rot are detected
+//! at load with a pinpointed error (path + reason) instead of being
+//! silently parsed into garbage.
+//!
+//! Format: an ASCII header line `WSELART1 crc32=xxxxxxxx len=N\n`
+//! followed by exactly `N` raw payload bytes (binary-safe — the payload
+//! is never inspected).  Files that do not start with the magic are
+//! **legacy artifacts** (committed goldens predating this module,
+//! `params.bin` written by the Python side): they load as-is, with no
+//! integrity claim, so adoption is incremental and cross-tool files keep
+//! working.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Version-carrying magic; bump the trailing digit on format changes.
+pub const MAGIC: &str = "WSELART1";
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) lookup table, built
+/// at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+};
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_owned();
+    s.push(format!(".tmp.{}", std::process::id()));
+    PathBuf::from(s)
+}
+
+/// Atomically write `payload` to `path` under a checksummed header:
+/// the bytes land in a same-directory temp file first and are renamed
+/// into place, so readers only ever observe the old artifact or the
+/// complete new one.  Parent directories are created as needed.
+pub fn write_atomic(path: &Path, payload: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let header = format!("{MAGIC} crc32={:08x} len={}\n", crc32(payload), payload.len());
+    let mut bytes = Vec::with_capacity(header.len() + payload.len());
+    bytes.extend_from_slice(header.as_bytes());
+    bytes.extend_from_slice(payload);
+    let tmp = tmp_sibling(path);
+    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Load an artifact, verifying header, length, and checksum; returns the
+/// raw payload.  Headerless files pass through whole as legacy payloads.
+/// Every failure names the path and the precise reason — a corrupt file
+/// is never silently consumed.
+pub fn load(path: &Path) -> Result<Vec<u8>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading artifact {}", path.display()))?;
+    if !bytes.starts_with(MAGIC.as_bytes()) {
+        // Legacy artifact written before the versioned header existed
+        // (or by the Python side): nothing to verify against.
+        return Ok(bytes);
+    }
+    let nl = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| anyhow!("{}: artifact header line is unterminated", path.display()))?;
+    let header = std::str::from_utf8(&bytes[..nl])
+        .map_err(|_| anyhow!("{}: artifact header is not UTF-8", path.display()))?;
+    let mut stored_crc: Option<u32> = None;
+    let mut stored_len: Option<usize> = None;
+    for tok in header.split_whitespace().skip(1) {
+        if let Some(v) = tok.strip_prefix("crc32=") {
+            stored_crc = u32::from_str_radix(v, 16).ok();
+        } else if let Some(v) = tok.strip_prefix("len=") {
+            stored_len = v.parse::<usize>().ok();
+        }
+    }
+    let (stored_crc, stored_len) = match (stored_crc, stored_len) {
+        (Some(c), Some(l)) => (c, l),
+        _ => bail!("{}: malformed artifact header `{header}`", path.display()),
+    };
+    let payload = &bytes[nl + 1..];
+    if payload.len() != stored_len {
+        bail!(
+            "{}: truncated artifact: header declares {stored_len} payload bytes, file has {}",
+            path.display(),
+            payload.len()
+        );
+    }
+    let crc = crc32(payload);
+    if crc != stored_crc {
+        bail!(
+            "{}: artifact checksum mismatch (stored {stored_crc:08x}, computed {crc:08x}) — \
+             file is corrupt",
+            path.display()
+        );
+    }
+    Ok(payload.to_vec())
+}
+
+/// [`write_atomic`] for a JSON value (newline-terminated text payload).
+pub fn write_json_atomic(path: &Path, json: &crate::util::json::Json) -> Result<()> {
+    write_atomic(path, format!("{json}\n").as_bytes())
+}
+
+/// [`load`] + parse the payload as JSON.
+pub fn load_json(path: &Path) -> Result<crate::util::json::Json> {
+    let payload = load(path)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|_| anyhow!("{}: artifact payload is not UTF-8", path.display()))?;
+    crate::util::json::Json::parse(text.trim())
+        .map_err(|e| anyhow!("{}: artifact JSON does not parse: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("wsel_artifact_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrips_binary_payloads() {
+        let path = tmp("roundtrip");
+        // Payload containing newlines, 0x00 and 0xFF: header parsing must
+        // split only on the first newline.
+        let payload = vec![0u8, 10, 255, 87, 10, 10, 0, 1];
+        write_atomic(&path, &payload).unwrap();
+        assert_eq!(load(&path).unwrap(), payload);
+        // Overwrite is atomic and replaces the old content entirely.
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(load(&path).unwrap(), b"second");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn legacy_headerless_files_pass_through() {
+        let path = tmp("legacy");
+        std::fs::write(&path, b"{\"plain\": 1}\n").unwrap();
+        assert_eq!(load(&path).unwrap(), b"{\"plain\": 1}\n");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncation_is_detected_with_path_and_reason() {
+        let path = tmp("trunc");
+        write_atomic(&path, b"0123456789abcdef").unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let err = format!("{}", load(&path).unwrap_err());
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        assert!(err.contains(&path.display().to_string()), "error lacks path: {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_is_detected_with_path_and_reason() {
+        let path = tmp("flip");
+        write_atomic(&path, b"0123456789abcdef").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{}", load(&path).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+        assert!(err.contains(&path.display().to_string()), "error lacks path: {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        use crate::util::json::Json;
+        let path = tmp("json");
+        let v = Json::obj(vec![("a", Json::num(1.5)), ("b", Json::str("x"))]);
+        write_json_atomic(&path, &v).unwrap();
+        let back = load_json(&path).unwrap();
+        assert_eq!(format!("{back}"), format!("{v}"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_error_names_the_path() {
+        let path = tmp("missing_never_written");
+        let err = format!("{:?}", load(&path).unwrap_err());
+        assert!(err.contains("missing_never_written"), "error lacks path: {err}");
+    }
+}

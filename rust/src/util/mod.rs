@@ -3,6 +3,7 @@
 //! unavailable in the offline build image, so minimal production-quality
 //! equivalents live here (see DESIGN.md §2).
 
+pub mod artifact;
 pub mod cli;
 pub mod json;
 pub mod log;

@@ -4,8 +4,19 @@
 //!
 //! Work items are indices `0..n`; workers pull from a shared atomic
 //! counter, so load imbalance between items self-schedules.
+//!
+//! Panic isolation: a panic inside a work item no longer aborts the
+//! process.  Each item runs under `catch_unwind`; the batch still visits
+//! every index, and the `try_*` entry points return a [`PoisonedBatch`]
+//! naming exactly which indices panicked and why.  The infallible
+//! `parallel_map` / `parallel_for_with` wrappers keep their historical
+//! signatures and re-panic **on the caller's thread** with that same
+//! structured message, so even legacy call sites surface the poisoned
+//! indices instead of dying inside an unjoinable worker.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads: `WSEL_THREADS` env override, else the
 /// available parallelism (the CI image exposes a single core — the pool
@@ -21,41 +32,111 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// One or more work items of a parallel batch panicked.  Every
+/// non-poisoned item still ran to completion; this error reports the
+/// poisoned ones so the caller can retry, skip, or fail loudly — instead
+/// of the whole process aborting.
+#[derive(Debug)]
+pub struct PoisonedBatch {
+    /// `(item index, panic message)` pairs, ascending by index.
+    pub poisoned: Vec<(usize, String)>,
+    /// Total number of items in the batch.
+    pub n: usize,
+}
+
+impl std::fmt::Display for PoisonedBatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let idxs: Vec<String> = self.poisoned.iter().map(|(i, _)| i.to_string()).collect();
+        write!(
+            f,
+            "{} of {} parallel work item(s) panicked (poisoned indices [{}]); first: {}",
+            self.poisoned.len(),
+            self.n,
+            idxs.join(", "),
+            self.poisoned.first().map(|(_, m)| m.as_str()).unwrap_or("?")
+        )
+    }
+}
+
+impl std::error::Error for PoisonedBatch {}
+
+/// Best-effort human-readable message from a panic payload.
+fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run `f(i)` for every `i in 0..n`, distributing across `threads`
-/// workers, and collect results in index order.
-pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+/// workers, and collect results in index order.  Item panics are caught
+/// per index: the batch completes and the error lists every poisoned
+/// index with its panic message.
+pub fn try_parallel_map<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>, PoisonedBatch>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let mut poisoned: Vec<(usize, String)> = Vec::new();
     if threads <= 1 {
         for (i, slot) in out.iter_mut().enumerate() {
-            *slot = Some(f(i));
+            match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(v) => *slot = Some(v),
+                Err(e) => poisoned.push((i, panic_msg(e))),
+            }
         }
-        return out.into_iter().map(Option::unwrap).collect();
+    } else {
+        let next = AtomicUsize::new(0);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let poison_sink: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let next = &next;
+                let f = &f;
+                let out_ptr = &out_ptr;
+                let poison_sink = &poison_sink;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                        // SAFETY: each index is claimed by exactly one
+                        // worker via the atomic counter, so writes never
+                        // alias.
+                        Ok(v) => unsafe { *out_ptr.0.add(i) = Some(v) },
+                        Err(e) => poison_sink.lock().unwrap().push((i, panic_msg(e))),
+                    }
+                });
+            }
+        });
+        poisoned = poison_sink.into_inner().unwrap();
+        poisoned.sort_by_key(|&(i, _)| i);
     }
-    let next = AtomicUsize::new(0);
-    let out_ptr = SendPtr(out.as_mut_ptr());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let next = &next;
-            let f = &f;
-            let out_ptr = &out_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                // SAFETY: each index is claimed by exactly one worker via
-                // the atomic counter, so writes never alias.
-                unsafe { *out_ptr.0.add(i) = Some(v) };
-            });
-        }
-    });
-    out.into_iter().map(Option::unwrap).collect()
+    if poisoned.is_empty() {
+        Ok(out.into_iter().map(Option::unwrap).collect())
+    } else {
+        Err(PoisonedBatch { poisoned, n })
+    }
+}
+
+/// Infallible wrapper around [`try_parallel_map`]: keeps the historical
+/// signature; a poisoned batch re-panics on the caller's thread with the
+/// structured message naming the poisoned indices.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match try_parallel_map(n, threads, f) {
+        Ok(v) => v,
+        Err(e) => panic!("parallel_map: {e}"),
+    }
 }
 
 /// Run `f(&mut state, i)` for every `i in 0..n` with **worker-local
@@ -65,7 +146,16 @@ where
 /// e.g. integer adds).  This is the fork-join shape of the exact
 /// tile-power engine: per-thread simulation scratch accumulates toggle
 /// counts across work items and is folded once at the end.
-pub fn parallel_for_with<S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<S>
+///
+/// Item panics are caught per index; on any poison the worker states are
+/// discarded (a panicking item may have left its state half-updated) and
+/// the error lists the poisoned indices.
+pub fn try_parallel_for_with<S, I, F>(
+    n: usize,
+    threads: usize,
+    init: I,
+    f: F,
+) -> Result<Vec<S>, PoisonedBatch>
 where
     S: Send,
     I: Fn() -> S + Sync,
@@ -74,18 +164,27 @@ where
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 {
         let mut state = init();
+        let mut poisoned: Vec<(usize, String)> = Vec::new();
         for i in 0..n {
-            f(&mut state, i);
+            if let Err(e) = catch_unwind(AssertUnwindSafe(|| f(&mut state, i))) {
+                poisoned.push((i, panic_msg(e)));
+            }
         }
-        return vec![state];
+        return if poisoned.is_empty() {
+            Ok(vec![state])
+        } else {
+            Err(PoisonedBatch { poisoned, n })
+        };
     }
     let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
+    let poison_sink: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+    let states = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 let next = &next;
                 let init = &init;
                 let f = &f;
+                let poison_sink = &poison_sink;
                 scope.spawn(move || {
                     let mut state = init();
                     loop {
@@ -93,7 +192,9 @@ where
                         if i >= n {
                             break;
                         }
-                        f(&mut state, i);
+                        if let Err(e) = catch_unwind(AssertUnwindSafe(|| f(&mut state, i))) {
+                            poison_sink.lock().unwrap().push((i, panic_msg(e)));
+                        }
                     }
                     state
                 })
@@ -101,14 +202,38 @@ where
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
-    })
+            // Workers catch item panics themselves, so a join failure can
+            // only come from harness-level bugs.
+            .map(|h| h.join().expect("worker thread died outside an item"))
+            .collect::<Vec<S>>()
+    });
+    let mut poisoned = poison_sink.into_inner().unwrap();
+    if poisoned.is_empty() {
+        Ok(states)
+    } else {
+        poisoned.sort_by_key(|&(i, _)| i);
+        Err(PoisonedBatch { poisoned, n })
+    }
+}
+
+/// Infallible wrapper around [`try_parallel_for_with`]: keeps the
+/// historical signature; a poisoned batch re-panics on the caller's
+/// thread with the structured message naming the poisoned indices.
+pub fn parallel_for_with<S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<S>
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    match try_parallel_for_with(n, threads, init, f) {
+        Ok(v) => v,
+        Err(e) => panic!("parallel_for_with: {e}"),
+    }
 }
 
 struct SendPtr<T>(*mut T);
 // SAFETY: raw pointer shared across scoped threads; disjoint writes only
-// (see parallel_map).
+// (see try_parallel_map).
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 
@@ -156,5 +281,76 @@ mod tests {
     fn for_with_empty() {
         let states = parallel_for_with(0, 4, || 1u32, |_s, _i| {});
         assert_eq!(states, vec![1]);
+    }
+
+    #[test]
+    fn map_poison_reports_every_index_and_batch_completes() {
+        let err = try_parallel_map(10, 4, |i| {
+            if i == 3 || i == 7 {
+                panic!("boom at {i}");
+            }
+            i * 2
+        })
+        .unwrap_err();
+        let idxs: Vec<usize> = err.poisoned.iter().map(|&(i, _)| i).collect();
+        assert_eq!(idxs, vec![3, 7]);
+        assert_eq!(err.n, 10);
+        assert!(err.poisoned[0].1.contains("boom at 3"), "{:?}", err.poisoned);
+        let msg = format!("{err}");
+        assert!(msg.contains("poisoned indices [3, 7]"), "{msg}");
+    }
+
+    #[test]
+    fn map_poison_serial_path() {
+        let err = try_parallel_map(4, 1, |i| {
+            if i == 1 {
+                panic!("serial boom");
+            }
+            i
+        })
+        .unwrap_err();
+        assert_eq!(err.poisoned.len(), 1);
+        assert_eq!(err.poisoned[0].0, 1);
+    }
+
+    #[test]
+    fn for_with_poison_reports_indices() {
+        let err = try_parallel_for_with(
+            8,
+            3,
+            || 0u64,
+            |s, i| {
+                if i == 5 {
+                    panic!("item 5 bad");
+                }
+                *s += 1;
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.poisoned.len(), 1);
+        assert_eq!(err.poisoned[0].0, 5);
+        assert!(err.poisoned[0].1.contains("item 5 bad"));
+    }
+
+    #[test]
+    fn infallible_wrapper_repanics_with_structured_message() {
+        let caught = catch_unwind(|| {
+            parallel_map(6, 2, |i| {
+                if i == 2 {
+                    panic!("wrapped");
+                }
+                i
+            })
+        })
+        .unwrap_err();
+        let msg = panic_msg(caught);
+        assert!(msg.contains("poisoned indices [2]"), "{msg}");
+    }
+
+    #[test]
+    fn ok_batches_unaffected_by_catching() {
+        assert_eq!(try_parallel_map(5, 2, |i| i + 1).unwrap(), vec![1, 2, 3, 4, 5]);
+        let states = try_parallel_for_with(20, 4, || 0u32, |s, _| *s += 1).unwrap();
+        assert_eq!(states.iter().sum::<u32>(), 20);
     }
 }

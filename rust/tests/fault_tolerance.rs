@@ -1,0 +1,345 @@
+//! Fault-tolerance integration tests — fully offline, native backend:
+//!
+//! * kill-and-resume bit-identity: a run hard-killed at an arbitrary
+//!   step and resumed by a fresh process is bit-identical (final
+//!   params, eval accuracy) to an uninterrupted run, at 1/2/5 threads,
+//! * checkpointing itself perturbs nothing: a checkpointed
+//!   uninterrupted run matches the plain `train_steps` path bit for bit,
+//! * divergence rollback: a scripted backend that goes NaN recovers via
+//!   rollback + lr backoff under `ResumeOpts`, and still hard-errors on
+//!   the historical plain path,
+//! * corrupted checkpoints (bit flip, truncation) are rejected with an
+//!   error naming the file and the reason — never silently adopted,
+//! * worker panics surface as a structured `PoisonedBatch` error naming
+//!   the poisoned indices instead of aborting the process.
+
+use std::path::PathBuf;
+use wsel::data::Split;
+use wsel::model::{ModelSpec, Params};
+use wsel::runtime::{Backend, LrSchedule, ModelRuntime, ResumeOpts, RtCtx};
+use wsel::selection::CompressionState;
+use wsel::util::threadpool::{parallel_map, try_parallel_map};
+
+/// Miniature offline spec (same shape family as the native-backend
+/// tests): conv → pool → residual conv → gap → fc, tiny batches.
+const FT_TINY: &str = r#"{
+  "model": "fttiny", "n_classes": 4, "input": [32, 32, 3],
+  "ops": [
+    {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+     "q_idx": 0, "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 32, "win": 32, "hout": 32, "wout": 32},
+    {"op": "maxpool2"},
+    {"op": "save"},
+    {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+     "q_idx": 1, "cin": 4, "cout": 4, "k": 3, "stride": 1, "pad": 1,
+     "relu": false, "hin": 16, "win": 16, "hout": 16, "wout": 16},
+    {"op": "add_saved", "relu": true, "proj": null},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc0", "w": 4, "b": 5, "q_idx": 2,
+     "din": 4, "dout": 4, "relu": false}
+  ],
+  "params": [
+    {"name": "conv0.w", "shape": [4, 3, 3, 3], "kind": "conv_w"},
+    {"name": "conv0.b", "shape": [4], "kind": "bias"},
+    {"name": "conv1.w", "shape": [4, 4, 3, 3], "kind": "conv_w"},
+    {"name": "conv1.b", "shape": [4], "kind": "bias"},
+    {"name": "fc0.w", "shape": [4, 4], "kind": "fc_w"},
+    {"name": "fc0.b", "shape": [4], "kind": "bias"}
+  ],
+  "n_conv": 2, "n_q": 3, "kset": 32, "qmax": 127, "seed": 1,
+  "set_sentinel": 1e9, "momentum": 0.9,
+  "batches": {"train": 6, "eval": 8, "logits": 4, "calib": 4},
+  "pallas_eval": false, "entries": {}
+}"#;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::from_manifest_str(FT_TINY).expect("tiny manifest")
+}
+
+/// A fresh (wiped) scratch dir for one test scenario.  Unlike the
+/// per-runtime helper in `native_backend.rs`, the dir is wiped ONCE per
+/// scenario so a second runtime built on it sees the first one's
+/// checkpoints — the "new process after a kill" model.
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("wsel_ft_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A runtime in `dir` with deterministic initial params — calling this
+/// twice with the same (seed, dir) models a process restart: identical
+/// fresh state, shared checkpoint directory.
+fn rt_in(dir: &PathBuf, seed: u64, threads: usize) -> ModelRuntime {
+    let spec = tiny_spec();
+    let params = Params::init_train(&spec, seed).tensors;
+    let mut rt = ModelRuntime::from_spec_native(spec, params, dir.clone());
+    rt.threads = threads;
+    rt.act_scales = vec![0.05; 3];
+    rt
+}
+
+fn bits_of(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|t| t.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+const LR: LrSchedule = LrSchedule {
+    base: 0.02,
+    decay_at: 0.75,
+};
+const STEPS: usize = 9;
+
+/// The acceptance property: kill at ANY step, resume in a fresh
+/// process, and the final params + eval accuracy are bit-identical to
+/// an uninterrupted run — at every thread count.  Also pins that
+/// checkpointing is a pure observer: the checkpointed uninterrupted run
+/// equals the plain `train_steps` path bit for bit.
+#[test]
+fn kill_and_resume_is_bit_identical() {
+    let dense = CompressionState::dense(2);
+    for threads in [1usize, 2, 5] {
+        // Plain path (no checkpointing at all).
+        let dir = fresh_dir(&format!("plain{threads}"));
+        let mut plain = rt_in(&dir, 3, threads);
+        plain.train_steps(&dense, true, LR, STEPS).expect("plain");
+        let want_bits = bits_of(&plain.params);
+        let want_acc = plain
+            .evaluate(&dense, true, Split::Val, 1)
+            .expect("plain eval");
+
+        // Checkpointed but uninterrupted.
+        let dir = fresh_dir(&format!("ckpt{threads}"));
+        let mut whole = rt_in(&dir, 3, threads);
+        let prog = whole
+            .train_steps_resumable(&dense, true, LR, STEPS, &ResumeOpts::every(2, "t"))
+            .expect("checkpointed");
+        assert!(prog.completed && !prog.resumed && prog.rollbacks == 0);
+        assert_eq!(
+            bits_of(&whole.params),
+            want_bits,
+            "checkpointing perturbed training at {threads} threads"
+        );
+        assert!(
+            !whole.checkpoint_path("t").exists(),
+            "checkpoint must be deleted on completion"
+        );
+
+        for kill_at in [1usize, 4, 7] {
+            let dir = fresh_dir(&format!("kill{threads}_{kill_at}"));
+            // Run 1: hard-killed after `kill_at` steps (no save on the
+            // way out — exactly a SIGKILL mid-run).
+            let mut victim = rt_in(&dir, 3, threads);
+            let mut opts = ResumeOpts::every(2, "t");
+            opts.max_steps_this_run = Some(kill_at);
+            let prog = victim
+                .train_steps_resumable(&dense, true, LR, STEPS, &opts)
+                .expect("victim run");
+            assert!(!prog.completed && prog.at_step == kill_at);
+
+            // Run 2: fresh process, same dir — adopts the checkpoint
+            // and recomputes the tail.
+            let mut resumed = rt_in(&dir, 3, threads);
+            let prog = resumed
+                .train_steps_resumable(&dense, true, LR, STEPS, &ResumeOpts::every(2, "t"))
+                .expect("resumed run");
+            assert!(prog.completed && prog.resumed, "kill_at={kill_at}");
+            assert_eq!(
+                bits_of(&resumed.params),
+                want_bits,
+                "params diverged after kill at {kill_at} ({threads} threads)"
+            );
+            let acc = resumed
+                .evaluate(&dense, true, Split::Val, 1)
+                .expect("resumed eval");
+            assert_eq!(
+                acc.to_bits(),
+                want_acc.to_bits(),
+                "accuracy diverged after kill at {kill_at} ({threads} threads)"
+            );
+            assert!(!resumed.checkpoint_path("t").exists());
+        }
+    }
+}
+
+/// Scripted backend: deterministic param drift, and a NaN loss the
+/// first time a late step runs at full learning rate — so a rollback
+/// with lr backoff recovers, but the plain path cannot.
+struct DivergingBackend;
+
+impl Backend for DivergingBackend {
+    fn name(&self) -> &'static str {
+        "diverging-script"
+    }
+
+    fn train_step(
+        &mut self,
+        ctx: RtCtx<'_>,
+        _state: &CompressionState,
+        _quant_on: bool,
+        step_lr: f32,
+    ) -> anyhow::Result<f32> {
+        let s = *ctx.steps_done;
+        *ctx.steps_done += 1;
+        ctx.params[0][0] += step_lr;
+        if s >= 3 && step_lr > 0.5 {
+            return Ok(f32::NAN);
+        }
+        Ok(1.0 / (s as f32 + 1.0))
+    }
+
+    fn evaluate(
+        &mut self,
+        _ctx: RtCtx<'_>,
+        _state: &CompressionState,
+        _quant_on: bool,
+        _split: Split,
+        _n_batches: usize,
+    ) -> anyhow::Result<f64> {
+        Ok(0.5)
+    }
+
+    fn logits(
+        &mut self,
+        _ctx: RtCtx<'_>,
+        _state: &CompressionState,
+        _quant_on: bool,
+        _x: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        Ok(Vec::new())
+    }
+
+    fn calibrate(&mut self, _ctx: RtCtx<'_>, _n_batches: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(Vec::new())
+    }
+}
+
+fn scripted_rt(dir: &PathBuf) -> ModelRuntime {
+    let spec = tiny_spec();
+    let params = Params::init_train(&spec, 17).tensors;
+    ModelRuntime::with_backend(spec, params, dir.clone(), Box::new(DivergingBackend))
+}
+
+#[test]
+fn divergence_rolls_back_with_lr_backoff() {
+    let dense = CompressionState::dense(2);
+    let hot = LrSchedule {
+        base: 1.0,
+        decay_at: 1.0,
+    };
+    // Plain path: the NaN at step 3 is a hard error.
+    let dir = fresh_dir("div_plain");
+    let err = scripted_rt(&dir)
+        .train_steps(&dense, true, hot, 6)
+        .expect_err("plain path must fail on divergence");
+    assert!(format!("{err}").contains("diverged"), "got: {err}");
+
+    // Resumable path: roll back to the step-2 checkpoint, retry at
+    // lr × 0.1 (≤ 0.5 → finite), and complete with one rollback.
+    let dir = fresh_dir("div_roll");
+    let mut rt = scripted_rt(&dir);
+    let mut opts = ResumeOpts::every(2, "d");
+    opts.backoff = 0.1;
+    let prog = rt
+        .train_steps_resumable(&dense, true, hot, 6, &opts)
+        .expect("rollback must recover");
+    assert!(prog.completed, "run must complete after rollback");
+    assert_eq!(prog.rollbacks, 1, "exactly one rollback expected");
+
+    // Exhausted rollbacks are still a hard error (backoff 1.0 never
+    // leaves the diverging regime).
+    let dir = fresh_dir("div_exhaust");
+    let mut rt = scripted_rt(&dir);
+    let mut opts = ResumeOpts::every(2, "d");
+    opts.backoff = 1.0;
+    opts.max_rollbacks = 2;
+    let err = rt
+        .train_steps_resumable(&dense, true, hot, 6, &opts)
+        .expect_err("non-recovering divergence must fail");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("diverged") && msg.contains("2 rollback"),
+        "got: {msg}"
+    );
+}
+
+/// Corrupted checkpoints must be rejected loudly, naming the file and
+/// the reason — adopting one silently would poison the whole run.
+#[test]
+fn corrupt_checkpoint_is_rejected_with_pinpointed_error() {
+    let dense = CompressionState::dense(2);
+    let dir = fresh_dir("corrupt");
+    let mut victim = rt_in(&dir, 3, 2);
+    let mut opts = ResumeOpts::every(1, "c");
+    opts.max_steps_this_run = Some(3);
+    victim
+        .train_steps_resumable(&dense, true, LR, STEPS, &opts)
+        .expect("victim run");
+    let path = victim.checkpoint_path("c");
+    assert!(path.exists());
+    let pristine = std::fs::read(&path).unwrap();
+
+    // Bit flip in the payload.
+    let mut bytes = pristine.clone();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = rt_in(&dir, 3, 2)
+        .train_steps_resumable(&dense, true, LR, STEPS, &ResumeOpts::every(1, "c"))
+        .expect_err("bit-flipped checkpoint must be rejected");
+    let msg = format!("{err:?}");
+    assert!(msg.contains("checksum mismatch"), "got: {msg}");
+    assert!(msg.contains("ckpt.c.bin"), "error must name the file: {msg}");
+
+    // Truncation.
+    std::fs::write(&path, &pristine[..pristine.len() - 7]).unwrap();
+    let err = rt_in(&dir, 3, 2)
+        .train_steps_resumable(&dense, true, LR, STEPS, &ResumeOpts::every(1, "c"))
+        .expect_err("truncated checkpoint must be rejected");
+    let msg = format!("{err:?}");
+    assert!(msg.contains("truncated"), "got: {msg}");
+}
+
+/// Worker panics are contained per item and reported as a structured
+/// error naming the poisoned indices — the process survives.
+#[test]
+fn worker_panics_surface_as_structured_errors() {
+    let err = try_parallel_map(8, 4, |i| {
+        if i == 2 || i == 5 {
+            panic!("injected fault on item {i}");
+        }
+        i * 10
+    })
+    .expect_err("poisoned batch must error");
+    let idx: Vec<usize> = err.poisoned.iter().map(|(i, _)| *i).collect();
+    assert_eq!(idx, vec![2, 5]);
+    assert_eq!(err.n, 8);
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("2 of 8") && msg.contains("[2, 5]"),
+        "got: {msg}"
+    );
+    assert!(msg.contains("injected fault"), "got: {msg}");
+
+    // The panicking wrapper converts the same condition into one
+    // structured panic (with the poisoned indices) instead of letting a
+    // worker thread tear the process down.
+    let caught = std::panic::catch_unwind(|| {
+        parallel_map(8, 2, |i| {
+            if i == 6 {
+                panic!("late fault");
+            }
+            i
+        })
+    })
+    .expect_err("wrapper must panic");
+    let msg = caught
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_default();
+    assert!(
+        msg.contains("parallel_map") && msg.contains("[6]"),
+        "got: {msg}"
+    );
+}

@@ -33,6 +33,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Robustness stage (both modes, --quick included): panic isolation,
+# checksummed checkpoint/resume, divergence rollback and corruption
+# rejection — release mode so the kill/resume sweep stays fast.
+echo "== fault-tolerance tests (robustness stage) =="
+cargo test --release -q --test fault_tolerance
+
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     if ! cargo fmt --all -- --check; then
