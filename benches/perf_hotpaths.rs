@@ -690,6 +690,114 @@ fn main() {
         }
     }
 
+    // ---- serving layer: micro-batching under sustained load ---------------
+    // Plan registry + async micro-batcher over ParallelEngine.  First
+    // the correctness gate — per-request logits bit-identical to the
+    // single-image forward whatever wave packing the batcher picked —
+    // then the sustained-load grid (dense + 87.5% block-sparse ×
+    // Poisson rates × {batch1, batched}) emitted as BENCH_serving.json.
+    // Perf gate: saturated batched throughput >= 2x batch1 at the same
+    // thread count.
+    {
+        use wsel::serve::bench::{request_images, standard_registry, wave_logits};
+        use wsel::serve::{BatchPolicy, ServeBenchCfg};
+
+        let reg = standard_registry(threads, 0x5EED).expect("serving registry");
+        let imgs = request_images(0x5EED, 16);
+        for variant in ["dense", "sparse87"] {
+            let v = reg.get(variant).expect("installed");
+            let eng = &v.engine;
+            let refs: Vec<Vec<u32>> = imgs
+                .iter()
+                .map(|x| {
+                    eng.forward_plain(x, 1)
+                        .logits
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect()
+                })
+                .collect();
+            for policy in [
+                BatchPolicy::batch1(),
+                BatchPolicy {
+                    max_batch: 8,
+                    max_wait_us: 200,
+                },
+            ] {
+                let outs = wave_logits(&reg, variant, &imgs, policy);
+                for (i, r) in outs.iter().enumerate() {
+                    let got: Vec<u32> = r
+                        .as_ref()
+                        .expect("serve reply")
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    assert_eq!(
+                        refs[i],
+                        got,
+                        "{variant}: wave logits differ from single-image forward (img {i}, {})",
+                        policy.label()
+                    );
+                }
+            }
+        }
+        println!("bench perf/serving: per-request logits bit-identical across wave packings");
+
+        // Sustained-load grid (quick preset keeps bench runtime sane;
+        // the CLI's `wsel serve-bench` runs the full standard preset).
+        let cfg = ServeBenchCfg::quick(threads);
+        let (json, cells) = wsel::serve::run_serve_bench(&cfg).expect("serve bench");
+        for c in &cells {
+            println!(
+                "bench perf/serving/{:8} rate={:>9} {:9} p50={:>10} p95={:>10} p99={:>10}  {:9.1} img/s  wave={:.2}",
+                c.variant,
+                c.rate_label(),
+                c.policy.label(),
+                wsel::bench::fmt_ns((c.p50_us * 1e3) as u128),
+                wsel::bench::fmt_ns((c.p95_us * 1e3) as u128),
+                wsel::bench::fmt_ns((c.p99_us * 1e3) as u128),
+                c.images_per_s,
+                c.mean_wave,
+            );
+        }
+        let speedup = |variant: &str| {
+            let sat = |b1: bool| {
+                cells.iter().find(|c| {
+                    c.variant == variant
+                        && !c.rate.is_finite()
+                        && (c.policy.max_batch == 1) == b1
+                })
+            };
+            match (sat(true), sat(false)) {
+                (Some(base), Some(batched)) if base.images_per_s > 0.0 => {
+                    batched.images_per_s / base.images_per_s
+                }
+                _ => 0.0,
+            }
+        };
+        let dense_speedup = speedup("dense");
+        println!(
+            "      -> saturated batched vs batch1 images/s: dense {dense_speedup:.2}x, sparse87 {:.2}x",
+            speedup("sparse87")
+        );
+        if perf_asserts_enabled() {
+            assert!(
+                dense_speedup >= 2.0,
+                "micro-batching must be >= 2x batch1 images/s when saturated at {threads} threads (got {dense_speedup:.2}x)"
+            );
+        } else {
+            println!(
+                "      (serving >=2x batching assertion skipped: <4 cores or WSEL_PERF_ASSERT=0)"
+            );
+        }
+        let path =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_serving.json");
+        match wsel::util::artifact::write_json_atomic(&path, &json) {
+            Ok(()) => println!("      wrote {}", path.display()),
+            Err(e) => eprintln!("      could not write {}: {e}", path.display()),
+        }
+    }
+
     // ---- pipeline-dependent paths (need artifacts) ------------------------
     let Some(_) = scenarios::artifacts_dir() else {
         return;

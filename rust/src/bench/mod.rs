@@ -77,6 +77,21 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample (`q` in
+/// `0..=1`): the smallest sample ≥ the q-fraction rank.  Used by the
+/// serving bench for p50/p95/p99 latency; nearest-rank keeps every
+/// reported value an actually observed latency (no interpolation), so
+/// p99 ≥ p95 ≥ p50 holds structurally.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1).min(sorted.len()) - 1]
+}
+
 /// Whether the ≥2× speedup assertions in `benches/perf_hotpaths.rs`
 /// should be enforced: requires ≥ 4 hardware threads
 /// (`std::thread::available_parallelism`) **and** a worker pool of ≥ 4
@@ -100,6 +115,23 @@ pub fn perf_asserts_enabled() -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 0.50), 50);
+        assert_eq!(percentile(&s, 0.95), 95);
+        assert_eq!(percentile(&s, 0.99), 99);
+        assert_eq!(percentile(&s, 1.0), 100);
+        assert_eq!(percentile(&s, 0.0), 1);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[42], 0.99), 42);
+        // Monotone in q by construction.
+        let p50 = percentile(&s, 0.5);
+        let p95 = percentile(&s, 0.95);
+        let p99 = percentile(&s, 0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+    }
 
     #[test]
     fn measures_something() {

@@ -148,6 +148,28 @@ impl Pipeline {
         }
     }
 
+    /// Bridge from offline compression to the serving layer: compile
+    /// the pipeline's *current* parameters + activation scales under
+    /// `state` into a named [`crate::serve::ModelVariant`], ready for
+    /// [`crate::serve::SnapshotRegistry::install`].  Uses the same
+    /// `QuantConfig` recipe as the native backend (shared mask recipe +
+    /// the state's weight sets), so the variant the schedule just
+    /// accepted is bit-for-bit the variant that gets served.
+    pub fn serving_variant(
+        &self,
+        name: &str,
+        state: &CompressionState,
+    ) -> crate::serve::ModelVariant {
+        crate::serve::ModelVariant::compile(
+            name,
+            &self.rt.spec,
+            &self.rt.params,
+            &self.rt.act_scales,
+            state,
+            self.pp.threads,
+        )
+    }
+
     /// Invalidate the memoized energy evaluator.  Called internally
     /// after every parameter/table mutation; call it yourself if you
     /// mutate `rt.params` directly.

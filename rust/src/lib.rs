@@ -20,7 +20,9 @@
 //! * **Execution** — AOT-compiled JAX/Pallas graphs run through PJRT
 //!   ([`runtime`]); a bit-exact int8 mirror inference engine ([`model`])
 //!   feeds the statistics and the systolic simulator; [`coordinator`]
-//!   orchestrates the end-to-end pipeline; [`data`] generates the
+//!   orchestrates the end-to-end pipeline; [`serve`] runs compiled
+//!   plans as a long-running service (snapshot registry + async
+//!   micro-batching + sustained-load bench); [`data`] generates the
 //!   deterministic synthetic-CIFAR workload; [`report`] renders the
 //!   paper's tables and figures.
 //!
@@ -45,6 +47,7 @@ pub mod report;
 pub mod runtime;
 pub mod schedule;
 pub mod selection;
+pub mod serve;
 pub mod stats;
 pub mod systolic;
 pub mod testutil;

@@ -32,6 +32,11 @@ subcommands:
   faults     --model <m> [--flips 1,2,4,8] [--fault-seed S]
              [--fault-trials N] [--resume] [--quick]
              (SEU bit-flip resilience campaign, dense vs compressed)
+  serve-bench [--rates 200,500,1000] [--requests N] [--max-batch N]
+             [--max-wait-us N] [--bench-seed S] [--out <path>] [--quick]
+             (sustained-load serving bench over the snapshot registry +
+              micro-batcher: p50/p95/p99 latency + images/s per
+              (variant, rate, policy) cell -> BENCH_serving.json)
   repro      --table 1|2|3|4 | --fig 1|2|3|4   (see benches/ for scaled runs)
 
 common options:
@@ -305,6 +310,58 @@ fn cmd_faults(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use wsel::serve::bench::{run_serve_bench, validate_report, ServeBenchCfg};
+    let threads = args.threads_or(wsel::util::threadpool::default_threads());
+    let mut cfg = if args.flag("quick") {
+        ServeBenchCfg::quick(threads)
+    } else {
+        ServeBenchCfg::standard(threads)
+    };
+    cfg.rates = args.f64_list_or("rates", &cfg.rates.clone());
+    cfg.requests = args.usize_or("requests", cfg.requests);
+    cfg.max_batch = args.usize_or("max-batch", cfg.max_batch);
+    cfg.max_wait_us = args.u64_or("max-wait-us", cfg.max_wait_us);
+    cfg.seed = args.u64_or("bench-seed", cfg.seed);
+    let (json, cells) = run_serve_bench(&cfg)?;
+    let mut t = Table::new(
+        &format!(
+            "Sustained-load serving: lenet5, {} threads, {} req/cell",
+            cfg.threads, cfg.requests
+        ),
+        &[
+            "variant", "rate", "policy", "p50 µs", "p95 µs", "p99 µs", "images/s", "mean wave",
+            "err",
+        ],
+    );
+    for c in &cells {
+        t.row(&[
+            c.variant.clone(),
+            c.rate_label(),
+            c.policy.label(),
+            format!("{:.0}", c.p50_us),
+            format!("{:.0}", c.p95_us),
+            format!("{:.0}", c.p99_us),
+            format!("{:.1}", c.images_per_s),
+            format!("{:.2}", c.mean_wave),
+            c.errors.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let out = std::path::PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
+    wsel::util::artifact::write_json_atomic(&out, &json)?;
+    // Smoke gate (verify.sh --quick): re-load what was just written and
+    // re-check shape + p99 >= p95 >= p50 per cell, through the same
+    // checksummed loader any consumer would use.
+    let reloaded = wsel::util::artifact::load_json(&out)?;
+    let n = validate_report(&reloaded)?;
+    println!(
+        "wrote {} ({n} cells); self-check OK (parse + monotone percentiles)",
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
     // Full-scale repro paths delegate to the same code the benches use,
     // at full parameters.  See benches/ for the scaled variants.
@@ -356,6 +413,12 @@ fn main() -> Result<()> {
             "flips",
             "fault-seed",
             "fault-trials",
+            "rates",
+            "requests",
+            "max-batch",
+            "max-wait-us",
+            "bench-seed",
+            "out",
         ],
     );
     let sub = args.positional.first().map(String::as_str).unwrap_or("");
@@ -366,6 +429,7 @@ fn main() -> Result<()> {
         "baseline" => cmd_baseline(&args),
         "eval" => cmd_eval(&args),
         "faults" => cmd_faults(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "repro" => cmd_repro(&args),
         "version" => {
             println!("wsel {}", wsel::version());

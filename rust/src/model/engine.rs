@@ -464,6 +464,39 @@ impl ParallelEngine {
         self.try_forward(x, batch, &mut NullSink)
     }
 
+    /// Serving entry point: forward a **wave** of independently owned
+    /// single images (as coalesced by [`crate::serve`]'s micro-batcher),
+    /// returning each request's logits separately instead of one packed
+    /// `batch × n_classes` buffer.  Each image runs through the same
+    /// `run_image` interpreter as the batch path, images are independent,
+    /// and conv accumulation is exact i32 — so every returned logit
+    /// vector is bit-identical to a single-image [`Self::forward_plain`]
+    /// of the same input at any thread count and any wave packing
+    /// (pinned in `rust/tests/serving.rs`).  A worker panic poisons the
+    /// wave, not the process.
+    pub fn forward_wave(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f32>>, PoisonedBatch> {
+        for x in imgs {
+            assert_eq!(x.len(), IMG_ELEMS);
+        }
+        let plan = &self.plan;
+        let worker_outs = try_parallel_for_with(
+            imgs.len(),
+            self.threads,
+            || (Scratch::new(plan), Vec::new()),
+            |state: &mut (Scratch, Vec<(usize, Vec<f32>)>), i| {
+                let (scratch, outs) = state;
+                outs.push((i, run_image(plan, imgs[i], scratch, false).logits));
+            },
+        )?;
+        let mut out = vec![Vec::new(); imgs.len()];
+        for (_scratch, outs) in worker_outs {
+            for (i, logits) in outs {
+                out[i] = logits;
+            }
+        }
+        Ok(out)
+    }
+
     /// Structural-skip summary per quantized conv for a `batch`-image
     /// forward, in conv-index order.  Empty on float plans.
     pub fn sparsity_report(&self, batch: usize) -> Vec<ConvSkip> {

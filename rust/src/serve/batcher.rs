@@ -1,0 +1,487 @@
+//! Async dynamic micro-batcher: single-image requests in, engine waves
+//! out.
+//!
+//! Requests flow over an `std::sync::mpsc` channel to one dispatcher
+//! thread.  The dispatcher blocks for the first request of a wave, then
+//! keeps the wave open until either `max_batch` requests have arrived
+//! or `max_wait_us` has elapsed since the wave opened — the classic
+//! dynamic-batching policy: `max_wait_us = 0` degrades to batch=1
+//! serving, large values trade first-request latency for wave
+//! occupancy.  Each closed wave is grouped by model name (arrival order
+//! preserved within a group) and executed through
+//! [`ModelVariant::run_wave`](super::registry::ModelVariant::run_wave),
+//! which fans images out over the engine's scoped thread pool.
+//!
+//! Delivery is per-request: every [`Ticket`] is a one-shot
+//! `Mutex<Option<..>> + Condvar` slot the dispatcher fills exactly
+//! once.  A [`PoisonedBatch`](crate::util::threadpool::PoisonedBatch)
+//! from one wave therefore fails that wave's requests with
+//! [`ServeError::WavePoisoned`] and nothing else — the dispatcher loop
+//! and every other wave keep running.  A request that can never run
+//! (dropped channel, shutdown race) resolves to [`ServeError::Shutdown`]
+//! rather than hanging its caller: the reply slot is filled on drop if
+//! still empty.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::registry::{SnapshotRegistry, IMG_ELEMS};
+use super::ServeError;
+
+/// Wave-closing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Maximum images per wave (≥ 1).
+    pub max_batch: usize,
+    /// How long a wave stays open for co-travelers after its first
+    /// request arrives, in microseconds.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait_us: 200,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// No coalescing: every request is its own wave (the serving
+    /// baseline the bench compares against).
+    pub fn batch1() -> Self {
+        Self {
+            max_batch: 1,
+            max_wait_us: 0,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if self.max_batch <= 1 {
+            "batch1".to_string()
+        } else {
+            format!("b{}w{}us", self.max_batch, self.max_wait_us)
+        }
+    }
+}
+
+/// One-shot reply slot shared between a [`Ticket`] and the dispatcher.
+struct TicketInner {
+    slot: Mutex<Option<Reply>>,
+    cv: Condvar,
+}
+
+/// The dispatcher's answer to one request.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub result: Result<Vec<f32>, ServeError>,
+    /// When the reply was produced (wave completion) — recorded at fill
+    /// time so latency accounting is independent of when the caller
+    /// gets around to [`Ticket::wait`].
+    pub done_at: Instant,
+}
+
+/// Caller's handle on one submitted request.
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+}
+
+impl Ticket {
+    fn pair() -> (Ticket, Arc<TicketInner>) {
+        let inner = Arc::new(TicketInner {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        (
+            Ticket {
+                inner: Arc::clone(&inner),
+            },
+            inner,
+        )
+    }
+
+    fn resolved(result: Result<Vec<f32>, ServeError>) -> Ticket {
+        let (t, inner) = Ticket::pair();
+        fill(&inner, result);
+        t
+    }
+
+    /// Block until the reply arrives.
+    pub fn wait(&self) -> Reply {
+        let mut slot = self.inner.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.as_ref() {
+                return r.clone();
+            }
+            slot = self.inner.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking probe.
+    pub fn try_take(&self) -> Option<Reply> {
+        self.inner.slot.lock().unwrap().clone()
+    }
+}
+
+/// Fill a reply slot if still empty (first writer wins — makes the
+/// drop-safety net below a no-op on already-answered requests).
+fn fill(inner: &TicketInner, result: Result<Vec<f32>, ServeError>) {
+    let mut slot = inner.slot.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(Reply {
+            result,
+            done_at: Instant::now(),
+        });
+        inner.cv.notify_all();
+    }
+}
+
+struct Request {
+    model: String,
+    image: Vec<f32>,
+    ticket: Arc<TicketInner>,
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        // Safety net: a request dropped without an answer (lost in a
+        // shutdown race, dispatcher gone) must not hang its caller.
+        fill(&self.ticket, Err(ServeError::Shutdown));
+    }
+}
+
+enum Msg {
+    Req(Request),
+    /// Finish queued work, then exit the dispatch loop.
+    Shutdown,
+}
+
+/// Cloneable submission endpoint (for concurrent submitter threads).
+#[derive(Clone)]
+pub struct SubmitHandle {
+    tx: Sender<Msg>,
+}
+
+impl SubmitHandle {
+    /// Submit one image for `model`.  Never blocks on the wave; input
+    /// validation failures and a shut-down batcher resolve the ticket
+    /// immediately.
+    pub fn submit(&self, model: &str, image: &[f32]) -> Ticket {
+        if image.len() != IMG_ELEMS {
+            return Ticket::resolved(Err(ServeError::BadInput {
+                expected: IMG_ELEMS,
+                got: image.len(),
+            }));
+        }
+        let (ticket, inner) = Ticket::pair();
+        let req = Request {
+            model: model.to_string(),
+            image: image.to_vec(),
+            ticket: inner,
+        };
+        // A send failure drops `req`, whose Drop resolves the ticket to
+        // Shutdown.
+        let _ = self.tx.send(Msg::Req(req));
+        ticket
+    }
+}
+
+/// Counters the dispatcher maintains (all monotonically increasing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub waves: u64,
+    /// Σ wave sizes — `batched_images / waves` is the mean occupancy.
+    pub batched_images: u64,
+    pub poisoned_waves: u64,
+    pub unknown_model: u64,
+}
+
+impl BatcherStats {
+    pub fn mean_wave(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.batched_images as f64 / self.waves as f64
+        }
+    }
+}
+
+/// The micro-batching service: one dispatcher thread draining a
+/// request channel into engine waves.
+pub struct MicroBatcher {
+    handle: SubmitHandle,
+    worker: Option<JoinHandle<BatcherStats>>,
+}
+
+impl MicroBatcher {
+    /// Spawn the dispatcher over `registry` under `policy`.
+    pub fn new(registry: Arc<SnapshotRegistry>, policy: BatchPolicy) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::Builder::new()
+            .name("wsel-serve-batcher".to_string())
+            .spawn(move || dispatch(rx, registry, policy))
+            .expect("spawn batcher dispatcher");
+        Self {
+            handle: SubmitHandle { tx },
+            worker: Some(worker),
+        }
+    }
+
+    /// A cloneable submission endpoint.
+    pub fn handle(&self) -> SubmitHandle {
+        self.handle.clone()
+    }
+
+    /// Submit one image (see [`SubmitHandle::submit`]).
+    pub fn submit(&self, model: &str, image: &[f32]) -> Ticket {
+        self.handle.submit(model, image)
+    }
+
+    /// Finish all queued requests, stop the dispatcher and return its
+    /// counters.  Outstanding [`SubmitHandle`]s stay valid but every
+    /// later submission resolves to [`ServeError::Shutdown`].
+    pub fn shutdown(mut self) -> BatcherStats {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> BatcherStats {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        match self.worker.take() {
+            Some(w) => w.join().expect("batcher dispatcher panicked"),
+            None => BatcherStats::default(),
+        }
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        if self.worker.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn dispatch(rx: Receiver<Msg>, registry: Arc<SnapshotRegistry>, policy: BatchPolicy) -> BatcherStats {
+    let max_batch = policy.max_batch.max(1);
+    let mut stats = BatcherStats::default();
+    loop {
+        // Block for the wave's first request.
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => {
+                drain_remaining(&rx, &registry, max_batch, &mut stats);
+                return stats;
+            }
+        };
+        let mut wave = vec![first];
+        let deadline = Instant::now() + Duration::from_micros(policy.max_wait_us);
+        let mut stop = false;
+        while wave.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                // Past the deadline: take only what is already queued.
+                match rx.try_recv() {
+                    Ok(Msg::Req(r)) => wave.push(r),
+                    Ok(Msg::Shutdown) | Err(TryRecvError::Disconnected) => {
+                        stop = true;
+                        break;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                }
+            } else {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Req(r)) => wave.push(r),
+                    Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                        stop = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => {} // re-check at deadline
+                }
+            }
+        }
+        execute_wave(&registry, wave, &mut stats);
+        if stop {
+            drain_remaining(&rx, &registry, max_batch, &mut stats);
+            return stats;
+        }
+    }
+}
+
+/// Shutdown path: execute whatever is still queued (in max_batch-sized
+/// waves, no waiting), then return.  Requests that race past this drain
+/// are answered by `Request::drop` once the receiver goes away.
+fn drain_remaining(
+    rx: &Receiver<Msg>,
+    registry: &SnapshotRegistry,
+    max_batch: usize,
+    stats: &mut BatcherStats,
+) {
+    let mut wave: Vec<Request> = Vec::new();
+    loop {
+        match rx.try_recv() {
+            Ok(Msg::Req(r)) => {
+                wave.push(r);
+                if wave.len() >= max_batch {
+                    execute_wave(registry, std::mem::take(&mut wave), stats);
+                }
+            }
+            Ok(Msg::Shutdown) => {}
+            Err(_) => break,
+        }
+    }
+    if !wave.is_empty() {
+        execute_wave(registry, wave, stats);
+    }
+}
+
+/// Run one closed wave: group by model (arrival order kept within each
+/// group), execute each group, deliver per-request results.
+fn execute_wave(registry: &SnapshotRegistry, wave: Vec<Request>, stats: &mut BatcherStats) {
+    if wave.is_empty() {
+        return;
+    }
+    stats.requests += wave.len() as u64;
+    stats.waves += 1;
+    stats.batched_images += wave.len() as u64;
+    let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
+    for req in wave {
+        match groups.iter_mut().find(|(m, _)| *m == req.model) {
+            Some((_, g)) => g.push(req),
+            None => groups.push((req.model.clone(), vec![req])),
+        }
+    }
+    for (model, group) in groups {
+        let Some(variant) = registry.get(&model) else {
+            stats.unknown_model += group.len() as u64;
+            for req in &group {
+                fill(&req.ticket, Err(ServeError::UnknownModel(model.clone())));
+            }
+            continue;
+        };
+        let imgs: Vec<&[f32]> = group.iter().map(|r| r.image.as_slice()).collect();
+        match variant.run_wave(&imgs) {
+            Ok(outs) => {
+                debug_assert_eq!(outs.len(), group.len());
+                for (req, logits) in group.iter().zip(outs) {
+                    fill(&req.ticket, Ok(logits));
+                }
+            }
+            Err(pb) => {
+                stats.poisoned_waves += 1;
+                let msg = pb.to_string();
+                for req in &group {
+                    fill(&req.ticket, Err(ServeError::WavePoisoned(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::tests_support::tiny_spec;
+    use crate::model::{ParallelEngine, Params, QuantConfig};
+    use crate::serve::registry::ModelVariant;
+
+    fn registry_with(name: &str, seed: u64) -> Arc<SnapshotRegistry> {
+        let reg = Arc::new(SnapshotRegistry::new());
+        let spec = tiny_spec();
+        let p = Params::random(&spec, seed);
+        let qc = QuantConfig::float(&spec);
+        reg.install(ModelVariant::new(
+            name,
+            ParallelEngine::new(&spec, &p.tensors, &qc, 2),
+        ));
+        reg
+    }
+
+    fn image(seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        (0..IMG_ELEMS).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn bad_input_resolves_immediately() {
+        let b = MicroBatcher::new(registry_with("m", 1), BatchPolicy::default());
+        let t = b.submit("m", &[0.0f32; 7]);
+        match t.wait().result {
+            Err(ServeError::BadInput { expected, got }) => {
+                assert_eq!(expected, IMG_ELEMS);
+                assert_eq!(got, 7);
+            }
+            other => panic!("want BadInput, got {other:?}"),
+        }
+        // A malformed request never reaches the dispatcher.
+        let stats = b.shutdown();
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn submit_after_shutdown_resolves_shutdown() {
+        let b = MicroBatcher::new(registry_with("m", 2), BatchPolicy::default());
+        let h = b.handle();
+        b.shutdown();
+        let t = h.submit("m", &image(3));
+        assert_eq!(t.wait().result, Err(ServeError::Shutdown));
+    }
+
+    #[test]
+    fn queued_requests_survive_shutdown() {
+        // Everything queued before shutdown() still gets a real answer.
+        let b = MicroBatcher::new(
+            registry_with("m", 4),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait_us: 0,
+            },
+        );
+        let img = image(5);
+        let tickets: Vec<Ticket> = (0..9).map(|_| b.submit("m", &img)).collect();
+        let stats = b.shutdown();
+        assert_eq!(stats.requests, 9);
+        for t in &tickets {
+            assert!(t.wait().result.is_ok());
+        }
+    }
+
+    #[test]
+    fn mean_occupancy_exceeds_one_under_burst() {
+        // Submit a burst with a generous window: the dispatcher must
+        // coalesce, not serve 8 single-image waves.
+        let b = MicroBatcher::new(
+            registry_with("m", 4),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait_us: 200_000,
+            },
+        );
+        let img = image(5);
+        let tickets: Vec<Ticket> = (0..8).map(|_| b.submit("m", &img)).collect();
+        for t in &tickets {
+            assert!(t.wait().result.is_ok());
+        }
+        let stats = b.shutdown();
+        assert_eq!(stats.requests, 8);
+        assert!(stats.waves >= 2, "waves={}", stats.waves);
+        assert!(stats.waves < 8, "no coalescing happened: {}", stats.waves);
+    }
+
+    #[test]
+    fn batch1_policy_means_one_wave_per_request() {
+        let b = MicroBatcher::new(registry_with("m", 6), BatchPolicy::batch1());
+        let img = image(7);
+        let tickets: Vec<Ticket> = (0..5).map(|_| b.submit("m", &img)).collect();
+        for t in &tickets {
+            assert!(t.wait().result.is_ok());
+        }
+        let stats = b.shutdown();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.waves, 5);
+        assert_eq!(stats.batched_images, 5);
+    }
+}

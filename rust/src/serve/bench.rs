@@ -1,0 +1,464 @@
+//! Seeded sustained-load serving bench: Poisson arrivals, open-loop
+//! latency accounting, per-cell percentiles.
+//!
+//! One *cell* = `(variant, arrival rate, batch policy)`.  The driver
+//! pre-draws exponential inter-arrival gaps from a seeded
+//! [`Xoshiro256`], submits each request at its *scheduled* arrival time
+//! and measures latency from that scheduled instant to wave completion
+//! — the open-loop discipline, so a backed-up service shows its real
+//! queueing delay instead of the coordinated-omission artifact a
+//! closed submit-wait loop would produce.  `rate = ∞` ("saturated")
+//! submits with zero gaps and measures peak images/s — that is the
+//! cell pair the micro-batching ≥2× acceptance gate compares
+//! (`max_batch ≥ 8` vs batch=1 at the same thread count).
+//!
+//! [`run_serve_bench`] drives the standard dense + ≥70%-block-sparse
+//! lenet5 variant pair over a rate × policy grid and returns the
+//! machine-readable report (`BENCH_serving.json` shape) plus the raw
+//! cells; `wsel serve-bench` and the `perf_hotpaths` serving stage are
+//! thin wrappers over it.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, MicroBatcher, Ticket};
+use super::registry::{ModelVariant, SnapshotRegistry, IMG_ELEMS};
+use super::ServeError;
+use crate::bench::percentile;
+use crate::model::kernels::SB;
+use crate::model::{ConvOp, ModelSpec, ParallelEngine, Params, QuantConfig};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+/// Grid for one [`run_serve_bench`] invocation.
+#[derive(Clone, Debug)]
+pub struct ServeBenchCfg {
+    /// Finite Poisson arrival rates, requests/s.
+    pub rates: Vec<f64>,
+    /// Also run a zero-gap ("saturated") rate per (variant, policy) —
+    /// the peak-throughput cell the ≥2× batching gate reads.
+    pub include_saturated: bool,
+    /// Requests per cell.
+    pub requests: usize,
+    /// Coalescing policy under test (compared against
+    /// [`BatchPolicy::batch1`]).
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl ServeBenchCfg {
+    /// Full preset (CLI default).
+    pub fn standard(threads: usize) -> Self {
+        Self {
+            rates: vec![200.0, 500.0, 1000.0],
+            include_saturated: true,
+            requests: 2000,
+            max_batch: 8,
+            max_wait_us: 200,
+            seed: 0x5EED,
+            threads,
+        }
+    }
+
+    /// Smoke preset: small enough for `verify.sh --quick`, still ≥3
+    /// rates × 2 variants so the emitted JSON has the full shape.
+    pub fn quick(threads: usize) -> Self {
+        Self {
+            rates: vec![500.0, 2000.0],
+            include_saturated: true,
+            requests: 60,
+            max_batch: 8,
+            max_wait_us: 200,
+            seed: 0x5EED,
+            threads,
+        }
+    }
+}
+
+/// Measured result of one `(variant, rate, policy)` cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub variant: String,
+    /// Requests/s; `f64::INFINITY` for the saturated cell.
+    pub rate: f64,
+    pub policy: BatchPolicy,
+    pub n: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Completed images per wall-clock second (first scheduled arrival
+    /// → last completion).
+    pub images_per_s: f64,
+    /// Mean images per executed wave.
+    pub mean_wave: f64,
+    pub elapsed_s: f64,
+}
+
+impl CellResult {
+    pub fn rate_label(&self) -> String {
+        if self.rate.is_finite() {
+            format!("{:.0}/s", self.rate)
+        } else {
+            "saturated".to_string()
+        }
+    }
+}
+
+/// Deterministic request images: `n_distinct` seeded inputs cycled
+/// round-robin, so logits are reproducible per request index.
+pub fn request_images(seed: u64, n_distinct: usize) -> Vec<Vec<f32>> {
+    (0..n_distinct.max(1))
+        .map(|i| {
+            let mut rng = Xoshiro256::new(seed ^ ((i as u64) << 32) ^ 0xA11CE);
+            (0..IMG_ELEMS).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+        })
+        .collect()
+}
+
+/// Zero `drop_num` of every `den` SB-aligned k-row blocks of a conv's
+/// K×N weight matrix (rows are (ky, kx, ci) taps, zeroed across every
+/// output channel) — pruning that lands exactly on the structural SB×SB
+/// grid, the same recipe as the `perf_hotpaths` sparse-forward sweep.
+pub fn block_structured_mask(cv: &ConvOp, drop_num: usize, den: usize) -> Vec<f32> {
+    let kk = cv.k * cv.k * cv.cin;
+    let mut mask = vec![1.0f32; cv.cout * cv.cin * cv.k * cv.k];
+    for r in 0..kk {
+        if (r / SB) % den >= drop_num {
+            continue; // kept block
+        }
+        let ci = r % cv.cin;
+        let pos = r / cv.cin;
+        let kx = pos % cv.k;
+        let ky = pos / cv.k;
+        for o in 0..cv.cout {
+            mask[((o * cv.cin + ci) * cv.k + ky) * cv.k + kx] = 0.0;
+        }
+    }
+    mask
+}
+
+/// The standard serving variant pair: quantized dense lenet5 plus the
+/// same params under 87.5% block-structured pruning (≥70% empty SB×SB
+/// blocks, so the structural-skip GEMM path is what's being served).
+/// Fixed activation scales keep setup artifact- and calibration-free;
+/// determinism is unaffected (scales only pick the quantization grid).
+pub fn standard_registry(threads: usize, seed: u64) -> Result<Arc<SnapshotRegistry>> {
+    let spec = ModelSpec::builtin("lenet5")?;
+    let params = Params::init_train(&spec, seed);
+    let scales = vec![0.02f32; spec.n_q];
+    let reg = Arc::new(SnapshotRegistry::new());
+
+    let dense_qc = QuantConfig::quantized(&spec, scales.clone());
+    reg.install(ModelVariant::new(
+        "dense",
+        ParallelEngine::new(&spec, &params.tensors, &dense_qc, threads),
+    ));
+
+    let mut sparse_qc = QuantConfig::quantized(&spec, scales);
+    for cv in spec.convs() {
+        sparse_qc.masks[cv.conv_idx] = Some(block_structured_mask(cv, 7, 8));
+    }
+    reg.install(ModelVariant::new(
+        "sparse87",
+        ParallelEngine::new(&spec, &params.tensors, &sparse_qc, threads),
+    ));
+    Ok(reg)
+}
+
+/// Run one sustained-load cell against an installed variant.
+pub fn run_cell(
+    registry: &Arc<SnapshotRegistry>,
+    variant: &str,
+    rate: f64,
+    policy: BatchPolicy,
+    requests: usize,
+    seed: u64,
+) -> CellResult {
+    let images = request_images(seed, 16);
+    let mut rng = Xoshiro256::new(seed ^ 0xD15BA7C4);
+    // Pre-drawn exponential gaps (ns); zero gaps when saturated.
+    let gaps: Vec<u64> = (0..requests)
+        .map(|_| {
+            if rate.is_finite() && rate > 0.0 {
+                let u = rng.f64();
+                ((-(1.0 - u).ln()) / rate * 1e9) as u64
+            } else {
+                0
+            }
+        })
+        .collect();
+    let batcher = MicroBatcher::new(Arc::clone(registry), policy);
+    let start = Instant::now();
+    let mut scheduled: Vec<Instant> = Vec::with_capacity(requests);
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(requests);
+    let mut cum_ns = 0u64;
+    for (i, gap) in gaps.iter().enumerate() {
+        cum_ns += gap;
+        let target = start + Duration::from_nanos(cum_ns);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        // Latency is measured from the *scheduled* arrival even when the
+        // submit loop falls behind (open loop).
+        scheduled.push(target);
+        tickets.push(batcher.submit(variant, &images[i % images.len()]));
+    }
+    let mut lat_ns: Vec<u64> = Vec::with_capacity(requests);
+    let mut errors = 0usize;
+    let mut last_done = start;
+    for (t, sched) in tickets.iter().zip(&scheduled) {
+        let reply = t.wait();
+        match reply.result {
+            Ok(_) => {
+                lat_ns.push(reply.done_at.saturating_duration_since(*sched).as_nanos() as u64);
+                if reply.done_at > last_done {
+                    last_done = reply.done_at;
+                }
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    let stats = batcher.shutdown();
+    lat_ns.sort_unstable();
+    let elapsed_s = last_done.duration_since(start).as_secs_f64().max(1e-9);
+    CellResult {
+        variant: variant.to_string(),
+        rate,
+        policy,
+        n: requests,
+        ok: lat_ns.len(),
+        errors,
+        p50_us: percentile(&lat_ns, 0.50) as f64 / 1e3,
+        p95_us: percentile(&lat_ns, 0.95) as f64 / 1e3,
+        p99_us: percentile(&lat_ns, 0.99) as f64 / 1e3,
+        images_per_s: lat_ns.len() as f64 / elapsed_s,
+        mean_wave: stats.mean_wave(),
+        elapsed_s,
+    }
+}
+
+/// Structural self-check every cell must satisfy regardless of the
+/// machine: nearest-rank percentiles are monotone and every completed
+/// request was counted.
+pub fn check_cell(c: &CellResult) {
+    assert!(
+        c.p99_us >= c.p95_us && c.p95_us >= c.p50_us,
+        "percentiles must be monotone: {c:?}"
+    );
+    assert_eq!(c.ok + c.errors, c.n, "lost requests: {c:?}");
+}
+
+/// Drive the full grid: `{dense, sparse87}` × `{rates…, saturated}` ×
+/// `{batch1, (max_batch, max_wait_us)}`.  Returns the
+/// `BENCH_serving.json`-shaped report and the raw cells.
+pub fn run_serve_bench(cfg: &ServeBenchCfg) -> Result<(Json, Vec<CellResult>)> {
+    let reg = standard_registry(cfg.threads, cfg.seed)?;
+    let policies = [
+        BatchPolicy::batch1(),
+        BatchPolicy {
+            max_batch: cfg.max_batch.max(2),
+            max_wait_us: cfg.max_wait_us,
+        },
+    ];
+    let mut rates = cfg.rates.clone();
+    if cfg.include_saturated {
+        rates.push(f64::INFINITY);
+    }
+    let mut cells: Vec<CellResult> = Vec::new();
+    for name in ["dense", "sparse87"] {
+        for &rate in &rates {
+            for &policy in &policies {
+                let cell = run_cell(&reg, name, rate, policy, cfg.requests, cfg.seed);
+                check_cell(&cell);
+                cells.push(cell);
+            }
+        }
+    }
+
+    // Peak-throughput ratio per variant: saturated batched vs batch1.
+    let saturated_speedup = |variant: &str| -> Option<f64> {
+        let find = |b1: bool| {
+            cells.iter().find(|c| {
+                c.variant == variant
+                    && !c.rate.is_finite()
+                    && (c.policy.max_batch == 1) == b1
+            })
+        };
+        let (base, batched) = (find(true)?, find(false)?);
+        (base.images_per_s > 0.0).then(|| batched.images_per_s / base.images_per_s)
+    };
+
+    let variant_json = |name: &str| -> Json {
+        let v = reg.get(name).expect("installed above");
+        let rep = v.engine.sparsity_report(1);
+        let blocks: u64 = rep.iter().map(|r| r.sparsity.blocks_total).sum();
+        let empty: u64 = rep.iter().map(|r| r.sparsity.blocks_empty).sum();
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("blocks_total", Json::num(blocks as f64)),
+            ("blocks_empty", Json::num(empty as f64)),
+            (
+                "empty_fraction",
+                Json::num(empty as f64 / blocks.max(1) as f64),
+            ),
+            (
+                "batched_speedup_vs_batch1",
+                Json::num(saturated_speedup(name).unwrap_or(0.0)),
+            ),
+        ])
+    };
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("model", Json::str("lenet5")),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("threads", Json::num(cfg.threads as f64)),
+        ("requests_per_cell", Json::num(cfg.requests as f64)),
+        ("max_batch", Json::num(cfg.max_batch as f64)),
+        ("max_wait_us", Json::num(cfg.max_wait_us as f64)),
+        (
+            "variants",
+            Json::arr(["dense", "sparse87"].into_iter().map(variant_json)),
+        ),
+        (
+            "cells",
+            Json::arr(cells.iter().map(|c| {
+                Json::obj(vec![
+                    ("variant", Json::str(&c.variant)),
+                    (
+                        "rate_rps",
+                        if c.rate.is_finite() {
+                            Json::num(c.rate)
+                        } else {
+                            Json::num(0.0)
+                        },
+                    ),
+                    ("saturated", Json::Bool(!c.rate.is_finite())),
+                    ("policy", Json::str(&c.policy.label())),
+                    ("max_batch", Json::num(c.policy.max_batch as f64)),
+                    ("max_wait_us", Json::num(c.policy.max_wait_us as f64)),
+                    ("n", Json::num(c.n as f64)),
+                    ("ok", Json::num(c.ok as f64)),
+                    ("errors", Json::num(c.errors as f64)),
+                    ("p50_us", Json::num(c.p50_us)),
+                    ("p95_us", Json::num(c.p95_us)),
+                    ("p99_us", Json::num(c.p99_us)),
+                    ("images_per_s", Json::num(c.images_per_s)),
+                    ("mean_wave", Json::num(c.mean_wave)),
+                    ("elapsed_s", Json::num(c.elapsed_s)),
+                ])
+            })),
+        ),
+    ]);
+    Ok((json, cells))
+}
+
+/// Validate a loaded `BENCH_serving.json`: shape + the p99 ≥ p50
+/// invariant per cell.  Returns the cell count.  This is the
+/// `verify.sh --quick` serving smoke gate (run through
+/// `wsel serve-bench --quick`, which re-loads what it just wrote).
+pub fn validate_report(json: &Json) -> Result<usize> {
+    let cells = json
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("BENCH_serving.json: missing `cells` array"))?;
+    if cells.is_empty() {
+        anyhow::bail!("BENCH_serving.json: empty `cells`");
+    }
+    for (i, c) in cells.iter().enumerate() {
+        let num = |k: &str| -> Result<f64> {
+            c.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("cell {i}: missing numeric `{k}`"))
+        };
+        let (p50, p95, p99) = (num("p50_us")?, num("p95_us")?, num("p99_us")?);
+        if !(p99 >= p95 && p95 >= p50) {
+            anyhow::bail!("cell {i}: percentiles not monotone (p50={p50}, p95={p95}, p99={p99})");
+        }
+        if num("images_per_s")? < 0.0 {
+            anyhow::bail!("cell {i}: negative throughput");
+        }
+    }
+    Ok(cells.len())
+}
+
+/// Submit `imgs` concurrently through a fresh batcher and return each
+/// request's logits in submission order — the bit-identity probe used
+/// by tests and the perf stage (results must equal single-image
+/// [`ParallelEngine::forward_plain`] regardless of wave packing).
+pub fn wave_logits(
+    registry: &Arc<SnapshotRegistry>,
+    variant: &str,
+    imgs: &[Vec<f32>],
+    policy: BatchPolicy,
+) -> Vec<Result<Vec<f32>, ServeError>> {
+    let batcher = MicroBatcher::new(Arc::clone(registry), policy);
+    let tickets: Vec<Ticket> = imgs.iter().map(|x| batcher.submit(variant, x)).collect();
+    let out = tickets.iter().map(|t| t.wait().result).collect();
+    batcher.shutdown();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_produces_valid_report() {
+        let cfg = ServeBenchCfg {
+            rates: vec![5000.0],
+            include_saturated: true,
+            requests: 12,
+            max_batch: 4,
+            max_wait_us: 100,
+            seed: 9,
+            threads: 2,
+        };
+        let (json, cells) = run_serve_bench(&cfg).unwrap();
+        // 2 variants × (1 rate + saturated) × 2 policies.
+        assert_eq!(cells.len(), 8);
+        assert_eq!(validate_report(&json).unwrap(), 8);
+        for c in &cells {
+            assert_eq!(c.ok, c.n, "no errors expected: {c:?}");
+        }
+        // The sparse variant really is ≥70% empty-block.
+        let v = json.get("variants").and_then(Json::as_arr).unwrap();
+        let sparse = v
+            .iter()
+            .find(|x| x.get("name").and_then(Json::as_str) == Some("sparse87"))
+            .unwrap();
+        assert!(sparse.get("empty_fraction").and_then(Json::as_f64).unwrap() >= 0.70);
+    }
+
+    #[test]
+    fn validate_rejects_non_monotone_percentiles() {
+        let bad = Json::obj(vec![(
+            "cells",
+            Json::arr([Json::obj(vec![
+                ("p50_us", Json::num(10.0)),
+                ("p95_us", Json::num(5.0)),
+                ("p99_us", Json::num(20.0)),
+                ("images_per_s", Json::num(1.0)),
+            ])]),
+        )]);
+        assert!(validate_report(&bad).is_err());
+        assert!(validate_report(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn block_mask_hits_structural_grid() {
+        let spec = ModelSpec::builtin("lenet5").unwrap();
+        let cv = spec.convs()[0];
+        let dense = block_structured_mask(cv, 0, 8);
+        assert!(dense.iter().all(|&v| v == 1.0));
+        let m = block_structured_mask(cv, 7, 8);
+        let zeros = m.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 0 && zeros < m.len());
+    }
+}

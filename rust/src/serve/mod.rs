@@ -1,0 +1,76 @@
+//! Long-running inference service over compiled [`Plan`]s.
+//!
+//! The IR/engine split compiles a plan once and executes it forever;
+//! this module is the "forever" part — the first serving (rather than
+//! batch-offline) surface of the crate:
+//!
+//! * [`registry`] — a [`SnapshotRegistry`] of named model variants
+//!   (spec + params artifacts loaded through [`crate::util::artifact`],
+//!   or compiled in-process from a [`CompressionState`]).  Each variant
+//!   holds one compiled [`ParallelEngine`] behind an `Arc`: variants
+//!   hot-install and evict by name while in-flight waves keep their own
+//!   reference, so a swap never interrupts running work.
+//! * [`batcher`] — a [`MicroBatcher`] that coalesces concurrent
+//!   single-image requests into *waves* for
+//!   [`ParallelEngine::forward_wave`] under a
+//!   [`BatchPolicy`]`{ max_batch, max_wait_us }`, built on
+//!   `std::sync::mpsc` + condvar tickets atop the existing scoped
+//!   thread pool (no new dependencies).  Results are delivered
+//!   per-request as `Result`, so a [`PoisonedBatch`] degrades the one
+//!   wave that panicked — the service keeps serving.
+//! * [`bench`] — a seeded sustained-load driver (Poisson arrivals,
+//!   open-loop latency accounting) recording p50/p95/p99 latency and
+//!   images/s per (variant, rate, policy) cell; `wsel serve-bench` and
+//!   the `perf_hotpaths` serving stage both run it and emit
+//!   `BENCH_serving.json` atomically.
+//!
+//! Determinism contract: images are independent and conv accumulation
+//! is exact i32, so every request's logits are bit-identical to a
+//! single-image [`ParallelEngine::forward_plain`] of the same input —
+//! at any thread count, wave packing and arrival order (pinned in
+//! `rust/tests/serving.rs`).
+//!
+//! [`Plan`]: crate::model::ir::Plan
+//! [`ParallelEngine`]: crate::model::ParallelEngine
+//! [`ParallelEngine::forward_wave`]: crate::model::ParallelEngine::forward_wave
+//! [`CompressionState`]: crate::selection::CompressionState
+//! [`PoisonedBatch`]: crate::util::threadpool::PoisonedBatch
+
+pub mod batcher;
+pub mod bench;
+pub mod registry;
+
+pub use batcher::{BatchPolicy, MicroBatcher, Reply, SubmitHandle, Ticket};
+pub use bench::{run_serve_bench, CellResult, ServeBenchCfg};
+pub use registry::{ModelVariant, SnapshotRegistry};
+
+/// Per-request serving failure.  Every variant leaves the service
+/// itself healthy: the next wave is unaffected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// No variant under that name is currently installed.
+    UnknownModel(String),
+    /// Submitted image had the wrong element count.
+    BadInput { expected: usize, got: usize },
+    /// A worker panicked inside this request's wave; the structured
+    /// [`PoisonedBatch`](crate::util::threadpool::PoisonedBatch)
+    /// message is carried verbatim.
+    WavePoisoned(String),
+    /// The batcher was shut down before this request ran.
+    Shutdown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownModel(name) => write!(f, "unknown model variant `{name}`"),
+            ServeError::BadInput { expected, got } => {
+                write!(f, "bad input: expected {expected} elements, got {got}")
+            }
+            ServeError::WavePoisoned(msg) => write!(f, "wave poisoned: {msg}"),
+            ServeError::Shutdown => write!(f, "batcher shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

@@ -1,0 +1,296 @@
+//! Named snapshot registry of compiled model variants.
+//!
+//! A serving process holds a family of compressed variants of the same
+//! (or different) models — dense, pruned, weight-set-restricted — and
+//! routes each request to one by name.  Compilation
+//! ([`Plan::compile`](crate::model::ir::Plan::compile): weight
+//! quantization + blocked panel packing) happens **once per install**,
+//! then every wave reuses the plan.  Variants live behind `Arc`:
+//! [`SnapshotRegistry::install`] replaces the map entry atomically
+//! while in-flight waves keep executing on the `Arc` they already
+//! resolved, so hot-swap and eviction never interrupt running work.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::model::spec::INPUT_ELEMS;
+use crate::model::{ModelSpec, ParallelEngine, Params, QuantConfig};
+use crate::selection::CompressionState;
+use crate::util::threadpool::PoisonedBatch;
+use anyhow::{bail, Context, Result};
+
+/// One servable model variant: a name plus a compiled engine.
+pub struct ModelVariant {
+    pub name: String,
+    pub engine: ParallelEngine,
+    /// Test/bench hook: number of upcoming waves that should fail as if
+    /// a worker had panicked (see [`Self::inject_wave_faults`]).
+    fail_waves: AtomicU64,
+}
+
+impl ModelVariant {
+    /// Wrap an already-compiled engine.
+    pub fn new(name: &str, engine: ParallelEngine) -> Self {
+        Self {
+            name: name.to_string(),
+            engine,
+            fail_waves: AtomicU64::new(0),
+        }
+    }
+
+    /// Compile a variant from params + a [`CompressionState`] using the
+    /// same [`QuantConfig`] recipe as the native backend (shared mask
+    /// recipe via [`crate::runtime::mask_options`], the state's
+    /// restricted weight sets, activation quantization on) — so the
+    /// variant a pipeline just compressed is exactly the variant the
+    /// registry serves.
+    pub fn compile(
+        name: &str,
+        spec: &ModelSpec,
+        params: &[Vec<f32>],
+        act_scales: &[f32],
+        state: &CompressionState,
+        threads: usize,
+    ) -> Self {
+        let mut wsets = vec![None; spec.n_conv];
+        for c in spec.convs() {
+            wsets[c.conv_idx] = state.layers[c.conv_idx].wset.clone();
+        }
+        let qc = QuantConfig {
+            act_scales: act_scales.to_vec(),
+            quant_on: true,
+            masks: crate::runtime::mask_options(spec, params, state),
+            wsets,
+        };
+        Self::new(name, ParallelEngine::new(spec, params, &qc, threads))
+    }
+
+    /// Logit width of this variant.
+    pub fn n_classes(&self) -> usize {
+        self.engine.plan.n_classes
+    }
+
+    /// Arm the fault hook: the next `n` waves routed through
+    /// [`Self::run_wave`] fail with a synthesized [`PoisonedBatch`]
+    /// covering every image, without any worker actually panicking.
+    /// This is how tests and benches exercise the "poisoned wave
+    /// degrades the wave, not the service" contract deterministically.
+    pub fn inject_wave_faults(&self, n: u64) {
+        self.fail_waves.fetch_add(n, Ordering::AcqRel);
+    }
+
+    /// Atomically consume one armed fault, if any.
+    fn take_injected_fault(&self) -> bool {
+        loop {
+            let cur = self.fail_waves.load(Ordering::Acquire);
+            if cur == 0 {
+                return false;
+            }
+            if self
+                .fail_waves
+                .compare_exchange(cur, cur - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// Execute one wave of independently owned images (the batcher's
+    /// unit of work), honoring any armed fault injection.
+    pub fn run_wave(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f32>>, PoisonedBatch> {
+        if self.take_injected_fault() {
+            return Err(PoisonedBatch {
+                poisoned: (0..imgs.len())
+                    .map(|i| (i, "injected wave fault (serve fault hook)".to_string()))
+                    .collect(),
+                n: imgs.len(),
+            });
+        }
+        self.engine.forward_wave(imgs)
+    }
+}
+
+/// Thread-safe map from variant name to its compiled engine.
+#[derive(Default)]
+pub struct SnapshotRegistry {
+    variants: RwLock<HashMap<String, Arc<ModelVariant>>>,
+}
+
+impl SnapshotRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install (or hot-swap) a variant under its name.  Returns the
+    /// installed `Arc`.  Waves already holding the previous `Arc` run
+    /// to completion on the old plan; waves resolved after this call
+    /// see the new one.
+    pub fn install(&self, variant: ModelVariant) -> Arc<ModelVariant> {
+        let v = Arc::new(variant);
+        self.variants
+            .write()
+            .unwrap()
+            .insert(v.name.clone(), Arc::clone(&v));
+        v
+    }
+
+    /// Resolve a variant by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelVariant>> {
+        self.variants.read().unwrap().get(name).cloned()
+    }
+
+    /// Remove a variant by name, returning it if present.  In-flight
+    /// waves holding the `Arc` are unaffected; new requests naming it
+    /// get [`ServeError::UnknownModel`](super::ServeError::UnknownModel).
+    pub fn evict(&self, name: &str) -> Option<Arc<ModelVariant>> {
+        self.variants.write().unwrap().remove(name)
+    }
+
+    /// Installed variant names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.variants.read().unwrap().keys().cloned().collect();
+        out.sort();
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load a variant from the on-disk artifact layout the runtime
+    /// writes (`<artifacts>/<model>/manifest.json` + `params.bin`,
+    /// checksummed through [`crate::util::artifact`]) and install it
+    /// under `name`.
+    ///
+    /// * spec: `manifest.json` when present, else
+    ///   [`ModelSpec::builtin`]`(model)`;
+    /// * params: `params.<tag>.bin` when `params_tag` is given (hard
+    ///   error if missing — a named tag is an explicit request), else
+    ///   `params.bin` when present, else [`Params::init_train`] (a
+    ///   fresh deterministic init, so smoke setups serve without any
+    ///   artifacts);
+    /// * activation scales: recalibrated through
+    ///   [`crate::runtime::calibrate_scales`] (the shared PJRT-free
+    ///   recipe), so the served quantization matches what training saw.
+    #[allow(clippy::too_many_arguments)]
+    pub fn load_artifact(
+        &self,
+        name: &str,
+        artifacts_dir: &Path,
+        model: &str,
+        params_tag: Option<&str>,
+        data_seed: u64,
+        calib_batches: usize,
+        threads: usize,
+    ) -> Result<Arc<ModelVariant>> {
+        let dir = artifacts_dir.join(model);
+        let manifest = dir.join("manifest.json");
+        let spec = if manifest.exists() {
+            ModelSpec::from_manifest_file(&manifest)
+                .with_context(|| format!("loading {}", manifest.display()))?
+        } else {
+            ModelSpec::builtin(model)?
+        };
+        let params = match params_tag {
+            Some(tag) => {
+                let path = dir.join(format!("params.{tag}.bin"));
+                if !path.exists() {
+                    bail!("params tag `{tag}` not found at {}", path.display());
+                }
+                Params::load(&spec, &path)?
+            }
+            None => {
+                let path = dir.join("params.bin");
+                if path.exists() {
+                    Params::load(&spec, &path)?
+                } else {
+                    Params::init_train(&spec, spec.seed)
+                }
+            }
+        };
+        let scales = crate::runtime::calibrate_scales(
+            &spec,
+            &params.tensors,
+            data_seed,
+            calib_batches.max(1),
+            threads,
+        );
+        let qc = QuantConfig::quantized(&spec, scales);
+        let engine = ParallelEngine::new(&spec, &params.tensors, &qc, threads);
+        Ok(self.install(ModelVariant::new(name, engine)))
+    }
+}
+
+/// Element count every submitted image must have.
+pub const IMG_ELEMS: usize = INPUT_ELEMS;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::tests_support::tiny_spec;
+
+    fn variant(name: &str, seed: u64) -> ModelVariant {
+        let spec = tiny_spec();
+        let p = Params::random(&spec, seed);
+        let qc = QuantConfig::float(&spec);
+        ModelVariant::new(name, ParallelEngine::new(&spec, &p.tensors, &qc, 2))
+    }
+
+    #[test]
+    fn install_get_evict_roundtrip() {
+        let reg = SnapshotRegistry::new();
+        assert!(reg.is_empty());
+        reg.install(variant("a", 1));
+        reg.install(variant("b", 2));
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("missing").is_none());
+        assert!(reg.evict("a").is_some());
+        assert!(reg.get("a").is_none());
+        assert!(reg.evict("a").is_none());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn hot_swap_leaves_old_arc_usable() {
+        let reg = SnapshotRegistry::new();
+        let old = reg.install(variant("m", 3));
+        let img = vec![0.25f32; IMG_ELEMS];
+        let before = old.run_wave(&[&img]).unwrap();
+        // Swap in a different-params variant under the same name.
+        reg.install(variant("m", 4));
+        // The held Arc still executes, bit-identically to before.
+        let again = old.run_wave(&[&img]).unwrap();
+        assert_eq!(
+            before[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            again[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // And the registry now resolves to the new engine.
+        let new = reg.get("m").unwrap();
+        let fresh = new.run_wave(&[&img]).unwrap();
+        assert_ne!(
+            before[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fresh[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn injected_faults_consume_exactly_n_waves() {
+        let v = variant("f", 5);
+        let img = vec![0.1f32; IMG_ELEMS];
+        v.inject_wave_faults(2);
+        let e1 = v.run_wave(&[&img, &img]).unwrap_err();
+        assert_eq!(e1.n, 2);
+        assert_eq!(e1.poisoned.len(), 2);
+        assert!(v.run_wave(&[&img]).is_err());
+        // Armed faults exhausted: service healthy again.
+        assert!(v.run_wave(&[&img]).is_ok());
+    }
+}

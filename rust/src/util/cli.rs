@@ -72,6 +72,22 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated number list (`--rates 200,500,1000`); absent or
+    /// empty falls back to `default`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.opt(name) {
+            None | Some("") => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        panic!("--{name} expects comma-separated numbers, got `{v}`")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     /// The conventional `--threads N` plumb-through: 0 or absent means
     /// `default` (callers pass the pool's autodetected width).
     pub fn threads_or(&self, default: usize) -> usize {

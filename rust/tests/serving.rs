@@ -1,0 +1,309 @@
+//! Serving-layer contract tests: per-request logits bit-identical to
+//! single-image `ParallelEngine::forward` at any thread count, wave
+//! packing and arrival order; registry hot-swap under concurrent load;
+//! unknown-model and poisoned-wave error paths that degrade a request
+//! or a wave — never the service.
+
+use std::sync::Arc;
+
+use wsel::model::spec::INPUT_ELEMS;
+use wsel::model::{ModelSpec, ParallelEngine, Params, QuantConfig};
+use wsel::serve::bench::wave_logits;
+use wsel::serve::{BatchPolicy, MicroBatcher, ModelVariant, ServeError, SnapshotRegistry, Ticket};
+use wsel::util::rng::Xoshiro256;
+
+/// Small two-conv net (conv → pool → strided conv → gap → fc): fast
+/// enough to serve hundreds of requests in a test, deep enough to
+/// exercise quantized convs, pooling and the fc head.
+const SERVE_MANIFEST: &str = r#"{
+  "model": "serve_tiny", "n_classes": 4, "input": [32, 32, 3],
+  "ops": [
+    {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+     "q_idx": 0, "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 32, "win": 32, "hout": 32, "wout": 32},
+    {"op": "maxpool2"},
+    {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+     "q_idx": 1, "cin": 4, "cout": 6, "k": 3, "stride": 2, "pad": 1,
+     "relu": true, "hin": 16, "win": 16, "hout": 8, "wout": 8},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc0", "w": 4, "b": 5, "q_idx": 2,
+     "din": 6, "dout": 4, "relu": false}
+  ],
+  "params": [
+    {"name": "conv0.w", "shape": [4, 3, 3, 3], "kind": "conv_w"},
+    {"name": "conv0.b", "shape": [4], "kind": "bias"},
+    {"name": "conv1.w", "shape": [6, 4, 3, 3], "kind": "conv_w"},
+    {"name": "conv1.b", "shape": [6], "kind": "bias"},
+    {"name": "fc0.w", "shape": [4, 6], "kind": "fc_w"},
+    {"name": "fc0.b", "shape": [4], "kind": "bias"}
+  ],
+  "n_conv": 2, "n_q": 3, "kset": 32, "qmax": 127, "seed": 1,
+  "set_sentinel": 1e9, "momentum": 0.9,
+  "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+  "pallas_eval": false
+}"#;
+
+fn spec() -> ModelSpec {
+    ModelSpec::from_manifest_str(SERVE_MANIFEST).expect("serve manifest")
+}
+
+fn engine(spec: &ModelSpec, param_seed: u64, threads: usize) -> ParallelEngine {
+    let p = Params::random(spec, param_seed);
+    let qc = QuantConfig::quantized(spec, vec![0.02f32; spec.n_q]);
+    ParallelEngine::new(spec, &p.tensors, &qc, threads)
+}
+
+fn images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Xoshiro256::new(seed ^ ((i as u64) << 16));
+            (0..INPUT_ELEMS).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Deterministic in-test shuffle of `0..n`.
+fn permutation(n: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256::new(seed);
+    for i in (1..n).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        idx.swap(i, j);
+    }
+    idx
+}
+
+/// The headline determinism contract: per-request logits through the
+/// batcher are bit-identical to a single-image `forward_plain` —
+/// regardless of engine thread count {1, 2, 5}, wave packing (batch=1,
+/// partial waves, one full wave) and arrival order.
+#[test]
+fn per_request_logits_bit_identical_across_threads_packing_and_order() {
+    let spec = spec();
+    let imgs = images(12, 0xBEEF);
+    for threads in [1usize, 2, 5] {
+        let eng = engine(&spec, 42, threads);
+        // Single-image references (the wave-free ground truth).
+        let refs: Vec<Vec<u32>> = imgs
+            .iter()
+            .map(|x| bits(&eng.forward_plain(x, 1).logits))
+            .collect();
+        let reg = Arc::new(SnapshotRegistry::new());
+        reg.install(ModelVariant::new("m", eng));
+        let policies = [
+            BatchPolicy::batch1(),
+            BatchPolicy {
+                max_batch: 5,
+                max_wait_us: 50_000,
+            },
+            BatchPolicy {
+                max_batch: 12,
+                max_wait_us: 50_000,
+            },
+        ];
+        for (pi, &policy) in policies.iter().enumerate() {
+            for (oi, order) in [
+                (0..imgs.len()).collect::<Vec<_>>(),
+                (0..imgs.len()).rev().collect(),
+                permutation(imgs.len(), 7 + pi as u64),
+            ]
+            .iter()
+            .enumerate()
+            {
+                let submitted: Vec<Vec<f32>> =
+                    order.iter().map(|&i| imgs[i].clone()).collect();
+                let results = wave_logits(&reg, "m", &submitted, policy);
+                for (k, &i) in order.iter().enumerate() {
+                    let got = results[k]
+                        .as_ref()
+                        .unwrap_or_else(|e| panic!("request failed: {e}"));
+                    assert_eq!(
+                        refs[i],
+                        bits(got),
+                        "threads={threads} policy#{pi} order#{oi} img{i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn unknown_model_name_is_a_per_request_error() {
+    let spec = spec();
+    let reg = Arc::new(SnapshotRegistry::new());
+    reg.install(ModelVariant::new("known", engine(&spec, 1, 2)));
+    let b = MicroBatcher::new(Arc::clone(&reg), BatchPolicy::default());
+    let pool = images(1, 3);
+    let img = &pool[0];
+    // Unknown name fails that request...
+    let t = b.submit("nope", img);
+    assert_eq!(
+        t.wait().result,
+        Err(ServeError::UnknownModel("nope".to_string()))
+    );
+    // ...while the service keeps serving the installed variant.
+    let ok = b.submit("known", img);
+    assert!(ok.wait().result.is_ok());
+    // Eviction turns a known name into an unknown one for new requests.
+    assert!(reg.evict("known").is_some());
+    let gone = b.submit("known", img);
+    assert_eq!(
+        gone.wait().result,
+        Err(ServeError::UnknownModel("known".to_string()))
+    );
+    b.shutdown();
+}
+
+/// Hot-swap under concurrent load: submitters hammer one name while the
+/// main thread swaps the variant underneath them.  Every reply must be
+/// a complete answer from exactly one of the two variants (old or new)
+/// — never an error, never a torn mix.
+#[test]
+fn registry_hot_swap_under_load() {
+    let spec = spec();
+    let imgs = images(6, 0xCAFE);
+    let eng_a = engine(&spec, 100, 2);
+    let eng_b = engine(&spec, 200, 2);
+    let refs_a: Vec<Vec<u32>> = imgs
+        .iter()
+        .map(|x| bits(&eng_a.forward_plain(x, 1).logits))
+        .collect();
+    let refs_b: Vec<Vec<u32>> = imgs
+        .iter()
+        .map(|x| bits(&eng_b.forward_plain(x, 1).logits))
+        .collect();
+    // A and B must actually disagree for the check to mean anything.
+    assert_ne!(refs_a, refs_b);
+
+    let reg = Arc::new(SnapshotRegistry::new());
+    reg.install(ModelVariant::new("m", eng_a));
+    let b = MicroBatcher::new(
+        Arc::clone(&reg),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_us: 100,
+        },
+    );
+    const PER_THREAD: usize = 40;
+    let replies: Vec<(usize, Result<Vec<f32>, ServeError>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..3usize {
+            let h = b.handle();
+            let imgs = &imgs;
+            handles.push(s.spawn(move || {
+                let mut out = Vec::with_capacity(PER_THREAD);
+                for k in 0..PER_THREAD {
+                    let i = (t + 3 * k) % imgs.len();
+                    let ticket = h.submit("m", &imgs[i]);
+                    out.push((i, ticket.wait().result));
+                }
+                out
+            }));
+        }
+        // Swap mid-flight.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        reg.install(ModelVariant::new("m", eng_b));
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("submitter panicked"))
+            .collect()
+    });
+    let mut from_a = 0usize;
+    let mut from_b = 0usize;
+    for (i, r) in &replies {
+        let got = bits(r.as_ref().unwrap_or_else(|e| panic!("hot-swap broke a request: {e}")));
+        if got == refs_a[*i] {
+            from_a += 1;
+        } else if got == refs_b[*i] {
+            from_b += 1;
+        } else {
+            panic!("img{i}: logits match neither variant");
+        }
+    }
+    assert_eq!(from_a + from_b, replies.len());
+    // After the swap has completed, new requests must be served by the
+    // new variant (timing decides how many in-flight ones were).
+    let post = b.submit("m", &imgs[0]).wait().result.expect("post-swap request");
+    assert_eq!(bits(&post), refs_b[0], "post-swap request served by old variant");
+    b.shutdown();
+}
+
+/// A poisoned wave fails exactly its own requests; the dispatcher and
+/// the following waves are untouched.
+#[test]
+fn poisoned_wave_degrades_wave_not_service() {
+    let spec = spec();
+    let reg = Arc::new(SnapshotRegistry::new());
+    let v = reg.install(ModelVariant::new("m", engine(&spec, 5, 2)));
+    let pool = images(1, 8);
+    let img = &pool[0];
+
+    // batch1 policy: one wave per request, so exactly one armed fault
+    // fails exactly one request.
+    let b = MicroBatcher::new(Arc::clone(&reg), BatchPolicy::batch1());
+    v.inject_wave_faults(1);
+    let bad = b.submit("m", img).wait().result;
+    match bad {
+        Err(ServeError::WavePoisoned(msg)) => {
+            assert!(msg.contains("injected wave fault"), "{msg}");
+        }
+        other => panic!("want WavePoisoned, got {other:?}"),
+    }
+    let good = b.submit("m", img).wait().result;
+    assert!(good.is_ok(), "service did not recover: {good:?}");
+    let stats = b.shutdown();
+    assert_eq!(stats.poisoned_waves, 1);
+    assert_eq!(stats.requests, 2);
+
+    // Coalescing policy: one armed fault fails the whole wave it lands
+    // on (every co-traveler), then the next wave is healthy.
+    let b = MicroBatcher::new(
+        Arc::clone(&reg),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_us: 100_000,
+        },
+    );
+    v.inject_wave_faults(1);
+    let tickets: Vec<Ticket> = (0..4).map(|_| b.submit("m", img)).collect();
+    let results: Vec<_> = tickets.iter().map(|t| t.wait().result).collect();
+    let poisoned = results
+        .iter()
+        .filter(|r| matches!(r, Err(ServeError::WavePoisoned(_))))
+        .count();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    // Wave packing under timing jitter may split the burst, but the
+    // armed fault must fail at least one request, nothing may fail for
+    // any other reason, and once the fault is consumed requests succeed.
+    assert!(poisoned >= 1, "no request saw the armed fault: {results:?}");
+    assert_eq!(poisoned + ok, results.len(), "unexpected error kind: {results:?}");
+    assert!(b.submit("m", img).wait().result.is_ok());
+    b.shutdown();
+}
+
+/// End-to-end smoke of the sustained-load driver itself (tiny grid):
+/// full report shape, no lost requests, monotone percentiles.
+#[test]
+fn serve_bench_smoke_grid() {
+    let cfg = wsel::serve::ServeBenchCfg {
+        rates: vec![4000.0],
+        include_saturated: true,
+        requests: 16,
+        max_batch: 8,
+        max_wait_us: 100,
+        seed: 11,
+        threads: 2,
+    };
+    let (json, cells) = wsel::serve::run_serve_bench(&cfg).unwrap();
+    assert_eq!(cells.len(), 8); // 2 variants x 2 rates x 2 policies
+    assert_eq!(wsel::serve::bench::validate_report(&json).unwrap(), 8);
+    for c in &cells {
+        assert_eq!(c.ok + c.errors, c.n);
+        assert_eq!(c.errors, 0, "{c:?}");
+    }
+}

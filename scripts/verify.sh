@@ -8,7 +8,9 @@
 #            tile-power engine vs the statistical energy model on a
 #            synthetic capture) plus the block-sparse engine property
 #            tests (release mode: prune-ratio/thread sweep vs the
-#            scalar reference)
+#            scalar reference) and the serving smoke (batcher contract
+#            tests + `wsel serve-bench --quick`, which self-checks the
+#            emitted report: parse + monotone p50/p95/p99 per cell)
 #
 # Both modes end with a golden-drift gate: if `cargo test` bootstrapped
 # or rewrote anything under rust/tests/golden/, verification fails so a
@@ -57,6 +59,15 @@ if [ "$QUICK" -eq 1 ]; then
     cargo test --release -q --test exact_power quick_exact_vs_model
     echo "== block-sparse engine property tests (--quick) =="
     cargo test --release -q --test engine_parallel
+    echo "== serving smoke (--quick): registry + micro-batcher under load =="
+    # Batcher determinism / hot-swap / error-path contract tests, then a
+    # tiny sustained-load grid through the real CLI.  serve-bench writes
+    # the report and re-loads it through validate_report (parse + p99 >=
+    # p95 >= p50 per cell), so a torn or non-monotone report fails here.
+    cargo test --release -q --test serving
+    SERVE_OUT="$(mktemp -t wsel_serving_XXXX.json)"
+    trap 'rm -f "$SERVE_OUT"' EXIT
+    cargo run --release -q -- serve-bench --quick --out "$SERVE_OUT"
     echo "== cargo clippy skipped (--quick) =="
 else
     echo "== cargo clippy -D warnings (soft-fail if unavailable) =="
