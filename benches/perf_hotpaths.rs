@@ -15,6 +15,10 @@
 //!     batch-parallel (the PR-4 accuracy-oracle hot path; asserts the
 //!     ≥2× win at 4+ threads and bit-identical trained params),
 //!   * selection loop (greedy elimination, proxy mode),
+//!   * §4.3 schedule search on the built-in lenet5: exhaustive sweep
+//!     vs successive halving vs a warm persistent accuracy cache
+//!     (asserts halving pays <= 50% of the exhaustive fine-tune bill
+//!     and the warm rerun pays zero; emits BENCH_schedule_search.json),
 //!   * PJRT eval-graph execution latency.
 //!
 //! Speedup assertions are skipped when fewer than 4 hardware threads
@@ -796,6 +800,178 @@ fn main() {
             Ok(()) => println!("      wrote {}", path.display()),
             Err(e) => eprintln!("      could not write {}: {e}", path.display()),
         }
+    }
+
+    // ---- schedule search: exhaustive sweep vs successive halving ----------
+    // The §4.3 oracle-efficiency deliverable, on the built-in lenet5
+    // (native backend, no artifacts): one trained checkpoint, one
+    // infeasible candidate menu (δ < 0 puts the accept threshold above
+    // 1.0, so every trial is rejected — the worst-case regime the rung
+    // pyramid is built for, and the only one with a deterministic
+    // fine-tune bill).  The legacy exhaustive sweep pays the full
+    // menu × fine_tune_steps per layer; --halving-rungs 4 pays the
+    // rung pyramid.  Gates (4+ cores, WSEL_PERF_ASSERT!=0): halving
+    // spends <= 50% of the exhaustive fine-tune steps, lands within
+    // the paper's default accuracy budget (0.03) of the exhaustive
+    // result, and a second run against the warm persistent accuracy
+    // cache performs ZERO oracle fine-tunes.  Always asserted: the
+    // warm-cache rerun is bit-identical to the first halving run.
+    {
+        use wsel::coordinator::{Pipeline, PipelineParams};
+        use wsel::schedule::{energy_prioritized_with, AccCache};
+        use wsel::util::json::Json;
+
+        let spec = wsel::model::ModelSpec::builtin("lenet5").expect("builtin lenet5");
+        let p0 = wsel::model::Params::random(&spec, 11);
+        let dir = std::env::temp_dir().join("wsel_perf_schedule_search");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rt = wsel::runtime::ModelRuntime::from_spec_native(
+            spec.clone(),
+            p0.tensors.clone(),
+            dir.clone(),
+        );
+        let mut pp = PipelineParams::quick();
+        pp.threads = threads;
+        let mut p = Pipeline::from_runtime(rt, pp);
+        p.train_baseline().expect("train baseline");
+        p.profile().expect("profile");
+        assert!(
+            p.save_search_state("bench-sched-base"),
+            "snapshot trained state"
+        );
+
+        let mut sp = ScheduleParams {
+            prune_ratios: vec![0.95, 0.9, 0.85, 0.8],
+            k_targets: vec![4, 6, 8],
+            delta: -1.0,
+            fine_tune_steps: 8,
+            acc0: p.acc0,
+            ..Default::default()
+        };
+        sp.greedy.threads = threads;
+        let n_conv = spec.n_conv;
+
+        assert!(p.load_search_state("bench-sched-base"));
+        let (ft0, ev0) = (p.ft_steps_total, p.eval_count);
+        let t0 = std::time::Instant::now();
+        let ex = energy_prioritized_with(&mut p, n_conv, &sp, None, None)
+            .expect("exhaustive search")
+            .expect("no trial budget");
+        let ex_ns = t0.elapsed().as_nanos();
+        let (ex_ft, ex_ev) = (p.ft_steps_total - ft0, p.eval_count - ev0);
+        println!(
+            "bench perf/schedule_search_exhaustive   {:>10}  ft_steps={ex_ft:<4} evals={ex_ev}",
+            wsel::bench::fmt_ns(ex_ns)
+        );
+
+        let mut sp_h = sp.clone();
+        sp_h.halving_rungs = 4;
+        sp_h.rung_frac = 0.1;
+        let cache_path = dir.join("acc_cache.json");
+        let mut cache = AccCache::at(cache_path.clone()).expect("accuracy cache");
+        assert!(p.load_search_state("bench-sched-base"));
+        let (ft1, ev1) = (p.ft_steps_total, p.eval_count);
+        let t1 = std::time::Instant::now();
+        let hv = energy_prioritized_with(&mut p, n_conv, &sp_h, None, Some(&mut cache))
+            .expect("halving search")
+            .expect("no trial budget");
+        let hv_ns = t1.elapsed().as_nanos();
+        let (hv_ft, hv_ev) = (p.ft_steps_total - ft1, p.eval_count - ev1);
+        println!(
+            "bench perf/schedule_search_halving      {:>10}  ft_steps={hv_ft:<4} evals={hv_ev}  ({} misses -> cache)",
+            wsel::bench::fmt_ns(hv_ns),
+            cache.misses
+        );
+
+        // Warm rerun: fresh cache handle over the same file, oracle
+        // restored to the same trained checkpoint.
+        let mut warm_cache = AccCache::at(cache_path.clone()).expect("warm cache");
+        assert!(p.load_search_state("bench-sched-base"));
+        let (ft2, ev2) = (p.ft_steps_total, p.eval_count);
+        let t2 = std::time::Instant::now();
+        let wm = energy_prioritized_with(&mut p, n_conv, &sp_h, None, Some(&mut warm_cache))
+            .expect("warm search")
+            .expect("no trial budget");
+        let wm_ns = t2.elapsed().as_nanos();
+        let (wm_ft, wm_ev) = (p.ft_steps_total - ft2, p.eval_count - ev2);
+        println!(
+            "bench perf/schedule_search_warm_cache   {:>10}  ft_steps={wm_ft:<4} evals={wm_ev}  ({} hits / {} misses)",
+            wsel::bench::fmt_ns(wm_ns),
+            warm_cache.hits,
+            warm_cache.misses
+        );
+        assert_eq!(
+            wm.to_json().to_string(),
+            hv.to_json().to_string(),
+            "warm-cache rerun must be bit-identical to the first halving run"
+        );
+
+        if perf_asserts_enabled() {
+            assert!(
+                2 * hv_ft <= ex_ft,
+                "halving must spend <= 50% of the exhaustive fine-tune bill (got {hv_ft} vs {ex_ft})"
+            );
+            assert!(
+                hv.final_accuracy >= ex.final_accuracy - 0.03,
+                "halving accuracy must land within the paper's budget of the exhaustive \
+                 result (got {:.4} vs {:.4})",
+                hv.final_accuracy,
+                ex.final_accuracy
+            );
+            assert_eq!(wm_ft, 0, "warm cache must eliminate every oracle fine-tune");
+            assert_eq!(warm_cache.misses, 0, "warm cache must serve every trial");
+            assert!(warm_cache.hits > 0);
+        } else {
+            println!(
+                "      (schedule-search oracle-cost assertions skipped: <4 cores or WSEL_PERF_ASSERT=0)"
+            );
+        }
+
+        let json = Json::obj(vec![
+            ("bench", Json::str("schedule_search")),
+            ("model", Json::str("lenet5")),
+            ("n_conv", Json::num(n_conv as f64)),
+            ("candidates_per_layer", Json::num(12.0)),
+            ("fine_tune_steps", Json::num(sp.fine_tune_steps as f64)),
+            ("halving_rungs", Json::num(sp_h.halving_rungs as f64)),
+            ("rung_frac", Json::num(sp_h.rung_frac)),
+            (
+                "exhaustive",
+                Json::obj(vec![
+                    ("ft_steps", Json::num(ex_ft as f64)),
+                    ("evals", Json::num(ex_ev as f64)),
+                    ("median_ns", Json::num(ex_ns as f64)),
+                    ("final_accuracy", Json::num(ex.final_accuracy)),
+                ]),
+            ),
+            (
+                "halving",
+                Json::obj(vec![
+                    ("ft_steps", Json::num(hv_ft as f64)),
+                    ("evals", Json::num(hv_ev as f64)),
+                    ("median_ns", Json::num(hv_ns as f64)),
+                    ("final_accuracy", Json::num(hv.final_accuracy)),
+                    ("ft_fraction_of_exhaustive", Json::num(hv_ft as f64 / ex_ft.max(1) as f64)),
+                ]),
+            ),
+            (
+                "warm_cache",
+                Json::obj(vec![
+                    ("ft_steps", Json::num(wm_ft as f64)),
+                    ("evals", Json::num(wm_ev as f64)),
+                    ("median_ns", Json::num(wm_ns as f64)),
+                    ("cache_hits", Json::num(warm_cache.hits as f64)),
+                    ("cache_misses", Json::num(warm_cache.misses as f64)),
+                ]),
+            ),
+        ]);
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("BENCH_schedule_search.json");
+        match wsel::util::artifact::write_json_atomic(&path, &json) {
+            Ok(()) => println!("      wrote {}", path.display()),
+            Err(e) => eprintln!("      could not write {}: {e}", path.display()),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     // ---- pipeline-dependent paths (need artifacts) ------------------------

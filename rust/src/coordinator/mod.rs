@@ -18,8 +18,7 @@ use crate::model::{CaptureSink, ParallelEngine, QuantConfig};
 use crate::quant;
 use crate::runtime::{BackendChoice, LrSchedule, ModelRuntime, ResumeOpts};
 use crate::schedule::{
-    energy_prioritized, energy_prioritized_resumable, ScheduleParams, ScheduleResult,
-    SearchJournal,
+    energy_prioritized_with, AccCache, ScheduleParams, ScheduleResult, SearchJournal,
 };
 use crate::selection::{AccuracyOracle, CompressionState};
 use crate::stats::{LayerStats, StatsSink};
@@ -434,14 +433,10 @@ impl Pipeline {
     }
 
     /// Phase 4: the §4.3 schedule.
-    pub fn compress(&mut self, mut sp: ScheduleParams) -> Result<ScheduleResult> {
-        assert!(!self.tables.is_empty(), "profile() before compress()");
-        sp.acc0 = self.acc0;
-        if sp.greedy.threads == 0 {
-            sp.greedy.threads = self.pp.threads;
-        }
-        let n_conv = self.rt.spec.n_conv;
-        Ok(energy_prioritized(self, n_conv, &sp))
+    pub fn compress(&mut self, sp: ScheduleParams) -> Result<ScheduleResult> {
+        Ok(self
+            .compress_opts(sp, None, None)?
+            .expect("no trial budget set: search runs to completion"))
     }
 
     /// [`Self::compress`] with a persistent per-candidate journal at
@@ -450,18 +445,48 @@ impl Pipeline {
     /// state snapshots).  `--resume` on the CLI.
     pub fn compress_resumable(
         &mut self,
-        mut sp: ScheduleParams,
+        sp: ScheduleParams,
         journal_path: &std::path::Path,
     ) -> Result<ScheduleResult> {
+        Ok(self
+            .compress_opts(sp, Some(journal_path), None)?
+            .expect("no trial budget set: search runs to completion"))
+    }
+
+    /// Full-control compression entry point: optional resumable journal
+    /// (`--resume`) and optional persistent accuracy cache
+    /// (`--acc-cache`) for the oracle-efficient successive-halving
+    /// search.  Returns `Ok(None)` only when the journal carries a
+    /// per-invocation trial budget and it is exhausted.
+    pub fn compress_opts(
+        &mut self,
+        mut sp: ScheduleParams,
+        journal_path: Option<&std::path::Path>,
+        cache_path: Option<&std::path::Path>,
+    ) -> Result<Option<ScheduleResult>> {
         assert!(!self.tables.is_empty(), "profile() before compress()");
         sp.acc0 = self.acc0;
         if sp.greedy.threads == 0 {
             sp.greedy.threads = self.pp.threads;
         }
         let n_conv = self.rt.spec.n_conv;
-        let mut journal = SearchJournal::new(journal_path.to_path_buf(), "schedule-search");
-        let res = energy_prioritized_resumable(self, n_conv, &sp, &mut journal)?;
-        Ok(res.expect("no trial budget set: search runs to completion"))
+        let mut journal =
+            journal_path.map(|p| SearchJournal::new(p.to_path_buf(), "schedule-search"));
+        let mut cache = match cache_path {
+            Some(p) => Some(AccCache::at(p.to_path_buf())?),
+            None => None,
+        };
+        let res = energy_prioritized_with(self, n_conv, &sp, journal.as_mut(), cache.as_mut())?;
+        if let Some(c) = &cache {
+            crate::info!(
+                "schedule accuracy cache {}: {} entries ({} hits / {} misses this run)",
+                c.path().expect("persistent").display(),
+                c.len(),
+                c.hits,
+                c.misses
+            );
+        }
+        Ok(res)
     }
 
     /// Evaluate an arbitrary state: fine-tune then accuracy + energy
@@ -568,5 +593,39 @@ impl AccuracyOracle for Pipeline {
                 false
             }
         }
+    }
+
+    fn drop_search_state(&mut self, tag: &str) {
+        self.rt.drop_state_snapshot(tag);
+    }
+
+    /// Identity of everything the oracle's accuracy numbers depend on
+    /// besides the compression state: model spec, data recipe,
+    /// evaluation size, fine-tune learning rate, and a digest of the
+    /// starting parameters + activation scales.  Keys the persistent
+    /// accuracy cache, so entries warmed under one trained checkpoint
+    /// are never served against another.
+    fn search_context(&mut self) -> String {
+        let mut bytes: Vec<u8> = Vec::new();
+        for t in &self.rt.params {
+            for &v in t {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for &s in &self.rt.act_scales {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        format!(
+            "{}|seed={}|val={}|lr={}|params={:016x}",
+            self.rt.spec.name,
+            self.rt.data_seed,
+            self.pp.val_batches,
+            self.pp.lr.base,
+            crate::schedule::acc_cache::fnv1a64(&bytes)
+        )
+    }
+
+    fn ft_steps(&self) -> usize {
+        self.ft_steps_total
     }
 }

@@ -26,7 +26,14 @@ subcommands:
   train      --model <m> [--float-steps N] [--qat-steps N] [--lr F]
   profile    --model <m> [--quick]
   compress   --model <m> [--delta F] [--max-layers N] [--ft-steps N]
+             [--halving-rungs N] [--rung-frac F] [--acc-cache <path>]
              [--resume] [--quick]
+             (--halving-rungs >= 1 enables the oracle-efficient search:
+              candidates warm-start from the accepted-path snapshot and
+              fine-tune in doubling rung budgets, top half surviving
+              each rung; --acc-cache persists trial accuracies so
+              repeated searches skip oracle calls, and implies at least
+              one rung)
   baseline   --model <m> --method powerpruning|naive16|naive20 [--quick]
   eval       --model <m>
   faults     --model <m> [--flips 1,2,4,8] [--fault-seed S]
@@ -128,6 +135,8 @@ fn compress_params(args: &Args, acc_quick: bool) -> ScheduleParams {
         delta: args.f64_or("delta", 0.03),
         fine_tune_steps: args.usize_or("ft-steps", if acc_quick { 10 } else { 60 }),
         max_layers: args.opt("max-layers").map(|v| v.parse().unwrap()),
+        halving_rungs: args.usize_or("halving-rungs", 0),
+        rung_frac: args.f64_or("rung-frac", 0.25),
         ..Default::default()
     };
     if acc_quick {
@@ -142,14 +151,19 @@ fn compress_params(args: &Args, acc_quick: bool) -> ScheduleParams {
 fn run_search(
     p: &mut Pipeline,
     args: &Args,
-    sp: ScheduleParams,
+    mut sp: ScheduleParams,
 ) -> Result<wsel::schedule::ScheduleResult> {
-    if args.flag("resume") {
-        let journal = p.rt.dir().join("schedule.journal.json");
-        p.compress_resumable(sp, &journal)
-    } else {
-        p.compress(sp)
+    let cache = args.opt("acc-cache").map(std::path::PathBuf::from);
+    if cache.is_some() && sp.halving_rungs == 0 {
+        // A persistent accuracy cache rides on the warm-started search
+        // (content-addressed snapshots): imply a single rung.
+        sp.halving_rungs = 1;
     }
+    let journal = args
+        .flag("resume")
+        .then(|| p.rt.dir().join("schedule.journal.json"));
+    let res = p.compress_opts(sp, journal.as_deref(), cache.as_deref())?;
+    Ok(res.expect("no trial budget set: search runs to completion"))
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
@@ -405,6 +419,9 @@ fn main() -> Result<()> {
             "delta",
             "max-layers",
             "ft-steps",
+            "halving-rungs",
+            "rung-frac",
+            "acc-cache",
             "val-batches",
             "method",
             "table",

@@ -1016,6 +1016,13 @@ impl ModelRuntime {
         Ok(self.try_adopt_checkpoint(tag, 0)?.is_some())
     }
 
+    /// Delete the snapshot stored for `tag`, if any — cleanup for
+    /// content-addressed schedule-search snapshots that can no longer
+    /// be served (e.g. a session-only accuracy cache was discarded).
+    pub fn drop_state_snapshot(&self, tag: &str) {
+        let _ = std::fs::remove_file(self.checkpoint_path(tag));
+    }
+
     /// Accuracy over `n_batches` of the given split (batch = spec eval
     /// batch).  Returns fraction correct.
     pub fn evaluate(

@@ -1,0 +1,236 @@
+//! Persistent accuracy cache for the oracle-efficient §4.3 search.
+//!
+//! Every warm-started trial of the successive-halving schedule search
+//! is a pure function of `(search context, trial compression state,
+//! cumulative fine-tune steps)` — the candidate fine-tunes from the
+//! shared accepted-path snapshot, never from another trial's drifted
+//! params.  That makes its measured accuracy cacheable: [`AccCache`]
+//! stores `key hash → accuracy` (checksummed artifact JSON via
+//! [`crate::util::artifact`]), so repeated searches and `--resume` runs
+//! skip the oracle entirely on hits.
+//!
+//! A cache hit only *fully* replaces the oracle call when the trial's
+//! fine-tuned state snapshot (saved under the content-addressed tag
+//! [`acc_tag`]) is still loadable — the search re-validates that at hit
+//! time, so a cache that outlives its snapshots degrades to a miss
+//! instead of silently continuing from the wrong parameters.
+
+use crate::selection::CompressionState;
+use crate::util::artifact;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// FNV-1a 64-bit — the cache's stable, dependency-free key hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Canonical digest of a compression state: per layer, the prune-ratio
+/// bits and the restricted set's codes.  Two states digest equal iff
+/// they are config-identical, which (under a fixed search context) is
+/// what makes warm-started trial accuracies reusable.
+pub fn state_digest(state: &CompressionState) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for l in &state.layers {
+        let _ = write!(s, "{:x}:", l.prune_ratio.to_bits());
+        if let Some(w) = &l.wset {
+            for &c in w.codes() {
+                let _ = write!(s, "{c},");
+            }
+        }
+        s.push(';');
+    }
+    s
+}
+
+/// Hex cache key for one warm-started trial: context + fine-tune recipe
+/// + target layer + cumulative fine-tune steps + full trial state.
+pub fn trial_key(
+    ctx: &str,
+    fine_tune_steps: usize,
+    conv_idx: usize,
+    cum_steps: usize,
+    trial: &CompressionState,
+) -> String {
+    let s = format!(
+        "{ctx}|ft={fine_tune_steps}|conv={conv_idx}|steps={cum_steps}|{}",
+        state_digest(trial)
+    );
+    format!("{:016x}", fnv1a64(s.as_bytes()))
+}
+
+/// Hex key of the accepted-path base state (the shared warm-start
+/// point): context + fine-tune recipe + accepted state, no candidate.
+pub fn path_key(ctx: &str, fine_tune_steps: usize, state: &CompressionState) -> String {
+    let s = format!("{ctx}|ft={fine_tune_steps}|path|{}", state_digest(state));
+    format!("{:016x}", fnv1a64(s.as_bytes()))
+}
+
+/// Oracle snapshot tag for a cache key — content-addressed, so a second
+/// search (or a resumed one) recomputes the same tag and finds the
+/// fine-tuned state on disk.
+pub fn acc_tag(key_hex: &str) -> String {
+    format!("acc-{key_hex}")
+}
+
+/// The persistent (or session-only) accuracy cache.
+pub struct AccCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, f64>,
+    /// Hits/misses served this session (cost accounting for benches).
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl AccCache {
+    /// In-memory cache for a single search invocation (always used when
+    /// the caller does not pass one — journal resume seeds it from the
+    /// recorded trials).
+    pub fn ephemeral() -> Self {
+        Self {
+            path: None,
+            entries: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Open (or create) a persistent cache at `path`.  A corrupt file
+    /// is an error naming the path — never silently consumed.
+    pub fn at(path: PathBuf) -> Result<Self> {
+        let mut c = Self {
+            path: Some(path.clone()),
+            entries: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+        };
+        if path.exists() {
+            let json = artifact::load_json(&path)
+                .with_context(|| format!("accuracy cache {}", path.display()))?;
+            let bad = || anyhow!("accuracy cache {}: malformed entries", path.display());
+            let entries = json.get("entries").ok_or_else(bad)?;
+            match entries {
+                Json::Obj(m) => {
+                    for (k, v) in m {
+                        c.entries
+                            .insert(k.clone(), v.as_f64().ok_or_else(bad)?);
+                    }
+                }
+                _ => return Err(bad()),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Look up a trial accuracy by hex key (does not touch hit/miss
+    /// counters — the search does, after snapshot revalidation).
+    pub fn get(&self, key_hex: &str) -> Option<f64> {
+        self.entries.get(key_hex).copied()
+    }
+
+    /// Record a trial accuracy; persistent caches are rewritten
+    /// atomically on every put, so a killed search loses at most the
+    /// in-flight entry.
+    pub fn put(&mut self, key_hex: &str, acc: f64) -> Result<()> {
+        self.entries.insert(key_hex.to_string(), acc);
+        self.save()
+    }
+
+    fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let entries = Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v)))
+                .collect(),
+        );
+        let json = Json::obj(vec![("version", Json::num(1.0)), ("entries", entries)]);
+        artifact::write_json_atomic(path, &json)
+            .with_context(|| format!("writing accuracy cache {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::WeightSet;
+    use crate::selection::LayerConfig;
+
+    #[test]
+    fn digest_distinguishes_configs() {
+        let mut a = CompressionState::dense(2);
+        let b = a.clone();
+        a.layers[1] = LayerConfig {
+            prune_ratio: 0.5,
+            wset: Some(WeightSet::new(vec![-3, 0, 3])),
+        };
+        assert_ne!(state_digest(&a), state_digest(&b));
+        assert_ne!(
+            trial_key("ctx", 10, 1, 5, &a),
+            trial_key("ctx", 10, 1, 5, &b)
+        );
+        // Same config, different cumulative budget → different key.
+        assert_ne!(
+            trial_key("ctx", 10, 1, 5, &a),
+            trial_key("ctx", 10, 1, 10, &a)
+        );
+        // Different context → different key.
+        assert_ne!(
+            trial_key("x", 10, 1, 5, &a),
+            trial_key("y", 10, 1, 5, &a)
+        );
+    }
+
+    #[test]
+    fn persistent_roundtrip_and_corruption() {
+        let path = std::env::temp_dir()
+            .join(format!("wsel_acc_cache_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut c = AccCache::at(path.clone()).unwrap();
+        assert!(c.is_empty());
+        c.put("00ff", 0.912345).unwrap();
+        c.put("01aa", 0.5).unwrap();
+        let c2 = AccCache::at(path.clone()).unwrap();
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.get("00ff").unwrap().to_bits(), 0.912345f64.to_bits());
+        assert_eq!(c2.get("missing"), None);
+        // Corruption is surfaced with the path, not consumed.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:?}", AccCache::at(path.clone()).unwrap_err());
+        assert!(err.contains(&path.display().to_string()), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn ephemeral_never_writes() {
+        let mut c = AccCache::ephemeral();
+        c.put("aa", 1.0).unwrap();
+        assert_eq!(c.get("aa"), Some(1.0));
+        assert!(c.path().is_none());
+    }
+}

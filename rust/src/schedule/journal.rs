@@ -34,6 +34,9 @@ pub struct TrialRecord {
     pub conv_idx: usize,
     /// Index into the layer's (ratio × K) candidate menu.
     pub cand_idx: usize,
+    /// Successive-halving rung this trial ran at (0 in the legacy
+    /// exhaustive mode — every candidate gets the full budget at once).
+    pub rung: usize,
     pub prune_ratio: f64,
     pub k_target: usize,
     pub accepted: bool,
@@ -41,6 +44,11 @@ pub struct TrialRecord {
     pub accuracy: f64,
     /// Codes of the trial's restricted weight set.
     pub wset: Vec<i32>,
+    /// Hex accuracy-cache key of this trial (empty in legacy mode).
+    /// Resume seeds the session cache from it, and
+    /// [`crate::schedule::acc_cache::acc_tag`] of it names the oracle
+    /// snapshot holding the trial's fine-tuned state.
+    pub key: String,
 }
 
 /// On-disk journal of a resumable schedule search.
@@ -142,11 +150,13 @@ impl SearchJournal {
                     order_pos: t.get("order_pos").and_then(Json::as_usize).ok_or_else(|| bad("trial order_pos"))?,
                     conv_idx: t.get("conv_idx").and_then(Json::as_usize).ok_or_else(|| bad("trial conv_idx"))?,
                     cand_idx: t.get("cand_idx").and_then(Json::as_usize).ok_or_else(|| bad("trial cand_idx"))?,
+                    rung: t.get("rung").and_then(Json::as_usize).ok_or_else(|| bad("trial rung"))?,
                     prune_ratio: t.get("prune_ratio").and_then(Json::as_f64).ok_or_else(|| bad("trial prune_ratio"))?,
                     k_target: t.get("k_target").and_then(Json::as_usize).ok_or_else(|| bad("trial k_target"))?,
                     accepted: t.get("accepted").and_then(Json::as_bool).ok_or_else(|| bad("trial accepted"))?,
                     accuracy: t.get("accuracy").and_then(Json::as_f64).ok_or_else(|| bad("trial accuracy"))?,
                     wset: codes,
+                    key: t.get("key").and_then(Json::as_str).unwrap_or("").to_string(),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -196,11 +206,13 @@ impl SearchJournal {
                 ("order_pos", Json::num(t.order_pos as f64)),
                 ("conv_idx", Json::num(t.conv_idx as f64)),
                 ("cand_idx", Json::num(t.cand_idx as f64)),
+                ("rung", Json::num(t.rung as f64)),
                 ("prune_ratio", Json::num(t.prune_ratio)),
                 ("k_target", Json::num(t.k_target as f64)),
                 ("accepted", Json::Bool(t.accepted)),
                 ("accuracy", Json::num(t.accuracy)),
                 ("wset", Json::arr(t.wset.iter().map(|&c| Json::num(c as f64)))),
+                ("key", Json::str(&t.key)),
             ])
         }));
         let outcomes = Json::arr(self.outcomes.iter().map(|oc| {
@@ -246,11 +258,13 @@ mod tests {
             order_pos: 0,
             conv_idx: 0,
             cand_idx: 1,
+            rung: 2,
             prune_ratio: 0.5,
             k_target: 24,
             accepted: true,
             accuracy: 0.94321,
             wset: vec![-96, -32, 0, 32, 96],
+            key: "00deadbeef00f00d".to_string(),
         });
         j.outcomes.push(LayerOutcome {
             conv_idx: 0,
@@ -276,6 +290,7 @@ mod tests {
         assert_eq!(k.trials.len(), 1);
         let (a, b) = (&k.trials[0], &j.trials[0]);
         assert_eq!((a.order_pos, a.conv_idx, a.cand_idx), (0, 0, 1));
+        assert_eq!((a.rung, a.key.as_str()), (2, "00deadbeef00f00d"));
         assert_eq!(a.wset, b.wset);
         assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
         assert_eq!(k.outcomes.len(), 1);

@@ -16,9 +16,12 @@ use crate::selection::{
 };
 use crate::util::threadpool::parallel_map;
 use anyhow::{anyhow, Result};
+use std::cmp::Ordering;
 use std::sync::Arc;
 
+pub mod acc_cache;
 pub mod journal;
+pub use acc_cache::AccCache;
 pub use journal::{SearchJournal, TrialRecord};
 
 /// A candidate per-layer configuration of the §4.3 sweep.
@@ -47,6 +50,20 @@ pub struct ScheduleParams {
     pub max_layers: Option<usize>,
     /// Minimum energy share ρ_ℓ for a layer to be worth compressing.
     pub min_share: f64,
+    /// Successive-halving rungs for the oracle-efficient search
+    /// (`--halving-rungs`): `0` = the legacy exhaustive sweep (every
+    /// candidate pays the full fine-tune budget, and rejected trials'
+    /// fine-tune drift carries into later candidates); `1` =
+    /// warm-started single rung (every candidate fine-tunes from the
+    /// shared accepted-path snapshot at full budget, with accuracy
+    /// caching); `>= 2` = true successive halving (rung budgets double
+    /// from `rung_frac × fine_tune_steps`, only the top half survives
+    /// each rung).  Ignored when `fine_tune_steps == 0`, when the
+    /// greedy elimination consults the oracle per removal, or when the
+    /// oracle cannot snapshot state.
+    pub halving_rungs: usize,
+    /// First-rung fraction of `fine_tune_steps` (`--rung-frac`).
+    pub rung_frac: f64,
     pub greedy: GreedyParams,
 }
 
@@ -60,6 +77,8 @@ impl Default for ScheduleParams {
             fine_tune_steps: 50,
             max_layers: None,
             min_share: 0.005,
+            halving_rungs: 0,
+            rung_frac: 0.25,
             greedy: GreedyParams::default(),
         }
     }
@@ -204,7 +223,7 @@ pub fn energy_prioritized<H: LayerModeler + AccuracyOracle>(
     n_conv: usize,
     sp: &ScheduleParams,
 ) -> ScheduleResult {
-    run_schedule(host, n_conv, sp, None)
+    run_schedule(host, n_conv, sp, None, None)
         .expect("journal-free schedule search is infallible")
         .expect("journal-free schedule search has no trial budget")
 }
@@ -228,7 +247,51 @@ pub fn energy_prioritized_resumable<H: LayerModeler + AccuracyOracle>(
     sp: &ScheduleParams,
     journal: &mut SearchJournal,
 ) -> Result<Option<ScheduleResult>> {
-    run_schedule(host, n_conv, sp, Some(journal))
+    run_schedule(host, n_conv, sp, Some(journal), None)
+}
+
+/// Full-control entry point: optional journal (resumable search) and
+/// optional persistent accuracy cache shared across searches.  Without
+/// a cache, the oracle-efficient mode still runs against a session-only
+/// cache (seeded from the journal's recorded trials on resume).
+pub fn energy_prioritized_with<H: LayerModeler + AccuracyOracle>(
+    host: &mut H,
+    n_conv: usize,
+    sp: &ScheduleParams,
+    journal: Option<&mut SearchJournal>,
+    cache: Option<&mut AccCache>,
+) -> Result<Option<ScheduleResult>> {
+    run_schedule(host, n_conv, sp, journal, cache)
+}
+
+/// Per-rung fine-tune *increments* for the successive-halving search:
+/// cumulative budgets double from `frac × total` and the last rung tops
+/// up to exactly `total`; rungs whose increment rounds to zero collapse
+/// away, so the returned increments always sum to `total`.
+fn rung_schedule(total: usize, rungs: usize, frac: f64) -> Vec<usize> {
+    if rungs <= 1 || total == 0 {
+        return vec![total];
+    }
+    let frac = if frac > 0.0 && frac < 1.0 {
+        frac
+    } else {
+        1.0 / rungs as f64
+    };
+    let mut steps = Vec::new();
+    let mut prev = 0usize;
+    for r in 0..rungs {
+        let cum = if r + 1 == rungs {
+            total
+        } else {
+            let scale = (1u64 << r.min(62)) as f64;
+            ((total as f64 * frac * scale).round() as usize).clamp(1, total)
+        };
+        if cum > prev {
+            steps.push(cum - prev);
+            prev = cum;
+        }
+    }
+    steps
 }
 
 fn run_schedule<H: LayerModeler + AccuracyOracle>(
@@ -236,19 +299,47 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
     n_conv: usize,
     sp: &ScheduleParams,
     mut journal: Option<&mut SearchJournal>,
+    cache: Option<&mut AccCache>,
 ) -> Result<Option<ScheduleResult>> {
     // Key identifying the search parameters — a journal written under
     // different parameters must not be resumed.
     let meta_key = format!(
-        "v1;n_conv={n_conv};ratios={:?};ks={:?};ft={};delta={};acc0={};maxl={:?};min_share={}",
+        "v2;n_conv={n_conv};ratios={:?};ks={:?};ft={};delta={};acc0={};maxl={:?};min_share={};rungs={};rfrac={}",
         sp.prune_ratios,
         sp.k_targets,
         sp.fine_tune_steps,
         sp.delta,
         sp.acc0,
         sp.max_layers,
-        sp.min_share
+        sp.min_share,
+        sp.halving_rungs,
+        sp.rung_frac
     );
+    // Oracle-efficient mode: warm-started, rung-budgeted, cached trials.
+    // It needs real fine-tuning (with `ft == 0` the legacy sweep is
+    // already oracle-free) and a greedy elimination that never consults
+    // the oracle mid-build, so every candidate set stays a pure
+    // function of the shared base parameters.
+    let mut halving =
+        sp.halving_rungs >= 1 && sp.fine_tune_steps > 0 && !sp.greedy.check_every_removal;
+    // Cache keys fold in the rung geometry: an early-accepted layer may
+    // carry a partial fine-tune budget, so identical configs reached
+    // under different rung schedules are *not* interchangeable.
+    let key_ctx = if halving {
+        format!(
+            "{}|rungs={};rfrac={}",
+            host.search_context(),
+            sp.halving_rungs,
+            sp.rung_frac
+        )
+    } else {
+        String::new()
+    };
+    let mut session_cache = AccCache::ephemeral();
+    let cache: &mut AccCache = match cache {
+        Some(c) => c,
+        None => &mut session_cache,
+    };
     let mut state = CompressionState::dense(n_conv);
     let mut outcomes: Vec<LayerOutcome> = Vec::new();
     // (order position, candidate index) to resume at; None = fresh.
@@ -260,8 +351,26 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
         if j.try_load(&meta_key)? {
             // With fine-tuning, the journal's accuracy numbers are only
             // meaningful if the oracle restores the fine-tuned state
-            // that produced them.
-            let oracle_ok = sp.fine_tune_steps == 0 || host.load_search_state(&j.tag);
+            // that produced them.  Halving journals restore the
+            // accepted-path base from its content-addressed snapshot
+            // (the rolling `j.tag` snapshot holds rejected-trial drift,
+            // which warm-starting exists to avoid); legacy journals use
+            // the rolling tag.
+            let oracle_ok = if sp.fine_tune_steps == 0 {
+                true
+            } else if halving {
+                let tag = match j.trials.iter().rev().find(|t| t.accepted) {
+                    Some(t) => acc_cache::acc_tag(&t.key),
+                    None => acc_cache::acc_tag(&acc_cache::path_key(
+                        &key_ctx,
+                        sp.fine_tune_steps,
+                        &state,
+                    )),
+                };
+                host.load_search_state(&tag)
+            } else {
+                host.load_search_state(&j.tag)
+            };
             if oracle_ok {
                 order_rows = j.order.clone();
                 outcomes = j.outcomes.clone();
@@ -272,9 +381,15 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
                             wset: Some(WeightSet::new(t.wset.clone())),
                         };
                     }
+                    // Seed the (session or persistent) accuracy cache so
+                    // a replayed layer serves its recorded trials from
+                    // cache instead of re-paying the oracle.
+                    if !t.key.is_empty() {
+                        cache.put(&t.key, t.accuracy)?;
+                    }
                 }
                 let n_cands = sp.prune_ratios.len() * sp.k_targets.len();
-                if let Some(t) = j.trials.last() {
+                if let Some(t) = j.trials.last().filter(|_| !halving) {
                     let layer_done = t.accepted || t.cand_idx + 1 >= n_cands;
                     if layer_done && !outcomes.iter().any(|oc| oc.conv_idx == t.conv_idx) {
                         // Kill landed between the trial write and the
@@ -304,16 +419,37 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
                             }),
                             energy_before: e_before,
                             energy_after: e_after,
-                            accuracy_after: if t.accepted { t.accuracy } else { 0.0 },
+                            // Rejected layers report the best accuracy
+                            // any of their trials reached, not a fake
+                            // 0.0 (same rule as the live path below).
+                            accuracy_after: j
+                                .trials
+                                .iter()
+                                .filter(|x| x.conv_idx == t.conv_idx)
+                                .map(|x| x.accuracy)
+                                .fold(f64::NEG_INFINITY, f64::max),
                         });
                         j.outcomes = outcomes.clone();
                         j.save()?;
                     }
                 }
-                resume_at = Some(match j.trials.last() {
-                    Some(t) if t.accepted || t.cand_idx + 1 >= n_cands => (t.order_pos + 1, 0),
-                    Some(t) => (t.order_pos, t.cand_idx + 1),
-                    None => (0, 0),
+                resume_at = Some(if halving {
+                    // A halving layer is complete iff its outcome row
+                    // exists; an interrupted layer replays from rung 0,
+                    // served by the journal-seeded accuracy cache.
+                    match j.trials.last() {
+                        Some(t) if outcomes.iter().any(|oc| oc.conv_idx == t.conv_idx) => {
+                            (t.order_pos + 1, 0)
+                        }
+                        Some(t) => (t.order_pos, 0),
+                        None => (0, 0),
+                    }
+                } else {
+                    match j.trials.last() {
+                        Some(t) if t.accepted || t.cand_idx + 1 >= n_cands => (t.order_pos + 1, 0),
+                        Some(t) => (t.order_pos, t.cand_idx + 1),
+                        None => (0, 0),
+                    }
                 });
                 let (p, c) = resume_at.unwrap();
                 crate::info!(
@@ -355,13 +491,51 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
         if let Some(j) = journal.as_deref_mut() {
             j.start(&meta_key, order_rows.clone());
             j.save()?;
-            if sp.fine_tune_steps > 0 && !host.save_search_state(&j.tag) {
+            // Halving keeps content-addressed snapshots instead of the
+            // rolling per-trial tag (saved below once per acceptance).
+            if sp.fine_tune_steps > 0 && !halving && !host.save_search_state(&j.tag) {
                 crate::info!(
                     "schedule journal: oracle cannot snapshot state; an interrupted \
                      fine-tuning search will restart from scratch on resume"
                 );
             }
         }
+    }
+
+    // Warm-start base for the oracle-efficient mode: the accepted-path
+    // snapshot every trial fine-tunes from.  A resumed search derives
+    // the tag from the last accepted trial (already restored above); a
+    // fresh search snapshots the oracle's current (trained) state now.
+    // An oracle that cannot snapshot falls back to the legacy sweep.
+    let mut base_tag = String::new();
+    if halving {
+        let last_key = journal
+            .as_deref()
+            .and_then(|j| j.trials.iter().rev().find(|t| t.accepted))
+            .map(|t| t.key.clone());
+        base_tag = match last_key {
+            Some(k) if !k.is_empty() => acc_cache::acc_tag(&k),
+            _ => {
+                let tag = acc_cache::acc_tag(&acc_cache::path_key(
+                    &key_ctx,
+                    sp.fine_tune_steps,
+                    &state,
+                ));
+                if !host.save_search_state(&tag) {
+                    crate::info!(
+                        "schedule: oracle cannot snapshot state; successive-halving \
+                         warm-start disabled, falling back to the exhaustive sweep"
+                    );
+                    halving = false;
+                }
+                tag
+            }
+        };
+    }
+    // Every content-addressed snapshot this run creates (cleanup below).
+    let mut spawned_tags: Vec<String> = Vec::new();
+    if halving {
+        spawned_tags.push(base_tag.clone());
     }
 
     let (start_pos, start_cand) = resume_at.unwrap_or((0, 0));
@@ -372,7 +546,15 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
         }
         let le = host.layer_energy(conv_idx);
         let mut accepted: Option<Config> = None;
-        let mut acc_after = 0.0;
+        // Rejected layers report the best accuracy any of their trials
+        // reached, not a fake 0.0; a resumed layer folds in the
+        // accuracies already recorded for this position.
+        let mut best_acc = f64::NEG_INFINITY;
+        if let Some(j) = journal.as_deref() {
+            for t in j.trials.iter().filter(|t| t.order_pos == pos) {
+                best_acc = best_acc.max(t.accuracy);
+            }
+        }
         // Candidate configs, most aggressive first.
         let candidates: Vec<Config> = sp
             .prune_ratios
@@ -384,6 +566,53 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
                 })
             })
             .collect();
+        if halving {
+            match run_layer_halving(
+                host,
+                n_conv,
+                sp,
+                &key_ctx,
+                &mut base_tag,
+                &mut state,
+                pos,
+                conv_idx,
+                &le,
+                &candidates,
+                cache,
+                &mut journal,
+                &mut budget,
+                &mut spawned_tags,
+            )? {
+                Some((acc_cfg, layer_best)) => {
+                    accepted = acc_cfg;
+                    best_acc = best_acc.max(layer_best);
+                }
+                None => return Ok(None),
+            }
+            let after = host.network_energy(&state);
+            let e_after = after
+                .layers
+                .iter()
+                .find(|(i, _)| *i == conv_idx)
+                .map(|(_, e)| *e)
+                .unwrap_or(e_before);
+            let oc = LayerOutcome {
+                conv_idx,
+                share,
+                accepted,
+                energy_before: e_before,
+                energy_after: e_after,
+                accuracy_after: if best_acc.is_finite() { best_acc } else { 0.0 },
+            };
+            if let Some(j) = journal.as_deref_mut() {
+                j.outcomes.push(oc.clone());
+                j.save()?;
+            }
+            outcomes.push(oc);
+            continue;
+        }
+        // ---- Legacy exhaustive sweep (the pre-halving behavior, kept
+        // bit-identical so existing goldens and journals stay valid) ----
         // When no fine-tuning happens between candidates and the greedy
         // elimination never consults the oracle, every candidate's
         // restricted set is a pure function of the frozen parameters —
@@ -470,22 +699,24 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
             // Short fine-tune then global accuracy check (§4.3 step 3).
             host.fine_tune(&trial, sp.fine_tune_steps);
             let acc = host.accuracy(&trial);
+            best_acc = best_acc.max(acc);
             let ok = acc >= sp.acc0 - sp.delta;
             if ok {
                 state = trial;
                 accepted = Some(cfg);
-                acc_after = acc;
             }
             if let Some(j) = journal.as_deref_mut() {
                 j.trials.push(TrialRecord {
                     order_pos: pos,
                     conv_idx,
                     cand_idx: ci_cand,
+                    rung: 0,
                     prune_ratio: cfg.prune_ratio,
                     k_target: cfg.k_target,
                     accepted: ok,
                     accuracy: acc,
                     wset: set_codes.unwrap_or_default(),
+                    key: String::new(),
                 });
                 j.save()?;
                 // Snapshot the oracle right after its state moved, so a
@@ -514,7 +745,7 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
             accepted,
             energy_before: e_before,
             energy_after: e_after,
-            accuracy_after: acc_after,
+            accuracy_after: if best_acc.is_finite() { best_acc } else { 0.0 },
         };
         if let Some(j) = journal.as_deref_mut() {
             j.outcomes.push(oc.clone());
@@ -523,6 +754,16 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
         outcomes.push(oc);
     }
     let final_accuracy = host.accuracy(&state);
+    if halving && cache.path().is_none() {
+        // Session-only cache: its entries die with this call, so the
+        // content-addressed snapshots backing them can never be hit
+        // again — drop them instead of littering the oracle's storage.
+        // (With a persistent cache they stay: a warm second run needs
+        // them to serve hits without any oracle work.)
+        for t in &spawned_tags {
+            host.drop_search_state(t);
+        }
+    }
     if let Some(j) = journal.as_deref_mut() {
         j.finish();
     }
@@ -531,6 +772,242 @@ fn run_schedule<H: LayerModeler + AccuracyOracle>(
         outcomes,
         final_accuracy,
     }))
+}
+
+/// One layer of the oracle-efficient (§4.3 + successive-halving)
+/// search.  Every candidate warm-starts from the shared accepted-path
+/// snapshot (`base_tag`) — never from another trial's drifted params —
+/// fine-tunes in doubling rung budgets, and only the top half survives
+/// each rung.  Acceptance keeps the exhaustive sweep's rule (the most
+/// aggressive passing candidate wins): in the final rung the first
+/// passing survivor in menu order is accepted, and in earlier rungs a
+/// candidate may early-accept only when no more-aggressive candidate
+/// is still alive to outrank it.
+///
+/// Trial accuracies are served from / recorded into `cache`, keyed by
+/// `(context, target layer, cumulative steps, trial state)`; the
+/// fine-tuned oracle state is snapshotted under the content-addressed
+/// [`acc_cache::acc_tag`], so a cache hit whose snapshot still loads
+/// costs zero oracle work, and a hit whose snapshot is gone safely
+/// degrades to a recompute.
+///
+/// Returns `Ok(None)` when the journal trial budget runs out, else
+/// `Ok(Some((accepted config, best trial accuracy)))`.
+#[allow(clippy::too_many_arguments)]
+fn run_layer_halving<H: LayerModeler + AccuracyOracle>(
+    host: &mut H,
+    n_conv: usize,
+    sp: &ScheduleParams,
+    ctx: &str,
+    base_tag: &mut String,
+    state: &mut CompressionState,
+    pos: usize,
+    conv_idx: usize,
+    le: &LayerEnergy,
+    candidates: &[Config],
+    cache: &mut AccCache,
+    journal: &mut Option<&mut SearchJournal>,
+    budget: &mut Option<usize>,
+    spawned_tags: &mut Vec<String>,
+) -> Result<Option<(Option<Config>, f64)>> {
+    // Candidate restricted sets: with warm-starting, every set is a
+    // pure function of the shared base parameters (no trial has
+    // fine-tuned the oracle yet), so the whole menu can be built up
+    // front — in parallel when the host exposes its memoized evaluator.
+    let sets: Vec<WeightSet> = match host.evaluator() {
+        Some(ev) => {
+            let threads = sp.greedy.threads.max(1);
+            let mut ratios: Vec<f64> = Vec::new();
+            for c in candidates {
+                if !ratios.iter().any(|r| r.to_bits() == c.prune_ratio.to_bits()) {
+                    ratios.push(c.prune_ratio);
+                }
+            }
+            let ratios_ref = &ratios;
+            parallel_map(ratios.len(), threads, |j| {
+                ev.usage_for_conv(conv_idx, ratios_ref[j]);
+            });
+            parallel_map(candidates.len(), threads, |j| {
+                let cfg = candidates[j];
+                let usage = ev.usage_for_conv(conv_idx, cfg.prune_ratio);
+                candidate_set(&usage, le, n_conv, conv_idx, cfg, sp)
+            })
+        }
+        None => candidates
+            .iter()
+            .map(|&cfg| {
+                let mut trial = state.clone();
+                trial.layers[conv_idx] = LayerConfig {
+                    prune_ratio: cfg.prune_ratio,
+                    wset: None,
+                };
+                let usage = host.usage(conv_idx, &trial);
+                candidate_set(&usage, le, n_conv, conv_idx, cfg, sp)
+            })
+            .collect(),
+    };
+    // Full trial states (accepted path + this layer's candidate).
+    let trials: Vec<CompressionState> = sets
+        .iter()
+        .enumerate()
+        .map(|(ci, set)| {
+            let mut t = state.clone();
+            t.layers[conv_idx] = LayerConfig {
+                prune_ratio: candidates[ci].prune_ratio,
+                wset: Some(set.clone()),
+            };
+            t
+        })
+        .collect();
+
+    let rung_steps = rung_schedule(sp.fine_tune_steps, sp.halving_rungs, sp.rung_frac);
+    let n_rungs = rung_steps.len();
+    let mut alive: Vec<usize> = (0..candidates.len()).collect();
+    // Per-candidate key of its latest completed rung (warm-start chain).
+    let mut keys: Vec<String> = vec![String::new(); candidates.len()];
+    let mut cum = 0usize;
+    let mut best_acc = f64::NEG_INFINITY;
+    let mut chosen: Option<(usize, f64, String)> = None;
+    'rungs: for (r, &steps_r) in rung_steps.iter().enumerate() {
+        let is_last = r + 1 == n_rungs;
+        cum += steps_r;
+        let mut scored: Vec<(usize, f64)> = Vec::with_capacity(alive.len());
+        for (ai, &ci) in alive.iter().enumerate() {
+            if *budget == Some(0) {
+                // This invocation's trial budget is exhausted; the
+                // recorded trials replay from the cache on resume.
+                return Ok(None);
+            }
+            let key = acc_cache::trial_key(ctx, sp.fine_tune_steps, conv_idx, cum, &trials[ci]);
+            let tag = acc_cache::acc_tag(&key);
+            let acc = match cache.get(&key) {
+                // A hit only counts when the fine-tuned state behind it
+                // is still restorable — the oracle must end every trial
+                // holding the trial's state either way.
+                Some(a) if host.load_search_state(&tag) => {
+                    cache.hits += 1;
+                    a
+                }
+                _ => {
+                    cache.misses += 1;
+                    let prev = if r == 0 {
+                        base_tag.clone()
+                    } else {
+                        acc_cache::acc_tag(&keys[ci])
+                    };
+                    if !host.load_search_state(&prev) {
+                        return Err(anyhow!(
+                            "schedule halving search lost oracle snapshot `{prev}` \
+                             (layer {conv_idx}, rung {r}); delete the journal/cache to restart"
+                        ));
+                    }
+                    host.fine_tune(&trials[ci], steps_r);
+                    let a = host.accuracy(&trials[ci]);
+                    if !host.save_search_state(&tag) {
+                        return Err(anyhow!(
+                            "schedule halving search could not snapshot oracle state under `{tag}`"
+                        ));
+                    }
+                    spawned_tags.push(tag.clone());
+                    cache.put(&key, a)?;
+                    a
+                }
+            };
+            keys[ci] = key.clone();
+            best_acc = best_acc.max(acc);
+            if let Some(j) = journal.as_deref_mut() {
+                // Replayed trials (resume) are already recorded.
+                let dup = j
+                    .trials
+                    .iter()
+                    .any(|t| t.order_pos == pos && t.cand_idx == ci && t.rung == r);
+                if !dup {
+                    j.trials.push(TrialRecord {
+                        order_pos: pos,
+                        conv_idx,
+                        cand_idx: ci,
+                        rung: r,
+                        prune_ratio: candidates[ci].prune_ratio,
+                        k_target: candidates[ci].k_target,
+                        accepted: false,
+                        accuracy: acc,
+                        wset: sets[ci].codes().to_vec(),
+                        key: key.clone(),
+                    });
+                    j.save()?;
+                }
+            }
+            if let Some(b) = budget.as_mut() {
+                *b -= 1;
+            }
+            scored.push((ci, acc));
+            // Early acceptance: candidates run most-aggressive-first,
+            // so a passing candidate wins as soon as no more-aggressive
+            // candidate is still alive to outrank it — in the final
+            // rung that is the first passing survivor, in earlier rungs
+            // only the front of the alive list (which then keeps its
+            // partial fine-tune budget: passing at reduced budget is a
+            // stronger signal, and the saved steps are the point).
+            if acc >= sp.acc0 - sp.delta && (is_last || ai == 0) {
+                chosen = Some((ci, acc, key));
+                break 'rungs;
+            }
+        }
+        if is_last {
+            break;
+        }
+        // Keep the top half by rung accuracy (ties favor the more
+        // aggressive candidate), restored to menu order for the next
+        // rung.
+        scored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        let keep = (scored.len() + 1) / 2;
+        let mut kept: Vec<usize> = scored[..keep].iter().map(|&(ci, _)| ci).collect();
+        kept.sort_unstable();
+        alive = kept;
+    }
+
+    match chosen {
+        Some((ci, acc, key)) => {
+            let tag = acc_cache::acc_tag(&key);
+            // The oracle already holds this trial's state (it was the
+            // last one processed); make the invariant explicit anyway.
+            if !host.load_search_state(&tag) {
+                return Err(anyhow!(
+                    "schedule halving search lost accepted snapshot `{tag}`"
+                ));
+            }
+            *state = trials[ci].clone();
+            *base_tag = tag;
+            if let Some(j) = journal.as_deref_mut() {
+                let mut dirty = false;
+                for t in j.trials.iter_mut() {
+                    if t.order_pos == pos && t.cand_idx == ci && t.key == key && !t.accepted {
+                        t.accepted = true;
+                        dirty = true;
+                    }
+                }
+                if dirty {
+                    j.save()?;
+                }
+            }
+            Ok(Some((Some(candidates[ci]), acc)))
+        }
+        None => {
+            // Every candidate failed: restore the shared base so the
+            // rejected trials' fine-tune drift cannot leak into later
+            // layers (the warm-start guarantee).
+            if !host.load_search_state(base_tag) {
+                return Err(anyhow!(
+                    "schedule halving search lost base snapshot `{base_tag}`"
+                ));
+            }
+            Ok(Some((None, if best_acc.is_finite() { best_acc } else { 0.0 })))
+        }
+    }
 }
 
 /// Table 3 baseline: one (ratio, K) configuration applied uniformly to
@@ -545,6 +1022,16 @@ pub fn global_uniform<H: LayerModeler + AccuracyOracle>(
     naive_global_set: bool,
 ) -> ScheduleResult {
     let mut state = CompressionState::dense(n_conv);
+    if layers.is_empty() {
+        // Nothing to compress: the uniform schedule over zero layers is
+        // the dense network (indexing `layers[0]` below used to panic).
+        let final_accuracy = host.accuracy(&state);
+        return ScheduleResult {
+            state,
+            outcomes: Vec::new(),
+            final_accuracy,
+        };
+    }
     // Global usage / energy pooled across target layers.
     let mut pooled_usage = [0u64; 256];
     for &l in layers {
@@ -614,18 +1101,24 @@ mod tests {
 
     /// Combined host: 3 layers with energy shares ~60/30/10 %, and an
     /// accuracy response that drops with aggressiveness but recovers a
-    /// little with fine-tuning.  `snapshot` stands in for the on-disk
-    /// oracle state the coordinator persists for resumable searches.
+    /// little with fine-tuning.  `snapshots` stands in for the on-disk
+    /// oracle states the coordinator persists for resumable and
+    /// warm-started searches (tag → tuned level), surviving simulated
+    /// process death via `.clone()`.
     struct FakeHost {
         tuned: f64,
-        snapshot: Option<f64>,
+        snapshots: std::collections::HashMap<String, f64>,
+        ft_total: usize,
+        evals: usize,
     }
 
     impl FakeHost {
         fn new() -> Self {
             FakeHost {
                 tuned: 0.0,
-                snapshot: None,
+                snapshots: std::collections::HashMap::new(),
+                ft_total: 0,
+                evals: 0,
             }
         }
     }
@@ -670,6 +1163,7 @@ mod tests {
 
     impl AccuracyOracle for FakeHost {
         fn accuracy(&mut self, state: &CompressionState) -> f64 {
+            self.evals += 1;
             let mut acc = 0.95 + self.tuned;
             for l in &state.layers {
                 acc -= 0.010 * l.prune_ratio;
@@ -680,20 +1174,30 @@ mod tests {
             acc
         }
         fn fine_tune(&mut self, _: &CompressionState, steps: usize) {
+            self.ft_total += steps;
             self.tuned = (self.tuned + 1e-4 * steps as f64).min(0.01);
         }
-        fn save_search_state(&mut self, _tag: &str) -> bool {
-            self.snapshot = Some(self.tuned);
+        fn save_search_state(&mut self, tag: &str) -> bool {
+            self.snapshots.insert(tag.to_string(), self.tuned);
             true
         }
-        fn load_search_state(&mut self, _tag: &str) -> bool {
-            match self.snapshot {
-                Some(t) => {
+        fn load_search_state(&mut self, tag: &str) -> bool {
+            match self.snapshots.get(tag) {
+                Some(&t) => {
                     self.tuned = t;
                     true
                 }
                 None => false,
             }
+        }
+        fn drop_search_state(&mut self, tag: &str) {
+            self.snapshots.remove(tag);
+        }
+        fn ft_steps(&self) -> usize {
+            self.ft_total
+        }
+        fn eval_count(&self) -> usize {
+            self.evals
         }
     }
 
@@ -757,10 +1261,10 @@ mod tests {
         assert!(path.exists(), "journal survives the aborted invocation");
 
         // "Process death": fresh host; only the journal file and the
-        // (simulated on-disk) oracle snapshot survive.
+        // (simulated on-disk) oracle snapshots survive.
         let mut h2 = FakeHost {
-            tuned: 0.0,
-            snapshot: h1.snapshot,
+            snapshots: h1.snapshots.clone(),
+            ..FakeHost::new()
         };
         let mut j2 = SearchJournal::new(path.clone(), "t");
         let got = energy_prioritized_resumable(&mut h2, 3, &sp, &mut j2)
@@ -789,5 +1293,234 @@ mod tests {
             assert_eq!(l.prune_ratio, 0.5);
             assert_eq!(l.wset.as_ref().unwrap().codes(), s0.codes());
         }
+    }
+
+    #[test]
+    fn global_uniform_empty_layer_list_returns_dense_state() {
+        let mut host = FakeHost::new();
+        let res = global_uniform(
+            &mut host,
+            3,
+            &[],
+            Config {
+                prune_ratio: 0.5,
+                k_target: 16,
+            },
+            5,
+            false,
+        );
+        assert!(res
+            .state
+            .layers
+            .iter()
+            .all(|l| l.prune_ratio == 0.0 && l.wset.is_none()));
+        assert!(res.outcomes.is_empty());
+        assert!(res.final_accuracy > 0.9);
+    }
+
+    #[test]
+    fn rejected_layer_reports_best_attempted_accuracy() {
+        let mut host = FakeHost::new();
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 1e-4, // impossible budget: every candidate rejected
+            fine_tune_steps: 0,
+            ..Default::default()
+        };
+        let res = energy_prioritized(&mut host, 3, &sp);
+        assert!(res.outcomes.iter().all(|oc| oc.accepted.is_none()));
+        for oc in &res.outcomes {
+            assert!(
+                oc.accuracy_after > 0.9,
+                "rejected layer must report its best attempted accuracy, not a \
+                 0.0 sentinel; got {}",
+                oc.accuracy_after
+            );
+        }
+        // The JSON view (what goldens pin) carries the same values.
+        let json = res.to_json().to_string();
+        assert!(json.contains("accuracy_after"), "{json}");
+    }
+
+    #[test]
+    fn rung_schedule_covers_budget_and_collapses_degenerate_rungs() {
+        assert_eq!(rung_schedule(10, 3, 0.25), vec![3, 2, 5]);
+        assert_eq!(rung_schedule(10, 1, 0.25), vec![10]);
+        assert_eq!(rung_schedule(10, 0, 0.25), vec![10]);
+        assert_eq!(rung_schedule(0, 3, 0.25), vec![0]);
+        assert_eq!(rung_schedule(2, 4, 0.25), vec![1, 1]);
+        // Out-of-range frac falls back to 1/rungs.
+        assert_eq!(rung_schedule(100, 2, 0.0), vec![50, 50]);
+        for (total, rungs) in [(7usize, 3usize), (50, 4), (1, 5), (13, 2)] {
+            let rs = rung_schedule(total, rungs, 0.25);
+            assert_eq!(rs.iter().sum::<usize>(), total, "{total}/{rungs}: {rs:?}");
+            assert!(rs.iter().all(|&s| s > 0), "{total}/{rungs}: {rs:?}");
+        }
+    }
+
+    #[test]
+    fn warm_single_rung_matches_exhaustive_when_first_candidate_passes() {
+        // With a generous budget the first (most aggressive) candidate
+        // passes everywhere, so the warm-started path and the legacy
+        // drift path see identical oracle states trial by trial: the
+        // results and the fine-tune bill must agree bit for bit.
+        let sp_ex = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.05,
+            fine_tune_steps: 10,
+            ..Default::default()
+        };
+        let mut h_ex = FakeHost::new();
+        let want = energy_prioritized(&mut h_ex, 3, &sp_ex);
+        let sp_h = ScheduleParams {
+            halving_rungs: 1,
+            ..sp_ex.clone()
+        };
+        let mut h_h = FakeHost::new();
+        let got = energy_prioritized(&mut h_h, 3, &sp_h);
+        assert_eq!(got.to_json().to_string(), want.to_json().to_string());
+        assert_eq!(h_h.ft_total, h_ex.ft_total);
+    }
+
+    #[test]
+    fn halving_early_accepts_most_aggressive_at_reduced_budget() {
+        // Generous budget + 2 rungs: the most aggressive candidate
+        // already passes at the first rung's partial fine-tune (3 of 10
+        // steps), so each layer costs 3 steps instead of the exhaustive
+        // sweep's 10.
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.05,
+            fine_tune_steps: 10,
+            halving_rungs: 2,
+            ..Default::default()
+        };
+        let mut h = FakeHost::new();
+        let res = energy_prioritized(&mut h, 3, &sp);
+        assert!(res
+            .outcomes
+            .iter()
+            .all(|oc| matches!(oc.accepted, Some(c) if c.prune_ratio == 0.7 && c.k_target == 16)));
+        assert_eq!(h.ft_total, 9, "3 layers x 3 warm-started steps");
+        assert!(res.final_accuracy >= sp.acc0 - sp.delta);
+    }
+
+    #[test]
+    fn halving_prunes_hopeless_candidates_and_restores_base_on_reject() {
+        // Impossible budget: every candidate fails at every rung.  Each
+        // layer pays 9 trials x 3 steps at rung 0, keeps the top 5 for
+        // rung 1 (7 steps each) = 62 steps — the exhaustive sweep would
+        // pay 9 x 10 = 90.  All layers rejected, so the state stays
+        // dense and the reported accuracy is the best attempt.
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.0005,
+            fine_tune_steps: 10,
+            halving_rungs: 2,
+            ..Default::default()
+        };
+        let mut h = FakeHost::new();
+        let res = energy_prioritized(&mut h, 3, &sp);
+        assert!(res.outcomes.iter().all(|oc| oc.accepted.is_none()));
+        assert!(res
+            .state
+            .layers
+            .iter()
+            .all(|l| l.prune_ratio == 0.0 && l.wset.is_none()));
+        assert_eq!(h.ft_total, 3 * 62, "halving trims the hopeless menu");
+        for oc in &res.outcomes {
+            assert!(oc.accuracy_after > 0.9, "best attempt, not 0.0 sentinel");
+        }
+        // Reject-all restores the warm-start base: no drift leaks.
+        assert_eq!(res.final_accuracy.to_bits(), {
+            let mut probe = FakeHost::new();
+            probe.accuracy(&CompressionState::dense(3)).to_bits()
+        });
+    }
+
+    #[test]
+    fn halving_journal_resume_replays_bit_identically() {
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.0005, // all-reject: maximum trials, maximum rungs
+            fine_tune_steps: 10,
+            halving_rungs: 2,
+            ..Default::default()
+        };
+        let mut ref_host = FakeHost::new();
+        let want = energy_prioritized(&mut ref_host, 3, &sp);
+        // (9 rung-0 + 5 rung-1) trials x 3 layers.
+        let total_trials = 42;
+        for kill_after in [1usize, 5, 13, 14, 20, 41] {
+            let path = std::env::temp_dir().join(format!(
+                "wsel_halving_journal_{}_{kill_after}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let mut h1 = FakeHost::new();
+            let mut j1 = SearchJournal::new(path.clone(), "t").with_budget(kill_after);
+            let out = energy_prioritized_resumable(&mut h1, 3, &sp, &mut j1).unwrap();
+            assert!(out.is_none(), "budget {kill_after} of {total_trials} must exhaust");
+            // Process death: only the journal + snapshots survive.
+            let mut h2 = FakeHost {
+                snapshots: h1.snapshots.clone(),
+                ..FakeHost::new()
+            };
+            let mut j2 = SearchJournal::new(path.clone(), "t");
+            let got = energy_prioritized_resumable(&mut h2, 3, &sp, &mut j2)
+                .unwrap()
+                .expect("resumed search runs to completion");
+            assert_eq!(
+                got.to_json().to_string(),
+                want.to_json().to_string(),
+                "kill at {kill_after}"
+            );
+            // Recorded trials replay as cache hits: the two invocations
+            // together pay exactly the uninterrupted fine-tune bill.
+            assert_eq!(
+                h1.ft_total + h2.ft_total,
+                ref_host.ft_total,
+                "kill at {kill_after}"
+            );
+            assert!(!path.exists(), "journal deleted on completion");
+        }
+    }
+
+    #[test]
+    fn persistent_cache_second_run_pays_zero_oracle_fine_tunes() {
+        let cache_path = std::env::temp_dir().join(format!(
+            "wsel_sched_acc_cache_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&cache_path);
+        let sp = ScheduleParams {
+            acc0: 0.95,
+            delta: 0.05,
+            fine_tune_steps: 10,
+            halving_rungs: 2,
+            ..Default::default()
+        };
+        let mut c1 = AccCache::at(cache_path.clone()).unwrap();
+        let mut h1 = FakeHost::new();
+        let r1 = energy_prioritized_with(&mut h1, 3, &sp, None, Some(&mut c1))
+            .unwrap()
+            .unwrap();
+        assert!(h1.ft_total > 0);
+        assert_eq!(c1.hits, 0);
+        // Second search against the warm cache + surviving snapshots.
+        let mut c2 = AccCache::at(cache_path.clone()).unwrap();
+        assert!(!c2.is_empty(), "cache persisted to disk");
+        let mut h2 = FakeHost {
+            snapshots: h1.snapshots.clone(),
+            ..FakeHost::new()
+        };
+        let r2 = energy_prioritized_with(&mut h2, 3, &sp, None, Some(&mut c2))
+            .unwrap()
+            .unwrap();
+        assert_eq!(r2.to_json().to_string(), r1.to_json().to_string());
+        assert_eq!(h2.ft_total, 0, "warm cache: zero oracle fine-tunes");
+        assert_eq!(c2.misses, 0);
+        assert!(c2.hits > 0);
+        std::fs::remove_file(&cache_path).unwrap();
     }
 }

@@ -65,4 +65,27 @@ pub trait AccuracyOracle {
     fn load_search_state(&mut self, _tag: &str) -> bool {
         false
     }
+
+    /// Delete the snapshot stored under `tag`, if any (cleanup for
+    /// searches that no longer need an intermediate rung state).  The
+    /// default is a no-op.
+    fn drop_search_state(&mut self, _tag: &str) {}
+
+    /// Stable identity of everything the oracle's accuracy numbers
+    /// depend on *besides* the compression state: model, dataset seed,
+    /// evaluation recipe, and the starting parameters.  The
+    /// oracle-efficient schedule search folds this into its persistent
+    /// accuracy-cache keys, so a cache warmed by one run is only
+    /// consulted by runs that would reproduce the same numbers.  The
+    /// default (empty string) is fine for single-context oracles such
+    /// as unit-test fakes.
+    fn search_context(&mut self) -> String {
+        String::new()
+    }
+
+    /// Total fine-tune steps performed (cost accounting, mirroring
+    /// [`Self::eval_count`]).
+    fn ft_steps(&self) -> usize {
+        0
+    }
 }

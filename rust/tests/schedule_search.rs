@@ -1,0 +1,314 @@
+//! Schedule-search integration tests — journal resume × trial budget ×
+//! `min_share` interplay, plus the oracle-efficient successive-halving
+//! mode:
+//!
+//! * legacy exhaustive search killed after ANY trial (adaptive budget
+//!   sweep) resumes bit-identically, paying each fine-tune step exactly
+//!   once across the two invocations,
+//! * a trailing below-`min_share` layer is never searched — neither by
+//!   the uninterrupted run nor by a resumed one landing past it,
+//! * halving-rung searches replay bit-identically after a kill at any
+//!   trial boundary, serving recorded trials from the journal-seeded
+//!   accuracy cache,
+//! * halving spends well under half the exhaustive oracle fine-tune
+//!   bill on a hopeless candidate menu, and a second run against the
+//!   persistent accuracy cache performs zero oracle fine-tunes.
+//!
+//! The synthetic host mirrors the in-crate schedule test double: three
+//! layers with energy shares ~80/20/0.2 % (the third below the default
+//! `min_share`), an accuracy response that drops with aggressiveness
+//! and recovers slightly with fine-tuning, and a `HashMap` standing in
+//! for the on-disk oracle snapshots (surviving "process death" via
+//! `.clone()`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use wsel::energy::{LayerEnergy, NetworkEnergy, WeightEnergyTable};
+use wsel::schedule::{
+    energy_prioritized, energy_prioritized_resumable, energy_prioritized_with, AccCache,
+    LayerModeler, ScheduleParams, ScheduleResult, SearchJournal,
+};
+use wsel::selection::{AccuracyOracle, CompressionState};
+
+fn table() -> WeightEnergyTable {
+    let mut e = [0.0f64; 256];
+    for i in 0..256 {
+        let code = (i as i32 - 128).unsigned_abs() as f64;
+        e[i] = (1.0 + code) * 1e-15;
+    }
+    WeightEnergyTable {
+        e_per_cycle: e,
+        e_idle: 1e-16,
+    }
+}
+
+struct SynthHost {
+    tuned: f64,
+    /// Accuracy gained per fine-tune step (capped at 0.01 total).
+    tune_rate: f64,
+    snapshots: HashMap<String, f64>,
+    ft_total: usize,
+}
+
+impl SynthHost {
+    fn new(tune_rate: f64) -> Self {
+        SynthHost {
+            tuned: 0.0,
+            tune_rate,
+            snapshots: HashMap::new(),
+            ft_total: 0,
+        }
+    }
+}
+
+impl LayerModeler for SynthHost {
+    fn layer_energy(&mut self, conv_idx: usize) -> LayerEnergy {
+        // Layer 2's dense share is ~0.16% — below the default
+        // `min_share` of 0.5%, so the schedule must skip it.
+        let m = [1024, 256, 2][conv_idx];
+        LayerEnergy {
+            conv_idx,
+            m,
+            k: 64,
+            n: 64,
+            table: table(),
+        }
+    }
+    fn usage(&mut self, conv_idx: usize, state: &CompressionState) -> [u64; 256] {
+        let mut u = [0u64; 256];
+        let pruned = (4096.0 * state.layers[conv_idx].prune_ratio) as u64;
+        u[128] = pruned;
+        let rest = 4096 - pruned;
+        for c in 1..=64 {
+            u[128 + c as usize] = rest / 128;
+            u[128 - c as usize] = rest / 128;
+        }
+        u
+    }
+    fn network_energy(&mut self, state: &CompressionState) -> NetworkEnergy {
+        let layers = (0..3)
+            .map(|i| {
+                let le = self.layer_energy(i);
+                let usage = self.usage(i, state);
+                let e = match &state.layers[i].wset {
+                    Some(s) => wsel::selection::set_energy(&le, &usage, s),
+                    None => le.energy_of_usage(&usage),
+                };
+                (i, e)
+            })
+            .collect();
+        NetworkEnergy { layers }
+    }
+}
+
+impl AccuracyOracle for SynthHost {
+    fn accuracy(&mut self, state: &CompressionState) -> f64 {
+        let mut acc = 0.95 + self.tuned;
+        for l in &state.layers {
+            acc -= 0.010 * l.prune_ratio;
+            if let Some(s) = &l.wset {
+                acc -= 0.004 * (32.0 - s.len() as f64) / 16.0;
+            }
+        }
+        acc
+    }
+    fn fine_tune(&mut self, _: &CompressionState, steps: usize) {
+        self.ft_total += steps;
+        self.tuned = (self.tuned + self.tune_rate * steps as f64).min(0.01);
+    }
+    fn save_search_state(&mut self, tag: &str) -> bool {
+        self.snapshots.insert(tag.to_string(), self.tuned);
+        true
+    }
+    fn load_search_state(&mut self, tag: &str) -> bool {
+        match self.snapshots.get(tag) {
+            Some(&t) => {
+                self.tuned = t;
+                true
+            }
+            None => false,
+        }
+    }
+    fn drop_search_state(&mut self, tag: &str) {
+        self.snapshots.remove(tag);
+    }
+    fn ft_steps(&self) -> usize {
+        self.ft_total
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("wsel_sched_it_{tag}_{}.json", std::process::id()))
+}
+
+/// Kill the search after `budget` trials, then resume without a budget;
+/// assert the two-invocation result matches `want` bit for bit and the
+/// fine-tune bill is paid exactly once.  Returns `false` when `budget`
+/// already covers the whole search (sweep termination).
+fn kill_and_resume(sp: &ScheduleParams, want: &ScheduleResult, ref_ft: usize, budget: usize) -> bool {
+    let path = tmp(&format!("kill_r{}_b{budget}", sp.halving_rungs));
+    let _ = std::fs::remove_file(&path);
+    let mut h1 = SynthHost::new(1e-4);
+    let mut j1 = SearchJournal::new(path.clone(), "t").with_budget(budget);
+    let out = energy_prioritized_resumable(&mut h1, 3, sp, &mut j1).unwrap();
+    if let Some(done) = out {
+        // Budget covered the whole search: must equal the reference.
+        assert_eq!(done.to_json().to_string(), want.to_json().to_string());
+        assert!(!path.exists());
+        return false;
+    }
+    assert!(path.exists(), "journal survives the aborted invocation");
+    // Process death: only the journal file + oracle snapshots survive.
+    let mut h2 = SynthHost {
+        snapshots: h1.snapshots.clone(),
+        ..SynthHost::new(1e-4)
+    };
+    let mut j2 = SearchJournal::new(path.clone(), "t");
+    let got = energy_prioritized_resumable(&mut h2, 3, sp, &mut j2)
+        .unwrap()
+        .expect("resumed search runs to completion");
+    assert_eq!(
+        got.to_json().to_string(),
+        want.to_json().to_string(),
+        "kill after {budget} trials (rungs={})",
+        sp.halving_rungs
+    );
+    assert!(
+        got.outcomes.iter().all(|oc| oc.conv_idx != 2),
+        "below-min_share layer must stay unsearched on resume"
+    );
+    assert_eq!(
+        h1.ft_total + h2.ft_total,
+        ref_ft,
+        "kill after {budget}: every fine-tune step paid exactly once (rungs={})",
+        sp.halving_rungs
+    );
+    assert!(!path.exists(), "journal deleted on completion");
+    true
+}
+
+/// Mixed accept/reject menu: layer 0 accepts its 2nd candidate, layer 1
+/// its 5th — plenty of mid-wave kill points for the budget sweep.
+fn mixed_sp() -> ScheduleParams {
+    ScheduleParams {
+        acc0: 0.95,
+        delta: 0.0095,
+        fine_tune_steps: 10,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn legacy_search_killed_after_any_trial_resumes_bit_identically() {
+    let sp = mixed_sp();
+    let mut ref_host = SynthHost::new(1e-4);
+    let want = energy_prioritized(&mut ref_host, 3, &sp);
+    let mut swept = 0;
+    for budget in 1..200 {
+        swept = budget;
+        if !kill_and_resume(&sp, &want, ref_host.ft_total, budget) {
+            break;
+        }
+    }
+    assert!(swept > 1, "search must span multiple trials");
+    assert!(swept < 200, "budget sweep must terminate");
+}
+
+#[test]
+fn halving_search_killed_after_any_trial_resumes_bit_identically() {
+    let sp = ScheduleParams {
+        halving_rungs: 3,
+        ..mixed_sp()
+    };
+    let mut ref_host = SynthHost::new(1e-4);
+    let want = energy_prioritized(&mut ref_host, 3, &sp);
+    let mut swept = 0;
+    for budget in 1..200 {
+        swept = budget;
+        if !kill_and_resume(&sp, &want, ref_host.ft_total, budget) {
+            break;
+        }
+    }
+    assert!(swept > 1, "search must span multiple trials");
+    assert!(swept < 200, "budget sweep must terminate");
+}
+
+#[test]
+fn below_min_share_trailing_layer_is_never_searched() {
+    let sp = mixed_sp();
+    let mut host = SynthHost::new(1e-4);
+    let res = energy_prioritized(&mut host, 3, &sp);
+    assert_eq!(res.outcomes.len(), 2, "layer 2 is below min_share");
+    assert!(res.outcomes.iter().all(|oc| oc.conv_idx != 2));
+    assert_eq!(res.state.layers[2].prune_ratio, 0.0);
+    assert!(res.state.layers[2].wset.is_none());
+    // Both processed layers accepted something and report a real
+    // accuracy (the 0.0-sentinel regression).
+    for oc in &res.outcomes {
+        assert!(oc.accepted.is_some());
+        assert!(oc.accuracy_after > 0.9);
+    }
+}
+
+#[test]
+fn halving_halves_the_oracle_bill_and_warm_cache_skips_it_entirely() {
+    // Hopeless menu: with a near-zero tune rate and a tight delta no
+    // candidate ever passes, so the exhaustive sweep pays the full
+    // 9-candidate × 10-step bill per layer while halving's rung pyramid
+    // (1+1+2+6 steps, half the field cut per rung) stops early.
+    let sp_ex = ScheduleParams {
+        acc0: 0.95,
+        delta: 0.0005,
+        fine_tune_steps: 10,
+        ..Default::default()
+    };
+    let mut h_ex = SynthHost::new(1e-5);
+    let ex = energy_prioritized(&mut h_ex, 3, &sp_ex);
+    assert!(ex.outcomes.iter().all(|oc| oc.accepted.is_none()));
+
+    let sp_h = ScheduleParams {
+        halving_rungs: 4,
+        rung_frac: 0.1,
+        ..sp_ex.clone()
+    };
+    let cache_path = tmp("acc_cache");
+    let _ = std::fs::remove_file(&cache_path);
+    let mut c1 = AccCache::at(cache_path.clone()).unwrap();
+    let mut h1 = SynthHost::new(1e-5);
+    let r1 = energy_prioritized_with(&mut h1, 3, &sp_h, None, Some(&mut c1))
+        .unwrap()
+        .unwrap();
+    assert!(r1.outcomes.iter().all(|oc| oc.accepted.is_none()));
+    assert!(
+        2 * h1.ft_total <= h_ex.ft_total,
+        "halving must spend <= 50% of the exhaustive fine-tune bill \
+         ({} vs {})",
+        h1.ft_total,
+        h_ex.ft_total
+    );
+    // All-reject keeps the warm-start base, so final accuracy can only
+    // differ from the exhaustive run by its (unreverted) trial drift.
+    assert!(
+        r1.final_accuracy >= ex.final_accuracy - 0.003,
+        "{} vs {}",
+        r1.final_accuracy,
+        ex.final_accuracy
+    );
+
+    // Second run against the warm persistent cache + surviving
+    // snapshots: zero oracle fine-tunes, bit-identical result.
+    let mut c2 = AccCache::at(cache_path.clone()).unwrap();
+    assert!(!c2.is_empty(), "cache persisted");
+    let mut h2 = SynthHost {
+        snapshots: h1.snapshots.clone(),
+        ..SynthHost::new(1e-5)
+    };
+    let r2 = energy_prioritized_with(&mut h2, 3, &sp_h, None, Some(&mut c2))
+        .unwrap()
+        .unwrap();
+    assert_eq!(r2.to_json().to_string(), r1.to_json().to_string());
+    assert_eq!(h2.ft_total, 0, "warm cache: zero oracle fine-tunes");
+    assert_eq!(c2.misses, 0);
+    assert!(c2.hits > 0);
+    std::fs::remove_file(&cache_path).unwrap();
+}

@@ -29,6 +29,16 @@ for arg in "$@"; do
     esac
 done
 
+# Preflight: every stage below needs cargo.  Fail loudly up front
+# instead of dying stage-by-stage with a confusing "command not found"
+# — environments without the toolchain (e.g. bare containers) cannot
+# verify at all, and must not mistake a silent no-op for a green run.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: no cargo toolchain found on PATH" >&2
+    echo "verify: install rustup/cargo (or run inside the rust_pallas toolchain image) and re-run" >&2
+    exit 3
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -40,6 +50,13 @@ cargo test -q
 # rejection — release mode so the kill/resume sweep stays fast.
 echo "== fault-tolerance tests (robustness stage) =="
 cargo test --release -q --test fault_tolerance
+
+# Schedule-search stage (both modes): journal resume × trial budget ×
+# min_share kill-anywhere sweeps for the legacy and successive-halving
+# searches, plus the warm accuracy-cache zero-fine-tune contract —
+# release mode for the same reason.
+echo "== schedule-search tests (resume/halving/cache stage) =="
+cargo test --release -q --test schedule_search
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
