@@ -10,6 +10,11 @@
 //!     evaluator refactor (asserts the ≥2× win at 4+ threads),
 //!   * the [`TransitionCostCache`] first-order table vs a full
 //!     re-characterization,
+//!   * the dispatched SIMD microkernels (AVX2/SSE2 vs scalar): int8
+//!     blocked GEMM at dense / 50% / 87.5% block sparsity, quantize,
+//!     requant epilogue and the f32 training GEMM (bit-identity always
+//!     asserted; >= 2x dense int8 GEMM gated on an AVX2 host; emits
+//!     BENCH_kernels.json),
 //!   * int8 mirror-engine forward,
 //!   * native train-step and evaluate throughput, serial vs
 //!     batch-parallel (the PR-4 accuracy-oracle hot path; asserts the
@@ -409,6 +414,245 @@ fn main() {
             "      -> warm first-order table vs full characterization: {:.1}x",
             m_char.median_ns as f64 / m_warm.median_ns.max(1) as f64
         );
+    }
+
+    // ---- SIMD microkernels: scalar vs runtime-dispatched ------------------
+    // The kernels::dispatch hot loops.  Every backend is bit-identical
+    // to scalar by construction, so the equality asserts are
+    // unconditional; the >= 2x dense int8 GEMM gate applies only when
+    // the host resolved AVX2 (and perf asserts are on).  The sweep is
+    // recorded as BENCH_kernels.json at the repo root and re-loaded
+    // through the checksummed artifact layer to prove it validates.
+    {
+        use wsel::model::kernels::dispatch::{self, KernelKind};
+        use wsel::model::kernels::{BlockedWeights, SB};
+        use wsel::util::json::Json;
+
+        let scalar_ops = dispatch::for_kind(KernelKind::Scalar).expect("scalar backend");
+        let active = dispatch::active();
+        println!(
+            "bench perf/kernels: dispatched backend = {}",
+            active.kind.name()
+        );
+
+        // (name, scalar ns, dispatched ns, speedup, dispatched GOP-or-elem/s)
+        let mut rows: Vec<(String, u128, u128, f64, f64)> = Vec::new();
+        let mut dense_speedup = 0.0f64;
+        let mut rng = Xoshiro256::new(17);
+
+        // int8 blocked GEMM at a conv-sized im2col shape, swept over
+        // block sparsity so the skip, dense and partial-mask strip
+        // paths all get exercised.
+        let (gm, gk, gn) = (256usize, 1152usize, 128usize);
+        let x: Vec<i8> = (0..gm * gk).map(|_| rng.code() as i8).collect();
+        for &(label, kill) in &[("dense", 0usize), ("sparse50", 4), ("sparse87.5", 7)] {
+            // Kill `kill` of every 8 SB x SB weight cells (deterministic
+            // cell-index stripe over the K x N matrix).
+            let ncells = gn.div_ceil(SB);
+            let w: Vec<i8> = (0..gk * gn)
+                .map(|i| {
+                    let (r, c) = (i / gn, i % gn);
+                    if ((r / SB) * ncells + c / SB) % 8 < kill {
+                        0
+                    } else {
+                        rng.code() as i8
+                    }
+                })
+                .collect();
+            let wb = BlockedWeights::pack(&w, gk, gn);
+            let mut acc_s = vec![0i32; gm * gn];
+            let mut acc_d = vec![0i32; gm * gn];
+            (scalar_ops.gemm_i8_blocked)(&x, &wb, gm, &mut acc_s);
+            (active.gemm_i8_blocked)(&x, &wb, gm, &mut acc_d);
+            assert_eq!(
+                acc_s, acc_d,
+                "{label}: dispatched i8 GEMM must be bit-identical to scalar"
+            );
+            // Dense-equivalent MAC work, so sparse rows show the
+            // combined structural-skip + SIMD win on one scale.
+            let ops = 2.0 * (gm * gk * gn) as f64;
+            let m_s = bench(&format!("perf/kernels_i8_gemm_scalar_{label}"), 1, 5, || {
+                (scalar_ops.gemm_i8_blocked)(black_box(&x), &wb, gm, &mut acc_s);
+            });
+            m_s.report_throughput(ops, "ops");
+            let m_d = bench(
+                &format!("perf/kernels_i8_gemm_{}_{label}", active.kind.name()),
+                1,
+                5,
+                || {
+                    (active.gemm_i8_blocked)(black_box(&x), &wb, gm, &mut acc_d);
+                },
+            );
+            m_d.report_throughput(ops, "ops");
+            let sp = m_s.median_ns as f64 / m_d.median_ns.max(1) as f64;
+            let gops = ops / m_d.median_ns.max(1) as f64;
+            println!("      -> {label}: {gops:.2} GOP/s dispatched, {sp:.2}x vs scalar");
+            if kill == 0 {
+                dense_speedup = sp;
+            }
+            rows.push((format!("i8_gemm_{label}"), m_s.median_ns, m_d.median_ns, sp, gops));
+        }
+
+        // Activation quantization (the per-layer forward epilogue feed).
+        {
+            let n_el = 1usize << 16;
+            let src: Vec<f32> = (0..n_el).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+            let mut q_s = vec![0i8; n_el];
+            let mut q_d = vec![0i8; n_el];
+            (scalar_ops.quantize_i8)(&src, 0.031, &mut q_s);
+            (active.quantize_i8)(&src, 0.031, &mut q_d);
+            assert_eq!(q_s, q_d, "dispatched quantize must be bit-identical to scalar");
+            let m_s = bench("perf/kernels_quantize_scalar_64k", 2, 20, || {
+                (scalar_ops.quantize_i8)(black_box(&src), 0.031, &mut q_s);
+            });
+            m_s.report_throughput(n_el as f64, "elems");
+            let m_d = bench(
+                &format!("perf/kernels_quantize_{}_64k", active.kind.name()),
+                2,
+                20,
+                || {
+                    (active.quantize_i8)(black_box(&src), 0.031, &mut q_d);
+                },
+            );
+            m_d.report_throughput(n_el as f64, "elems");
+            let sp = m_s.median_ns as f64 / m_d.median_ns.max(1) as f64;
+            println!("      -> quantize: {sp:.2}x vs scalar");
+            rows.push((
+                "quantize_64k".to_string(),
+                m_s.median_ns,
+                m_d.median_ns,
+                sp,
+                n_el as f64 / m_d.median_ns.max(1) as f64,
+            ));
+        }
+
+        // Requantization epilogue (i32 accumulators -> f32 + bias + relu).
+        {
+            let (rm, rn) = (256usize, 128usize);
+            let acc: Vec<i32> = (0..rm * rn)
+                .map(|_| (rng.below(1 << 20) as i64 - (1 << 19)) as i32)
+                .collect();
+            let bias: Vec<f32> = (0..rn).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let mut o_s = vec![0f32; rm * rn];
+            let mut o_d = vec![0f32; rm * rn];
+            (scalar_ops.requant_bias_relu)(&acc, 6.1e-4, &bias, true, &mut o_s);
+            (active.requant_bias_relu)(&acc, 6.1e-4, &bias, true, &mut o_d);
+            assert_eq!(
+                o_s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                o_d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "dispatched requant must be bit-identical to scalar"
+            );
+            let m_s = bench("perf/kernels_requant_scalar_256x128", 2, 20, || {
+                (scalar_ops.requant_bias_relu)(black_box(&acc), 6.1e-4, &bias, true, &mut o_s);
+            });
+            m_s.report_throughput((rm * rn) as f64, "elems");
+            let m_d = bench(
+                &format!("perf/kernels_requant_{}_256x128", active.kind.name()),
+                2,
+                20,
+                || {
+                    (active.requant_bias_relu)(black_box(&acc), 6.1e-4, &bias, true, &mut o_d);
+                },
+            );
+            m_d.report_throughput((rm * rn) as f64, "elems");
+            let sp = m_s.median_ns as f64 / m_d.median_ns.max(1) as f64;
+            println!("      -> requant: {sp:.2}x vs scalar");
+            rows.push((
+                "requant_256x128".to_string(),
+                m_s.median_ns,
+                m_d.median_ns,
+                sp,
+                (rm * rn) as f64 / m_d.median_ns.max(1) as f64,
+            ));
+        }
+
+        // f32 training GEMM (the GradEngine forward/backward core).
+        {
+            let (fm, fk, fnn) = (96usize, 256usize, 128usize);
+            let a: Vec<f32> = (0..fm * fk).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..fk * fnn).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let mut c_s = vec![0f32; fm * fnn];
+            let mut c_d = vec![0f32; fm * fnn];
+            (scalar_ops.gemm_f32)(&a, &b, fm, fk, fnn, &mut c_s);
+            (active.gemm_f32)(&a, &b, fm, fk, fnn, &mut c_d);
+            assert_eq!(
+                c_s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c_d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "dispatched f32 GEMM must be bit-identical to scalar"
+            );
+            let ops = 2.0 * (fm * fk * fnn) as f64;
+            let m_s = bench("perf/kernels_f32_gemm_scalar_96x256x128", 1, 10, || {
+                (scalar_ops.gemm_f32)(black_box(&a), &b, fm, fk, fnn, &mut c_s);
+            });
+            m_s.report_throughput(ops, "flops");
+            let m_d = bench(
+                &format!("perf/kernels_f32_gemm_{}_96x256x128", active.kind.name()),
+                1,
+                10,
+                || {
+                    (active.gemm_f32)(black_box(&a), &b, fm, fk, fnn, &mut c_d);
+                },
+            );
+            m_d.report_throughput(ops, "flops");
+            let sp = m_s.median_ns as f64 / m_d.median_ns.max(1) as f64;
+            println!("      -> f32 gemm: {sp:.2}x vs scalar");
+            rows.push((
+                "f32_gemm_96x256x128".to_string(),
+                m_s.median_ns,
+                m_d.median_ns,
+                sp,
+                ops / m_d.median_ns.max(1) as f64,
+            ));
+        }
+
+        // Acceptance gate: >= 2x dense int8 GEMM where AVX2 resolved.
+        let avx2_host = dispatch::for_kind(KernelKind::Avx2).is_some();
+        if perf_asserts_enabled() && avx2_host && active.kind == KernelKind::Avx2 {
+            assert!(
+                dense_speedup >= 2.0,
+                "AVX2 dense int8 GEMM must be >= 2x scalar (got {dense_speedup:.2}x)"
+            );
+        } else {
+            println!(
+                "      (kernel >=2x gate skipped: no AVX2 backend active or WSEL_PERF_ASSERT=0)"
+            );
+        }
+
+        let json = Json::obj(vec![
+            ("bench", Json::str("kernels")),
+            ("backend", Json::str(active.kind.name())),
+            ("avx2_host", Json::num(if avx2_host { 1.0 } else { 0.0 })),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|(name, s_ns, d_ns, sp, rate)| {
+                    Json::obj(vec![
+                        ("name", Json::str(name)),
+                        ("scalar_median_ns", Json::num(*s_ns as f64)),
+                        ("dispatched_median_ns", Json::num(*d_ns as f64)),
+                        ("speedup", Json::num(*sp)),
+                        ("dispatched_rate", Json::num(*rate)),
+                    ])
+                })),
+            ),
+        ]);
+        let path =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+        match wsel::util::artifact::write_json_atomic(&path, &json) {
+            Ok(()) => {
+                // Round-trip through the checksummed loader: a torn or
+                // bit-rotted artifact must be rejected, a good one must
+                // parse back to the same document.
+                let back = wsel::util::artifact::load_json(&path)
+                    .expect("re-load BENCH_kernels.json");
+                assert_eq!(
+                    back.to_string(),
+                    json.to_string(),
+                    "BENCH_kernels.json must round-trip losslessly"
+                );
+                println!("      wrote {} (validated on re-load)", path.display());
+            }
+            Err(e) => eprintln!("      could not write {}: {e}", path.display()),
+        }
     }
 
     // ---- int8 forward: scalar reference vs blocked parallel executor ------

@@ -58,6 +58,10 @@ pub struct PipelineParams {
     /// bounded divergence rollback (see
     /// [`crate::runtime::ResumeOpts`]).  `--ckpt-every` on the CLI.
     pub ckpt_every: usize,
+    /// Kernel backend to force (`--kernels` on the CLI; `None` = auto
+    /// detection / `WSEL_KERNELS`).  All backends are bit-identical, so
+    /// this only changes speed, never results.
+    pub kernels: Option<crate::model::KernelKind>,
 }
 
 impl Default for PipelineParams {
@@ -75,6 +79,7 @@ impl Default for PipelineParams {
             data_seed: ModelRuntime::DEFAULT_DATA_SEED,
             backend: BackendChoice::Auto,
             ckpt_every: 0,
+            kernels: None,
         }
     }
 }
@@ -131,6 +136,14 @@ impl Pipeline {
     pub fn from_runtime(mut rt: ModelRuntime, pp: PipelineParams) -> Self {
         rt.data_seed = pp.data_seed;
         rt.threads = pp.threads;
+        match crate::model::kernels::dispatch::select(pp.kernels) {
+            Ok(ops) => crate::info!("kernels: {} backend", ops.kind.name()),
+            // Bit-identical fallback: an unavailable forced backend only
+            // changes speed, so degrade with a warning instead of
+            // failing the whole pipeline here (the CLI flag validates
+            // up front and does fail fast).
+            Err(e) => crate::warnlog!("{e}; keeping current kernel backend"),
+        }
         Self {
             rt,
             pp,

@@ -58,6 +58,7 @@ common options:
   --resume            resume an interrupted schedule search from the
                       journal in the artifact dir (compress / faults)
   --quick             small preset (smoke-scale)
+  --kernels <k>       scalar | sse2 | avx2 | auto (default: auto; env WSEL_KERNELS)
 models: lenet5 | resnet20 | resnet50lite";
 
 fn params_from(args: &Args) -> Result<PipelineParams> {
@@ -79,6 +80,9 @@ fn params_from(args: &Args) -> Result<PipelineParams> {
     // wins when both are given.
     pp.data_seed = args.u64_or("data-seed", args.u64_or("seed", pp.data_seed));
     pp.backend = wsel::runtime::BackendChoice::parse(args.opt_or("backend", "auto"))?;
+    if let Some(ks) = args.opt("kernels") {
+        pp.kernels = wsel::model::KernelKind::parse(ks)?;
+    }
     Ok(pp)
 }
 
@@ -436,8 +440,16 @@ fn main() -> Result<()> {
             "max-wait-us",
             "bench-seed",
             "out",
+            "kernels",
         ],
     );
+    // Resolve the kernel backend once, up front, so every subcommand
+    // (including ones that never build a `Pipeline`, e.g. `serve-bench`)
+    // honors `--kernels`. A bad value is a CLI error, fail fast.
+    if let Some(ks) = args.opt("kernels") {
+        let kind = wsel::model::KernelKind::parse(ks)?;
+        wsel::model::kernels::dispatch::select(kind)?;
+    }
     let sub = args.positional.first().map(String::as_str).unwrap_or("");
     match sub {
         "train" => cmd_train(&args),

@@ -144,14 +144,17 @@ impl CaptureSink for CaptureBuffer {
 }
 
 /// Per-worker execution scratch: every buffer sized once from the
-/// plan's maxima and reused across all images the worker claims.
+/// plan's maxima and reused across all images the worker claims.  The
+/// kernel operands (`xq`, `cols`, `acc`) live in 64-byte-aligned
+/// [`kernels::AVec`] buffers so the SIMD microkernels see cache-line
+/// aligned tiles.
 struct Scratch {
     cur: Vec<f32>,
     tmp: Vec<f32>,
     saved: Vec<Vec<f32>>,
-    xq: Vec<i8>,
-    cols: Vec<i8>,
-    acc: Vec<i32>,
+    xq: kernels::AVec<i8>,
+    cols: kernels::AVec<i8>,
+    acc: kernels::AVec<i32>,
 }
 
 impl Scratch {
@@ -162,9 +165,9 @@ impl Scratch {
             saved: (0..plan.save_depth)
                 .map(|_| Vec::with_capacity(plan.max_tensor))
                 .collect(),
-            xq: Vec::with_capacity(plan.max_qin),
-            cols: Vec::with_capacity(plan.max_cols),
-            acc: Vec::with_capacity(plan.max_acc),
+            xq: kernels::AVec::with_capacity(plan.max_qin),
+            cols: kernels::AVec::with_capacity(plan.max_cols),
+            acc: kernels::AVec::with_capacity(plan.max_acc),
         }
     }
 }
@@ -189,9 +192,9 @@ fn run_conv(
     cs: &ConvStep,
     input: &[f32],
     act_max: &mut [f32],
-    xq: &mut Vec<i8>,
-    cols: &mut Vec<i8>,
-    acc: &mut Vec<i32>,
+    xq: &mut kernels::AVec<i8>,
+    cols: &mut kernels::AVec<i8>,
+    acc: &mut kernels::AVec<i32>,
     out: &mut Vec<f32>,
     capture: bool,
     blocks: &mut Vec<ConvBlock>,
@@ -214,7 +217,7 @@ fn run_conv(
                 blocks.push(ConvBlock {
                     conv_idx: cv.conv_idx,
                     rows: m_img,
-                    x: cols.clone(),
+                    x: cols.to_vec(),
                 });
             }
         }
@@ -232,7 +235,7 @@ fn run_fc(
     fs: &FcStep,
     input: &[f32],
     act_max: &mut [f32],
-    xq: &mut Vec<i8>,
+    xq: &mut kernels::AVec<i8>,
     out: &mut Vec<f32>,
 ) {
     let fc = &fs.op;

@@ -88,10 +88,14 @@ struct TapeEntry {
     proj_qin: Vec<f32>,
 }
 
-/// Reused per-image scratch (one per worker).
+/// Reused per-image scratch (one per worker).  The im2col patch matrix
+/// feeds the dispatched f32 GEMMs (which may run SIMD; see
+/// `kernels::dispatch` — every backend preserves the scalar
+/// accumulation order, so gradients stay bit-identical at any thread
+/// count on any backend), so it lives in a 64-byte-aligned buffer.
 #[derive(Default)]
 struct GradScratch {
-    cols: Vec<f32>,
+    cols: kernels::AVec<f32>,
     dcols: Vec<f32>,
     dwkn: Vec<f32>,
     qbuf: Vec<f32>,

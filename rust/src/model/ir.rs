@@ -12,7 +12,10 @@
 //! * the op list is lowered to [`Step`]s carrying their input shapes, so
 //!   the executor does no shape inference at run time;
 //! * maximum per-image buffer sizes are computed so executor scratch is
-//!   allocated once per worker and reused across the whole batch loop.
+//!   allocated once per worker and reused across the whole batch loop
+//!   (the kernel-operand buffers are 64-byte-aligned
+//!   [`super::kernels::AVec`]s, matching the aligned panel layout the
+//!   SIMD microkernels expect).
 //!
 //! Lowering checks the same structural invariants the scalar forward
 //! asserts (shape chaining, save/add balance), failing fast at compile
@@ -132,6 +135,10 @@ fn lower_conv(cv: &ConvOp, params: &[Vec<f32>], qc: &QuantConfig) -> ConvStep {
             }
         }
         let wb = BlockedWeights::pack(&wq, kk, nn);
+        // The SIMD strip kernels rely on pack's layout contract: panels
+        // start cache-line aligned (aligned base + 64-byte-multiple
+        // panel stride).  Cheap pointer check, compiled out of release.
+        debug_assert!(wb.panels_aligned(), "{}: unaligned weight panels", cv.name);
         ConvWeights::Quant { wq, wb, s_w }
     } else {
         ConvWeights::Float(wt.clone())

@@ -1,0 +1,171 @@
+//! 64-byte-aligned growable buffers for kernel operands.
+//!
+//! `Vec<T>` only guarantees `align_of::<T>()` alignment, so an i8 im2col
+//! buffer or a packed weight panel can start at any byte address.  The SIMD
+//! microkernels in [`super::simd`] tolerate unaligned operands (they use
+//! unaligned loads), but cache-line-aligned panels keep every 64-wide panel
+//! row within a predictable pair of lines and let future aligned-load
+//! variants land without another layout migration.  [`AVec`] is the small
+//! `Vec` subset the engine scratch and weight packer actually use, backed by
+//! a [`ALIGN`]-byte-aligned allocation.
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Alignment (bytes) of every kernel operand buffer: one x86-64 cache line,
+/// and at least the widest vector the SIMD layer uses (32-byte AVX2).
+pub const ALIGN: usize = 64;
+
+/// A `Vec`-like growable buffer whose backing allocation is always
+/// [`ALIGN`]-byte aligned.  Derefs to `[T]`, so read-side call sites are
+/// unchanged; only the handful of producers (pack / im2col / quantize) talk
+/// to the growth API.
+pub struct AVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: AVec owns its allocation exclusively, exactly like Vec<T>.
+unsafe impl<T: Copy + Send> Send for AVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for AVec<T> {}
+
+impl<T: Copy> AVec<T> {
+    pub const fn new() -> Self {
+        Self {
+            ptr: NonNull::dangling(),
+            len: 0,
+            cap: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut v = Self::new();
+        v.reserve_total(cap);
+        v
+    }
+
+    fn layout(cap: usize) -> Layout {
+        let size = cap
+            .checked_mul(std::mem::size_of::<T>())
+            .expect("AVec capacity overflow");
+        Layout::from_size_align(size, ALIGN.max(std::mem::align_of::<T>()))
+            .expect("AVec layout")
+    }
+
+    /// Grow the backing allocation to at least `want` elements (no-op if
+    /// already large enough).  Amortized doubling, like `Vec`.
+    fn reserve_total(&mut self, want: usize) {
+        assert!(std::mem::size_of::<T>() > 0, "AVec does not support ZSTs");
+        if want <= self.cap {
+            return;
+        }
+        let new_cap = want.max(self.cap * 2).max(ALIGN / std::mem::size_of::<T>()).max(8);
+        let layout = Self::layout(new_cap);
+        // SAFETY: layout has non-zero size (new_cap >= 8, T is not a ZST).
+        let raw = unsafe { alloc(layout) } as *mut T;
+        let Some(new_ptr) = NonNull::new(raw) else {
+            handle_alloc_error(layout);
+        };
+        if self.cap > 0 {
+            // SAFETY: both regions are valid for `len` elements and disjoint
+            // (fresh allocation).
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), new_ptr.as_ptr(), self.len);
+                dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap));
+            }
+        }
+        self.ptr = new_ptr;
+        self.cap = new_cap;
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Set the length to `new_len`, filling any new tail elements with
+    /// `value` (truncates if shrinking), like `Vec::resize`.
+    pub fn resize(&mut self, new_len: usize, value: T) {
+        self.reserve_total(new_len);
+        if new_len > self.len {
+            // SAFETY: capacity >= new_len, elements are Copy.
+            unsafe {
+                let base = self.ptr.as_ptr();
+                for i in self.len..new_len {
+                    base.add(i).write(value);
+                }
+            }
+        }
+        self.len = new_len;
+    }
+
+    pub fn extend_from_slice(&mut self, src: &[T]) {
+        let new_len = self.len + src.len();
+        self.reserve_total(new_len);
+        // SAFETY: capacity >= new_len; src cannot alias our fresh tail.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.as_ptr().add(self.len), src.len());
+        }
+        self.len = new_len;
+    }
+
+    pub fn push(&mut self, value: T) {
+        self.reserve_total(self.len + 1);
+        // SAFETY: capacity > len.
+        unsafe { self.ptr.as_ptr().add(self.len).write(value) };
+        self.len += 1;
+    }
+
+    pub fn to_vec(&self) -> Vec<T> {
+        self[..].to_vec()
+    }
+}
+
+impl<T: Copy> Deref for AVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // SAFETY: ptr is valid for len elements (dangling only when len == 0).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as above, plus &mut self gives exclusive access.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> Clone for AVec<T> {
+    fn clone(&self) -> Self {
+        let mut v = Self::with_capacity(self.len);
+        v.extend_from_slice(self);
+        v
+    }
+}
+
+impl<T: Copy> Default for AVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy> Drop for AVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: allocation came from `alloc` with this exact layout.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self[..].fmt(f)
+    }
+}

@@ -1,0 +1,163 @@
+//! Runtime kernel dispatch: detect once, call through a vtable forever.
+//!
+//! The hot kernels exist in up to three backends (scalar, SSE2, AVX2 —
+//! see [`super::scalar`] / [`super::simd`]).  A [`KernelOps`] vtable per
+//! backend is selected once — auto-detection, the `WSEL_KERNELS` env var
+//! (`scalar|sse2|avx2|auto`), or the `--kernels` CLI flag via
+//! [`select`] — and cached in an atomic pointer; after that every
+//! dispatched call is one indirect call with zero per-call feature
+//! checks.  All backends are bit-identical, so swapping them (even
+//! mid-process, as the property tests do) can never change results.
+//!
+//! On non-x86-64 targets the SIMD accessors return `None` and everything
+//! resolves to scalar; no `cfg` appears outside `super::simd`.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use super::{scalar, simd, BlockedWeights};
+
+/// The selectable kernel backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Scalar,
+    Sse2,
+    Avx2,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Sse2 => "sse2",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a `WSEL_KERNELS` / `--kernels` value; `"auto"` means "let
+    /// detection pick" and maps to `None`.
+    pub fn parse(s: &str) -> anyhow::Result<Option<KernelKind>> {
+        match s {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(KernelKind::Scalar)),
+            "sse2" => Ok(Some(KernelKind::Sse2)),
+            "avx2" => Ok(Some(KernelKind::Avx2)),
+            other => anyhow::bail!(
+                "unknown kernel backend {other:?} (expected scalar|sse2|avx2|auto)"
+            ),
+        }
+    }
+}
+
+/// One backend's implementations of the dispatched kernels.  Plain
+/// function pointers: resolved once, branch-predicted perfectly after.
+pub struct KernelOps {
+    pub kind: KernelKind,
+    pub gemm_i8_blocked: fn(&[i8], &BlockedWeights, usize, &mut [i32]),
+    pub quantize_i8: fn(&[f32], f32, &mut [i8]),
+    pub requant_bias_relu: fn(&[i32], f32, &[f32], bool, &mut [f32]),
+    pub gemm_f32: fn(&[f32], &[f32], usize, usize, usize, &mut [f32]),
+    pub gemm_f32_xt_y: fn(&[f32], &[f32], usize, usize, usize, &mut [f32]),
+    pub gemm_f32_y_wt: fn(&[f32], &[f32], usize, usize, usize, &mut [f32]),
+}
+
+static SCALAR_OPS: KernelOps = KernelOps {
+    kind: KernelKind::Scalar,
+    gemm_i8_blocked: gemm_i8_scalar,
+    quantize_i8: scalar::quantize_i8,
+    requant_bias_relu: scalar::requant_bias_relu,
+    gemm_f32: scalar::gemm_f32,
+    gemm_f32_xt_y: scalar::gemm_f32_xt_y,
+    gemm_f32_y_wt: scalar::gemm_f32_y_wt,
+};
+
+fn gemm_i8_scalar(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+    super::gemm_i8_outer(x, w, m, acc, scalar::strip_scalar);
+}
+
+/// The table for a specific backend, or `None` when this host can't run
+/// it (SSE2/AVX2 off x86-64, AVX2 without hardware support).
+pub fn for_kind(kind: KernelKind) -> Option<&'static KernelOps> {
+    match kind {
+        KernelKind::Scalar => Some(&SCALAR_OPS),
+        KernelKind::Sse2 => simd::sse2_ops(),
+        KernelKind::Avx2 => simd::avx2_ops(),
+    }
+}
+
+/// Every backend this host can run, scalar first.
+pub fn available() -> Vec<&'static KernelOps> {
+    let mut v = vec![&SCALAR_OPS];
+    v.extend(simd::sse2_ops());
+    v.extend(simd::avx2_ops());
+    v
+}
+
+/// The best backend runtime detection finds: AVX2 > SSE2 > scalar.
+pub fn detect_best() -> &'static KernelOps {
+    simd::avx2_ops()
+        .or_else(simd::sse2_ops)
+        .unwrap_or(&SCALAR_OPS)
+}
+
+/// The `WSEL_KERNELS` override, if set and valid.  Invalid values warn
+/// and fall back to auto (`None`) rather than failing a run whose
+/// environment leaked a bad value; the CLI flag, in contrast, errors.
+pub fn resolve_env() -> Option<KernelKind> {
+    let raw = std::env::var("WSEL_KERNELS").ok()?;
+    match KernelKind::parse(&raw) {
+        Ok(sel) => sel,
+        Err(e) => {
+            crate::warnlog!("WSEL_KERNELS: {e}; using auto detection");
+            None
+        }
+    }
+}
+
+/// The active vtable pointer.  Null until first resolution; always
+/// points at one of the `'static` tables after.  An `AtomicPtr` rather
+/// than a `OnceLock` so [`select`] can re-point it mid-process — the
+/// property tests A/B backends in one process, and the CLI applies
+/// `--kernels` after startup.
+static ACTIVE: AtomicPtr<KernelOps> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The active kernel table.  First use resolves `WSEL_KERNELS` (an
+/// env-forced backend that's unavailable on this host warns and degrades
+/// to detection) or auto-detects, then caches.
+pub fn active() -> &'static KernelOps {
+    let p = ACTIVE.load(Ordering::Acquire);
+    if !p.is_null() {
+        // SAFETY: ACTIVE only ever holds pointers to 'static tables.
+        return unsafe { &*p };
+    }
+    let ops = match resolve_env() {
+        Some(kind) => for_kind(kind).unwrap_or_else(|| {
+            crate::warnlog!(
+                "WSEL_KERNELS={} unavailable on this host; using auto detection",
+                kind.name()
+            );
+            detect_best()
+        }),
+        None => detect_best(),
+    };
+    ACTIVE.store(ops as *const KernelOps as *mut KernelOps, Ordering::Release);
+    ops
+}
+
+/// Kind of the currently active backend (resolving it if needed).
+pub fn active_kind() -> KernelKind {
+    active().kind
+}
+
+/// Force the active backend (`None` = auto-detect best).  Errors if the
+/// requested backend can't run on this host — callers surface that
+/// rather than silently computing on a different backend than asked.
+pub fn select(kind: Option<KernelKind>) -> anyhow::Result<&'static KernelOps> {
+    let ops = match kind {
+        None => detect_best(),
+        Some(kind) => for_kind(kind).ok_or_else(|| {
+            anyhow::anyhow!("kernel backend `{}` unavailable on this host", kind.name())
+        })?,
+    };
+    ACTIVE.store(ops as *const KernelOps as *mut KernelOps, Ordering::Release);
+    Ok(ops)
+}

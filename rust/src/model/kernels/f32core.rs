@@ -1,0 +1,102 @@
+//! One f32 GEMM loop nest shared by every variant and backend.
+//!
+//! The three training GEMMs (`gemm_f32`, `gemm_f32_xt_y`, `gemm_f32_y_wt`)
+//! are all "C[rows x width] += A[rows x red] * B[red x width]" after
+//! choosing how A is viewed ([`AView`]) and, for the `y_wt` case,
+//! materializing a transposed copy of W (thread-local scratch, see
+//! [`with_wt`]).  The core fixes the accumulation order so that backends
+//! only choose *how an axpy row is executed*, never *in what order partial
+//! sums land*:
+//!
+//! - per output row `o`, the reduction index `t` ascends `0..red`;
+//! - each step does `acc_row += a(o,t) * b_row(t)` via the caller's axpy;
+//! - an axpy may be vectorized across the `width` axis (output columns are
+//!   independent accumulators — lanes never mix), but must compute each
+//!   element as `acc[j] + s * b[j]` with one multiply and one add.
+//!
+//! That makes every backend bit-identical to the scalar reference: the
+//! per-output-element chain of f32 adds is the same sequence of operations
+//! in the same order.  (No FMA anywhere: a fused multiply-add rounds once
+//! where `mul` + `add` round twice, which would change bits.)
+//!
+//! The `a(o,t) == 0.0` skip is order-preserving too: skipping a term means
+//! not executing `acc[j] += 0.0 * b[j]`.  For finite `b` that term is
+//! `acc[j] += ±0.0`, and since every accumulator chain starts at a caller
+//! zeroed (+0.0) buffer, partial sums are never -0.0, so adding ±0.0 is a
+//! bit-level no-op.
+
+use std::cell::RefCell;
+
+/// How the A operand of `C += A * B` is stored.
+#[derive(Clone, Copy)]
+pub(crate) enum AView<'a> {
+    /// `a[o * red + t]`: A is rows x red, row-major.
+    RowMajor(&'a [f32]),
+    /// `a[t * rows + o]`: A is red x rows, row-major (we walk its transpose).
+    Transposed(&'a [f32]),
+}
+
+/// The shared loop nest.  `axpy(s, brow, arow)` must perform
+/// `arow[j] += s * brow[j]` for all j (any vector width, no FMA).
+#[inline(always)]
+pub(crate) fn gemm_core(
+    a: AView,
+    b: &[f32],
+    rows: usize,
+    red: usize,
+    width: usize,
+    acc: &mut [f32],
+    mut axpy: impl FnMut(f32, &[f32], &mut [f32]),
+) {
+    debug_assert_eq!(b.len(), red * width);
+    debug_assert_eq!(acc.len(), rows * width);
+    for o in 0..rows {
+        let arow = &mut acc[o * width..(o + 1) * width];
+        match a {
+            AView::RowMajor(av) => {
+                let r = &av[o * red..(o + 1) * red];
+                for (t, &s) in r.iter().enumerate() {
+                    if s == 0.0 {
+                        continue;
+                    }
+                    axpy(s, &b[t * width..(t + 1) * width], arow);
+                }
+            }
+            AView::Transposed(av) => {
+                for t in 0..red {
+                    let s = av[t * rows + o];
+                    if s == 0.0 {
+                        continue;
+                    }
+                    axpy(s, &b[t * width..(t + 1) * width], arow);
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// Scratch for the transposed-W copy `gemm_f32_y_wt` needs so its B
+    /// operand is row-major like the others.  Per worker thread: the grad
+    /// engine calls in from pool workers concurrently.
+    static WT_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Materialize `wt[n x k]` = transpose of `w[k x n]` into thread-local
+/// scratch and hand it to `f`.
+#[inline]
+pub(crate) fn with_wt<R>(w: &[f32], k: usize, n: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+    debug_assert_eq!(w.len(), k * n);
+    WT_SCRATCH.with(|cell| {
+        let mut wt = cell.borrow_mut();
+        wt.clear();
+        wt.resize(n * k, 0.0);
+        for r in 0..k {
+            let wrow = &w[r * n..(r + 1) * n];
+            for (j, &wv) in wrow.iter().enumerate() {
+                wt[j * k + r] = wv;
+            }
+        }
+        f(&wt)
+    })
+}

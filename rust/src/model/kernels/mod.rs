@@ -8,9 +8,36 @@
 //! reduction in the same element order as the reference loops, so the
 //! f32 rounding sequence is identical.  `rust/tests/engine_parallel.rs`
 //! pins this bit-for-bit.
+//!
+//! # Module layout
+//!
+//! The hot kernels (`gemm_i8_blocked`, `quantize_into`,
+//! `requant_bias_relu`, the three f32 training GEMMs) are **dispatched**:
+//! the public functions here forward through a runtime-selected vtable
+//! ([`dispatch`]) to either the portable [`scalar`] backend or the
+//! x86-64 [`simd`] backends (AVX2/SSE2).  All backends are bit-identical
+//! by construction and pinned so by `rust/tests/kernels_simd.rs`; the
+//! backend is chosen once (auto-detect, `WSEL_KERNELS`, or `--kernels`)
+//! and every caller inherits it.  The remaining kernels (im2col, pool,
+//! fc, direct conv) are memory-bound or cold and stay scalar here.
+//!
+//! - [`dispatch`] — kernel kinds, runtime detection, the active vtable;
+//! - [`scalar`] — portable reference backend;
+//! - [`simd`] — AVX2/SSE2 backends (compiles to nothing off x86-64);
+//! - [`f32core`] — the one f32 GEMM loop nest all variants share;
+//! - [`aligned`] — 64-byte-aligned buffers ([`AVec`]) for panels and
+//!   engine scratch.
 
 use super::spec::ConvOp;
 use crate::quant;
+
+pub mod aligned;
+pub mod dispatch;
+mod f32core;
+mod scalar;
+mod simd;
+
+pub use aligned::{AVec, ALIGN};
 
 /// Column-panel width of the blocked weight layout (one GEMM tile of
 /// output columns).
@@ -22,6 +49,8 @@ pub const KB: usize = 256;
 /// Side of the block-sparse occupancy grid: SB×SB weight blocks (8-wide
 /// column sub-blocks × 8 k-rows, BSR-style).  NB and KB are multiples of
 /// SB, so panel sub-blocks align with the global 8×8 grid over K×N.
+/// SB is also the i32 vector width of one AVX2 register, so a full
+/// sub-block is exactly one SIMD accumulator lane group.
 pub const SB: usize = 8;
 
 /// Block-sparsity summary of a packed weight matrix, counted over the
@@ -89,16 +118,37 @@ pub fn block_sparsity_of(w_kxn: &[i8], k: usize, n: usize) -> BlockSparsity {
     occupancy_of(w_kxn, k, n).1
 }
 
+/// Expand an occupancy mask into its occupied `(c0, cend)` column spans
+/// within a `width`-wide panel row, hoisted once per occupancy row so
+/// neither the scalar nor the SIMD strip re-scans the bits per
+/// activation row.  At most `NB / SB` spans.
+#[inline]
+pub(crate) fn occupied_subblocks(mask: u8, width: usize) -> ([(usize, usize); NB / SB], usize) {
+    let mut spans = [(0usize, 0usize); NB / SB];
+    let mut cnt = 0usize;
+    let mut mbits = mask;
+    while mbits != 0 {
+        let b = mbits.trailing_zeros() as usize;
+        mbits &= mbits - 1;
+        let c0 = b * SB;
+        spans[cnt] = (c0, width.min(c0 + SB));
+        cnt += 1;
+    }
+    (spans, cnt)
+}
+
 /// Pre-quantized conv weights packed into column panels: `ceil(n/NB)`
 /// panels, each `k`×`NB` row-major with tail columns zero-padded, so the
 /// GEMM inner loop reads one contiguous stripe per (row, panel).  Pack
 /// time also records a per-panel SB×SB block occupancy index so the
-/// GEMM can skip all-zero weight blocks structurally.
+/// GEMM can skip all-zero weight blocks structurally.  Panels live in an
+/// [`AVec`], and since each panel is `k * NB` bytes (a multiple of
+/// [`ALIGN`]), every panel starts cache-line aligned.
 #[derive(Clone)]
 pub struct BlockedWeights {
     pub k: usize,
     pub n: usize,
-    data: Vec<i8>,
+    data: AVec<i8>,
     /// Panel-major occupancy masks, `panels * kblocks` entries.
     occ: Vec<u8>,
     /// `k.div_ceil(SB)` — rows of the occupancy grid.
@@ -111,7 +161,8 @@ impl BlockedWeights {
     pub fn pack(w_kxn: &[i8], k: usize, n: usize) -> Self {
         assert_eq!(w_kxn.len(), k * n);
         let panels = n.div_ceil(NB);
-        let mut data = vec![0i8; panels * k * NB];
+        let mut data = AVec::new();
+        data.resize(panels * k * NB, 0i8);
         for p in 0..panels {
             let j0 = p * NB;
             let width = NB.min(n - j0);
@@ -122,6 +173,7 @@ impl BlockedWeights {
         }
         let (occ, sparsity) = occupancy_of(w_kxn, k, n);
         let kblocks = k.div_ceil(SB);
+        debug_assert_eq!(data.as_ptr() as usize % ALIGN, 0);
         Self { k, n, data, occ, kblocks, sparsity }
     }
 
@@ -137,16 +189,29 @@ impl BlockedWeights {
     pub fn sparsity(&self) -> BlockSparsity {
         self.sparsity
     }
+
+    /// Whether every panel starts [`ALIGN`]-byte aligned (always true by
+    /// construction: the base allocation is aligned and the panel stride
+    /// `k * NB` bytes is a multiple of NB = ALIGN).
+    pub fn panels_aligned(&self) -> bool {
+        self.data.as_ptr() as usize % ALIGN == 0 && (self.k * NB) % ALIGN == 0
+    }
 }
 
-/// `acc(m×n) += X(m×k) · W(k×n)` with exact i32 accumulation, blocked
-/// over (column panel, M, K).  Zero activations are skipped (post-ReLU
-/// code streams are sparse), and all-zero SB×SB weight blocks are
-/// skipped *structurally* via the pack-time occupancy index — no
-/// per-element zero tests on the weight side.  Skipped blocks contribute
-/// exactly zero to the i32 sums, so the result is bit-identical to the
-/// dense walk.  Caller zeroes `acc`.
-pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+/// The shared outer blocking of `gemm_i8_blocked`: panels → MB row
+/// blocks → KB k-strips, handing each (activation row × panel strip) to
+/// a backend microkernel.  `strip(xrow, prows, occ_rows, width, arow)`
+/// accumulates `kh` activation codes against `kh` panel rows into
+/// `width` i32 outputs, honoring the strip's occupancy masks (one per
+/// SB k-rows; KB is a multiple of SB so strips start on occupancy-row
+/// boundaries).
+pub(crate) fn gemm_i8_outer(
+    x: &[i8],
+    w: &BlockedWeights,
+    m: usize,
+    acc: &mut [i32],
+    mut strip: impl FnMut(&[i8], &[i8], &[u8], usize, &mut [i32]),
+) {
     let (k, n) = (w.k, w.n);
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(acc.len(), m * n);
@@ -156,75 +221,41 @@ pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) 
         let width = NB.min(n - j0);
         let panel = w.panel(p);
         let occ = w.panel_occ(p);
-        let nsb = width.div_ceil(SB);
-        let full: u8 = if nsb == 8 { 0xFF } else { (1u8 << nsb) - 1 };
         for i0 in (0..m).step_by(MB) {
             let ih = MB.min(m - i0);
             for k0 in (0..k).step_by(KB) {
                 let kh = KB.min(k - k0);
+                let prows = &panel[k0 * NB..(k0 + kh) * NB];
+                let occ_rows = &occ[k0 / SB..(k0 + kh).div_ceil(SB)];
                 for i in i0..i0 + ih {
                     let xrow = &x[i * k + k0..i * k + k0 + kh];
                     let arow = &mut acc[i * n + j0..i * n + j0 + width];
-                    // KB is a multiple of SB, so k0 is SB-aligned and
-                    // this walk visits whole occupancy rows.
-                    let mut r = 0usize;
-                    while r < kh {
-                        let kb = (k0 + r) / SB;
-                        let rend = kh.min((kb + 1) * SB - k0);
-                        let mask = occ[kb];
-                        if mask == 0 {
-                            r = rend;
-                            continue;
-                        }
-                        if mask == full {
-                            // Fully-occupied row of blocks: the original
-                            // contiguous dense inner loop.
-                            for dk in r..rend {
-                                let xv = xrow[dk];
-                                if xv == 0 {
-                                    continue;
-                                }
-                                let xi = xv as i32;
-                                let wrow = &panel[(k0 + dk) * NB..(k0 + dk) * NB + width];
-                                for (a, &wv) in arow.iter_mut().zip(wrow) {
-                                    *a += xi * wv as i32;
-                                }
-                            }
-                        } else {
-                            // Partial row: visit only occupied sub-blocks.
-                            for dk in r..rend {
-                                let xv = xrow[dk];
-                                if xv == 0 {
-                                    continue;
-                                }
-                                let xi = xv as i32;
-                                let wrow = &panel[(k0 + dk) * NB..(k0 + dk) * NB + width];
-                                let mut mbits = mask;
-                                while mbits != 0 {
-                                    let b = mbits.trailing_zeros() as usize;
-                                    mbits &= mbits - 1;
-                                    let c0 = b * SB;
-                                    let cend = width.min(c0 + SB);
-                                    for (a, &wv) in
-                                        arow[c0..cend].iter_mut().zip(&wrow[c0..cend])
-                                    {
-                                        *a += xi * wv as i32;
-                                    }
-                                }
-                            }
-                        }
-                        r = rend;
-                    }
+                    strip(xrow, prows, occ_rows, width, arow);
                 }
             }
         }
     }
 }
 
-/// Quantize a float tensor to int8 codes into a reused buffer.
-pub fn quantize_into(src: &[f32], s: f32, dst: &mut Vec<i8>) {
+/// `acc(m×n) += X(m×k) · W(k×n)` with exact i32 accumulation, blocked
+/// over (column panel, M, K).  Zero activations are skipped (post-ReLU
+/// code streams are sparse), and all-zero SB×SB weight blocks are
+/// skipped *structurally* via the pack-time occupancy index — no
+/// per-element zero tests on the weight side.  Skipped blocks contribute
+/// exactly zero to the i32 sums, so the result is bit-identical to the
+/// dense walk — and exact i32 also makes every dispatched backend
+/// bit-identical regardless of vector width.  Caller zeroes `acc`.
+pub fn gemm_i8_blocked(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+    (dispatch::active().gemm_i8_blocked)(x, w, m, acc)
+}
+
+/// Quantize a float tensor to int8 codes into a reused buffer
+/// (dispatched; all backends reproduce `quant::quantize` bit-exactly for
+/// finite inputs).
+pub fn quantize_into(src: &[f32], s: f32, dst: &mut AVec<i8>) {
     dst.clear();
-    dst.extend(src.iter().map(|&v| quant::quantize(v, s) as i8));
+    dst.resize(src.len(), 0);
+    (dispatch::active().quantize_i8)(src, s, dst)
 }
 
 /// im2col of an NHWC code tensor into a reused buffer; (ky, kx, c) patch
@@ -237,7 +268,7 @@ pub fn im2col_i8(
     w: usize,
     c: usize,
     cv: &ConvOp,
-    out: &mut Vec<i8>,
+    out: &mut AVec<i8>,
 ) {
     let (ho, wo, k, s, p) = (cv.hout, cv.wout, cv.k, cv.stride, cv.pad as isize);
     let m = n_imgs * ho * wo;
@@ -271,18 +302,13 @@ pub fn im2col_i8(
 
 /// Requantize an i32 accumulator tile: `out = acc·ss + bias`, optional
 /// ReLU.  `ss` must be the pre-multiplied `s_act · s_w` so the f32
-/// expression matches the scalar reference exactly.
+/// expression matches the scalar reference exactly (dispatched; the
+/// vector backends compute the identical mul-then-add per element).
 pub fn requant_bias_relu(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut Vec<f32>) {
-    let n = bias.len();
-    debug_assert_eq!(acc.len() % n, 0);
+    debug_assert_eq!(acc.len() % bias.len(), 0);
     out.clear();
-    out.reserve(acc.len());
-    for arow in acc.chunks_exact(n) {
-        for (a, b) in arow.iter().zip(bias) {
-            let v = *a as f32 * ss + *b;
-            out.push(if relu { v.max(0.0) } else { v });
-        }
-    }
+    out.resize(acc.len(), 0.0);
+    (dispatch::active().requant_bias_relu)(acc, ss, bias, relu, out)
 }
 
 /// Float direct convolution (calibration path), bit-identical in
@@ -456,7 +482,7 @@ pub fn im2col_f32(
     w: usize,
     c: usize,
     cv: &ConvOp,
-    out: &mut Vec<f32>,
+    out: &mut AVec<f32>,
 ) {
     let (ho, wo, k, s, p) = (cv.hout, cv.wout, cv.k, cv.stride, cv.pad as isize);
     let m = n_imgs * ho * wo;
@@ -534,65 +560,35 @@ pub fn col2im_f32_add(
 
 /// `acc(m×n) += X(m×k) · W(k×n)` in f32 with zero-skip on X (post-ReLU
 /// activations are sparse).  Reduction walks k in ascending order per
-/// row, so the rounding sequence is fixed.
+/// row, so the rounding sequence is fixed — and the dispatched vector
+/// backends preserve exactly that per-output-element order (see
+/// [`f32core`]), so results are bit-identical across backends.
 pub fn gemm_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(acc.len(), m * n);
-    for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
-        let arow = &mut acc[i * n..(i + 1) * n];
-        for (r, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[r * n..(r + 1) * n];
-            for (a, &wv) in arow.iter_mut().zip(wrow) {
-                *a += xv * wv;
-            }
-        }
-    }
+    (dispatch::active().gemm_f32)(x, w, m, k, n, acc)
 }
 
 /// `acc(k×n) += Xᵀ(k×m) · Y(m×n)` — the weight-gradient contraction
-/// `dW = colsᵀ · dY` with X in m×k row-major.
+/// `dW = colsᵀ · dY` with X in m×k row-major (dispatched,
+/// order-preserving).
 pub fn gemm_f32_xt_y(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(y.len(), m * n);
     debug_assert_eq!(acc.len(), k * n);
-    for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
-        let yrow = &y[i * n..(i + 1) * n];
-        for (r, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let arow = &mut acc[r * n..(r + 1) * n];
-            for (a, &yv) in arow.iter_mut().zip(yrow) {
-                *a += xv * yv;
-            }
-        }
-    }
+    (dispatch::active().gemm_f32_xt_y)(x, y, m, k, n, acc)
 }
 
 /// `acc(m×k) += Y(m×n) · Wᵀ(n×k)` with W in k×n row-major — the conv
-/// input-gradient contraction `dCols = dY · Wᵀ`.
+/// input-gradient contraction `dCols = dY · Wᵀ` (dispatched,
+/// order-preserving; `acc` must be zeroed by the caller, which the grad
+/// engine does).
 pub fn gemm_f32_y_wt(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
     debug_assert_eq!(y.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(acc.len(), m * k);
-    for i in 0..m {
-        let yrow = &y[i * n..(i + 1) * n];
-        let arow = &mut acc[i * k..(i + 1) * k];
-        for (r, a) in arow.iter_mut().enumerate() {
-            let wrow = &w[r * n..(r + 1) * n];
-            let mut s = 0.0f32;
-            for (yv, wv) in yrow.iter().zip(wrow) {
-                s += yv * wv;
-            }
-            *a += s;
-        }
-    }
+    (dispatch::active().gemm_f32_y_wt)(y, w, m, k, n, acc)
 }
 
 #[cfg(test)]
@@ -709,6 +705,7 @@ mod tests {
         let (k, n) = (3usize, NB + 5);
         let w = codes(k * n, 9);
         let wb = BlockedWeights::pack(&w, k, n);
+        assert!(wb.panels_aligned());
         // Read back through the panel accessor.
         for r in 0..k {
             for j in 0..n {
@@ -716,6 +713,45 @@ mod tests {
                 assert_eq!(wb.panel(p)[r * NB + j % NB], w[r * n + j]);
             }
         }
+    }
+
+    #[test]
+    fn occupied_subblocks_spans() {
+        // Bits 0 and 2 set, width 20: spans (0,8) and (16,20) — the tail
+        // sub-block is clipped to the real width.
+        let (spans, cnt) = occupied_subblocks(0b101, 20);
+        assert_eq!(cnt, 2);
+        assert_eq!(spans[0], (0, 8));
+        assert_eq!(spans[1], (16, 20));
+        let (_, c0) = occupied_subblocks(0, 64);
+        assert_eq!(c0, 0);
+        let (full, c8) = occupied_subblocks(0xFF, 64);
+        assert_eq!(c8, 8);
+        assert_eq!(full[7], (56, 64));
+    }
+
+    #[test]
+    fn avec_alignment_and_growth() {
+        let mut v: AVec<i8> = AVec::new();
+        assert_eq!(v.len(), 0);
+        v.resize(5, 7);
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+        assert_eq!(&v[..], &[7, 7, 7, 7, 7]);
+        v.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(v.len(), 8);
+        // Grow past the first allocation: contents survive, still aligned.
+        v.resize(10_000, 0);
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+        assert_eq!(&v[..8], &[7, 7, 7, 7, 7, 1, 2, 3]);
+        let c = v.clone();
+        assert_eq!(&c[..], &v[..]);
+        assert_eq!(c.as_ptr() as usize % ALIGN, 0);
+        let mut f: AVec<f32> = AVec::with_capacity(3);
+        f.push(1.5);
+        f.extend_from_slice(&[2.5, 3.5, 4.5]);
+        assert_eq!(f.to_vec(), vec![1.5, 2.5, 3.5, 4.5]);
+        f.clear();
+        assert!(f.is_empty());
     }
 
     fn vals(len: usize, seed: u64) -> Vec<f32> {
@@ -798,12 +834,12 @@ mod tests {
         };
         let ci8 = codes(2 * 5 * 5 * 2, 7);
         let cf: Vec<f32> = ci8.iter().map(|&v| v as f32).collect();
-        let mut oi = Vec::new();
-        let mut of = Vec::new();
+        let mut oi = AVec::new();
+        let mut of = AVec::new();
         im2col_i8(&ci8, 2, 5, 5, 2, &cv, &mut oi);
         im2col_f32(&cf, 2, 5, 5, 2, &cv, &mut of);
         assert_eq!(oi.len(), of.len());
-        for (a, b) in oi.iter().zip(&of) {
+        for (a, b) in oi.iter().zip(of.iter()) {
             assert_eq!(*a as f32, *b);
         }
     }
@@ -833,7 +869,7 @@ mod tests {
         let m = cv.hout * cv.wout;
         let kk = cv.k * cv.k * cv.cin;
         let g = vals(m * kk, 9);
-        let mut cols = Vec::new();
+        let mut cols = AVec::new();
         im2col_f32(&x, 1, 4, 4, 3, &cv, &mut cols);
         let lhs: f64 = cols.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
         let mut back = vec![0.0f32; x.len()];
@@ -851,5 +887,20 @@ mod tests {
         assert_eq!(out, vec![3.0 * 0.125 + 0.5, -2.0 * 0.125 - 0.25, 0.5, 7.0 * 0.125 - 0.25]);
         requant_bias_relu(&acc, 0.125, &bias, true, &mut out);
         assert!(out.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn quantize_into_matches_scalar_reference() {
+        let s = 0.03125f32;
+        let src: Vec<f32> = (0..133)
+            .map(|i| (i as f32 - 66.0) * 0.07)
+            .chain([4.0 * s, -7.0 * s, 0.5 * s, -0.5 * s, 1.5 * s, 0.0, -0.0, 100.0, -100.0])
+            .collect();
+        let mut dst = AVec::new();
+        quantize_into(&src, s, &mut dst);
+        assert_eq!(dst.len(), src.len());
+        for (i, (&d, &v)) in dst.iter().zip(src.iter()).enumerate() {
+            assert_eq!(d, quant::quantize(v, s) as i8, "elem {i} ({v})");
+        }
     }
 }

@@ -1,0 +1,114 @@
+//! Scalar reference backend.
+//!
+//! Every function here is the portable ground truth the SIMD backends are
+//! pinned bit-identical to (see `rust/tests/kernels_simd.rs`).  The int8
+//! strip walk and the f32 accumulation order are the contract; keep any
+//! change here mirrored in [`super::simd`].
+
+use crate::quant;
+
+use super::f32core::{self, AView};
+use super::{occupied_subblocks, NB, SB};
+
+/// Scalar k-strip microkernel for `gemm_i8_blocked`: walk one activation
+/// row against one panel strip, honoring the per-sub-block occupancy masks.
+///
+/// `xrow` is the activation slice for this strip (`kh` codes), `prows` the
+/// matching panel rows (`kh * NB` bytes), `occ_rows` the strip's occupancy
+/// masks (one per SB rows), `arow` the `width` output accumulators.
+pub(crate) fn strip_scalar(xrow: &[i8], prows: &[i8], occ_rows: &[u8], width: usize, arow: &mut [i32]) {
+    let kh = xrow.len();
+    let nsb = width.div_ceil(SB);
+    let full: u8 = if nsb == 8 { 0xFF } else { ((1u16 << nsb) - 1) as u8 };
+    let mut r = 0usize;
+    while r < kh {
+        let kb = r / SB;
+        let rend = kh.min((kb + 1) * SB);
+        let mask = occ_rows[kb];
+        if mask == 0 {
+            // Structurally empty: skip the whole sub-block row group.
+            r = rend;
+            continue;
+        }
+        if mask == full {
+            // Dense: every sub-block occupied, stream the full row.
+            for dk in r..rend {
+                let xv = xrow[dk];
+                if xv == 0 {
+                    continue;
+                }
+                let xi = xv as i32;
+                let wrow = &prows[dk * NB..dk * NB + width];
+                for (a, &wv) in arow.iter_mut().zip(wrow.iter()) {
+                    *a += xi * wv as i32;
+                }
+            }
+        } else {
+            // Partial: visit only occupied sub-blocks.  The span list is
+            // hoisted out of the dk loop — one bit-scan per occupancy row,
+            // not one per activation row.
+            let (spans, cnt) = occupied_subblocks(mask, width);
+            for dk in r..rend {
+                let xv = xrow[dk];
+                if xv == 0 {
+                    continue;
+                }
+                let xi = xv as i32;
+                let wbase = dk * NB;
+                for &(c0, cend) in &spans[..cnt] {
+                    for c in c0..cend {
+                        arow[c] += xi * prows[wbase + c] as i32;
+                    }
+                }
+            }
+        }
+        r = rend;
+    }
+}
+
+/// Quantize `src` into pre-sized `dst` with `quant::quantize` semantics
+/// (round half away from zero, clamp to ±127).
+pub(crate) fn quantize_i8(src: &[f32], s: f32, dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &v) in dst.iter_mut().zip(src.iter()) {
+        *d = quant::quantize(v, s) as i8;
+    }
+}
+
+/// Requantize + bias + optional ReLU epilogue: `out = acc as f32 * ss +
+/// bias`, row-wise over `bias.len()`-wide rows.
+pub(crate) fn requant_bias_relu(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut [f32]) {
+    let n = bias.len();
+    debug_assert_eq!(acc.len(), out.len());
+    debug_assert_eq!(acc.len() % n.max(1), 0);
+    for (orow, arow) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)) {
+        for ((o, &a), &b) in orow.iter_mut().zip(arow.iter()).zip(bias.iter()) {
+            let v = a as f32 * ss + b;
+            *o = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+#[inline(always)]
+fn axpy_scalar(s: f32, b: &[f32], a: &mut [f32]) {
+    for (av, &bv) in a.iter_mut().zip(b.iter()) {
+        *av += s * bv;
+    }
+}
+
+/// `acc[m x n] += x[m x k] * w[k x n]`.
+pub(crate) fn gemm_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+    f32core::gemm_core(AView::RowMajor(x), w, m, k, n, acc, axpy_scalar);
+}
+
+/// `acc[k x n] += x^T[k x m] * y[m x n]` (x stored m x k).
+pub(crate) fn gemm_f32_xt_y(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+    f32core::gemm_core(AView::Transposed(x), y, k, m, n, acc, axpy_scalar);
+}
+
+/// `acc[m x k] += y[m x n] * w^T[n x k]` (w stored k x n).
+pub(crate) fn gemm_f32_y_wt(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+    f32core::with_wt(w, k, n, |wt| {
+        f32core::gemm_core(AView::RowMajor(y), wt, m, n, k, acc, axpy_scalar);
+    });
+}

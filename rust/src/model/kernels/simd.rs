@@ -1,0 +1,593 @@
+//! x86-64 SIMD backends (AVX2 and SSE2) for the dispatched kernels.
+//!
+//! Everything target-specific lives behind `cfg(target_arch = "x86_64")`
+//! inside this file; other architectures compile only the `*_ops()`
+//! accessors below, which return `None` so [`super::dispatch`] falls back
+//! to scalar.  No `cfg` leaks outside this module.
+//!
+//! # Bit-identity contracts (vs [`super::scalar`])
+//!
+//! - **int8 GEMM**: products and accumulators are exact i32, so any
+//!   blocking or lane order gives the same result.  The AVX2 strip holds
+//!   one 256-bit register of 8 i32 accumulators per full SB=8 sub-block
+//!   across the whole k-strip; SSE2 widens i8 -> i16 (products bounded by
+//!   128^2 = 16384, exact in i16) and then i16 -> i32 before
+//!   memory-accumulating in 4-lane halves.
+//! - **f32 GEMMs**: the shared [`super::f32core`] loop nest fixes the
+//!   per-output-element accumulation order; the SIMD axpy only widens
+//!   across output columns (independent accumulator chains) and uses
+//!   separate multiply + add — never FMA, which rounds once where
+//!   mul-then-add rounds twice.
+//! - **quantize**: `(v / s).round()` with round-half-away-from-zero is
+//!   emulated exactly: `t = v / s` (vector divide, not a reciprocal
+//!   approximation), truncate via `cvttps` (after clamping `t` to ±1e9 so
+//!   the i32 conversion cannot wrap; anything that large clamps to ±127
+//!   regardless), then add `copysign(1, t)` when `|t - trunc(t)| >= 0.5`.
+//!   The naive `trunc(t + 0.5)` is *not* equivalent: for `t` just below
+//!   0.5 (e.g. `0.5 - 2^-25`), `t + 0.5` rounds up to exactly 1.0 and
+//!   truncates to 1, where `round` gives 0.  The frac comparison has no
+//!   such double-rounding.  Caveat: non-finite inputs diverge (scalar
+//!   sends NaN to 0, the vector path to ±127); engine activations are
+//!   finite by construction.
+//! - **requant**: `acc as f32 * ss + bias` elementwise in lanes, with
+//!   `max_ps(v, 0)` for ReLU.  `v` can never be `-0.0` or NaN here
+//!   (`ss > 0` by the 1e-12 floor in `quant::weight_scale`, exact
+//!   cancellation yields `+0.0`), so `max_ps` matches `f32::max`.
+
+use super::dispatch::KernelOps;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn sse2_ops() -> Option<&'static KernelOps> {
+    // SSE2 is part of the x86-64 baseline: always available.
+    Some(&x86::SSE2_OPS)
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn avx2_ops() -> Option<&'static KernelOps> {
+    if is_x86_feature_detected!("avx2") {
+        Some(&x86::AVX2_OPS)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn sse2_ops() -> Option<&'static KernelOps> {
+    None
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn avx2_ops() -> Option<&'static KernelOps> {
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use crate::model::kernels::dispatch::{KernelKind, KernelOps};
+    use crate::model::kernels::f32core::{self, AView};
+    use crate::model::kernels::{gemm_i8_outer, occupied_subblocks, BlockedWeights, NB, SB};
+    use crate::quant;
+
+    /// Pre-clamp bound for the quantize truncation: exactly representable
+    /// in f32, far above the ±127.5 clamp threshold, and small enough that
+    /// `cvttps` can never wrap to `i32::MIN` and flip the sign.
+    const BIG: f32 = 1.0e9;
+
+    pub(crate) static SSE2_OPS: KernelOps = KernelOps {
+        kind: KernelKind::Sse2,
+        gemm_i8_blocked: gemm_i8_sse2,
+        quantize_i8: quantize_i8_sse2,
+        requant_bias_relu: requant_sse2,
+        gemm_f32: gemm_f32_sse2,
+        gemm_f32_xt_y: gemm_f32_xt_y_sse2,
+        gemm_f32_y_wt: gemm_f32_y_wt_sse2,
+    };
+
+    pub(crate) static AVX2_OPS: KernelOps = KernelOps {
+        kind: KernelKind::Avx2,
+        gemm_i8_blocked: gemm_i8_avx2,
+        quantize_i8: quantize_i8_avx2,
+        requant_bias_relu: requant_avx2,
+        gemm_f32: gemm_f32_avx2,
+        gemm_f32_xt_y: gemm_f32_xt_y_avx2,
+        gemm_f32_y_wt: gemm_f32_y_wt_avx2,
+    };
+
+    // ---------------------------------------------------------------- int8
+
+    fn gemm_i8_sse2(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+        // SAFETY: SSE2 is unconditionally available on x86-64.
+        unsafe { gemm_i8_sse2_inner(x, w, m, acc) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn gemm_i8_sse2_inner(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+        gemm_i8_outer(x, w, m, acc, |xrow, prows, occ_rows, width, arow| {
+            // SAFETY: sse2 is enabled on this code path by the caller.
+            unsafe { strip_sse2(xrow, prows, occ_rows, width, arow) }
+        });
+    }
+
+    fn gemm_i8_avx2(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+        // SAFETY: this entry is only installed in the vtable after runtime
+        // AVX2 detection (dispatch::avx2_ops).
+        unsafe { gemm_i8_avx2_inner(x, w, m, acc) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_i8_avx2_inner(x: &[i8], w: &BlockedWeights, m: usize, acc: &mut [i32]) {
+        gemm_i8_outer(x, w, m, acc, |xrow, prows, occ_rows, width, arow| {
+            // SAFETY: avx2 is enabled on this code path by the caller.
+            unsafe { strip_avx2(xrow, prows, occ_rows, width, arow) }
+        });
+    }
+
+    /// Multiply-accumulate one SB=8 sub-block: widen 8 weights i8 -> i32,
+    /// multiply by the splatted activation, add into the i32 accumulator
+    /// register.  Exact: every product fits i32.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn mac8_avx2(acc: __m256i, w: *const i8, xs: __m256i) -> __m256i {
+        let w8 = _mm_loadl_epi64(w as *const __m128i);
+        _mm256_add_epi32(acc, _mm256_mullo_epi32(_mm256_cvtepi8_epi32(w8), xs))
+    }
+
+    /// SSE2 sub-block MAC: no `cvtepi8_epi32`/`mullo_epi32` below SSE4.1,
+    /// so widen i8 -> i16 by sign-unpacking, multiply in i16 (|x|,|w| <=
+    /// 128 keeps products <= 16384, exact), widen products to i32 and
+    /// memory-accumulate the two 4-lane halves.
+    #[target_feature(enable = "sse2")]
+    #[inline]
+    unsafe fn mac8_sse2(acc: *mut i32, w: *const i8, xs: __m128i) {
+        let zero = _mm_setzero_si128();
+        let w8 = _mm_loadl_epi64(w as *const __m128i);
+        let w16 = _mm_unpacklo_epi8(w8, _mm_cmpgt_epi8(zero, w8));
+        let p16 = _mm_mullo_epi16(w16, xs);
+        let psign = _mm_cmpgt_epi16(zero, p16);
+        let lo = _mm_unpacklo_epi16(p16, psign);
+        let hi = _mm_unpackhi_epi16(p16, psign);
+        let a0 = _mm_loadu_si128(acc as *const __m128i);
+        let a1 = _mm_loadu_si128(acc.add(4) as *const __m128i);
+        _mm_storeu_si128(acc as *mut __m128i, _mm_add_epi32(a0, lo));
+        _mm_storeu_si128(acc.add(4) as *mut __m128i, _mm_add_epi32(a1, hi));
+    }
+
+    /// AVX2 k-strip: one 8-lane i32 accumulator register per full SB=8
+    /// sub-block, loaded from `arow` once per strip and stored back once.
+    /// Tail columns (width % 8) and ragged partial spans accumulate in
+    /// memory; the register-held and memory-held column sets are disjoint.
+    #[target_feature(enable = "avx2")]
+    unsafe fn strip_avx2(xrow: &[i8], prows: &[i8], occ_rows: &[u8], width: usize, arow: &mut [i32]) {
+        let kh = xrow.len();
+        let nsb = width.div_ceil(SB);
+        let full: u8 = if nsb == 8 { 0xFF } else { ((1u16 << nsb) - 1) as u8 };
+        let nfull = width / SB;
+        let tail0 = nfull * SB;
+        let ap = arow.as_mut_ptr();
+        let mut accv = [_mm256_setzero_si256(); NB / SB];
+        for (bsub, av) in accv.iter_mut().enumerate().take(nfull) {
+            *av = _mm256_loadu_si256(ap.add(bsub * SB) as *const __m256i);
+        }
+        let mut r = 0usize;
+        while r < kh {
+            let kb = r / SB;
+            let rend = kh.min((kb + 1) * SB);
+            let mask = occ_rows[kb];
+            if mask == 0 {
+                r = rend;
+                continue;
+            }
+            if mask == full {
+                for dk in r..rend {
+                    let xv = xrow[dk];
+                    if xv == 0 {
+                        continue;
+                    }
+                    let xs = _mm256_set1_epi32(xv as i32);
+                    let wrow = prows.as_ptr().add(dk * NB);
+                    for (bsub, av) in accv.iter_mut().enumerate().take(nfull) {
+                        *av = mac8_avx2(*av, wrow.add(bsub * SB), xs);
+                    }
+                    if tail0 < width {
+                        let xi = xv as i32;
+                        for c in tail0..width {
+                            *ap.add(c) += xi * *wrow.add(c) as i32;
+                        }
+                    }
+                }
+            } else {
+                let (spans, cnt) = occupied_subblocks(mask, width);
+                for dk in r..rend {
+                    let xv = xrow[dk];
+                    if xv == 0 {
+                        continue;
+                    }
+                    let xs = _mm256_set1_epi32(xv as i32);
+                    let wrow = prows.as_ptr().add(dk * NB);
+                    for &(c0, cend) in &spans[..cnt] {
+                        if cend - c0 == SB {
+                            let av = &mut accv[c0 / SB];
+                            *av = mac8_avx2(*av, wrow.add(c0), xs);
+                        } else {
+                            let xi = xv as i32;
+                            for c in c0..cend {
+                                *ap.add(c) += xi * *wrow.add(c) as i32;
+                            }
+                        }
+                    }
+                }
+            }
+            r = rend;
+        }
+        for (bsub, av) in accv.iter().enumerate().take(nfull) {
+            _mm256_storeu_si256(ap.add(bsub * SB) as *mut __m256i, *av);
+        }
+    }
+
+    /// SSE2 k-strip: same walk as scalar/AVX2 but memory-accumulating each
+    /// SB=8 sub-block as two 4-lane i32 halves.
+    #[target_feature(enable = "sse2")]
+    unsafe fn strip_sse2(xrow: &[i8], prows: &[i8], occ_rows: &[u8], width: usize, arow: &mut [i32]) {
+        let kh = xrow.len();
+        let nsb = width.div_ceil(SB);
+        let full: u8 = if nsb == 8 { 0xFF } else { ((1u16 << nsb) - 1) as u8 };
+        let nfull = width / SB;
+        let tail0 = nfull * SB;
+        let ap = arow.as_mut_ptr();
+        let mut r = 0usize;
+        while r < kh {
+            let kb = r / SB;
+            let rend = kh.min((kb + 1) * SB);
+            let mask = occ_rows[kb];
+            if mask == 0 {
+                r = rend;
+                continue;
+            }
+            if mask == full {
+                for dk in r..rend {
+                    let xv = xrow[dk];
+                    if xv == 0 {
+                        continue;
+                    }
+                    let xs = _mm_set1_epi16(xv as i16);
+                    let wrow = prows.as_ptr().add(dk * NB);
+                    for bsub in 0..nfull {
+                        mac8_sse2(ap.add(bsub * SB), wrow.add(bsub * SB), xs);
+                    }
+                    if tail0 < width {
+                        let xi = xv as i32;
+                        for c in tail0..width {
+                            *ap.add(c) += xi * *wrow.add(c) as i32;
+                        }
+                    }
+                }
+            } else {
+                let (spans, cnt) = occupied_subblocks(mask, width);
+                for dk in r..rend {
+                    let xv = xrow[dk];
+                    if xv == 0 {
+                        continue;
+                    }
+                    let xs = _mm_set1_epi16(xv as i16);
+                    let wrow = prows.as_ptr().add(dk * NB);
+                    for &(c0, cend) in &spans[..cnt] {
+                        if cend - c0 == SB {
+                            mac8_sse2(ap.add(c0), wrow.add(c0), xs);
+                        } else {
+                            let xi = xv as i32;
+                            for c in c0..cend {
+                                *ap.add(c) += xi * *wrow.add(c) as i32;
+                            }
+                        }
+                    }
+                }
+            }
+            r = rend;
+        }
+    }
+
+    // ------------------------------------------------------------ quantize
+
+    fn quantize_i8_sse2(src: &[f32], s: f32, dst: &mut [i8]) {
+        // SAFETY: SSE2 baseline.
+        unsafe { quantize_i8_sse2_inner(src, s, dst) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn quantize_i8_sse2_inner(src: &[f32], s: f32, dst: &mut [i8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let sv = _mm_set1_ps(s);
+        let big = _mm_set1_ps(BIG);
+        let nbig = _mm_set1_ps(-BIG);
+        let half = _mm_set1_ps(0.5);
+        let one = _mm_set1_ps(1.0);
+        let msign = _mm_set1_ps(-0.0);
+        let qmax = _mm_set1_ps(quant::QMAX as f32);
+        let qmin = _mm_set1_ps(-(quant::QMAX as f32));
+        let mut out = [0i32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let t = _mm_div_ps(_mm_loadu_ps(src.as_ptr().add(i)), sv);
+            // Clamp before cvtt so |t| >= 2^31 cannot wrap to i32::MIN.
+            let tc = _mm_max_ps(_mm_min_ps(t, big), nbig);
+            let rt = _mm_cvtepi32_ps(_mm_cvttps_epi32(tc));
+            // round-half-away-from-zero: bump |rt| when |frac| >= 0.5.
+            let frac = _mm_sub_ps(tc, rt);
+            let absf = _mm_andnot_ps(msign, frac);
+            let bump = _mm_and_ps(_mm_cmpge_ps(absf, half), one);
+            let signed_bump = _mm_or_ps(bump, _mm_and_ps(msign, tc));
+            let q = _mm_add_ps(rt, signed_bump);
+            let c = _mm_min_ps(_mm_max_ps(q, qmin), qmax);
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, _mm_cvtps_epi32(c));
+            for lane in 0..4 {
+                dst[i + lane] = out[lane] as i8;
+            }
+            i += 4;
+        }
+        while i < n {
+            dst[i] = quant::quantize(src[i], s) as i8;
+            i += 1;
+        }
+    }
+
+    fn quantize_i8_avx2(src: &[f32], s: f32, dst: &mut [i8]) {
+        // SAFETY: installed only after runtime AVX2 detection.
+        unsafe { quantize_i8_avx2_inner(src, s, dst) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_i8_avx2_inner(src: &[f32], s: f32, dst: &mut [i8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let sv = _mm256_set1_ps(s);
+        let big = _mm256_set1_ps(BIG);
+        let nbig = _mm256_set1_ps(-BIG);
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let msign = _mm256_set1_ps(-0.0);
+        let qmax = _mm256_set1_ps(quant::QMAX as f32);
+        let qmin = _mm256_set1_ps(-(quant::QMAX as f32));
+        let mut out = [0i32; 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let t = _mm256_div_ps(_mm256_loadu_ps(src.as_ptr().add(i)), sv);
+            let tc = _mm256_max_ps(_mm256_min_ps(t, big), nbig);
+            let rt = _mm256_cvtepi32_ps(_mm256_cvttps_epi32(tc));
+            let frac = _mm256_sub_ps(tc, rt);
+            let absf = _mm256_andnot_ps(msign, frac);
+            let bump = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(absf, half), one);
+            let signed_bump = _mm256_or_ps(bump, _mm256_and_ps(msign, tc));
+            let q = _mm256_add_ps(rt, signed_bump);
+            let c = _mm256_min_ps(_mm256_max_ps(q, qmin), qmax);
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, _mm256_cvtps_epi32(c));
+            for lane in 0..8 {
+                dst[i + lane] = out[lane] as i8;
+            }
+            i += 8;
+        }
+        while i < n {
+            dst[i] = quant::quantize(src[i], s) as i8;
+            i += 1;
+        }
+    }
+
+    // ------------------------------------------------------------- requant
+
+    fn requant_sse2(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut [f32]) {
+        // SAFETY: SSE2 baseline.
+        unsafe { requant_sse2_inner(acc, ss, bias, relu, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn requant_sse2_inner(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut [f32]) {
+        let n = bias.len();
+        debug_assert_eq!(acc.len(), out.len());
+        let ssv = _mm_set1_ps(ss);
+        let zero = _mm_setzero_ps();
+        for (orow, arow) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)) {
+            let op = orow.as_mut_ptr();
+            let apr = arow.as_ptr();
+            let bp = bias.as_ptr();
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let av = _mm_cvtepi32_ps(_mm_loadu_si128(apr.add(j) as *const __m128i));
+                let mut v = _mm_add_ps(_mm_mul_ps(av, ssv), _mm_loadu_ps(bp.add(j)));
+                if relu {
+                    v = _mm_max_ps(v, zero);
+                }
+                _mm_storeu_ps(op.add(j), v);
+                j += 4;
+            }
+            while j < n {
+                let v = arow[j] as f32 * ss + bias[j];
+                orow[j] = if relu { v.max(0.0) } else { v };
+                j += 1;
+            }
+        }
+    }
+
+    fn requant_avx2(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut [f32]) {
+        // SAFETY: installed only after runtime AVX2 detection.
+        unsafe { requant_avx2_inner(acc, ss, bias, relu, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn requant_avx2_inner(acc: &[i32], ss: f32, bias: &[f32], relu: bool, out: &mut [f32]) {
+        let n = bias.len();
+        debug_assert_eq!(acc.len(), out.len());
+        let ssv = _mm256_set1_ps(ss);
+        let zero = _mm256_setzero_ps();
+        for (orow, arow) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)) {
+            let op = orow.as_mut_ptr();
+            let apr = arow.as_ptr();
+            let bp = bias.as_ptr();
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let av = _mm256_cvtepi32_ps(_mm256_loadu_si256(apr.add(j) as *const __m256i));
+                let mut v = _mm256_add_ps(_mm256_mul_ps(av, ssv), _mm256_loadu_ps(bp.add(j)));
+                if relu {
+                    v = _mm256_max_ps(v, zero);
+                }
+                _mm256_storeu_ps(op.add(j), v);
+                j += 8;
+            }
+            while j < n {
+                let v = arow[j] as f32 * ss + bias[j];
+                orow[j] = if relu { v.max(0.0) } else { v };
+                j += 1;
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- f32 gemms
+
+    /// `a[j] += s * b[j]` vectorized across output columns: 4x8 unrolled
+    /// main loop (the "register blocking across n"), then 8-wide, then a
+    /// scalar tail.  Separate mul + add per element, same as scalar.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn axpy_avx2(s: f32, b: &[f32], a: &mut [f32]) {
+        debug_assert_eq!(b.len(), a.len());
+        let n = a.len();
+        let bp = b.as_ptr();
+        let ap = a.as_mut_ptr();
+        let sv = _mm256_set1_ps(s);
+        let mut j = 0usize;
+        while j + 32 <= n {
+            let a0 = _mm256_add_ps(_mm256_loadu_ps(ap.add(j)), _mm256_mul_ps(sv, _mm256_loadu_ps(bp.add(j))));
+            let a1 = _mm256_add_ps(_mm256_loadu_ps(ap.add(j + 8)), _mm256_mul_ps(sv, _mm256_loadu_ps(bp.add(j + 8))));
+            let a2 = _mm256_add_ps(_mm256_loadu_ps(ap.add(j + 16)), _mm256_mul_ps(sv, _mm256_loadu_ps(bp.add(j + 16))));
+            let a3 = _mm256_add_ps(_mm256_loadu_ps(ap.add(j + 24)), _mm256_mul_ps(sv, _mm256_loadu_ps(bp.add(j + 24))));
+            _mm256_storeu_ps(ap.add(j), a0);
+            _mm256_storeu_ps(ap.add(j + 8), a1);
+            _mm256_storeu_ps(ap.add(j + 16), a2);
+            _mm256_storeu_ps(ap.add(j + 24), a3);
+            j += 32;
+        }
+        while j + 8 <= n {
+            let av = _mm256_add_ps(_mm256_loadu_ps(ap.add(j)), _mm256_mul_ps(sv, _mm256_loadu_ps(bp.add(j))));
+            _mm256_storeu_ps(ap.add(j), av);
+            j += 8;
+        }
+        while j < n {
+            *ap.add(j) += s * *bp.add(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[inline]
+    unsafe fn axpy_sse2(s: f32, b: &[f32], a: &mut [f32]) {
+        debug_assert_eq!(b.len(), a.len());
+        let n = a.len();
+        let bp = b.as_ptr();
+        let ap = a.as_mut_ptr();
+        let sv = _mm_set1_ps(s);
+        let mut j = 0usize;
+        while j + 16 <= n {
+            let a0 = _mm_add_ps(_mm_loadu_ps(ap.add(j)), _mm_mul_ps(sv, _mm_loadu_ps(bp.add(j))));
+            let a1 = _mm_add_ps(_mm_loadu_ps(ap.add(j + 4)), _mm_mul_ps(sv, _mm_loadu_ps(bp.add(j + 4))));
+            let a2 = _mm_add_ps(_mm_loadu_ps(ap.add(j + 8)), _mm_mul_ps(sv, _mm_loadu_ps(bp.add(j + 8))));
+            let a3 = _mm_add_ps(_mm_loadu_ps(ap.add(j + 12)), _mm_mul_ps(sv, _mm_loadu_ps(bp.add(j + 12))));
+            _mm_storeu_ps(ap.add(j), a0);
+            _mm_storeu_ps(ap.add(j + 4), a1);
+            _mm_storeu_ps(ap.add(j + 8), a2);
+            _mm_storeu_ps(ap.add(j + 12), a3);
+            j += 16;
+        }
+        while j + 4 <= n {
+            let av = _mm_add_ps(_mm_loadu_ps(ap.add(j)), _mm_mul_ps(sv, _mm_loadu_ps(bp.add(j))));
+            _mm_storeu_ps(ap.add(j), av);
+            j += 4;
+        }
+        while j < n {
+            *ap.add(j) += s * *bp.add(j);
+            j += 1;
+        }
+    }
+
+    fn gemm_f32_avx2(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        // SAFETY: installed only after runtime AVX2 detection.
+        unsafe { gemm_f32_avx2_inner(x, w, m, k, n, acc) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_f32_avx2_inner(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        f32core::gemm_core(AView::RowMajor(x), w, m, k, n, acc, |s, b, a| {
+            // SAFETY: avx2 enabled on this path.
+            unsafe { axpy_avx2(s, b, a) }
+        });
+    }
+
+    fn gemm_f32_xt_y_avx2(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        // SAFETY: installed only after runtime AVX2 detection.
+        unsafe { gemm_f32_xt_y_avx2_inner(x, y, m, k, n, acc) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_f32_xt_y_avx2_inner(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        f32core::gemm_core(AView::Transposed(x), y, k, m, n, acc, |s, b, a| {
+            // SAFETY: avx2 enabled on this path.
+            unsafe { axpy_avx2(s, b, a) }
+        });
+    }
+
+    fn gemm_f32_y_wt_avx2(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        // SAFETY: installed only after runtime AVX2 detection.
+        unsafe { gemm_f32_y_wt_avx2_inner(y, w, m, k, n, acc) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_f32_y_wt_avx2_inner(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        f32core::with_wt(w, k, n, |wt| {
+            f32core::gemm_core(AView::RowMajor(y), wt, m, n, k, acc, |s, b, a| {
+                // SAFETY: avx2 enabled on this path.
+                unsafe { axpy_avx2(s, b, a) }
+            });
+        });
+    }
+
+    fn gemm_f32_sse2(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        // SAFETY: SSE2 baseline.
+        unsafe { gemm_f32_sse2_inner(x, w, m, k, n, acc) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn gemm_f32_sse2_inner(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        f32core::gemm_core(AView::RowMajor(x), w, m, k, n, acc, |s, b, a| {
+            // SAFETY: sse2 enabled on this path.
+            unsafe { axpy_sse2(s, b, a) }
+        });
+    }
+
+    fn gemm_f32_xt_y_sse2(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        // SAFETY: SSE2 baseline.
+        unsafe { gemm_f32_xt_y_sse2_inner(x, y, m, k, n, acc) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn gemm_f32_xt_y_sse2_inner(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        f32core::gemm_core(AView::Transposed(x), y, k, m, n, acc, |s, b, a| {
+            // SAFETY: sse2 enabled on this path.
+            unsafe { axpy_sse2(s, b, a) }
+        });
+    }
+
+    fn gemm_f32_y_wt_sse2(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        // SAFETY: SSE2 baseline.
+        unsafe { gemm_f32_y_wt_sse2_inner(y, w, m, k, n, acc) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn gemm_f32_y_wt_sse2_inner(y: &[f32], w: &[f32], m: usize, k: usize, n: usize, acc: &mut [f32]) {
+        f32core::with_wt(w, k, n, |wt| {
+            f32core::gemm_core(AView::RowMajor(y), wt, m, n, k, acc, |s, b, a| {
+                // SAFETY: sse2 enabled on this path.
+                unsafe { axpy_sse2(s, b, a) }
+            });
+        });
+    }
+}

@@ -7,7 +7,9 @@
 //!   [`QuantConfig`] into an executable [`ir::Plan`] with pre-quantized
 //!   blocked i8 weight tiles and preallocated-buffer sizing;
 //! * [`kernels`] — cache-blocked i32-accumulating GEMM/conv kernels,
-//!   im2col, requantization, pools and fc;
+//!   im2col, requantization, pools and fc, with the hot paths dispatched
+//!   at runtime to AVX2/SSE2 backends ([`kernels::dispatch`],
+//!   bit-identical to scalar by construction);
 //! * [`engine`] — the batch-parallel executor ([`ParallelEngine`]) with
 //!   streaming operand-tile delivery through [`CaptureSink`];
 //! * [`infer`] — the original scalar engine, retained as the bit-exact
@@ -30,6 +32,7 @@ pub mod spec;
 
 pub use engine::{CaptureBuffer, CaptureSink, ConvHead, ConvSkip, NullSink, ParallelEngine};
 pub use grad::GradEngine;
+pub use kernels::dispatch::KernelKind;
 pub use kernels::{block_sparsity_of, BlockSparsity};
 pub use infer::{ConvCapture, Engine, QuantConfig};
 pub use params::Params;

@@ -1,0 +1,390 @@
+//! The dispatched SIMD kernel backends vs the scalar reference.
+//!
+//! Every backend in `model::kernels::dispatch` claims bit-identity with
+//! scalar by construction (exact i32 for the int8 GEMM, order-preserving
+//! f32 reductions, a faithful round-half-away-from-zero emulation in the
+//! vector quantizer).  These tests hold it to that claim:
+//!
+//! * property sweeps over randomized shapes with non-multiple remainders
+//!   for the int8 GEMM (dense / checkerboard / all-zero / single-cell
+//!   weight masks, zero activation rows), quantize (including exact
+//!   .5-tie and signed-zero inputs), the requant epilogue, and all three
+//!   f32 training GEMMs — each available backend vs scalar, compared
+//!   bitwise;
+//! * `KernelKind` parsing, `WSEL_KERNELS` resolution and `select`
+//!   semantics (bad CLI value errors, bad env value degrades to auto);
+//! * end-to-end: `ParallelEngine` forward and `GradEngine`
+//!   forward/backward at threads {1, 2, 5} with the SIMD backend forced
+//!   on vs off — logits, loss and every gradient tensor bitwise equal.
+//!
+//! Tests that touch process-global state (the active vtable, the env
+//! var) serialize on a mutex; the pure property sweeps call backend
+//! vtables directly and never touch the global.
+
+use std::sync::Mutex;
+
+use wsel::model::kernels::dispatch::{self, KernelKind};
+use wsel::model::kernels::{BlockedWeights, SB};
+use wsel::model::{Engine, GradEngine, ModelSpec, ParallelEngine, Params, QuantConfig};
+use wsel::util::rng::Xoshiro256;
+
+/// Serializes the tests that mutate the active vtable or `WSEL_KERNELS`.
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn scalar_ops() -> &'static dispatch::KernelOps {
+    dispatch::for_kind(KernelKind::Scalar).expect("scalar backend always exists")
+}
+
+/// Every SIMD backend this host can run (empty off x86-64 — the sweeps
+/// then have nothing to compare and pass trivially).
+fn simd_backends() -> Vec<&'static dispatch::KernelOps> {
+    [KernelKind::Sse2, KernelKind::Avx2]
+        .into_iter()
+        .filter_map(dispatch::for_kind)
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Shapes chosen so m, k and n hit 1, sub-block (< SB), sub-panel
+/// (< NB=64), exact-multiple and ragged-remainder cases.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 5, 2),
+    (7, 64, 64),
+    (33, 70, 64),
+    (16, 80, 200),
+    (65, 257, 67),
+    (129, 300, 65),
+];
+
+#[test]
+fn gemm_i8_dispatch_matches_scalar() {
+    let scalar = scalar_ops();
+    let simd = simd_backends();
+    let mut rng = Xoshiro256::new(0xD15C);
+    for &(m, k, n) in SHAPES {
+        let mut x: Vec<i8> = (0..m * k).map(|_| rng.code() as i8).collect();
+        // All-zero activation rows exercise the strip's xv == 0 skip.
+        for i in (0..m).step_by(3) {
+            x[i * k..(i + 1) * k].fill(0);
+        }
+        let variants: Vec<(&str, Vec<i8>)> = vec![
+            ("dense", (0..k * n).map(|_| rng.code() as i8).collect()),
+            // Checkerboard of SB×SB cells: every occupancy row mixes
+            // empty, full and (at the ragged right edge) partial masks.
+            (
+                "checkerboard",
+                (0..k * n)
+                    .map(|i| {
+                        let (r, c) = (i / n, i % n);
+                        if (r / SB + c / SB) % 2 == 0 {
+                            0
+                        } else {
+                            rng.code() as i8
+                        }
+                    })
+                    .collect(),
+            ),
+            ("zero", vec![0i8; k * n]),
+            // A single occupied top-left cell: everything else is the
+            // structural-skip path.
+            ("single_cell", {
+                let mut w = vec![0i8; k * n];
+                for r in 0..k.min(SB) {
+                    for c in 0..n.min(SB) {
+                        w[r * n + c] = rng.code() as i8;
+                    }
+                }
+                w
+            }),
+        ];
+        for (label, w) in &variants {
+            let wb = BlockedWeights::pack(w, k, n);
+            let mut want = vec![0i32; m * n];
+            (scalar.gemm_i8_blocked)(&x, &wb, m, &mut want);
+            for ops in &simd {
+                let mut got = vec![0i32; m * n];
+                (ops.gemm_i8_blocked)(&x, &wb, m, &mut got);
+                assert_eq!(
+                    want,
+                    got,
+                    "{label} {m}x{k}x{n}: {} i8 GEMM diverges from scalar",
+                    ops.kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantize_dispatch_matches_scalar() {
+    let scalar = scalar_ops();
+    let simd = simd_backends();
+    let mut rng = Xoshiro256::new(7);
+    let s = 0.031f32;
+    // Exact .5 ties (round away from zero), signed zeros, clamp-range
+    // magnitudes, and values just inside/outside the ±127 edge.
+    let special = [
+        0.5 * s,
+        -0.5 * s,
+        1.5 * s,
+        -1.5 * s,
+        2.5 * s,
+        0.0,
+        -0.0,
+        100.0,
+        -100.0,
+        126.5 * s,
+        127.4 * s,
+        -127.5 * s,
+    ];
+    for len in [1usize, 3, 7, 8, 9, 15, 16, 31, 64, 257, 1000] {
+        let mut src: Vec<f32> = (0..len).map(|_| rng.range_f32(-8.0, 8.0)).collect();
+        for (i, v) in special.iter().enumerate() {
+            if i < src.len() {
+                src[i] = *v;
+            }
+        }
+        let mut want = vec![0i8; len];
+        (scalar.quantize_i8)(&src, s, &mut want);
+        // The scalar backend is itself pinned to quant::quantize.
+        for (i, &v) in src.iter().enumerate() {
+            assert_eq!(want[i] as i32, wsel::quant::quantize(v, s), "ref at {i}");
+        }
+        for ops in &simd {
+            let mut got = vec![0i8; len];
+            (ops.quantize_i8)(&src, s, &mut got);
+            assert_eq!(
+                want,
+                got,
+                "len={len}: {} quantize diverges from scalar",
+                ops.kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn requant_dispatch_matches_scalar() {
+    let scalar = scalar_ops();
+    let simd = simd_backends();
+    let mut rng = Xoshiro256::new(11);
+    for &(m, n) in &[(1usize, 1usize), (3, 5), (4, 16), (5, 33), (7, 127), (2, 256)] {
+        let acc: Vec<i32> = (0..m * n)
+            .map(|_| (rng.below(1 << 22) as i64 - (1 << 21)) as i32)
+            .collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        for relu in [false, true] {
+            let mut want = vec![0f32; m * n];
+            (scalar.requant_bias_relu)(&acc, 6.1e-4, &bias, relu, &mut want);
+            for ops in &simd {
+                let mut got = vec![0f32; m * n];
+                (ops.requant_bias_relu)(&acc, 6.1e-4, &bias, relu, &mut got);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "{m}x{n} relu={relu}: {} requant diverges from scalar",
+                    ops.kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_gemms_dispatch_match_scalar() {
+    let scalar = scalar_ops();
+    let simd = simd_backends();
+    let mut rng = Xoshiro256::new(13);
+    for &(m, k, n) in SHAPES {
+        // Sprinkle exact zeros so the zero-skip path runs on every
+        // backend (it must not change a bit: the skipped term is ±0).
+        let a: Vec<f32> = (0..m * k)
+            .map(|i| {
+                if i % 5 == 0 {
+                    0.0
+                } else {
+                    rng.range_f32(-1.0, 1.0)
+                }
+            })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let y: Vec<f32> = (0..m * n)
+            .map(|i| {
+                if i % 7 == 0 {
+                    0.0
+                } else {
+                    rng.range_f32(-1.0, 1.0)
+                }
+            })
+            .collect();
+        // (accessor, a-operand, b-operand, acc length) per contraction:
+        //   gemm_f32:      acc(m×n) += A(m×k)·B(k×n)
+        //   gemm_f32_xt_y: acc(k×n) += Aᵀ(k×m)·Y(m×n)
+        //   gemm_f32_y_wt: acc(m×k) += Y(m×n)·Bᵀ(n×k)
+        type Getter = fn(&dispatch::KernelOps) -> fn(&[f32], &[f32], usize, usize, usize, &mut [f32]);
+        let cases: [(&str, Getter, &[f32], &[f32], usize); 3] = [
+            ("gemm_f32", |o| o.gemm_f32, &a, &b, m * n),
+            ("gemm_f32_xt_y", |o| o.gemm_f32_xt_y, &a, &y, k * n),
+            ("gemm_f32_y_wt", |o| o.gemm_f32_y_wt, &y, &b, m * k),
+        ];
+        for (name, get, pa, pb, acc_len) in cases {
+            let mut want = vec![0f32; acc_len];
+            get(scalar)(pa, pb, m, k, n, &mut want);
+            for ops in &simd {
+                let mut got = vec![0f32; acc_len];
+                get(ops)(pa, pb, m, k, n, &mut got);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "{name} {m}x{k}x{n}: {} diverges from scalar",
+                    ops.kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kind_parse_select_and_env() {
+    let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    assert_eq!(KernelKind::parse("auto").unwrap(), None);
+    assert_eq!(KernelKind::parse("scalar").unwrap(), Some(KernelKind::Scalar));
+    assert_eq!(KernelKind::parse("sse2").unwrap(), Some(KernelKind::Sse2));
+    assert_eq!(KernelKind::parse("avx2").unwrap(), Some(KernelKind::Avx2));
+    assert!(KernelKind::parse("bogus").is_err());
+    assert!(KernelKind::parse("AVX2").is_err(), "values are lowercase-only");
+
+    // Scalar can always be forced; auto always resolves to something.
+    let ops = dispatch::select(Some(KernelKind::Scalar)).expect("force scalar");
+    assert_eq!(ops.kind, KernelKind::Scalar);
+    assert_eq!(dispatch::active_kind(), KernelKind::Scalar);
+    let best = dispatch::select(None).expect("auto select");
+    assert_eq!(dispatch::active_kind(), best.kind);
+
+    // Forcing a backend the host lacks must error, not silently degrade.
+    for kind in [KernelKind::Sse2, KernelKind::Avx2] {
+        if dispatch::for_kind(kind).is_none() {
+            assert!(dispatch::select(Some(kind)).is_err());
+        }
+    }
+
+    // Env resolution: valid values parse, garbage warns and means auto.
+    std::env::set_var("WSEL_KERNELS", "scalar");
+    assert_eq!(dispatch::resolve_env(), Some(KernelKind::Scalar));
+    std::env::set_var("WSEL_KERNELS", "auto");
+    assert_eq!(dispatch::resolve_env(), None);
+    std::env::set_var("WSEL_KERNELS", "bogus");
+    assert_eq!(dispatch::resolve_env(), None);
+    std::env::remove_var("WSEL_KERNELS");
+    assert_eq!(dispatch::resolve_env(), None);
+
+    // The available list is scalar-first and consistent with for_kind.
+    let avail = dispatch::available();
+    assert_eq!(avail[0].kind, KernelKind::Scalar);
+    for ops in &avail {
+        assert!(dispatch::for_kind(ops.kind).is_some());
+    }
+    dispatch::select(None).expect("restore auto");
+}
+
+/// Two-conv tower at 32×32×3 (the GradEngine input shape) with cout
+/// values off every block boundary, so the int8 and f32 paths both see
+/// ragged remainders end to end.
+const E2E_MANIFEST: &str = r#"{
+  "model": "simd_e2e", "n_classes": 4, "input": [32, 32, 3],
+  "ops": [
+    {"op": "conv", "name": "conv0", "w": 0, "b": 1, "conv_idx": 0,
+     "q_idx": 0, "cin": 3, "cout": 5, "k": 3, "stride": 2, "pad": 1,
+     "relu": true, "hin": 32, "win": 32, "hout": 16, "wout": 16},
+    {"op": "maxpool2"},
+    {"op": "conv", "name": "conv1", "w": 2, "b": 3, "conv_idx": 1,
+     "q_idx": 1, "cin": 5, "cout": 9, "k": 3, "stride": 1, "pad": 1,
+     "relu": true, "hin": 8, "win": 8, "hout": 8, "wout": 8},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc0", "w": 4, "b": 5, "q_idx": 2,
+     "din": 9, "dout": 4, "relu": false}
+  ],
+  "params": [
+    {"name": "conv0.w", "shape": [5, 3, 3, 3], "kind": "conv_w"},
+    {"name": "conv0.b", "shape": [5], "kind": "bias"},
+    {"name": "conv1.w", "shape": [9, 5, 3, 3], "kind": "conv_w"},
+    {"name": "conv1.b", "shape": [9], "kind": "bias"},
+    {"name": "fc0.w", "shape": [4, 9], "kind": "fc_w"},
+    {"name": "fc0.b", "shape": [4], "kind": "bias"}
+  ],
+  "n_conv": 2, "n_q": 3, "kset": 32, "qmax": 127, "seed": 1,
+  "set_sentinel": 1e9, "momentum": 0.9,
+  "batches": {"train": 8, "eval": 8, "logits": 4, "calib": 8},
+  "pallas_eval": false
+}"#;
+
+/// Forward logits, grad-forward logits, loss and all gradient tensors
+/// at threads {1, 2, 5}, everything as bits.
+fn e2e_fingerprint(
+    spec: &ModelSpec,
+    p: &Params,
+    qc: &QuantConfig,
+    x: &[f32],
+    y: &[i32],
+    batch: usize,
+) -> Vec<(Vec<u32>, Vec<u32>, u32, Vec<u32>)> {
+    [1usize, 2, 5]
+        .iter()
+        .map(|&threads| {
+            let eng = ParallelEngine::new(spec, &p.tensors, qc, threads);
+            let fwd = eng.forward_plain(x, batch);
+            let ge = GradEngine::new(spec, &p.tensors, qc, true);
+            let logits = ge.forward_batch(&p.tensors, x, batch, threads);
+            let (loss, grads) = ge.batch_grad(&p.tensors, x, y, threads);
+            let gbits: Vec<u32> = grads
+                .iter()
+                .flat_map(|g| g.iter().map(|v| v.to_bits()))
+                .collect();
+            (bits(&fwd.logits), bits(&logits), loss.to_bits(), gbits)
+        })
+        .collect()
+}
+
+#[test]
+fn engine_and_grad_bit_identical_across_backends() {
+    let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let spec = ModelSpec::from_manifest_str(E2E_MANIFEST).expect("manifest");
+    let p = Params::random(&spec, 3);
+    let batch = 2usize;
+    let mut rng = Xoshiro256::new(0xE2E);
+    let x: Vec<f32> = (0..batch * 32 * 32 * 3)
+        .map(|_| rng.range_f32(-1.0, 1.0))
+        .collect();
+    let y: Vec<i32> = vec![1, 3];
+    let scales = Engine::new(&spec).calibrate(&p.tensors, &[&x], batch);
+    let qc = QuantConfig::quantized(&spec, scales);
+
+    dispatch::select(Some(KernelKind::Scalar)).expect("force scalar");
+    let want = e2e_fingerprint(&spec, &p, &qc, &x, &y, batch);
+
+    for kind in [KernelKind::Sse2, KernelKind::Avx2] {
+        if dispatch::for_kind(kind).is_none() {
+            continue;
+        }
+        dispatch::select(Some(kind)).expect("force simd backend");
+        let got = e2e_fingerprint(&spec, &p, &qc, &x, &y, batch);
+        assert_eq!(
+            want,
+            got,
+            "engine/grad outputs diverge between scalar and {}",
+            kind.name()
+        );
+    }
+
+    // And the auto-detected backend, whatever it is on this host.
+    dispatch::select(None).expect("auto");
+    let got = e2e_fingerprint(&spec, &p, &qc, &x, &y, batch);
+    assert_eq!(
+        want, got,
+        "engine/grad outputs diverge between scalar and the auto backend"
+    );
+}

@@ -8,9 +8,12 @@
 #            tile-power engine vs the statistical energy model on a
 #            synthetic capture) plus the block-sparse engine property
 #            tests (release mode: prune-ratio/thread sweep vs the
-#            scalar reference) and the serving smoke (batcher contract
-#            tests + `wsel serve-bench --quick`, which self-checks the
-#            emitted report: parse + monotone p50/p95/p99 per cell)
+#            scalar reference), the SIMD kernel dispatch suite (every
+#            available backend vs scalar, bitwise, plus the forced-
+#            backend engine/grad end-to-end identity) and the serving
+#            smoke (batcher contract tests + `wsel serve-bench --quick`,
+#            which self-checks the emitted report: parse + monotone
+#            p50/p95/p99 per cell)
 #
 # Both modes end with a golden-drift gate: if `cargo test` bootstrapped
 # or rewrote anything under rust/tests/golden/, verification fails so a
@@ -76,6 +79,11 @@ if [ "$QUICK" -eq 1 ]; then
     cargo test --release -q --test exact_power quick_exact_vs_model
     echo "== block-sparse engine property tests (--quick) =="
     cargo test --release -q --test engine_parallel
+    echo "== SIMD kernel dispatch property tests (--quick) =="
+    # Dispatched-vs-scalar bit-equality sweeps plus the forced-backend
+    # end-to-end engine/grad identity at several thread counts; release
+    # mode so the SIMD paths run at their real codegen.
+    cargo test --release -q --test kernels_simd
     echo "== serving smoke (--quick): registry + micro-batcher under load =="
     # Batcher determinism / hot-swap / error-path contract tests, then a
     # tiny sustained-load grid through the real CLI.  serve-bench writes
